@@ -1,0 +1,27 @@
+//! Rate–distortion sweep on an ideal Gaussian source — regenerates the
+//! paper's Figure 1 and Table 4 from the command line.
+//!
+//! ```bash
+//! cargo run --release --example gaussian_rd -- --quick
+//! ```
+
+use llvq::experiments::{fig1, table4, Effort};
+use llvq::util::cli::Args;
+
+fn main() {
+    let a = Args::new("gaussian_rd — Fig. 1 + Table 4 on N(0,1) source")
+        .switch("quick", "reduced sample counts")
+        .flag("leech-blocks", "", "blocks per Leech measurement")
+        .parse(std::env::args().skip(1))
+        .unwrap();
+    let mut e = if a.get_bool("quick") {
+        Effort::quick()
+    } else {
+        Effort::default()
+    };
+    if let Some(n) = a.get("leech-blocks").and_then(|v| v.parse().ok()) {
+        e.leech_blocks = n;
+    }
+    fig1(&e);
+    table4(&e);
+}

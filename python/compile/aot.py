@@ -1,0 +1,162 @@
+"""AOT compile path: lower the L2/L1 JAX graphs to HLO **text** artifacts
+for the rust PJRT runtime.
+
+Artifacts (under artifacts/):
+* `dequant_M<maxm>_N<batch>.hlo.txt` — the L1 Pallas dequantization kernel
+  wrapped for a fixed index-batch (tables are runtime INPUTS, so the HLO
+  stays table-agnostic; rust regenerates tables natively and feeds them).
+* `lm_forward_<model>_B<batch>.hlo.txt` — dense LM forward (weights as
+  inputs, canonical .llvqw order).
+* `quant_linear_M<maxm>.hlo.txt` — quantized-linear: indices + gains +
+  tables + activations → output (the kernel on the inference path).
+* `model.hlo.txt` — alias of the llama2-tiny B=1 forward (Makefile stamp).
+* `config.json` — all static shapes the rust side needs.
+
+HLO text, NOT `.serialize()`: jax ≥ 0.5 emits 64-bit instruction ids that
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from compile import leech  # noqa: E402
+from compile import model as M  # noqa: E402
+from compile.kernels import llvq_dequant as kd  # noqa: E402
+
+MAX_M = 13
+DEQUANT_BATCH = 768
+QL_ROWS, QL_COLS = 144, 144  # llama2-tiny attention projection shape
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def table_specs(tb) -> list:
+    return [jax.ShapeDtypeStruct(v.shape, v.dtype) for v in tb.values()]
+
+
+def lower_dequant(tb, n: int) -> str:
+    keys = list(tb.keys())
+
+    def fn(idx, *tabs):
+        d = dict(zip(keys, tabs))
+        return (kd.pallas_dequant(idx, d, tile=256),)
+
+    idx_spec = jax.ShapeDtypeStruct((n,), jnp.int64)
+    lowered = jax.jit(fn).lower(idx_spec, *table_specs(tb))
+    return to_hlo_text(lowered)
+
+
+def lower_quant_linear(tb, rows: int, cols: int, batch: int) -> str:
+    keys = list(tb.keys())
+    nblocks = rows * cols // 24
+
+    def fn(idx, gains, x, *tabs):
+        d = dict(zip(keys, tabs))
+        return (M.quantized_linear(idx, gains, d, x, rows, cols),)
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((nblocks,), jnp.int64),
+        jax.ShapeDtypeStruct((nblocks,), jnp.float32),
+        jax.ShapeDtypeStruct((batch, cols), jnp.float32),
+        *table_specs(tb),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_lm_forward(cfg: dict, batch: int) -> str:
+    def fn(tokens, *flat):
+        params = M.flat_to_params(list(flat), cfg)
+        return (M.forward(params, tokens, cfg),)
+
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in M.flat_shapes(cfg)]
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((batch, cfg["max_seq"]), jnp.int32), *specs
+    )
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None, help="(legacy) single-output path stamp")
+    ap.add_argument("--outdir", default=None)
+    ap.add_argument("--train-steps", type=int, default=260)
+    ap.add_argument("--skip-train", action="store_true")
+    args = ap.parse_args()
+
+    root = Path(__file__).resolve().parent.parent.parent
+    outdir = Path(args.outdir) if args.outdir else root / "artifacts"
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    # 1. train the model zoo (skipped when weights already exist)
+    if not args.skip_train:
+        from compile.train import train_zoo
+
+        train_zoo(outdir, steps=args.train_steps)
+
+    # 2. lattice tables (shape metadata for config.json + kernel lowering)
+    print(f"building Leech tables (M={MAX_M}) …", flush=True)
+    t = leech.build_tables(MAX_M)
+    tb = kd.tables_to_arrays(t)
+
+    # 3. lower the kernels
+    print("lowering dequant kernel …", flush=True)
+    (outdir / f"dequant_M{MAX_M}_N{DEQUANT_BATCH}.hlo.txt").write_text(
+        lower_dequant(tb, DEQUANT_BATCH)
+    )
+    print("lowering quantized linear …", flush=True)
+    (outdir / f"quant_linear_M{MAX_M}.hlo.txt").write_text(
+        lower_quant_linear(tb, QL_ROWS, QL_COLS, batch=8)
+    )
+
+    # 4. lower LM forwards
+    for cfg in M.config_zoo():
+        for batch in (1, 8):
+            print(f"lowering lm_forward {cfg['name']} B={batch} …", flush=True)
+            (outdir / f"lm_forward_{cfg['name']}_B{batch}.hlo.txt").write_text(
+                lower_lm_forward(cfg, batch)
+            )
+
+    # Makefile stamp artifact
+    stamp = outdir / "model.hlo.txt"
+    stamp.write_text((outdir / "lm_forward_llama2-tiny_B1.hlo.txt").read_text())
+
+    # 5. config.json — static shapes for the rust runtime
+    config = {
+        "max_m": MAX_M,
+        "dequant_batch": DEQUANT_BATCH,
+        "num_groups": t.num_groups,
+        "num_points": str(t.num_points()),  # exceeds 2^53: keep as string
+        "index_bits": t.index_bits(),
+        "table_keys": list(tb.keys()),
+        "table_shapes": {k: list(v.shape) for k, v in tb.items()},
+        "table_dtypes": {k: str(v.dtype) for k, v in tb.items()},
+        "quant_linear": {"rows": QL_ROWS, "cols": QL_COLS, "batch": 8},
+        "models": [c["name"] for c in M.config_zoo()],
+        "lm_batches": [1, 8],
+    }
+    (outdir / "config.json").write_text(json.dumps(config, indent=2))
+    if args.out:
+        Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+        Path(args.out).write_text(stamp.read_text())
+    print(f"artifacts complete in {outdir}")
+
+
+if __name__ == "__main__":
+    main()

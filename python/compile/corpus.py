@@ -1,0 +1,112 @@
+"""Synthetic structured corpus — exact python twin of `rust/src/model/corpus.rs`.
+
+Token-for-token identical streams for a given seed (pinned by a golden
+prefix test in both suites), so the JAX-trained models and the rust
+evaluation pipeline see the same distribution. Includes a faithful port
+of the crate's xoshiro256++ / SplitMix64 generators.
+"""
+
+from __future__ import annotations
+
+from bisect import bisect_left
+
+VOCAB = 64
+NUM_MOTIFS = 8
+MOTIF_LEN = 6
+_M64 = (1 << 64) - 1
+
+
+class SplitMix64:
+    def __init__(self, seed: int):
+        self.state = seed & _M64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & _M64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _M64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _M64
+        return z ^ (z >> 31)
+
+
+def _rotl(x: int, k: int) -> int:
+    return ((x << k) | (x >> (64 - k))) & _M64
+
+
+class Xoshiro256pp:
+    def __init__(self, seed: int):
+        sm = SplitMix64(seed)
+        self.s = [sm.next_u64() for _ in range(4)]
+
+    def next_u64(self) -> int:
+        s = self.s
+        result = (_rotl((s[0] + s[3]) & _M64, 23) + s[0]) & _M64
+        t = (s[1] << 17) & _M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def next_range(self, n: int) -> int:
+        """Lemire's unbiased bounded generation (matches rng.rs)."""
+        x = self.next_u64()
+        m = x * n
+        lo = m & _M64
+        if lo < n:
+            t = ((1 << 64) - n) % n
+            while lo < t:
+                x = self.next_u64()
+                m = x * n
+                lo = m & _M64
+        return m >> 64
+
+
+class Corpus:
+    """Second-order-ish Markov backbone + deterministic motifs."""
+
+    def __init__(self, seed: int):
+        setup = Xoshiro256pp(0xC0FFEE)  # fixed language; seed only drives sampling
+        self.trans: list[list[int]] = []
+        for _ in range(VOCAB):
+            w = [1.0 + setup.next_range(97) for _ in range(VOCAB)]
+            for _ in range(6):
+                w[setup.next_range(VOCAB)] *= 24.0
+            total = sum(w)
+            row, acc = [], 0.0
+            for c in range(VOCAB):
+                acc += w[c]
+                row.append(int(acc / total * 65535.0))
+            row[VOCAB - 1] = 65535
+            self.trans.append(row)
+        self.motifs = [
+            [setup.next_range(VOCAB) for _ in range(MOTIF_LEN)] for _ in range(NUM_MOTIFS)
+        ]
+        self.rng = Xoshiro256pp(seed)
+        self.motif_p16 = int(0.08 * 65536.0)
+
+    def generate(self, n: int):
+        out: list[int] = []
+        det: list[bool] = []
+        prev = 0
+        while len(out) < n:
+            if (self.rng.next_u64() & 0xFFFF) < self.motif_p16:
+                m = self.motifs[self.rng.next_range(NUM_MOTIFS)]
+                for k, t in enumerate(m):
+                    if len(out) >= n:
+                        break
+                    out.append(t)
+                    det.append(k >= 2)
+                    prev = t
+            else:
+                u = self.rng.next_u64() & 0xFFFF
+                row = self.trans[prev]
+                c = min(bisect_left(row, u), VOCAB - 1)
+                out.append(c)
+                det.append(False)
+                prev = c
+        return out, det
+
+    def sequences(self, count: int, seq_len: int):
+        return [self.generate(seq_len + 1) for _ in range(count)]

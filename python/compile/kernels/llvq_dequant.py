@@ -1,0 +1,199 @@
+"""L1 — the fully parallel LLVQ dequantization kernel (paper §3.3 step 5).
+
+The paper proposes a CUDA kernel; the TPU/Pallas adaptation (DESIGN.md
+§Hardware-Adaptation) is a *table-driven, branch-free* block program:
+
+* shell/class/subclass lookup = one `searchsorted` over the cumulative
+  group-offset table (VMEM-resident, ~1.8 MiB at M=13);
+* the local-symmetry unflattening (paper eq. 15) = fixed-radix integer
+  div/mod;
+* the two multiset-permutation unranks = a fixed 24-step loop over ≤ 8
+  symbol slots — no data-dependent trip counts, fully vectorizable across
+  the index batch (lane dimension);
+* sign assembly = popcount-style prefix sums + bit tests.
+
+`dequant_batch` is the pure-jnp computation; `pallas_dequant` wraps it in
+a `pallas_call` with a batch-tiled BlockSpec (tables replicated per tile).
+interpret=True everywhere — the CPU image cannot execute Mosaic custom
+calls; real-TPU performance is *estimated* in EXPERIMENTS.md.
+
+All integer arithmetic is int64 (indices reach 2^48); x64 must be enabled
+before importing jax.numpy (compile.aot does this).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DIM = 24
+VSLOTS = 8  # MAX_DISTINCT
+
+
+def tables_to_arrays(t) -> dict[str, jnp.ndarray]:
+    """KernelTables (compile.leech) → jnp arrays keyed for dequant_batch."""
+    g = t.num_groups
+    return {
+        "group_offsets": jnp.asarray(t.group_offsets, jnp.int64),
+        "num_codewords": jnp.asarray(t.num_codewords, jnp.int64),
+        "sign_bits": jnp.asarray(t.sign_bits, jnp.int64),
+        "f0_arrangements": jnp.asarray(t.f0_arrangements, jnp.int64),
+        "f1_arrangements": jnp.asarray(t.f1_arrangements, jnp.int64),
+        "weight": jnp.asarray(t.weight, jnp.int32),
+        "cw_base": jnp.asarray(t.cw_base, jnp.int32),
+        "parity_odd": jnp.asarray(t.parity_odd, jnp.int32),
+        "f1_neg_parity": jnp.asarray(t.f1_neg_parity, jnp.int32),
+        "f1_values": jnp.asarray(t.f1_values, jnp.int32).reshape(g, VSLOTS),
+        "f1_counts": jnp.asarray(t.f1_counts, jnp.int32).reshape(g, VSLOTS),
+        "f0_values": jnp.asarray(t.f0_values, jnp.int32).reshape(g, VSLOTS),
+        "f0_counts": jnp.asarray(t.f0_counts, jnp.int32).reshape(g, VSLOTS),
+        "golay_sorted": jnp.asarray(t.golay_sorted, jnp.int32),
+    }
+
+
+def _unrank_sequence(rank, total0, counts, values, active_len):
+    """Vectorized multiset-permutation unrank.
+
+    rank, total0: [N] int64 ; counts, values: [N, VSLOTS] ; active_len: [N].
+    Returns seq [N, DIM] (positions ≥ active_len are padding zeros).
+    """
+    n = rank.shape[0]
+    cnt = counts.astype(jnp.int64)
+    total = total0
+    rem = active_len.astype(jnp.int64)
+    seq = jnp.zeros((n, DIM), jnp.int32)
+    for pos in range(DIM):
+        active = pos < active_len  # [N] bool
+        rem_safe = jnp.maximum(rem, 1)
+        # per-symbol arrangement counts when that symbol is placed first
+        c = total[:, None] * cnt // rem_safe[:, None]  # [N, V]
+        cum = jnp.cumsum(c, axis=1)
+        cum_prev = cum - c
+        picked = (rank[:, None] >= cum_prev) & (rank[:, None] < cum) & (cnt > 0)
+        picked &= active[:, None]
+        kstar = jnp.argmax(picked, axis=1)  # first True (picked is exclusive)
+        any_pick = picked.any(axis=1)
+        sel = jax.nn.one_hot(kstar, VSLOTS, dtype=jnp.int64) * any_pick[:, None]
+        val = jnp.sum(values.astype(jnp.int32) * sel.astype(jnp.int32), axis=1)
+        new_rank = rank - jnp.sum(cum_prev * sel, axis=1)
+        new_total = jnp.sum(c * sel, axis=1)
+        seq = seq.at[:, pos].set(jnp.where(active, val, 0))
+        rank = jnp.where(active, new_rank, rank)
+        total = jnp.where(active, new_total, total)
+        cnt = cnt - sel * active[:, None]
+        rem = jnp.where(active, rem - 1, rem)
+    return seq
+
+
+def dequant_batch(idx, tb) -> jnp.ndarray:
+    """Batched dequantization: idx [N] int64 → integer points [N, 24] int32.
+
+    Mirrors `leech::tables::KernelTables::dequantize` exactly.
+    """
+    idx = idx.astype(jnp.int64)
+    g = jnp.searchsorted(tb["group_offsets"], idx, side="right") - 1
+    local = idx - tb["group_offsets"][g]
+
+    a = tb["num_codewords"][g]
+    c_rank = local % a
+    local = local // a
+    b = tb["sign_bits"][g]
+    sign_rank = local & ((jnp.int64(1) << b) - 1)
+    local = local >> b
+    f0a = tb["f0_arrangements"][g]
+    f1_rank = local // f0a
+    f0_rank = local % f0a
+
+    codeword = tb["golay_sorted"][tb["cw_base"][g] + c_rank.astype(jnp.int32)]
+    w = tb["weight"][g].astype(jnp.int64)  # [N]
+
+    f1_seq = _unrank_sequence(
+        f1_rank, tb["f1_arrangements"][g], tb["f1_counts"][g], tb["f1_values"][g], w
+    )
+    f0_seq = _unrank_sequence(
+        f0_rank, f0a, tb["f0_counts"][g], tb["f0_values"][g], jnp.int64(DIM) - w
+    )
+
+    pos = jnp.arange(DIM, dtype=jnp.int32)
+    bits = (codeword[:, None] >> pos[None, :]) & 1  # [N, 24] int32
+    # prefix position of each coordinate within F1 / F0
+    incl = jnp.cumsum(bits, axis=1)
+    pos_f1 = incl - bits  # exclusive prefix count of set bits
+    pos_f0 = pos[None, :] - pos_f1
+    v_f1 = jnp.take_along_axis(f1_seq, pos_f1, axis=1)
+    v_f0 = jnp.take_along_axis(f0_seq, jnp.minimum(pos_f0, DIM - 1), axis=1)
+    val = jnp.where(bits == 1, v_f1, v_f0)  # [N, 24] abs values
+
+    # --- odd coset: congruence-forced signs ---
+    odd_f1 = jnp.where(val % 4 == 3, val, -val)
+    odd_f0 = jnp.where(val % 4 == 1, val, -val)
+    x_odd = jnp.where(bits == 1, odd_f1, odd_f0)
+
+    # --- even coset: F0 free signs, F1 parity-constrained ---
+    mask_f0nz = (bits == 0) & (val != 0)
+    bitidx_f0 = jnp.cumsum(mask_f0nz.astype(jnp.int64), axis=1) - mask_f0nz
+    n_f0nz = jnp.sum(mask_f0nz, axis=1).astype(jnp.int64)  # [N]
+    last_f1 = jnp.max(pos[None, :] * bits, axis=1)  # [N] (0 when w = 0)
+    mask_f1_free = (bits == 1) & (pos[None, :] != last_f1[:, None])
+    bitidx_f1 = (
+        n_f0nz[:, None]
+        + jnp.cumsum(mask_f1_free.astype(jnp.int64), axis=1)
+        - mask_f1_free
+    )
+    bitidx = jnp.where(mask_f0nz, bitidx_f0, bitidx_f1)
+    neg = ((sign_rank[:, None] >> bitidx) & 1) == 1
+    sign_mask = mask_f0nz | mask_f1_free
+    x_even = jnp.where(sign_mask & neg, -val, val)
+    # parity repair on the last F1 coordinate
+    negs_f1 = jnp.sum((mask_f1_free & neg).astype(jnp.int32), axis=1)
+    need_flip = (negs_f1 % 2 != tb["f1_neg_parity"][g]) & (w.astype(jnp.int32) > 0)
+    at_last = pos[None, :] == last_f1[:, None]
+    x_even = jnp.where(at_last & need_flip[:, None] & (bits == 1), -x_even, x_even)
+
+    is_odd = (tb["parity_odd"][g] == 1)[:, None]
+    return jnp.where(is_odd, x_odd, x_even).astype(jnp.int32)
+
+
+def dequant_f32(idx, tb, scale) -> jnp.ndarray:
+    """Real-coordinate reconstruction: points/√8 × scale → [N, 24] f32."""
+    x = dequant_batch(idx, tb).astype(jnp.float32)
+    return x * (scale / jnp.sqrt(jnp.float32(8.0)))
+
+
+# --------------------------------------------------------------------------
+# Pallas wrapper
+# --------------------------------------------------------------------------
+
+_TABLE_KEYS = [
+    "group_offsets", "num_codewords", "sign_bits", "f0_arrangements",
+    "f1_arrangements", "weight", "cw_base", "parity_odd", "f1_neg_parity",
+    "f1_values", "f1_counts", "f0_values", "f0_counts", "golay_sorted",
+]
+
+
+def pallas_dequant(idx, tb, tile: int = 256) -> jnp.ndarray:
+    """Pallas-tiled batched dequantization (interpret mode on CPU).
+
+    The index stream is tiled HBM→VMEM; the lattice tables ride along
+    replicated per tile (BlockSpec index_map pinning block 0) — the TPU
+    analogue of the paper's "small static tables in shared memory".
+    """
+    n = idx.shape[0]
+    assert n % tile == 0, f"batch {n} not a multiple of tile {tile}"
+    tabs = [tb[k] for k in _TABLE_KEYS]
+
+    def kernel(idx_ref, *refs):
+        table_refs, o_ref = refs[:-1], refs[-1]
+        tbl = {k: r[...] for k, r in zip(_TABLE_KEYS, table_refs)}
+        o_ref[...] = dequant_batch(idx_ref[...], tbl)
+
+    whole = lambda t: pl.BlockSpec(t.shape, lambda i: tuple(0 for _ in t.shape))
+    return pl.pallas_call(
+        kernel,
+        grid=(n // tile,),
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))] + [whole(t) for t in tabs],
+        out_specs=pl.BlockSpec((tile, DIM), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, DIM), jnp.int32),
+        interpret=True,
+    )(idx, *tabs)

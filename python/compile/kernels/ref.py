@@ -1,0 +1,116 @@
+"""Pure-python reference dequantizer — the correctness oracle for the
+Pallas kernel (paper §3.3 steps 1–4, scalar form).
+
+Deliberately written as a straightforward per-index implementation with
+exact integer arithmetic (no numpy), structurally independent of both the
+vectorized kernel and the rust implementation, so agreement between the
+three is strong evidence of correctness.
+"""
+
+from __future__ import annotations
+
+from compile.leech import DIM, MAX_DISTINCT, KernelTables, odd_signed_value
+
+
+def _unrank_multiset(values, counts, length: int, rank: int) -> list[int]:
+    from math import factorial
+
+    cnt = list(counts)
+    total = factorial(length)
+    for c in cnt:
+        total //= factorial(c)
+    rem = length
+    out = []
+    for _ in range(length):
+        for k in range(MAX_DISTINCT):
+            if cnt[k] == 0:
+                continue
+            c = total * cnt[k] // rem
+            if rank < c:
+                out.append(values[k])
+                total = c
+                cnt[k] -= 1
+                rem -= 1
+                break
+            rank -= c
+        else:
+            raise AssertionError("unrank ran out of symbols")
+    assert rank == 0 or length == 0
+    return out
+
+
+def dequantize_ref(t: KernelTables, index: int) -> list[int]:
+    """Global index → integer lattice point (L^int coordinates)."""
+    assert 0 <= index < t.num_points()
+    # 1. group (shell/class/subclass) identification
+    lo, hi = 0, len(t.group_offsets) - 1
+    while lo + 1 < hi:
+        mid = (lo + hi) // 2
+        if t.group_offsets[mid] <= index:
+            lo = mid
+        else:
+            hi = mid
+    g = lo
+    local = index - t.group_offsets[g]
+
+    # 2. unpack local symmetries (paper eq. 15)
+    a = t.num_codewords[g]
+    c_rank = local % a
+    local //= a
+    b = t.sign_bits[g]
+    sign_rank = local & ((1 << b) - 1)
+    local >>= b
+    f0_arr = t.f0_arrangements[g]
+    f1_rank, f0_rank = local // f0_arr, local % f0_arr
+
+    codeword = t.golay_sorted[t.cw_base[g] + c_rank]
+    w = t.weight[g]
+
+    # 3. multiset-permutation unranks
+    row = slice(g * MAX_DISTINCT, (g + 1) * MAX_DISTINCT)
+    f1_vals = _unrank_multiset(t.f1_values[row], t.f1_counts[row], w, f1_rank)
+    f0_vals = _unrank_multiset(t.f0_values[row], t.f0_counts[row], DIM - w, f0_rank)
+
+    # 4. assemble with signs
+    x = [0] * DIM
+    if t.parity_odd[g]:
+        i1 = i0 = 0
+        for i in range(DIM):
+            if codeword >> i & 1:
+                x[i] = odd_signed_value(f1_vals[i1], True)
+                i1 += 1
+            else:
+                x[i] = odd_signed_value(f0_vals[i0], False)
+                i0 += 1
+        return x
+
+    bit = 0
+    i1 = i0 = 0
+    f1_pos = [i for i in range(DIM) if codeword >> i & 1]
+    for i in range(DIM):
+        if codeword >> i & 1:
+            x[i] = f1_vals[i1]
+            i1 += 1
+        else:
+            v = f0_vals[i0]
+            i0 += 1
+            if v != 0:
+                x[i] = -v if (sign_rank >> bit) & 1 else v
+                bit += 1
+    if w > 0:
+        negs = 0
+        for i in f1_pos[:-1]:
+            if (sign_rank >> bit) & 1:
+                x[i] = -x[i]
+                negs += 1
+            bit += 1
+        if negs % 2 != t.f1_neg_parity[g]:
+            x[f1_pos[-1]] = -x[f1_pos[-1]]
+    assert bit == b
+    return x
+
+
+def dequantize_ref_f32(t: KernelTables, index: int, scale: float = 1.0) -> list[float]:
+    """Real-coordinate reconstruction: x/√8 × scale."""
+    sqrt8 = 8.0 ** 0.5
+    return [v / sqrt8 * scale for v in dequantize_ref(t, index)]

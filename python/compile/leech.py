@@ -1,0 +1,369 @@
+"""Leech lattice combinatorics — build-path twin of `rust/src/leech/`.
+
+Independent re-implementation (numpy-free pure python for the exact
+integer parts) of the Golay code, shell/class/subclass enumeration, and
+the flattened kernel dequantization tables. Orderings are canonical and
+MUST match the rust side bit-for-bit:
+
+* classes within a shell: even before odd, then ascending value tuple;
+* subclasses within an odd class: by (weight, split) ascending;
+* Golay codewords: ascending within each weight bucket; buckets in weight
+  order 0, 8, 12, 16, 24.
+
+Validated against the theta series n(m) = 65520/691·(σ₁₁(m) − τ(m)) in
+pytest; cross-checked against the rust JSON export when present.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import lru_cache
+from math import factorial
+
+DIM = 24
+WEIGHTS = (0, 8, 12, 16, 24)
+MAX_DISTINCT = 8
+
+# --------------------------------------------------------------------------
+# Golay code — same QR-mod-11 bordered-circulant generator as golay.rs
+# --------------------------------------------------------------------------
+
+_B_STR = [
+    "111111111110",
+    "110111000101",
+    "011011100011",
+    "101101110001",
+    "010110111001",
+    "001011011101",
+    "000101101111",
+    "100010110111",
+    "110001011011",
+    "111000101101",
+    "011100010111",
+    "101110001011",
+]
+
+
+@lru_cache(maxsize=1)
+def golay_codewords() -> list[int]:
+    """All 4096 codewords as 24-bit ints, ascending."""
+    rows = []
+    for i, s in enumerate(_B_STR):
+        w = 1 << i
+        for j, c in enumerate(s):
+            if c == "1":
+                w |= 1 << (12 + j)
+        rows.append(w)
+    out = []
+    for m in range(4096):
+        c = 0
+        mm, i = m, 0
+        while mm:
+            if mm & 1:
+                c ^= rows[i]
+            mm >>= 1
+            i += 1
+        out.append(c)
+    out.sort()
+    wd: dict[int, int] = {}
+    for c in out:
+        wd[bin(c).count("1")] = wd.get(bin(c).count("1"), 0) + 1
+    assert wd == {0: 1, 8: 759, 12: 2576, 16: 759, 24: 1}, f"bad generator: {wd}"
+    return out
+
+
+@lru_cache(maxsize=1)
+def golay_by_weight() -> dict[int, list[int]]:
+    buckets: dict[int, list[int]] = {w: [] for w in WEIGHTS}
+    for c in golay_codewords():
+        buckets[bin(c).count("1")].append(c)
+    return buckets
+
+
+# --------------------------------------------------------------------------
+# Theta series ground truth
+# --------------------------------------------------------------------------
+
+def theta_shell_sizes(max_m: int) -> list[int]:
+    """n(m) for m = 0..max_m (n(0)=1, n(1)=0)."""
+    n = max_m
+    coef = [0] * max(n, 1)
+    coef[0] = 1
+    for k in range(1, n):
+        for _ in range(24):
+            for i in range(n - 1, k - 1, -1):
+                coef[i] -= coef[i - k]
+    out = [1]
+    for m in range(1, max_m + 1):
+        tau = coef[m - 1] if m - 1 < len(coef) else 0
+        sigma11 = sum(d ** 11 for d in range(1, m + 1) if m % d == 0)
+        v = 65520 * (sigma11 - tau)
+        assert v % 691 == 0
+        out.append(v // 691)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Shell → class → subclass enumeration (mirrors leaders.rs)
+# --------------------------------------------------------------------------
+
+@dataclass
+class Subclass:
+    weight: int
+    num_codewords: int
+    split: tuple[int, ...]
+    f1_seq: tuple[int, ...]
+    f0_seq: tuple[int, ...]
+    f1_arrangements: int
+    f0_arrangements: int
+    sign_bits: int
+    size: int
+
+
+@dataclass
+class ClassInfo:
+    parity: str  # "even" | "odd"
+    values: tuple[int, ...]
+    counts: tuple[tuple[int, int], ...]
+    f1_neg_parity: int
+    subclasses: list[Subclass] = field(default_factory=list)
+    size: int = 0
+
+
+def _enumerate_value_multisets(total: int, parity: int):
+    out: list[tuple[int, ...]] = []
+    seq: list[int] = []
+
+    def rec(remaining: int, slots: int, cap: int):
+        if slots == 0:
+            if remaining == 0:
+                out.append(tuple(seq))
+            return
+        minv = 0 if parity == 0 else 1
+        if remaining < minv * minv * slots:
+            return
+        v = cap
+        while v >= minv:
+            vv = v * v
+            if vv <= remaining and remaining - vv <= (slots - 1) * vv:
+                seq.append(v)
+                rec(remaining - vv, slots - 1, v)
+                seq.pop()
+            v -= 2
+            if parity == 1 and v < 1:
+                break
+        return
+
+    cap = int(total ** 0.5)
+    while cap > 0 and (cap % 2 != parity or cap * cap > total):
+        cap -= 1
+    if cap >= parity:
+        rec(total, DIM, cap)
+    return out
+
+
+def _counts(values) -> tuple[tuple[int, int], ...]:
+    out: list[list[int]] = []
+    for v in values:
+        if out and out[-1][0] == v:
+            out[-1][1] += 1
+        else:
+            out.append([v, 1])
+    return tuple((a, b) for a, b in out)
+
+
+def _ms_arrangements(length: int, mults) -> int:
+    v = factorial(length)
+    for m in mults:
+        v //= factorial(m)
+    return v
+
+
+def odd_signed_value(abs_v: int, in_f1: bool) -> int:
+    if in_f1:
+        return abs_v if abs_v % 4 == 3 else -abs_v
+    return abs_v if abs_v % 4 == 1 else -abs_v
+
+
+def _build_even_class(values) -> ClassInfo | None:
+    counts = _counts(values)
+    w = sum(1 for v in values if v % 4 == 2)
+    if w not in WEIGHTS:
+        return None
+    a = len(golay_by_weight()[w])
+    total = sum(values)
+    if w == 0 and total % 8 != 0:
+        return None
+    f1_neg_parity = (total % 8) // 4
+    f1_seq = tuple(v for v in values if v % 4 == 2)
+    f0_seq = tuple(v for v in values if v % 4 == 0)
+    split = tuple(c if v % 4 == 2 else 0 for v, c in counts)
+    f1_arr = _ms_arrangements(w, [c for v, c in counts if v % 4 == 2])
+    f0_arr = _ms_arrangements(DIM - w, [c for v, c in counts if v % 4 == 0])
+    n_f0_nonzero = sum(1 for v in f0_seq if v != 0)
+    sign_bits = n_f0_nonzero + (w - 1 if w > 0 else 0)
+    size = a * (1 << sign_bits) * f1_arr * f0_arr
+    sub = Subclass(w, a, split, f1_seq, f0_seq, f1_arr, f0_arr, sign_bits, size)
+    return ClassInfo("even", values, counts, f1_neg_parity, [sub], size)
+
+
+def _build_odd_class(values) -> ClassInfo | None:
+    counts = _counts(values)
+    subclasses: list[Subclass] = []
+    for w in WEIGHTS:
+        a = len(golay_by_weight()[w])
+        items = list(counts)
+
+        def rec(i: int, left: int, summ: int, split: list[int]):
+            if i == len(items):
+                if left == 0 and summ % 8 == 4:
+                    f1_seq, f0_seq, f1m, f0m = [], [], [], []
+                    for (v, c), k in zip(items, split):
+                        f1_seq += [v] * k
+                        f0_seq += [v] * (c - k)
+                        if k:
+                            f1m.append(k)
+                        if c - k:
+                            f0m.append(c - k)
+                    f1_arr = _ms_arrangements(w, f1m)
+                    f0_arr = _ms_arrangements(DIM - w, f0m)
+                    subclasses.append(
+                        Subclass(
+                            w, a, tuple(split), tuple(f1_seq), tuple(f0_seq),
+                            f1_arr, f0_arr, 0, a * f1_arr * f0_arr,
+                        )
+                    )
+                return
+            v, c = items[i]
+            cap_rest = sum(cc for _, cc in items[i + 1:])
+            for k in range(0, min(c, left) + 1):
+                if left - k > cap_rest:
+                    continue
+                rec(
+                    i + 1,
+                    left - k,
+                    summ + k * odd_signed_value(v, True) + (c - k) * odd_signed_value(v, False),
+                    split + [k],
+                )
+
+        rec(0, w, 0, [])
+    if not subclasses:
+        return None
+    subclasses.sort(key=lambda s: (s.weight, s.split))
+    size = sum(s.size for s in subclasses)
+    return ClassInfo("odd", values, counts, 0, subclasses, size)
+
+
+@lru_cache(maxsize=32)
+def enumerate_shell(m: int) -> list[ClassInfo]:
+    total = 16 * m
+    classes: list[ClassInfo] = []
+    for values in _enumerate_value_multisets(total, 0):
+        c = _build_even_class(values)
+        if c:
+            classes.append(c)
+    for values in _enumerate_value_multisets(total, 1):
+        c = _build_odd_class(values)
+        if c:
+            classes.append(c)
+    classes.sort(key=lambda c: (0 if c.parity == "even" else 1, c.values))
+    return classes
+
+
+# --------------------------------------------------------------------------
+# Flattened kernel tables (mirrors tables.rs)
+# --------------------------------------------------------------------------
+
+@dataclass
+class KernelTables:
+    max_m: int
+    num_groups: int
+    group_offsets: list[int]
+    weight: list[int]
+    num_codewords: list[int]
+    cw_base: list[int]
+    sign_bits: list[int]
+    parity_odd: list[int]
+    f1_neg_parity: list[int]
+    f0_arrangements: list[int]
+    f1_arrangements: list[int]
+    f1_values: list[int]
+    f1_counts: list[int]
+    f0_values: list[int]
+    f0_counts: list[int]
+    golay_sorted: list[int]
+    weight_offsets: list[int]
+
+    def num_points(self) -> int:
+        return self.group_offsets[-1]
+
+    def index_bits(self) -> int:
+        return (self.num_points() - 1).bit_length()
+
+
+def build_tables(max_m: int) -> KernelTables:
+    golay_sorted: list[int] = []
+    weight_offsets = [0]
+    for w in WEIGHTS:
+        golay_sorted += golay_by_weight()[w]
+        weight_offsets.append(len(golay_sorted))
+    cw_base = {w: weight_offsets[i] for i, w in enumerate(WEIGHTS)}
+
+    t = KernelTables(
+        max_m=max_m, num_groups=0, group_offsets=[0], weight=[], num_codewords=[],
+        cw_base=[], sign_bits=[], parity_odd=[], f1_neg_parity=[],
+        f0_arrangements=[], f1_arrangements=[], f1_values=[], f1_counts=[],
+        f0_values=[], f0_counts=[], golay_sorted=golay_sorted,
+        weight_offsets=weight_offsets,
+    )
+    acc = 0
+    for m in range(2, max_m + 1):
+        for cls in enumerate_shell(m):
+            for sub in cls.subclasses:
+                acc += sub.size
+                t.group_offsets.append(acc)
+                t.weight.append(sub.weight)
+                t.num_codewords.append(sub.num_codewords)
+                t.cw_base.append(cw_base[sub.weight])
+                t.sign_bits.append(sub.sign_bits)
+                t.parity_odd.append(1 if cls.parity == "odd" else 0)
+                t.f1_neg_parity.append(cls.f1_neg_parity)
+                t.f0_arrangements.append(sub.f0_arrangements)
+                t.f1_arrangements.append(sub.f1_arrangements)
+                for seq, vals, cnts in (
+                    (sub.f1_seq, t.f1_values, t.f1_counts),
+                    (sub.f0_seq, t.f0_values, t.f0_counts),
+                ):
+                    pairs = _counts(seq) if seq else ()
+                    assert len(pairs) <= MAX_DISTINCT
+                    for k in range(MAX_DISTINCT):
+                        if k < len(pairs):
+                            vals.append(pairs[k][0])
+                            cnts.append(pairs[k][1])
+                        else:
+                            vals.append(0)
+                            cnts.append(0)
+    t.num_groups = len(t.weight)
+    return t
+
+
+# --------------------------------------------------------------------------
+# Membership check (for test oracles)
+# --------------------------------------------------------------------------
+
+def is_lattice_point(x) -> bool:
+    cws = set(golay_codewords())
+    parities = {v % 2 for v in x}
+    if len(parities) != 1:
+        return False
+    if parities == {0}:
+        word = 0
+        for i, v in enumerate(x):
+            if (v // 2) % 2 == 1:
+                word |= 1 << i
+        return word in cws and sum(x) % 8 == 0
+    word = 0
+    for i, v in enumerate(x):
+        if v % 4 == 3:
+            word |= 1 << i
+    return word in cws and sum(x) % 8 == 4

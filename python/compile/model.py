@@ -1,0 +1,178 @@
+"""L2 — the JAX model: tiny decoder-only transformer, exact twin of
+`rust/src/model/transformer.rs`.
+
+Used in two roles:
+* build-time training (`compile.train`) of the model zoo;
+* the AOT-lowered forward graph (`compile.aot`) the rust runtime executes
+  through PJRT, including the *quantized-linear* variant that routes its
+  weights through the L1 dequantization kernel so the paper's kernel sits
+  on the compiled inference path.
+
+Weight pytree layout mirrors the `.llvqw` serialization order.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+VOCAB = 64
+
+
+def config_zoo():
+    """Mirror of `model::config::model_zoo()`."""
+    mk = lambda name, d, l, h, f: dict(
+        name=name, vocab=VOCAB, d_model=d, n_layers=l, n_heads=h, d_ff=f, max_seq=64
+    )
+    return [
+        mk("llama2-tiny", 144, 3, 6, 384),
+        mk("llama3-tiny", 168, 3, 7, 456),
+        mk("ministral-tiny", 144, 4, 6, 384),
+        mk("qwen3-4b-tiny", 120, 2, 5, 308),
+        mk("qwen3-8b-tiny", 168, 4, 7, 432),
+    ]
+
+
+def config_by_name(name: str) -> dict:
+    for c in config_zoo():
+        if c["name"] == name:
+            return c
+    raise KeyError(name)
+
+
+def init_params(cfg: dict, key) -> dict:
+    d, f, v, s = cfg["d_model"], cfg["d_ff"], cfg["vocab"], cfg["max_seq"]
+    ks = jax.random.split(key, 4 + 8 * cfg["n_layers"])
+    ki = iter(ks)
+    s_attn = 1.0 / math.sqrt(d)
+    s_mlp = 1.0 / math.sqrt(f)
+    blocks = []
+    for _ in range(cfg["n_layers"]):
+        blocks.append(
+            dict(
+                norm1=jnp.ones((d,), jnp.float32),
+                wq=jax.random.normal(next(ki), (d, d), jnp.float32) * s_attn,
+                wk=jax.random.normal(next(ki), (d, d), jnp.float32) * s_attn,
+                wv=jax.random.normal(next(ki), (d, d), jnp.float32) * s_attn,
+                wo=jax.random.normal(next(ki), (d, d), jnp.float32) * s_attn,
+                norm2=jnp.ones((d,), jnp.float32),
+                w1=jax.random.normal(next(ki), (f, d), jnp.float32) * s_attn,
+                w2=jax.random.normal(next(ki), (d, f), jnp.float32) * s_mlp,
+            )
+        )
+    return dict(
+        tok_emb=jax.random.normal(next(ki), (v, d), jnp.float32) * 0.05,
+        pos_emb=jax.random.normal(next(ki), (s, d), jnp.float32) * 0.05,
+        blocks=blocks,
+        norm_f=jnp.ones((d,), jnp.float32),
+        lm_head=jax.random.normal(next(ki), (v, d), jnp.float32) * s_attn,
+    )
+
+
+def _rmsnorm(x, gamma):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + 1e-6) * gamma
+
+
+def forward(params: dict, tokens, cfg: dict):
+    """tokens [B, S] int32 → logits [B, S, vocab]. Causal MHA, head dim 24,
+    SiLU MLP — numerics match the rust oracle to f32 tolerance."""
+    b, s = tokens.shape
+    d = cfg["d_model"]
+    nh = cfg["n_heads"]
+    hd = d // nh
+    h = params["tok_emb"][tokens] + params["pos_emb"][None, :s, :]
+    mask = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    for blk in params["blocks"]:
+        x = _rmsnorm(h, blk["norm1"])
+        q = (x @ blk["wq"].T).reshape(b, s, nh, hd)
+        k = (x @ blk["wk"].T).reshape(b, s, nh, hd)
+        v = (x @ blk["wv"].T).reshape(b, s, nh, hd)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(hd)
+        scores = jnp.where(mask[None, None, :, :], scores, -jnp.inf)
+        p = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("bhqk,bkhd->bqhd", p, v).reshape(b, s, d)
+        h = h + attn @ blk["wo"].T
+        x = _rmsnorm(h, blk["norm2"])
+        ff = jax.nn.silu(x @ blk["w1"].T)
+        h = h + ff @ blk["w2"].T
+    h = _rmsnorm(h, params["norm_f"])
+    return h @ params["lm_head"].T
+
+
+def loss_fn(params: dict, tokens, targets, cfg: dict):
+    logits = forward(params, tokens, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# --------------------------------------------------------------------------
+# Quantized-linear forward — the L1 kernel on the compiled inference path
+# --------------------------------------------------------------------------
+
+def quantized_linear(idx, gains, tb, x, rows: int, cols: int, use_pallas: bool = True):
+    """y = Ŵ·x where Ŵ is reconstructed from LLVQ shape–gain codes.
+
+    idx   [nblocks] int64 — lattice indices (nblocks = rows·cols/24),
+    gains [nblocks] f32   — per-block gains (shape–gain) already divided
+                            by the lattice point norm, i.e. Ŵ_block =
+                            point · gains,
+    x     [cols] or [B, cols] f32.
+    """
+    from compile.kernels import llvq_dequant as kd
+
+    n = idx.shape[0]
+    assert n * 24 == rows * cols, "block count must tile the matrix exactly"
+    pts = (
+        kd.pallas_dequant(idx, tb, tile=_tile_for(n))
+        if use_pallas
+        else kd.dequant_batch(idx, tb)
+    ).astype(jnp.float32)
+    w_hat = (pts * gains[:, None]).reshape(rows, cols)
+    return x @ w_hat.T
+
+
+def _tile_for(n: int) -> int:
+    for t in (256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if n % t == 0:
+            return t
+    return 1
+
+
+# --------------------------------------------------------------------------
+# Flat weight I/O (the .llvqw canonical order) for AOT argument passing
+# --------------------------------------------------------------------------
+
+def params_to_flat(params: dict) -> list:
+    flat = [params["tok_emb"], params["pos_emb"]]
+    for blk in params["blocks"]:
+        flat += [blk[k] for k in ("norm1", "wq", "wk", "wv", "wo", "norm2", "w1", "w2")]
+    flat += [params["norm_f"], params["lm_head"]]
+    return flat
+
+
+def flat_to_params(flat: list, cfg: dict) -> dict:
+    it = iter(flat)
+    params = dict(tok_emb=next(it), pos_emb=next(it), blocks=[])
+    for _ in range(cfg["n_layers"]):
+        params["blocks"].append(
+            dict(
+                norm1=next(it), wq=next(it), wk=next(it), wv=next(it),
+                wo=next(it), norm2=next(it), w1=next(it), w2=next(it),
+            )
+        )
+    params["norm_f"] = next(it)
+    params["lm_head"] = next(it)
+    return params
+
+
+def flat_shapes(cfg: dict) -> list[tuple[int, ...]]:
+    d, f, v, s = cfg["d_model"], cfg["d_ff"], cfg["vocab"], cfg["max_seq"]
+    shapes = [(v, d), (s, d)]
+    for _ in range(cfg["n_layers"]):
+        shapes += [(d,), (d, d), (d, d), (d, d), (d, d), (d,), (f, d), (d, f)]
+    shapes += [(d,), (v, d)]
+    return shapes

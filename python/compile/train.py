@@ -1,0 +1,108 @@
+"""Build-time training of the tiny model zoo on the synthetic corpus.
+
+Runs ONCE under `make artifacts` (never on the request path). Each model
+trains for a few hundred Adam steps — enough to pull perplexity far below
+the unigram floor so quantization-induced degradation is measurable, per
+the session contract's end-to-end requirement. Weights land in
+`artifacts/<name>.llvqw` (the cross-language format of model/io.rs).
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+from compile.corpus import Corpus
+
+
+def make_batches(seed: int, num_tokens: int, seq: int):
+    c = Corpus(seed)
+    toks, _ = c.generate(num_tokens)
+    arr = np.asarray(toks, np.int32)
+    n = (len(arr) - 1) // seq
+    x = arr[: n * seq].reshape(n, seq)
+    y = arr[1 : n * seq + 1].reshape(n, seq)
+    return x, y
+
+
+def adam_train(cfg: dict, steps: int, batch: int, lr: float, seed: int = 1000):
+    key = jax.random.PRNGKey(cfg["d_model"] * 7 + cfg["n_layers"])
+    params = M.init_params(cfg, key)
+    seq = cfg["max_seq"]
+    x_all, y_all = make_batches(seed, steps * batch * seq + seq + 1, seq)
+
+    loss_grad = jax.jit(
+        jax.value_and_grad(lambda p, x, y: M.loss_fn(p, x, y, cfg))
+    )
+
+    flat, tree = jax.tree_util.tree_flatten(params)
+    m = [jnp.zeros_like(t) for t in flat]
+    v = [jnp.zeros_like(t) for t in flat]
+    b1, b2, eps = 0.9, 0.95, 1e-8
+
+    t0 = time.time()
+    last = None
+    for step in range(steps):
+        lo = (step * batch) % (x_all.shape[0] - batch)
+        xb = jnp.asarray(x_all[lo : lo + batch])
+        yb = jnp.asarray(y_all[lo : lo + batch])
+        loss, grads = loss_grad(params, xb, yb)
+        gflat, _ = jax.tree_util.tree_flatten(grads)
+        t = step + 1
+        lr_t = lr * min(1.0, t / 50.0)  # linear warmup
+        new_flat = []
+        for i, (p, g) in enumerate(zip(jax.tree_util.tree_flatten(params)[0], gflat)):
+            m[i] = b1 * m[i] + (1 - b1) * g
+            v[i] = b2 * v[i] + (1 - b2) * g * g
+            mh = m[i] / (1 - b1 ** t)
+            vh = v[i] / (1 - b2 ** t)
+            new_flat.append(p - lr_t * mh / (jnp.sqrt(vh) + eps))
+        params = jax.tree_util.tree_unflatten(tree, new_flat)
+        last = float(loss)
+        if step % 50 == 0 or step == steps - 1:
+            print(f"  [{cfg['name']}] step {step:4d} loss {last:.4f} "
+                  f"ppl {np.exp(last):7.2f} ({time.time()-t0:.0f}s)", flush=True)
+    return params, last
+
+
+def save_llvqw(params: dict, cfg: dict, path: Path):
+    """Write the cross-language .llvqw format (see rust/src/model/io.rs)."""
+    header = json.dumps(
+        {k: cfg[k] for k in ("name", "vocab", "d_model", "n_layers", "n_heads", "d_ff", "max_seq")},
+        separators=(",", ":"), sort_keys=True,
+    ).encode()
+    with open(path, "wb") as f:
+        f.write(b"LLVQWTS1")
+        f.write(struct.pack("<I", len(header)))
+        f.write(header)
+        for t in M.params_to_flat(params):
+            f.write(np.asarray(t, np.float32).tobytes())
+
+
+def train_zoo(out_dir: Path, steps: int = 260, batch: int = 16, lr: float = 3e-3):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    results = {}
+    for cfg in M.config_zoo():
+        path = out_dir / f"{cfg['name']}.llvqw"
+        if path.exists():
+            print(f"  [{cfg['name']}] exists, skipping")
+            continue
+        print(f"training {cfg['name']} …", flush=True)
+        params, loss = adam_train(cfg, steps, batch, lr)
+        save_llvqw(params, cfg, path)
+        results[cfg["name"]] = loss
+        print(f"  [{cfg['name']}] final loss {loss:.4f} → {path}")
+    return results
+
+
+if __name__ == "__main__":
+    steps = int(sys.argv[1]) if len(sys.argv) > 1 else 260
+    train_zoo(Path(__file__).resolve().parent.parent.parent / "artifacts", steps=steps)

@@ -1,0 +1,58 @@
+"""Golay code + theta series validation (python twin of golay.rs tests)."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+import pytest
+
+from compile.leech import (
+    WEIGHTS,
+    golay_by_weight,
+    golay_codewords,
+    theta_shell_sizes,
+)
+
+
+def test_weight_distribution():
+    wd = {}
+    for c in golay_codewords():
+        wd[bin(c).count("1")] = wd.get(bin(c).count("1"), 0) + 1
+    assert wd == {0: 1, 8: 759, 12: 2576, 16: 759, 24: 1}
+
+
+def test_linearity_closure():
+    cws = golay_codewords()
+    s = set(cws)
+    for i in range(0, 4096, 97):
+        for j in range(0, 4096, 113):
+            assert cws[i] ^ cws[j] in s
+
+
+def test_min_distance_8():
+    assert min(bin(c).count("1") for c in golay_codewords()[1:]) == 8
+
+
+def test_doubly_even():
+    for c in golay_codewords():
+        assert bin(c).count("1") % 4 == 0
+
+
+@pytest.mark.parametrize("w", WEIGHTS)
+def test_weight_buckets_sorted_and_sized(w):
+    bucket = golay_by_weight()[w]
+    assert bucket == sorted(bucket)
+    expect = {0: 1, 8: 759, 12: 2576, 16: 759, 24: 1}[w]
+    assert len(bucket) == expect
+
+
+def test_theta_series_table1():
+    n = theta_shell_sizes(13)
+    assert n[2] == 196_560
+    assert n[3] == 16_773_120
+    assert n[4] == 398_034_000
+    assert n[5] == 4_629_381_120
+    # paper Table 1 prints n(13) with a dropped digit; cumulative pins it
+    assert n[13] == 169_931_095_326_720
+    assert sum(n[2:14]) == 280_974_212_784_720

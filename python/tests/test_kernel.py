@@ -1,0 +1,109 @@
+"""L1 kernel correctness: Pallas/jnp dequantizer vs the pure-python oracle.
+
+This is the CORE correctness signal of the compile path (kernel vs ref
+allclose), plus hypothesis-style sweeps over batch shapes, tile sizes and
+index distributions.
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from compile import leech  # noqa: E402
+from compile.kernels import llvq_dequant as kd  # noqa: E402
+from compile.kernels.ref import dequantize_ref  # noqa: E402
+
+TABLES = leech.build_tables(4)
+TB = kd.tables_to_arrays(TABLES)
+
+
+def _random_indices(rng, n):
+    return rng.integers(0, TABLES.num_points(), n, dtype=np.int64)
+
+
+def test_jnp_dequant_matches_ref_oracle():
+    rng = np.random.default_rng(7)
+    idx = _random_indices(rng, 256)
+    # pin structural boundaries
+    idx[:6] = [0, 1, 196_559, 196_560, TABLES.num_points() - 1, 16_969_680]
+    out = np.asarray(kd.dequant_batch(jnp.asarray(idx), TB))
+    for i, ix in enumerate(idx):
+        assert list(out[i]) == dequantize_ref(TABLES, int(ix)), f"idx {ix}"
+
+
+def test_outputs_are_lattice_points_with_correct_norms():
+    rng = np.random.default_rng(8)
+    idx = _random_indices(rng, 200)
+    out = np.asarray(kd.dequant_batch(jnp.asarray(idx), TB))
+    n = leech.theta_shell_sizes(4)
+    cum = {2: n[2], 3: n[2] + n[3], 4: n[2] + n[3] + n[4]}
+    for i, ix in enumerate(idx):
+        x = [int(v) for v in out[i]]
+        assert leech.is_lattice_point(x), f"idx {ix} → non-lattice {x}"
+        norm = sum(v * v for v in x)
+        # shell implied by the index range must match the point's norm
+        m_expected = next(m for m in (2, 3, 4) if ix < cum[m])
+        assert norm == 16 * m_expected, f"idx {ix}: norm {norm} ≠ shell {m_expected}"
+
+
+@pytest.mark.parametrize("tile", [1, 2, 64, 256])
+def test_pallas_matches_jnp_across_tiles(tile):
+    rng = np.random.default_rng(tile)
+    idx = _random_indices(rng, 256)
+    a = np.asarray(kd.dequant_batch(jnp.asarray(idx), TB))
+    b = np.asarray(kd.pallas_dequant(jnp.asarray(idx), TB, tile=tile))
+    assert (a == b).all()
+
+
+@pytest.mark.parametrize("n", [8, 24, 768])
+def test_batch_shapes(n):
+    rng = np.random.default_rng(n)
+    idx = _random_indices(rng, n)
+    out = np.asarray(kd.dequant_batch(jnp.asarray(idx), TB))
+    assert out.shape == (n, 24)
+    assert out.dtype == np.int32
+
+
+def test_full_shell2_sweep_matches_ref():
+    """Exhaustive agreement on a uniform stride through Shell(2)."""
+    idx = np.arange(0, 196_560, 997, dtype=np.int64)
+    out = np.asarray(kd.dequant_batch(jnp.asarray(idx), TB))
+    for i, ix in enumerate(idx):
+        assert list(out[i]) == dequantize_ref(TABLES, int(ix))
+        assert sum(int(v) ** 2 for v in out[i]) == 32  # shell 2 norm
+
+
+def test_dequant_f32_scaling():
+    idx = jnp.asarray([0, 5, 100], dtype=jnp.int64)
+    pts = np.asarray(kd.dequant_batch(idx, TB), dtype=np.float64)
+    got = np.asarray(kd.dequant_f32(idx, TB, 2.0))
+    np.testing.assert_allclose(got, pts / np.sqrt(8.0) * 2.0, rtol=1e-6)
+
+
+def test_quantized_linear_against_manual():
+    from compile import model as M
+
+    rows = cols = 24 * 2
+    nblocks = rows * cols // 24
+    rng = np.random.default_rng(3)
+    idx = _random_indices(rng, nblocks)
+    gains = rng.random(nblocks, dtype=np.float32) * 0.2
+    x = rng.standard_normal((4, cols)).astype(np.float32)
+    y = np.asarray(
+        M.quantized_linear(
+            jnp.asarray(idx), jnp.asarray(gains), TB, jnp.asarray(x), rows, cols,
+            use_pallas=False,
+        )
+    )
+    pts = np.asarray(kd.dequant_batch(jnp.asarray(idx), TB), dtype=np.float32)
+    w_hat = (pts * gains[:, None]).reshape(rows, cols)
+    np.testing.assert_allclose(y, x @ w_hat.T, rtol=1e-4, atol=1e-4)

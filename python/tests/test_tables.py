@@ -1,0 +1,70 @@
+"""Shell/class enumeration + kernel-table validation, incl. the
+cross-language equality check against the rust JSON export when present."""
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+import pytest
+
+from compile.leech import build_tables, enumerate_shell, theta_shell_sizes
+
+ROOT = Path(__file__).resolve().parent.parent.parent
+
+
+@pytest.mark.parametrize("m", range(2, 9))
+def test_enumeration_matches_theta(m):
+    total = sum(c.size for c in enumerate_shell(m))
+    assert total == theta_shell_sizes(m)[m], f"shell {m} mismatch"
+
+
+def test_shell2_composition_table2():
+    classes = enumerate_shell(2)
+    sizes = sorted(c.size for c in classes)
+    assert sizes == [1104, 97152, 98304]
+    parities = {c.parity for c in classes}
+    assert parities == {"even", "odd"}
+
+
+def test_shell4_composition_table2():
+    sizes = sorted(c.size for c in enumerate_shell(4))
+    assert sizes == [48, 170016, 777216, 24870912, 24870912, 46632960, 126615552, 174096384]
+
+
+def test_tables_consistency_small():
+    t = build_tables(3)
+    assert t.num_points() == 16_969_680
+    assert t.index_bits() == 25
+    assert len(t.group_offsets) == t.num_groups + 1
+    assert all(a < b for a, b in zip(t.group_offsets, t.group_offsets[1:]))
+    # per-group size identity: A · 2^B · arr_f1 · arr_f0
+    for g in range(t.num_groups):
+        size = t.group_offsets[g + 1] - t.group_offsets[g]
+        expect = (
+            t.num_codewords[g]
+            * (1 << t.sign_bits[g])
+            * t.f1_arrangements[g]
+            * t.f0_arrangements[g]
+        )
+        assert size == expect
+
+
+def test_cross_language_tables_match_rust():
+    """Compare against `llvq tables --out artifacts/tables.rust.json` when
+    the export exists (written by `make test`)."""
+    path = ROOT / "artifacts" / "tables.rust.json"
+    if not path.exists():
+        pytest.skip("rust table export not present")
+    rust = json.loads(path.read_text())
+    t = build_tables(int(rust["max_m"]))
+    assert rust["num_groups"] == t.num_groups
+    assert rust["group_offsets"] == t.group_offsets
+    for key in (
+        "weight", "num_codewords", "cw_base", "sign_bits", "parity_odd",
+        "f1_neg_parity", "f0_arrangements", "f1_arrangements",
+        "f1_values", "f1_counts", "f0_values", "f0_counts",
+        "golay_sorted", "weight_offsets",
+    ):
+        assert rust[key] == getattr(t, key), f"table '{key}' differs from rust"

@@ -1,0 +1,71 @@
+//! Decoder benchmarks — the compression hot path (EXPERIMENTS.md §Perf L3).
+//!
+//! Rows: infinite-lattice NN (fast byte-LUT path vs reference), ball-cut
+//! search, angular search over the 2-bit shell union, single-block
+//! quantization for both LLVQ variants.
+
+use std::sync::Arc;
+
+use llvq::golay::GolayCode;
+use llvq::leech::decode::LeechDecoder;
+use llvq::leech::index::LeechIndexer;
+use llvq::quant::llvq::{LlvqShapeGain, LlvqSpherical};
+use llvq::quant::VectorQuantizer;
+use llvq::util::bench::{black_box, Bench};
+use llvq::util::rng::Xoshiro256pp;
+
+fn main() {
+    let b = Bench::default();
+    let golay = GolayCode::new();
+    let dec = LeechDecoder::new(&golay);
+    let mut rng = Xoshiro256pp::new(1);
+
+    let targets: Vec<[f64; 24]> = (0..256)
+        .map(|_| std::array::from_fn(|_| rng.next_gaussian() * 5.0))
+        .collect();
+    let mut i = 0;
+
+    println!("== decoder (single thread) ==");
+    b.run_throughput("decode_infinite (byte-LUT)", 1.0, || {
+        let t = &targets[i % targets.len()];
+        i += 1;
+        black_box(dec.decode_infinite(t));
+    });
+    let mut j = 0;
+    b.run_throughput("decode_infinite_ref (naive)", 1.0, || {
+        let t = &targets[j % targets.len()];
+        j += 1;
+        black_box(dec.decode_infinite_ref(t));
+    });
+    let mut k = 0;
+    b.run_throughput("decode_in_ball M=13", 1.0, || {
+        let t = &targets[k % targets.len()];
+        k += 1;
+        black_box(dec.decode_in_ball(t, 13));
+    });
+    let mut l = 0;
+    b.run_throughput("decode_angular union 2..12", 1.0, || {
+        let t = &targets[l % targets.len()];
+        l += 1;
+        black_box(dec.decode_angular(t, 2, 12));
+    });
+
+    println!("\n== block quantization (codes incl. indexing) ==");
+    let blocks: Vec<[f32; 24]> = (0..256)
+        .map(|_| std::array::from_fn(|_| rng.next_gaussian() as f32))
+        .collect();
+    let sph = LlvqSpherical::new(Arc::new(LeechIndexer::new(13)));
+    let mut m = 0;
+    b.run_throughput("llvq-spherical quantize (2 bpw)", 1.0, || {
+        let x = &blocks[m % blocks.len()];
+        m += 1;
+        black_box(sph.quantize(x));
+    });
+    let sg = LlvqShapeGain::new(Arc::new(LeechIndexer::new(12)), 1);
+    let mut n = 0;
+    b.run_throughput("llvq-shape-gain quantize (2 bpw)", 1.0, || {
+        let x = &blocks[n % blocks.len()];
+        n += 1;
+        black_box(sg.quantize(x));
+    });
+}

@@ -1,0 +1,50 @@
+//! Dequantization benchmarks (EXPERIMENTS.md §Perf): the inference-side
+//! hot path — hierarchical indexer vs flattened kernel tables, plus
+//! encode (index construction) for completeness.
+
+use llvq::leech::index::LeechIndexer;
+use llvq::leech::tables::KernelTables;
+use llvq::util::bench::{black_box, Bench};
+use llvq::util::rng::Xoshiro256pp;
+
+fn main() {
+    let b = Bench::default();
+    let ix = LeechIndexer::new(13);
+    let t = KernelTables::build(&ix);
+    let mut rng = Xoshiro256pp::new(2);
+    let np = ix.num_points() as u64;
+    let indices: Vec<u64> = (0..4096).map(|_| rng.next_range(np)).collect();
+
+    println!("== dequantization @ M=13 (2 bits/weight codebook) ==");
+    let mut i = 0;
+    b.run_throughput("indexer.decode_index", 1.0, || {
+        black_box(ix.decode_index(indices[i % indices.len()]));
+        i += 1;
+    });
+    let mut j = 0;
+    b.run_throughput("tables.dequantize (kernel twin)", 1.0, || {
+        black_box(t.dequantize(indices[j % indices.len()]));
+        j += 1;
+    });
+
+    // batch-64 flavour (the granularity the serving path uses)
+    let mut base = 0usize;
+    b.run_throughput("tables.dequantize ×64 batch", 64.0, || {
+        for k in 0..64 {
+            black_box(t.dequantize(indices[(base + k) % indices.len()]));
+        }
+        base += 64;
+    });
+
+    println!("\n== encode (vector → index) ==");
+    let points: Vec<[i32; 24]> = indices
+        .iter()
+        .take(512)
+        .map(|&ixx| ix.decode_index(ixx))
+        .collect();
+    let mut k = 0;
+    b.run_throughput("indexer.encode_point", 1.0, || {
+        black_box(ix.encode_point(&points[k % points.len()]));
+        k += 1;
+    });
+}

@@ -1,0 +1,16 @@
+//! Gaussian-source experiment regenerators as benches: Table 4 and
+//! Table 7 summary rows at reduced sample counts (full runs via
+//! `llvq exp table4 table7`).
+
+use llvq::experiments::{table4, table7, Effort};
+
+fn main() {
+    let e = Effort {
+        leech_blocks: 400,
+        cheap_blocks: 40_000,
+        eval_seqs: 4,
+        threads: llvq::util::threadpool::default_threads(),
+    };
+    table4(&e);
+    table7(&e);
+}

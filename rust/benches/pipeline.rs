@@ -1,0 +1,54 @@
+//! PTQ pipeline benchmark — end-to-end layer quantization throughput for
+//! each method (the compression-time cost the paper's Alg. 1 incurs).
+
+use std::sync::Arc;
+
+use llvq::leech::index::LeechIndexer;
+use llvq::math::linalg::Matrix;
+use llvq::pipeline::gptq::{quantize_layer, GptqConfig};
+use llvq::quant::e8::{E8Codebook, E8Cut};
+use llvq::quant::llvq::{LlvqShapeGain, LlvqSpherical};
+use llvq::quant::scalar::UniformQuantizer;
+use llvq::quant::VectorQuantizer;
+use llvq::util::bench::{black_box, Bench};
+use llvq::util::rng::Xoshiro256pp;
+
+fn main() {
+    let b = Bench {
+        warmup: std::time::Duration::from_millis(100),
+        min_batch_time: std::time::Duration::from_millis(100),
+        num_samples: 5,
+    };
+    // llama2-tiny attention-shaped layer: 144×144, correlated Hessian
+    let (rows, cols) = (144usize, 144usize);
+    let mut rng = Xoshiro256pp::new(3);
+    let w: Vec<f32> = (0..rows * cols).map(|_| rng.next_gaussian() as f32).collect();
+    let mut a = Matrix::zeros(cols, cols);
+    for v in a.data.iter_mut() {
+        *v = rng.next_gaussian() * 0.2;
+    }
+    for i in 0..cols {
+        *a.at_mut(i, i) += 1.0;
+    }
+    let h = a.matmul(&a.transpose());
+    let cfg = GptqConfig::default();
+    let params = (rows * cols) as f64;
+
+    println!("== GPTQ layer quantization, 144×144, {} threads ==", cfg.threads);
+    let uni = UniformQuantizer::new_gaussian_optimal(2);
+    b.run_throughput("scalar-2b layer (params/s)", params, || {
+        black_box(quantize_layer(&w, rows, cols, &h, &uni, &cfg));
+    });
+    let e8 = E8Codebook::new(E8Cut::Ball);
+    b.run_throughput("e8p layer (params/s)", params, || {
+        black_box(quantize_layer(&w, rows, cols, &h, &e8, &cfg));
+    });
+    let sph = LlvqSpherical::new(Arc::new(LeechIndexer::new(13)));
+    b.run_throughput("llvq-spherical layer (params/s)", params, || {
+        black_box(quantize_layer(&w, rows, cols, &h, &sph, &cfg));
+    });
+    let sg = LlvqShapeGain::new(Arc::new(LeechIndexer::new(12)), 1);
+    b.run_throughput("llvq-shape-gain layer (params/s)", params, || {
+        black_box(quantize_layer(&w, rows, cols, &h, &sg, &cfg));
+    });
+}

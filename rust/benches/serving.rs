@@ -1,0 +1,78 @@
+//! Serving-coordinator benchmark: batched vs unbatched latency and
+//! throughput on the native engine (and the online-Hadamard overhead the
+//! paper's §5.3 discusses for unfused rotations).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use llvq::coordinator::{BatchForward, BatcherConfig, Coordinator, NativeEngine};
+use llvq::math::hadamard::RandomizedHadamard;
+use llvq::model::config::config_by_name;
+use llvq::model::corpus::Corpus;
+use llvq::model::transformer::Weights;
+use llvq::util::bench::{black_box, Bench};
+
+fn main() {
+    let b = Bench {
+        warmup: Duration::from_millis(200),
+        min_batch_time: Duration::from_millis(200),
+        num_samples: 6,
+    };
+    let cfg = config_by_name("llama2-tiny").unwrap();
+    let weights = Weights::random(&cfg, 1);
+    let engine = Arc::new(NativeEngine { weights });
+
+    let mut corpus = Corpus::new(17);
+    let seqs: Vec<Vec<u8>> = (0..64).map(|_| corpus.generate(32).0).collect();
+
+    println!("== engine forward (no coordinator) ==");
+    let mut i = 0;
+    b.run_throughput("forward batch=1 (seq/s)", 1.0, || {
+        black_box(engine.forward_batch(std::slice::from_ref(&seqs[i % seqs.len()])));
+        i += 1;
+    });
+    let batch8: Vec<Vec<u8>> = seqs[..8].to_vec();
+    b.run_throughput("forward batch=8 (seq/s)", 8.0, || {
+        black_box(engine.forward_batch(&batch8));
+    });
+
+    println!("\n== coordinator under concurrency ==");
+    for &(max_batch, clients) in &[(1usize, 8usize), (8, 8), (8, 32)] {
+        let coord = Coordinator::start(
+            engine.clone(),
+            BatcherConfig {
+                max_batch,
+                max_wait: Duration::from_millis(2),
+            },
+        );
+        let t0 = std::time::Instant::now();
+        let per = 24;
+        std::thread::scope(|s| {
+            for c in 0..clients {
+                let coord = coord.clone();
+                let seqs = &seqs;
+                s.spawn(move || {
+                    for r in 0..per {
+                        let _ = coord.submit(seqs[(c + r) % seqs.len()].clone());
+                    }
+                });
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "max_batch={max_batch:<2} clients={clients:<3} → {:>7.1} req/s  \
+             mean batch {:.2}  mean latency {:.2} ms",
+            (clients * per) as f64 / wall,
+            coord.metrics.mean_batch(),
+            coord.metrics.mean_latency_ms()
+        );
+        coord.stop();
+    }
+
+    println!("\n== online Hadamard overhead (unfused rotations, §5.3) ==");
+    let h = RandomizedHadamard::new(cfg.d_model, 9);
+    let mut x: Vec<f64> = (0..cfg.d_model).map(|k| (k as f64).sin()).collect();
+    b.run_throughput("R_in · x (144-dim, ops/s)", 1.0, || {
+        h.forward(black_box(&mut x));
+    });
+}

@@ -1,0 +1,357 @@
+//! Inference coordinator: dynamic batching over a forward engine.
+//!
+//! The serving-side L3 piece (vLLM-router-shaped, scaled to this paper):
+//! requests arrive asynchronously, a batcher thread coalesces them up to
+//! `max_batch` or `max_wait`, a worker executes the batch on the forward
+//! engine (PJRT artifact or the Rust-native oracle), and responses flow
+//! back through per-request channels. A line-protocol TCP front-end and
+//! latency/throughput metrics round out the service.
+//!
+//! The quantized model's weights were produced by the PTQ pipeline; the
+//! dequantization happened at load time (weights are dense f32 again), so
+//! serving latency is identical across quantizers — the paper's "no
+//! expensive lookups on the inference path" claim shows up here as: the
+//! decode path executes exactly one HLO module regardless of method.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::model::transformer::{forward, ActivationCapture, Weights};
+
+/// A forward engine maps a batch of token sequences to per-sequence
+/// last-position logits (vocab-sized each).
+pub trait BatchForward: Send + Sync {
+    fn vocab(&self) -> usize;
+    fn max_seq(&self) -> usize;
+    /// `batch[i]` has uniform length ≤ max_seq; returns, per sequence, the
+    /// logits at the LAST position.
+    fn forward_batch(&self, batch: &[Vec<u8>]) -> Vec<Vec<f32>>;
+}
+
+/// Rust-native engine (oracle; also the no-artifacts fallback).
+pub struct NativeEngine {
+    pub weights: Weights,
+}
+
+impl BatchForward for NativeEngine {
+    fn vocab(&self) -> usize {
+        self.weights.cfg.vocab
+    }
+
+    fn max_seq(&self) -> usize {
+        self.weights.cfg.max_seq
+    }
+
+    fn forward_batch(&self, batch: &[Vec<u8>]) -> Vec<Vec<f32>> {
+        let v = self.vocab();
+        batch
+            .iter()
+            .map(|toks| {
+                let mut cap = ActivationCapture::default();
+                let logits = forward(&self.weights, toks, &mut cap);
+                logits[(toks.len() - 1) * v..toks.len() * v].to_vec()
+            })
+            .collect()
+    }
+}
+
+/// One queued request.
+struct Pending {
+    tokens: Vec<u8>,
+    reply: Sender<Vec<f32>>,
+    enqueued: Instant,
+}
+
+/// Service metrics (atomic, cheap to read while serving).
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_items: AtomicU64,
+    /// Total queue+execute latency in microseconds.
+    pub total_latency_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn mean_batch(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_items.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    pub fn mean_latency_ms(&self) -> f64 {
+        let r = self.requests.load(Ordering::Relaxed);
+        if r == 0 {
+            0.0
+        } else {
+            self.total_latency_us.load(Ordering::Relaxed) as f64 / r as f64 / 1000.0
+        }
+    }
+}
+
+/// Dynamic batcher configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// The coordinator: submit() from any thread; a dedicated worker drains
+/// the queue in batches.
+pub struct Coordinator {
+    tx: Mutex<Option<Sender<Pending>>>,
+    pub metrics: Arc<Metrics>,
+    worker: Mutex<Option<std::thread::JoinHandle<()>>>,
+    stopping: Arc<AtomicBool>,
+}
+
+impl Coordinator {
+    pub fn start(engine: Arc<dyn BatchForward>, cfg: BatcherConfig) -> Arc<Self> {
+        let (tx, rx) = channel::<Pending>();
+        let metrics = Arc::new(Metrics::default());
+        let stopping = Arc::new(AtomicBool::new(false));
+        let m2 = metrics.clone();
+        let s2 = stopping.clone();
+        let worker = std::thread::spawn(move || batch_loop(engine, rx, cfg, m2, s2));
+        Arc::new(Self {
+            tx: Mutex::new(Some(tx)),
+            metrics,
+            worker: Mutex::new(Some(worker)),
+            stopping,
+        })
+    }
+
+    /// Blocking request: returns last-position logits.
+    pub fn submit(&self, tokens: Vec<u8>) -> Result<Vec<f32>, String> {
+        let (rtx, rrx) = channel();
+        {
+            let guard = self.tx.lock().unwrap();
+            let tx = guard.as_ref().ok_or("coordinator stopped")?;
+            tx.send(Pending {
+                tokens,
+                reply: rtx,
+                enqueued: Instant::now(),
+            })
+            .map_err(|_| "worker gone".to_string())?;
+        }
+        rrx.recv().map_err(|_| "worker dropped request".to_string())
+    }
+
+    pub fn stop(&self) {
+        self.stopping.store(true, Ordering::SeqCst);
+        self.tx.lock().unwrap().take(); // close the channel
+        if let Some(h) = self.worker.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn batch_loop(
+    engine: Arc<dyn BatchForward>,
+    rx: Receiver<Pending>,
+    cfg: BatcherConfig,
+    metrics: Arc<Metrics>,
+    stopping: Arc<AtomicBool>,
+) {
+    loop {
+        // block for the first item
+        let first = match rx.recv() {
+            Ok(p) => p,
+            Err(_) => return, // channel closed
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + cfg.max_wait;
+        while batch.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(p) => batch.push(p),
+                Err(_) => break,
+            }
+        }
+        if stopping.load(Ordering::SeqCst) {
+            // still answer in-flight requests before exiting
+        }
+        let inputs: Vec<Vec<u8>> = batch.iter().map(|p| p.tokens.clone()).collect();
+        let outputs = engine.forward_batch(&inputs);
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+        metrics
+            .batched_items
+            .fetch_add(batch.len() as u64, Ordering::Relaxed);
+        for (p, out) in batch.into_iter().zip(outputs) {
+            metrics.requests.fetch_add(1, Ordering::Relaxed);
+            metrics.total_latency_us.fetch_add(
+                p.enqueued.elapsed().as_micros() as u64,
+                Ordering::Relaxed,
+            );
+            let _ = p.reply.send(out);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP front-end (line protocol)
+// ---------------------------------------------------------------------------
+
+/// Protocol: one request per line.
+///   `NEXT 3,17,42,…`  → `OK next=<argmax> logit=<v>`
+///   `STATS`           → `OK requests=… mean_batch=… mean_latency_ms=…`
+///   `QUIT`            → closes the connection.
+pub fn serve_tcp(coord: Arc<Coordinator>, listener: TcpListener) -> std::io::Result<()> {
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let c = coord.clone();
+        std::thread::spawn(move || {
+            let _ = handle_conn(c, stream);
+        });
+    }
+    Ok(())
+}
+
+fn handle_conn(coord: Arc<Coordinator>, stream: TcpStream) -> std::io::Result<()> {
+    let peer = stream.try_clone()?;
+    let mut reader = BufReader::new(peer);
+    let mut out = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(());
+        }
+        let line = line.trim();
+        if line == "QUIT" {
+            return Ok(());
+        }
+        if line == "STATS" {
+            writeln!(
+                out,
+                "OK requests={} mean_batch={:.2} mean_latency_ms={:.3}",
+                coord.metrics.requests.load(Ordering::Relaxed),
+                coord.metrics.mean_batch(),
+                coord.metrics.mean_latency_ms()
+            )?;
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("NEXT ") {
+            let tokens: Result<Vec<u8>, _> =
+                rest.split(',').map(|t| t.trim().parse::<u8>()).collect();
+            match tokens {
+                Ok(toks) if !toks.is_empty() => match coord.submit(toks) {
+                    Ok(logits) => {
+                        let (mut bi, mut bv) = (0usize, f32::NEG_INFINITY);
+                        for (i, &v) in logits.iter().enumerate() {
+                            if v > bv {
+                                bv = v;
+                                bi = i;
+                            }
+                        }
+                        writeln!(out, "OK next={bi} logit={bv:.4}")?;
+                    }
+                    Err(e) => writeln!(out, "ERR {e}")?,
+                },
+                _ => writeln!(out, "ERR bad token list")?,
+            }
+            continue;
+        }
+        writeln!(out, "ERR unknown command")?;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::config_by_name;
+
+    fn tiny_engine() -> Arc<dyn BatchForward> {
+        let cfg = config_by_name("qwen3-4b-tiny").unwrap();
+        Arc::new(NativeEngine {
+            weights: Weights::random(&cfg, 9),
+        })
+    }
+
+    #[test]
+    fn coordinator_answers_requests() {
+        let coord = Coordinator::start(tiny_engine(), BatcherConfig::default());
+        let logits = coord.submit(vec![1, 2, 3, 4]).unwrap();
+        assert_eq!(logits.len(), 64);
+        coord.stop();
+    }
+
+    #[test]
+    fn batching_accumulates_under_load() {
+        let coord = Coordinator::start(
+            tiny_engine(),
+            BatcherConfig {
+                max_batch: 16,
+                max_wait: Duration::from_millis(20),
+            },
+        );
+        std::thread::scope(|s| {
+            for t in 0..24 {
+                let c = coord.clone();
+                s.spawn(move || {
+                    let toks: Vec<u8> = (0..10).map(|i| ((t + i) % 64) as u8).collect();
+                    c.submit(toks).unwrap();
+                });
+            }
+        });
+        assert_eq!(coord.metrics.requests.load(Ordering::Relaxed), 24);
+        assert!(
+            coord.metrics.mean_batch() > 1.2,
+            "no batching happened: {}",
+            coord.metrics.mean_batch()
+        );
+        coord.stop();
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let coord = Coordinator::start(tiny_engine(), BatcherConfig::default());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let c2 = coord.clone();
+        std::thread::spawn(move || {
+            let _ = serve_tcp(c2, listener);
+        });
+        let mut s = TcpStream::connect(addr).unwrap();
+        writeln!(s, "NEXT 5,6,7").unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("OK next="), "{line}");
+        writeln!(s, "STATS").unwrap();
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        assert!(line.contains("requests=1"), "{line}");
+        writeln!(s, "QUIT").unwrap();
+        coord.stop();
+    }
+
+    #[test]
+    fn deterministic_between_native_batches() {
+        let engine = tiny_engine();
+        let a = engine.forward_batch(&[vec![1, 2, 3]]);
+        let b = engine.forward_batch(&[vec![9, 9], vec![1, 2, 3]]);
+        for (x, y) in a[0].iter().zip(&b[1]) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Integer-coordinate membership tests for the Leech lattice (paper eqs. 6–8).
+//!
+//! `L^int = L^even ∪ L^odd ⊂ ℤ²⁴`, with `Λ₂₄ = L^int / √8`. A point of
+//! shell m has integer squared norm `16·m`.
+
+use crate::golay::GolayCode;
+use crate::DIM;
+
+/// Scale between the integer embedding and the unit-covolume lattice:
+/// `Λ₂₄ = L^int / √8`.
+pub const SCALE: f64 = 2.828_427_124_746_190_3; // √8
+
+/// Classify an integer vector: `Some(true)` = even coset, `Some(false)` =
+/// odd coset, `None` = mixed parity (not in the lattice).
+pub fn coset_parity(x: &[i32; DIM]) -> Option<bool> {
+    let p = x[0].rem_euclid(2);
+    if x.iter().all(|&v| v.rem_euclid(2) == p) {
+        Some(p == 0)
+    } else {
+        None
+    }
+}
+
+/// Full membership test for `L^int` (paper eqs. 7–8).
+pub fn is_lattice_point(golay: &GolayCode, x: &[i32; DIM]) -> bool {
+    match coset_parity(x) {
+        None => false,
+        Some(true) => {
+            // (ii) (x/2) mod 2 ∈ G24 ; (iii) Σ x_i ≡ 0 (mod 8)
+            let mut word = 0u32;
+            for (i, &v) in x.iter().enumerate() {
+                if (v / 2).rem_euclid(2) == 1 {
+                    word |= 1 << i;
+                }
+            }
+            let sum: i64 = x.iter().map(|&v| v as i64).sum();
+            golay.contains(word) && sum.rem_euclid(8) == 0
+        }
+        Some(false) => {
+            // (ii) ((x−1)/2) mod 2 ∈ G24 ; (iii) Σ x_i ≡ 4 (mod 8)
+            let mut word = 0u32;
+            for (i, &v) in x.iter().enumerate() {
+                // ((v-1)/2) mod 2 == 1  ⇔  v ≡ 3 (mod 4)
+                if v.rem_euclid(4) == 3 {
+                    word |= 1 << i;
+                }
+            }
+            let sum: i64 = x.iter().map(|&v| v as i64).sum();
+            golay.contains(word) && sum.rem_euclid(8) == 4
+        }
+    }
+}
+
+/// Squared integer norm; shell index is `norm²/16` when it divides evenly.
+pub fn norm_sq(x: &[i32; DIM]) -> i64 {
+    x.iter().map(|&v| (v as i64) * (v as i64)).sum()
+}
+
+/// Shell index m of a lattice point (`‖x‖² = 16m`), or None for the origin /
+/// non-multiples (non-lattice input).
+pub fn shell_of(x: &[i32; DIM]) -> Option<usize> {
+    let n = norm_sq(x);
+    if n == 0 || n % 16 != 0 {
+        None
+    } else {
+        Some((n / 16) as usize)
+    }
+}
+
+/// Convert an integer lattice point to real coordinates (`/√8`).
+pub fn to_real(x: &[i32; DIM]) -> [f64; DIM] {
+    let mut out = [0.0; DIM];
+    for i in 0..DIM {
+        out[i] = x[i] as f64 / SCALE;
+    }
+    out
+}
+
+/// The Golay word induced by a lattice point (support of halved/shifted
+/// mod-2 reduction). Assumes `x` has uniform parity.
+pub fn golay_word_of(x: &[i32; DIM], even: bool) -> u32 {
+    let mut word = 0u32;
+    for (i, &v) in x.iter().enumerate() {
+        let bit = if even {
+            (v / 2).rem_euclid(2) == 1 // |v| ≡ 2 (mod 4)
+        } else {
+            v.rem_euclid(4) == 3
+        };
+        if bit {
+            word |= 1 << i;
+        }
+    }
+    word
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_minimal_vectors() {
+        let g = GolayCode::new();
+        // (±4, ±4, 0^22) with matching sum ≡ 0 mod 8
+        let mut x = [0i32; DIM];
+        x[0] = 4;
+        x[1] = 4;
+        assert!(is_lattice_point(&g, &x));
+        assert_eq!(shell_of(&x), Some(2));
+        x[1] = -4;
+        assert!(is_lattice_point(&g, &x)); // sum 0 ≡ 0 ✓
+        // (4, 2, 0...) mixed residues — not a point
+        let mut y = [0i32; DIM];
+        y[0] = 4;
+        y[1] = 2;
+        assert!(!is_lattice_point(&g, &y));
+    }
+
+    #[test]
+    fn golay_support_class() {
+        let g = GolayCode::new();
+        // take a weight-8 codeword, build (2^8 on its support, 0 elsewhere),
+        // fix the sign parity so Σ ≡ 0 mod 8: 8 coords of +2 → sum 16 ≡ 0 ✓
+        let c = g.of_weight(8)[0];
+        let mut x = [0i32; DIM];
+        for i in 0..DIM {
+            if c & (1 << i) != 0 {
+                x[i] = 2;
+            }
+        }
+        assert!(is_lattice_point(&g, &x));
+        assert_eq!(shell_of(&x), Some(2));
+        // flipping ONE sign breaks the mod-8 sum (16 − 4 = 12 ≢ 0)
+        let i0 = (0..DIM).find(|&i| x[i] != 0).unwrap();
+        x[i0] = -2;
+        assert!(!is_lattice_point(&g, &x));
+        // flipping TWO signs restores it (16 − 8 = 8 ≡ 0)
+        let i1 = (i0 + 1..DIM).find(|&i| x[i] > 0).unwrap();
+        x[i1] = -2;
+        assert!(is_lattice_point(&g, &x));
+    }
+
+    #[test]
+    fn odd_coset_member() {
+        let g = GolayCode::new();
+        // (-3, 1^23): all ≡ 1 mod 4 ⇒ Golay word 0 ∈ G24; sum = 20 ≡ 4 ✓
+        let mut x = [1i32; DIM];
+        x[0] = -3;
+        assert!(is_lattice_point(&g, &x));
+        assert_eq!(shell_of(&x), Some(2));
+        // (+3, 1^23): 3 ≡ 3 mod 4 ⇒ word = e₀ ∉ G24 (weight 1)
+        x[0] = 3;
+        assert!(!is_lattice_point(&g, &x));
+    }
+}

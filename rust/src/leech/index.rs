@@ -1,0 +1,526 @@
+//! Bijective indexing of the ball-cut Leech lattice Λ₂₄(M) — the paper's
+//! central contribution (§3.2, §3.3).
+//!
+//! Every lattice point of shell 2 ≤ m ≤ M maps to a unique integer in
+//! `[0, N(M))` through the natural hierarchy:
+//!
+//! ```text
+//! global index = shell offset
+//!              + class offset          (within shell)
+//!              + subclass offset       (within class)
+//!              + local index           (within subclass)
+//! local index  = (perm_rank · 2^B + sign_rank) · A + codeword_rank
+//! perm_rank    = f1_rank · |F₀ arrangements| + f0_rank
+//! ```
+//!
+//! mirroring eq. 15 of the paper: `codeword_rank = I mod A` is the Golay
+//! refinement, then the sign pattern, then the permutation coset, each
+//! recovered by a modulo / integer-division pair. The permutation rank is a
+//! *multiset-permutation rank* over the class leader's value multiset, with
+//! the descending-value alphabet so the canonical leader has rank 0.
+//!
+//! `encode_point` (vector → index) and `decode_index` (index → vector, the
+//! paper's *dequantizer*) are exact inverses — enforced by property tests
+//! over every shell and class.
+
+use std::collections::HashMap;
+
+use crate::golay::GolayCode;
+use crate::leech::coset;
+use crate::leech::leaders::{self, ClassInfo, Parity, ShellClasses, Subclass};
+use crate::DIM;
+
+/// Multiset-permutation rank of `seq` (alphabet ordered by descending
+/// value: the non-increasing arrangement has rank 0).
+pub fn ms_perm_rank(seq: &[u8]) -> u128 {
+    // distinct values descending with counts
+    let mut syms: Vec<(u8, u8)> = Vec::new();
+    {
+        let mut sorted: Vec<u8> = seq.to_vec();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        for &v in &sorted {
+            match syms.last_mut() {
+                Some((lv, c)) if *lv == v => *c += 1,
+                _ => syms.push((v, 1)),
+            }
+        }
+    }
+    let mut total: u128 = {
+        let mut t = (1..=seq.len() as u128).product::<u128>();
+        for &(_, c) in &syms {
+            t /= (1..=c as u128).product::<u128>();
+        }
+        t
+    };
+    let mut len = seq.len() as u128;
+    let mut rank: u128 = 0;
+    for &cur in seq {
+        for &(v, c) in syms.iter() {
+            if c == 0 {
+                continue;
+            }
+            if v > cur {
+                rank += total * c as u128 / len;
+            } else if v == cur {
+                break;
+            }
+        }
+        let e = syms.iter_mut().find(|(v, _)| *v == cur).expect("symbol");
+        total = total * e.1 as u128 / len;
+        e.1 -= 1;
+        len -= 1;
+    }
+    rank
+}
+
+/// Inverse of [`ms_perm_rank`]: reconstruct the sequence from the rank and
+/// the multiset (given as (value, count) pairs, descending values).
+pub fn ms_perm_unrank(mults: &[(u8, u8)], mut rank: u128, out: &mut Vec<u8>) {
+    let mut syms: Vec<(u8, u8)> = mults.to_vec();
+    let len_total: usize = syms.iter().map(|&(_, c)| c as usize).sum();
+    let mut total: u128 = {
+        let mut t = (1..=len_total as u128).product::<u128>();
+        for &(_, c) in &syms {
+            t /= (1..=c as u128).product::<u128>();
+        }
+        t
+    };
+    let mut len = len_total as u128;
+    out.clear();
+    for _ in 0..len_total {
+        for i in 0..syms.len() {
+            let (v, c) = syms[i];
+            if c == 0 {
+                continue;
+            }
+            let cnt = total * c as u128 / len;
+            if rank < cnt {
+                out.push(v);
+                total = cnt;
+                syms[i].1 -= 1;
+                len -= 1;
+                break;
+            }
+            rank -= cnt;
+        }
+    }
+    debug_assert_eq!(rank, 0, "unrank left residue");
+}
+
+/// The indexer over Λ₂₄(M): shells 2..=max_m with all class metadata.
+pub struct LeechIndexer {
+    golay: GolayCode,
+    max_m: usize,
+    shells: Vec<ShellClasses>,
+    /// shell_offsets[k] = Σ_{m<2+k} n(m); len = shells.len()+1.
+    shell_offsets: Vec<u128>,
+    /// Per shell: leader value-tuple → class index.
+    class_lookup: Vec<HashMap<[u8; DIM], u32>>,
+}
+
+impl LeechIndexer {
+    /// Build the indexer for the ball cut up to shell `max_m` (inclusive).
+    /// `max_m = 13` gives the paper's 2.0 bits/dim codebook (N = 2^47.99).
+    pub fn new(max_m: usize) -> Self {
+        let golay = GolayCode::new();
+        Self::with_golay(golay, max_m)
+    }
+
+    pub fn with_golay(golay: GolayCode, max_m: usize) -> Self {
+        assert!(max_m >= 2, "ball cut needs at least shell 2");
+        let mut shells = Vec::with_capacity(max_m - 1);
+        let mut shell_offsets = vec![0u128];
+        let mut class_lookup = Vec::with_capacity(max_m - 1);
+        let mut acc = 0u128;
+        for m in 2..=max_m {
+            let s = leaders::enumerate_shell(&golay, m);
+            acc += s.size;
+            shell_offsets.push(acc);
+            let mut lut = HashMap::with_capacity(s.classes.len());
+            for (i, c) in s.classes.iter().enumerate() {
+                lut.insert(c.values, i as u32);
+            }
+            class_lookup.push(lut);
+            shells.push(s);
+        }
+        Self {
+            golay,
+            max_m,
+            shells,
+            shell_offsets,
+            class_lookup,
+        }
+    }
+
+    pub fn golay(&self) -> &GolayCode {
+        &self.golay
+    }
+
+    pub fn max_m(&self) -> usize {
+        self.max_m
+    }
+
+    /// Total number of indexable points N(M).
+    pub fn num_points(&self) -> u128 {
+        *self.shell_offsets.last().unwrap()
+    }
+
+    /// Bits needed for one block index: ⌈log₂ N(M)⌉.
+    pub fn index_bits(&self) -> u32 {
+        let n = self.num_points();
+        128 - (n - 1).leading_zeros()
+    }
+
+    /// Bits per dimension of this codebook.
+    pub fn bits_per_dim(&self) -> f64 {
+        self.index_bits() as f64 / DIM as f64
+    }
+
+    pub fn shells(&self) -> &[ShellClasses] {
+        &self.shells
+    }
+
+    /// Encode an integer lattice point into its global index.
+    /// Returns None if `x` is not a lattice point within the ball cut.
+    pub fn encode_point(&self, x: &[i32; DIM]) -> Option<u64> {
+        let m = coset::shell_of(x)?;
+        if m < 2 || m > self.max_m {
+            return None;
+        }
+        let even = coset::coset_parity(x)?;
+        if !coset::is_lattice_point(&self.golay, x) {
+            return None;
+        }
+        let shell = &self.shells[m - 2];
+
+        // class: sorted |values| descending
+        let mut values = [0u8; DIM];
+        for i in 0..DIM {
+            values[i] = x[i].unsigned_abs() as u8;
+        }
+        values.sort_unstable_by(|a, b| b.cmp(a));
+        let class_idx = *self.class_lookup[m - 2].get(&values)? as usize;
+        let class = &shell.classes[class_idx];
+        debug_assert_eq!(
+            class.parity == Parity::Even,
+            even,
+            "class parity disagrees with coset parity"
+        );
+
+        // Golay refinement
+        let c = coset::golay_word_of(x, even);
+        let w = c.count_ones() as usize;
+        let c_rank = self.golay.rank_in_weight(c)? as u128;
+
+        // subclass: split vector k_v = #|x_i| = v with i ∈ supp(c)
+        let mut split = vec![0u8; class.counts.len()];
+        for i in 0..DIM {
+            if c & (1 << i) != 0 {
+                let v = x[i].unsigned_abs() as u8;
+                let vi = class.counts.iter().position(|&(cv, _)| cv == v)?;
+                split[vi] += 1;
+            }
+        }
+        let (sub_idx, sub) = class
+            .subclasses
+            .iter()
+            .enumerate()
+            .find(|(_, s)| s.weight == w && s.split == split)?;
+
+        // sign rank (even classes only)
+        let sign_rank: u128 = if even {
+            let mut s: u128 = 0;
+            let mut bit = 0u32;
+            // F0 nonzero positions, ascending
+            for i in 0..DIM {
+                if c & (1 << i) == 0 && x[i] != 0 {
+                    if x[i] < 0 {
+                        s |= 1 << bit;
+                    }
+                    bit += 1;
+                }
+            }
+            // F1 positions ascending, except the last (parity-determined)
+            let f1_pos: Vec<usize> = (0..DIM).filter(|&i| c & (1 << i) != 0).collect();
+            if let Some((_, rest)) = f1_pos.split_last() {
+                for &i in rest {
+                    if x[i] < 0 {
+                        s |= 1 << bit;
+                    }
+                    bit += 1;
+                }
+            }
+            debug_assert_eq!(bit, sub.sign_bits);
+            s
+        } else {
+            0
+        };
+
+        // permutation ranks: the |value| sequences restricted to F1 / F0
+        // positions in ascending position order.
+        let mut f1_vals: Vec<u8> = Vec::with_capacity(w);
+        let mut f0_vals: Vec<u8> = Vec::with_capacity(DIM - w);
+        for i in 0..DIM {
+            let v = x[i].unsigned_abs() as u8;
+            if c & (1 << i) != 0 {
+                f1_vals.push(v);
+            } else {
+                f0_vals.push(v);
+            }
+        }
+        let f1_rank = ms_perm_rank(&f1_vals);
+        let f0_rank = ms_perm_rank(&f0_vals);
+
+        let perm_rank = f1_rank * sub.f0_arrangements as u128 + f0_rank;
+        let local =
+            (perm_rank * (1u128 << sub.sign_bits) + sign_rank) * sub.num_codewords as u128
+                + c_rank;
+        debug_assert!(local < sub.size);
+
+        let global = self.shell_offsets[m - 2]
+            + shell.class_offsets[class_idx]
+            + class.subclass_offsets[sub_idx]
+            + local;
+        debug_assert!(global < self.num_points());
+        Some(global as u64)
+    }
+
+    /// The dequantizer (paper §3.3): global index → integer lattice point.
+    pub fn decode_index(&self, index: u64) -> [i32; DIM] {
+        let idx = index as u128;
+        assert!(idx < self.num_points(), "index out of range");
+
+        // 1. shell identification (binary search over cumulative sizes)
+        let k = match self.shell_offsets.binary_search(&idx) {
+            Ok(exact) => exact, // idx == offset[k] → first point of shell k
+            Err(ins) => ins - 1,
+        };
+        let shell = &self.shells[k];
+        let in_shell = idx - self.shell_offsets[k];
+
+        // 2. class identification
+        let ci = match shell.class_offsets.binary_search(&in_shell) {
+            Ok(e) => e,
+            Err(ins) => ins - 1,
+        };
+        let class = &shell.classes[ci];
+        let in_class = in_shell - shell.class_offsets[ci];
+
+        // subclass
+        let si = match class.subclass_offsets.binary_search(&in_class) {
+            Ok(e) => e,
+            Err(ins) => ins - 1,
+        };
+        let sub = &class.subclasses[si];
+        let mut local = in_class - class.subclass_offsets[si];
+
+        // 3. unpack local symmetries (eq. 15)
+        let c_rank = (local % sub.num_codewords as u128) as u32;
+        local /= sub.num_codewords as u128;
+        let sign_rank = local % (1u128 << sub.sign_bits);
+        local >>= sub.sign_bits;
+        let f0_arr = sub.f0_arrangements as u128;
+        let f1_rank = local / f0_arr;
+        let f0_rank = local % f0_arr;
+
+        self.reconstruct(class, sub, c_rank, sign_rank, f1_rank, f0_rank)
+    }
+
+    /// 4. reconstruction (paper §3.3 step 4).
+    fn reconstruct(
+        &self,
+        class: &ClassInfo,
+        sub: &Subclass,
+        c_rank: u32,
+        sign_rank: u128,
+        f1_rank: u128,
+        f0_rank: u128,
+    ) -> [i32; DIM] {
+        let c = self.golay.unrank_in_weight(sub.weight, c_rank);
+
+        // multiset-permutation unrank of both halves
+        let mut f1_mults: Vec<(u8, u8)> = Vec::new();
+        for &v in &sub.f1_seq {
+            match f1_mults.last_mut() {
+                Some((lv, n)) if *lv == v => *n += 1,
+                _ => f1_mults.push((v, 1)),
+            }
+        }
+        let mut f0_mults: Vec<(u8, u8)> = Vec::new();
+        for &v in &sub.f0_seq {
+            match f0_mults.last_mut() {
+                Some((lv, n)) if *lv == v => *n += 1,
+                _ => f0_mults.push((v, 1)),
+            }
+        }
+        let mut f1_vals = Vec::with_capacity(sub.weight);
+        let mut f0_vals = Vec::with_capacity(DIM - sub.weight);
+        ms_perm_unrank(&f1_mults, f1_rank, &mut f1_vals);
+        ms_perm_unrank(&f0_mults, f0_rank, &mut f0_vals);
+
+        let mut x = [0i32; DIM];
+        match class.parity {
+            Parity::Odd => {
+                // signs fully forced by the mod-4 congruences
+                let (mut i1, mut i0) = (0usize, 0usize);
+                for i in 0..DIM {
+                    if c & (1 << i) != 0 {
+                        x[i] = leaders::odd_signed_value(f1_vals[i1], true);
+                        i1 += 1;
+                    } else {
+                        x[i] = leaders::odd_signed_value(f0_vals[i0], false);
+                        i0 += 1;
+                    }
+                }
+            }
+            Parity::Even => {
+                // F0: free signs on nonzero coords; F1: w−1 free signs, the
+                // last F1 coordinate fixes Σ ≡ 0 (mod 8) via neg-count parity.
+                let mut bit = 0u32;
+                let (mut i1, mut i0) = (0usize, 0usize);
+                let f1_pos: Vec<usize> = (0..DIM).filter(|&i| c & (1 << i) != 0).collect();
+                let mut f1_negs = 0u32;
+                for i in 0..DIM {
+                    if c & (1 << i) != 0 {
+                        x[i] = f1_vals[i1] as i32;
+                        i1 += 1;
+                    } else {
+                        let v = f0_vals[i0] as i32;
+                        i0 += 1;
+                        if v != 0 {
+                            let neg = (sign_rank >> bit) & 1 == 1;
+                            bit += 1;
+                            x[i] = if neg { -v } else { v };
+                        }
+                    }
+                }
+                if let Some((&last, rest)) = f1_pos.split_last() {
+                    for &i in rest {
+                        let neg = (sign_rank >> bit) & 1 == 1;
+                        bit += 1;
+                        if neg {
+                            x[i] = -x[i];
+                            f1_negs += 1;
+                        }
+                    }
+                    // fix parity of negatives among F1
+                    if f1_negs % 2 != class.f1_neg_parity as u32 {
+                        x[last] = -x[last];
+                    }
+                }
+                debug_assert_eq!(bit, sub.sign_bits);
+            }
+        }
+        debug_assert!(
+            coset::is_lattice_point(&self.golay, &x),
+            "reconstructed non-lattice point {x:?} (class {:?})",
+            class.values
+        );
+        x
+    }
+
+    /// Uniformly sample a lattice point of Λ₂₄(M) (by uniform index).
+    pub fn sample(&self, rng: &mut crate::util::rng::Xoshiro256pp) -> [i32; DIM] {
+        let n = self.num_points();
+        debug_assert!(n <= u64::MAX as u128);
+        let idx = rng.next_range(n as u64);
+        self.decode_index(idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn ms_perm_rank_roundtrip() {
+        let mults = [(4u8, 2u8), (2, 3), (0, 3)];
+        let total: u128 = 8 * 7 * 6 * 5 * 4 * 3 * 2 / (2 * 6 * 6);
+        let mut seen = std::collections::HashSet::new();
+        let mut buf = Vec::new();
+        for r in 0..total {
+            ms_perm_unrank(&mults, r, &mut buf);
+            assert_eq!(ms_perm_rank(&buf), r);
+            assert!(seen.insert(buf.clone()), "duplicate sequence");
+        }
+        assert_eq!(seen.len() as u128, total);
+        // canonical descending sequence has rank 0
+        assert_eq!(ms_perm_rank(&[4, 4, 2, 2, 2, 0, 0, 0]), 0);
+    }
+
+    #[test]
+    fn small_indexer_counts() {
+        let ix = LeechIndexer::new(3);
+        assert_eq!(ix.num_points(), 16_969_680);
+        assert_eq!(ix.index_bits(), 25);
+        assert!((ix.bits_per_dim() - 25.0 / 24.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decode_encode_roundtrip_shell2() {
+        let ix = LeechIndexer::new(2);
+        let n = ix.num_points() as u64;
+        assert_eq!(n, 196_560);
+        // full sweep of the kissing configuration
+        for idx in 0..n {
+            let x = ix.decode_index(idx);
+            assert_eq!(coset::shell_of(&x), Some(2));
+            let back = ix.encode_point(&x).expect("encode failed");
+            assert_eq!(back, idx, "roundtrip failed at index {idx}: {x:?}");
+        }
+    }
+
+    #[test]
+    fn decode_encode_roundtrip_sampled_high_shells() {
+        let ix = LeechIndexer::new(6);
+        let mut rng = Xoshiro256pp::new(31);
+        let n = ix.num_points() as u64;
+        for _ in 0..4000 {
+            let idx = rng.next_range(n);
+            let x = ix.decode_index(idx);
+            let back = ix.encode_point(&x).expect("encode failed");
+            assert_eq!(back, idx);
+        }
+    }
+
+    #[test]
+    fn per_class_boundary_indices_roundtrip() {
+        // stress subclass/class/shell boundaries: first & last index of
+        // every subclass for shells ≤ 5
+        let ix = LeechIndexer::new(5);
+        for (k, shell) in ix.shells().iter().enumerate() {
+            let shell_base = ix.shell_offsets[k];
+            for (ci, class) in shell.classes.iter().enumerate() {
+                let class_base = shell_base + shell.class_offsets[ci];
+                for (si, _sub) in class.subclasses.iter().enumerate() {
+                    for &off in &[
+                        class.subclass_offsets[si],
+                        class.subclass_offsets[si + 1] - 1,
+                    ] {
+                        let idx = (class_base + off) as u64;
+                        let x = ix.decode_index(idx);
+                        assert_eq!(ix.encode_point(&x), Some(idx));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_out_of_ball_points() {
+        let ix = LeechIndexer::new(2);
+        // shell 3 point: (4, 2^8 on an octad, ...) → encode must fail
+        let mut x = [1i32; DIM];
+        x[0] = -3;
+        // that's shell 2; craft shell 3 odd leader (5, 1^23): sum=28≡4 ✓
+        let mut y = [1i32; DIM];
+        y[0] = 5;
+        // 5 ≡ 1 mod 4 so golay word must be 0 → all others ≡1 mod 4 ✓
+        let sum: i32 = y.iter().sum();
+        assert_eq!(sum.rem_euclid(8), 4);
+        assert_eq!(coset::shell_of(&y), Some(3));
+        assert!(ix.encode_point(&y).is_none());
+        assert!(ix.encode_point(&x).is_some());
+    }
+}

@@ -1,0 +1,557 @@
+//! Shell → class → subclass enumeration of the Leech lattice (paper §2.4–2.6).
+//!
+//! We work in the integer embedding `L^int` (paper eq. 6): lattice points are
+//! integer 24-vectors with squared norm `16·m` for shell m (the real lattice
+//! is `L^int/√8`, giving squared norm `2m`).
+//!
+//! A **class** is the set of lattice points sharing an unordered multiset of
+//! absolute coordinate values (the *leader*). Classes decompose further into
+//! **subclasses**: for *even* classes the split of values between the Golay
+//! support `F₁(c)` (values ≡ 2 mod 4) and its complement `F₀(c)` (values ≡ 0
+//! mod 4) is forced, so there is exactly one subclass; for *odd* classes a
+//! value `v` may sit in `F₁` (as `+v` if v ≡ 3 mod 4, else `−v`) or in `F₀`
+//! (sign mirrored), so each admissible *split vector* — how many copies of
+//! each distinct value live in `F₁` — forms its own subclass, filtered by the
+//! global sum ≡ 4 (mod 8) constraint.
+//!
+//! Cardinalities follow paper eq. 12 in the subclass-resolved form
+//!
+//! ```text
+//! |subclass| = A_w · 2^B · w!/∏ k_v! · (24−w)!/∏ (c_v − k_v)!
+//! ```
+//!
+//! with `A_w` the number of Golay codewords of weight `w`, and `B` the free
+//! sign bits (even classes only; odd-class signs are congruence-forced).
+//! The module's correctness contract: Σ |class| over a shell equals the theta
+//! series coefficient n(m) *exactly* — enforced in tests for every m ≤ 19.
+
+use crate::golay::GolayCode;
+use crate::DIM;
+
+/// Coset parity of a class (paper eqs. 7–8).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Parity {
+    Even,
+    Odd,
+}
+
+/// One admissible split of the leader multiset between F₁ and F₀.
+#[derive(Clone, Debug)]
+pub struct Subclass {
+    /// Golay codeword weight w = |F₁|.
+    pub weight: usize,
+    /// Number of admissible codewords of this weight (the `A` of eq. 12).
+    pub num_codewords: u64,
+    /// Per distinct value (aligned with [`ClassInfo::counts`]): how many
+    /// copies sit in F₁.
+    pub split: Vec<u8>,
+    /// Canonical F₁ value sequence (descending), length `weight`.
+    pub f1_seq: Vec<u8>,
+    /// Canonical F₀ value sequence (descending), length `24 − weight`.
+    pub f0_seq: Vec<u8>,
+    /// w! / ∏ k_v! — multiset arrangements within F₁.
+    pub f1_arrangements: u64,
+    /// (24−w)! / ∏ (c_v − k_v)! — multiset arrangements within F₀.
+    pub f0_arrangements: u64,
+    /// Free sign bits `B` (even classes: #nonzero F₀ coords + max(w−1, 0);
+    /// odd classes: 0).
+    pub sign_bits: u32,
+    /// Total subclass cardinality.
+    pub size: u128,
+}
+
+/// A class: leader multiset + parity + its subclasses.
+#[derive(Clone, Debug)]
+pub struct ClassInfo {
+    pub parity: Parity,
+    /// Leader absolute values, non-increasing, length 24.
+    pub values: [u8; DIM],
+    /// Distinct (value, multiplicity), descending by value.
+    pub counts: Vec<(u8, u8)>,
+    /// For even classes with w > 0: required parity of the number of
+    /// negative signs among F₁ coordinates (so that Σxᵢ ≡ 0 mod 8).
+    pub f1_neg_parity: u8,
+    pub subclasses: Vec<Subclass>,
+    /// Cumulative subclass offsets (len = subclasses.len()+1), for local
+    /// index ↔ subclass resolution.
+    pub subclass_offsets: Vec<u128>,
+    /// Total class cardinality = last subclass offset.
+    pub size: u128,
+}
+
+/// All classes of one shell, in the crate's canonical deterministic order:
+/// even classes before odd, then ascending lexicographic on the value tuple.
+#[derive(Clone, Debug)]
+pub struct ShellClasses {
+    pub m: usize,
+    pub classes: Vec<ClassInfo>,
+    /// Cumulative class offsets within the shell (len = classes.len()+1).
+    pub class_offsets: Vec<u128>,
+    /// Shell cardinality n(m).
+    pub size: u128,
+}
+
+fn factorial_u128(n: usize) -> u128 {
+    (1..=n as u128).product()
+}
+
+/// w!/∏ mult! for the multiset described by `(value, mult)` pairs.
+fn multiset_arrangements(len: usize, mults: &[u8]) -> u128 {
+    let mut v = factorial_u128(len);
+    for &m in mults {
+        v /= factorial_u128(m as usize);
+    }
+    v
+}
+
+/// Enumerate all non-increasing 24-tuples of non-negative integers with the
+/// given parity (0 = even values incl. zero, 1 = odd values) whose squared
+/// sum is `total`.
+fn enumerate_value_multisets(total: u32, parity: u8) -> Vec<[u8; DIM]> {
+    let mut out = Vec::new();
+    let mut seq = [0u8; DIM];
+
+    fn rec(
+        remaining: u32,
+        slot: usize,
+        cap: u8,
+        parity: u8,
+        seq: &mut [u8; DIM],
+        out: &mut Vec<[u8; DIM]>,
+    ) {
+        let slots_left = DIM - slot;
+        if slots_left == 0 {
+            if remaining == 0 {
+                out.push(*seq);
+            }
+            return;
+        }
+        let min_v: u32 = if parity == 0 { 0 } else { 1 };
+        if remaining < min_v * min_v * slots_left as u32 {
+            return;
+        }
+        let mut v = cap;
+        loop {
+            let vv = (v as u32) * (v as u32);
+            if vv <= remaining {
+                // feasibility: rest must fit under v, and reach the min
+                let rest = remaining - vv;
+                let max_rest = vv * (slots_left as u32 - 1);
+                let min_rest = min_v * min_v * (slots_left as u32 - 1);
+                if rest <= max_rest && rest >= min_rest {
+                    seq[slot] = v;
+                    rec(rest, slot + 1, v, parity, seq, out);
+                }
+            }
+            if v < 2 {
+                break;
+            }
+            v -= 2;
+            if parity == 1 && v == 0 {
+                break;
+            }
+        }
+        // parity 1 loop must stop at v=1 handled above (v -= 2 from 1 wraps)
+    }
+
+    let mut cap = (total as f64).sqrt() as u8 + 1;
+    while cap as u32 * cap as u32 > total || cap % 2 != parity {
+        if cap == 0 {
+            break;
+        }
+        cap -= 1;
+    }
+    if cap as u32 * cap as u32 <= total && cap % 2 == parity {
+        rec(total, 0, cap, parity, &mut seq, &mut out);
+    }
+    out
+}
+
+fn distinct_counts(values: &[u8; DIM]) -> Vec<(u8, u8)> {
+    let mut out: Vec<(u8, u8)> = Vec::new();
+    for &v in values {
+        match out.last_mut() {
+            Some((lv, c)) if *lv == v => *c += 1,
+            _ => out.push((v, 1)),
+        }
+    }
+    out
+}
+
+/// Build the (single) subclass of an even class, or None if inadmissible.
+fn build_even_class(golay: &GolayCode, values: [u8; DIM]) -> Option<ClassInfo> {
+    let counts = distinct_counts(&values);
+    // F1 = values ≡ 2 mod 4; F0 = values ≡ 0 mod 4
+    let w: usize = values.iter().filter(|&&v| v % 4 == 2).count();
+    let num_codewords = golay.count_of_weight(w);
+    if num_codewords == 0 {
+        return None;
+    }
+    let sum: u32 = values.iter().map(|&v| v as u32).sum();
+    if w == 0 {
+        // all coords ≡ 0 mod 4: sign flips change the sum by 0 mod 8, so the
+        // all-positive sum itself must satisfy the constraint.
+        if sum % 8 != 0 {
+            return None;
+        }
+    }
+    debug_assert_eq!(sum % 4, 0, "even-class sum must be ≡ 0 mod 4");
+    let f1_neg_parity = ((sum % 8) / 4) as u8; // negatives among F1 must have this parity
+
+    let f1_seq: Vec<u8> = values.iter().copied().filter(|v| v % 4 == 2).collect();
+    let f0_seq: Vec<u8> = values.iter().copied().filter(|v| v % 4 == 0).collect();
+    let split: Vec<u8> = counts
+        .iter()
+        .map(|&(v, c)| if v % 4 == 2 { c } else { 0 })
+        .collect();
+    let f1_mults: Vec<u8> = counts
+        .iter()
+        .filter(|&&(v, _)| v % 4 == 2)
+        .map(|&(_, c)| c)
+        .collect();
+    let f0_mults: Vec<u8> = counts
+        .iter()
+        .filter(|&&(v, _)| v % 4 == 0)
+        .map(|&(_, c)| c)
+        .collect();
+    let f1_arr = multiset_arrangements(w, &f1_mults);
+    let f0_arr = multiset_arrangements(DIM - w, &f0_mults);
+    let n_f0_nonzero = f0_seq.iter().filter(|&&v| v != 0).count() as u32;
+    let sign_bits = n_f0_nonzero + if w > 0 { w as u32 - 1 } else { 0 };
+    let size = num_codewords as u128 * (1u128 << sign_bits) * f1_arr * f0_arr;
+
+    let sub = Subclass {
+        weight: w,
+        num_codewords: num_codewords as u64,
+        split,
+        f1_seq,
+        f0_seq,
+        f1_arrangements: f1_arr as u64,
+        f0_arrangements: f0_arr as u64,
+        sign_bits,
+        size,
+    };
+    Some(ClassInfo {
+        parity: Parity::Even,
+        values,
+        counts,
+        f1_neg_parity,
+        subclass_offsets: vec![0, size],
+        subclasses: vec![sub],
+        size,
+    })
+}
+
+/// Signed value a coordinate takes in F₁ / F₀ for the odd coset: positions
+/// in F₀ carry x ≡ 1 (mod 4), positions in F₁ carry x ≡ 3 (mod 4); the sign
+/// of |x| is therefore forced by |x| mod 4.
+#[inline]
+pub fn odd_signed_value(abs: u8, in_f1: bool) -> i32 {
+    let v = abs as i32;
+    if in_f1 {
+        if v % 4 == 3 {
+            v
+        } else {
+            -v
+        }
+    } else if v % 4 == 1 {
+        v
+    } else {
+        -v
+    }
+}
+
+/// Build an odd class: enumerate admissible splits (subclasses).
+fn build_odd_class(golay: &GolayCode, values: [u8; DIM]) -> Option<ClassInfo> {
+    let counts = distinct_counts(&values);
+    let mut subclasses = Vec::new();
+
+    for &w in &crate::golay::WEIGHTS {
+        let a_w = golay.count_of_weight(w) as u64;
+        // enumerate split vectors k_v ∈ [0, c_v], Σ k_v = w
+        let k = counts.len();
+        let mut split = vec![0u8; k];
+        fn rec(
+            i: usize,
+            left: usize,
+            counts: &[(u8, u8)],
+            split: &mut Vec<u8>,
+            sum: i64,
+            out: &mut Vec<(Vec<u8>, i64)>,
+        ) {
+            if i == counts.len() {
+                if left == 0 {
+                    out.push((split.clone(), sum));
+                }
+                return;
+            }
+            let (v, c) = counts[i];
+            // remaining capacity check
+            let cap_rest: usize = counts[i + 1..].iter().map(|&(_, c)| c as usize).sum();
+            for kv in 0..=c.min(left as u8) {
+                if (left - kv as usize) > cap_rest {
+                    continue;
+                }
+                split[i] = kv;
+                let s_f1 = odd_signed_value(v, true) as i64 * kv as i64;
+                let s_f0 = odd_signed_value(v, false) as i64 * (c - kv) as i64;
+                rec(i + 1, left - kv as usize, counts, split, sum + s_f1 + s_f0, out);
+            }
+            split[i] = 0;
+        }
+        let mut found: Vec<(Vec<u8>, i64)> = Vec::new();
+        rec(0, w, &counts, &mut split, 0, &mut found);
+
+        for (split, sum) in found {
+            if a_w == 0 {
+                continue;
+            }
+            if sum.rem_euclid(8) != 4 {
+                continue; // violates Σxᵢ ≡ 4 (mod 8)
+            }
+            let mut f1_seq = Vec::with_capacity(w);
+            let mut f0_seq = Vec::with_capacity(DIM - w);
+            let mut f1_mults = Vec::new();
+            let mut f0_mults = Vec::new();
+            for (i, &(v, c)) in counts.iter().enumerate() {
+                let kv = split[i];
+                for _ in 0..kv {
+                    f1_seq.push(v);
+                }
+                for _ in 0..(c - kv) {
+                    f0_seq.push(v);
+                }
+                if kv > 0 {
+                    f1_mults.push(kv);
+                }
+                if c - kv > 0 {
+                    f0_mults.push(c - kv);
+                }
+            }
+            let f1_arr = multiset_arrangements(w, &f1_mults);
+            let f0_arr = multiset_arrangements(DIM - w, &f0_mults);
+            let size = a_w as u128 * f1_arr * f0_arr;
+            subclasses.push(Subclass {
+                weight: w,
+                num_codewords: a_w,
+                split,
+                f1_seq,
+                f0_seq,
+                f1_arrangements: f1_arr as u64,
+                f0_arrangements: f0_arr as u64,
+                sign_bits: 0,
+                size,
+            });
+        }
+    }
+
+    if subclasses.is_empty() {
+        return None;
+    }
+    // deterministic subclass order: by (weight, split lexicographic)
+    subclasses.sort_by(|a, b| (a.weight, &a.split).cmp(&(b.weight, &b.split)));
+    let mut offsets = Vec::with_capacity(subclasses.len() + 1);
+    let mut acc = 0u128;
+    offsets.push(0);
+    for s in &subclasses {
+        acc += s.size;
+        offsets.push(acc);
+    }
+    Some(ClassInfo {
+        parity: Parity::Odd,
+        values,
+        counts,
+        f1_neg_parity: 0,
+        subclasses,
+        subclass_offsets: offsets,
+        size: acc,
+    })
+}
+
+/// Enumerate all classes of shell `m` (squared integer norm 16m) in
+/// canonical order.
+pub fn enumerate_shell(golay: &GolayCode, m: usize) -> ShellClasses {
+    let total = 16 * m as u32;
+    let mut classes: Vec<ClassInfo> = Vec::new();
+    for values in enumerate_value_multisets(total, 0) {
+        if let Some(c) = build_even_class(golay, values) {
+            classes.push(c);
+        }
+    }
+    for values in enumerate_value_multisets(total, 1) {
+        if let Some(c) = build_odd_class(golay, values) {
+            classes.push(c);
+        }
+    }
+    // canonical order: even first, then odd; ascending on the value tuple
+    classes.sort_by(|a, b| {
+        let pa = matches!(a.parity, Parity::Odd) as u8;
+        let pb = matches!(b.parity, Parity::Odd) as u8;
+        (pa, a.values).cmp(&(pb, b.values))
+    });
+
+    let mut class_offsets = Vec::with_capacity(classes.len() + 1);
+    let mut acc = 0u128;
+    class_offsets.push(0);
+    for c in &classes {
+        acc += c.size;
+        class_offsets.push(acc);
+    }
+    ShellClasses {
+        m,
+        classes,
+        class_offsets,
+        size: acc,
+    }
+}
+
+impl ShellClasses {
+    /// Human-readable composition row for the paper's Table 2: multiset of
+    /// (value → multiplicity) with parity and count.
+    pub fn composition_rows(&self) -> Vec<String> {
+        self.classes
+            .iter()
+            .map(|c| {
+                let comp: Vec<String> = c
+                    .counts
+                    .iter()
+                    .map(|&(v, n)| format!("±{v}×{n}"))
+                    .collect();
+                format!(
+                    "m={} {:5} {:>16}  {}",
+                    self.m,
+                    match c.parity {
+                        Parity::Even => "even",
+                        Parity::Odd => "odd",
+                    },
+                    c.size,
+                    comp.join(" ")
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::leech::theta;
+
+    fn golay() -> GolayCode {
+        GolayCode::new()
+    }
+
+    #[test]
+    fn shell2_classes_match_table2() {
+        let g = golay();
+        let s = enumerate_shell(&g, 2);
+        assert_eq!(s.classes.len(), 3);
+        // canonical order: even classes first, ascending value tuple —
+        // (2^8, 0^16) sorts before (4,4,0^22)
+        let c0 = &s.classes[0];
+        assert_eq!(c0.parity, Parity::Even);
+        assert_eq!(c0.size, 97152);
+        // (4,4,0^22) even, 1104
+        assert_eq!(s.classes[1].size, 1104);
+        // (3,1^23) odd, 98304
+        let c2 = &s.classes[2];
+        assert_eq!(c2.parity, Parity::Odd);
+        assert_eq!(c2.size, 98304);
+        assert_eq!(s.size, 196_560);
+    }
+
+    #[test]
+    fn shell3_and_4_match_table2() {
+        let g = golay();
+        let s3 = enumerate_shell(&g, 3);
+        let sizes3: Vec<u128> = s3.classes.iter().map(|c| c.size).collect();
+        let mut sorted3 = sizes3.clone();
+        sorted3.sort();
+        assert_eq!(sorted3, vec![98304, 3108864, 5275648, 8290304]);
+        assert_eq!(s3.size, 16_773_120);
+
+        let s4 = enumerate_shell(&g, 4);
+        let mut sizes4: Vec<u128> = s4.classes.iter().map(|c| c.size).collect();
+        sizes4.sort();
+        assert_eq!(
+            sizes4,
+            vec![48, 170016, 777216, 24870912, 24870912, 46632960, 126615552, 174096384]
+        );
+        assert_eq!(s4.size, 398_034_000);
+    }
+
+    #[test]
+    fn all_shells_match_theta_series() {
+        let g = golay();
+        let n = theta::shell_sizes(19);
+        for m in 2..=19 {
+            let s = enumerate_shell(&g, m);
+            assert_eq!(s.size, n[m], "shell {m} enumeration != theta series");
+        }
+    }
+
+    #[test]
+    fn offsets_are_consistent() {
+        let g = golay();
+        for m in 2..=6 {
+            let s = enumerate_shell(&g, m);
+            assert_eq!(*s.class_offsets.last().unwrap(), s.size);
+            for (i, c) in s.classes.iter().enumerate() {
+                assert_eq!(
+                    s.class_offsets[i + 1] - s.class_offsets[i],
+                    c.size,
+                    "class offset gap mismatch"
+                );
+                assert_eq!(*c.subclass_offsets.last().unwrap(), c.size);
+                for (j, sub) in c.subclasses.iter().enumerate() {
+                    assert_eq!(c.subclass_offsets[j + 1] - c.subclass_offsets[j], sub.size);
+                    assert_eq!(sub.f1_seq.len(), sub.weight);
+                    assert_eq!(sub.f0_seq.len(), DIM - sub.weight);
+                    // subclass size formula
+                    let expect = sub.num_codewords as u128
+                        * (1u128 << sub.sign_bits)
+                        * sub.f1_arrangements as u128
+                        * sub.f0_arrangements as u128;
+                    assert_eq!(sub.size, expect);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn odd_split_sums_are_4_mod_8() {
+        let g = golay();
+        for m in 2..=8 {
+            let s = enumerate_shell(&g, m);
+            for c in s.classes.iter().filter(|c| c.parity == Parity::Odd) {
+                for sub in &c.subclasses {
+                    let sum: i64 = sub
+                        .f1_seq
+                        .iter()
+                        .map(|&v| odd_signed_value(v, true) as i64)
+                        .chain(sub.f0_seq.iter().map(|&v| odd_signed_value(v, false) as i64))
+                        .sum();
+                    assert_eq!(sum.rem_euclid(8), 4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn value_multiset_enumeration_sane() {
+        // all 24-tuples for shell 2 (norm 32): even {4,4,0...}, {2^8,0^16},
+        // and more that fail admissibility (e.g. {4,2,2,...}? 16+4k...)
+        let evens = enumerate_value_multisets(32, 0);
+        assert!(evens.iter().any(|v| v[0] == 4 && v[1] == 4 && v[2] == 0));
+        assert!(evens.iter().any(|v| v[0] == 2 && v[7] == 2 && v[8] == 0));
+        let odds = enumerate_value_multisets(32, 1);
+        assert!(odds.iter().any(|v| v[0] == 3 && v[1] == 1));
+        for v in evens.iter().chain(odds.iter()) {
+            let ss: u32 = v.iter().map(|&x| (x as u32) * (x as u32)).sum();
+            assert_eq!(ss, 32);
+            for w in v.windows(2) {
+                assert!(w[0] >= w[1], "not non-increasing");
+            }
+        }
+    }
+}

@@ -1,0 +1,456 @@
+//! Flattened, kernel-ready dequantization tables.
+//!
+//! The paper's parallel dequantizer (§3.3 step 5) depends only on "small
+//! static tables, integer prefix-sum scans, integer division and modulo".
+//! This module flattens the shell → class → subclass hierarchy of
+//! [`super::index::LeechIndexer`] into dense arrays consumable by
+//!
+//! * the Pallas kernel (`python/compile/kernels/llvq_dequant.py`) — fed as
+//!   runtime inputs to the AOT-compiled HLO, so the HLO itself stays
+//!   table-agnostic, and
+//! * the Rust fast dequantization path used by benches and the serving
+//!   coordinator.
+//!
+//! Every subclass becomes one **group** with a global cumulative offset;
+//! dequantization is: `searchsorted(group_offsets, idx)` → fixed-radix
+//! unpack (`A`, `2^B`, F₀ arrangements) → Golay unrank via one table read →
+//! two multiset-permutation unranks over ≤ `max_distinct` symbols → sign
+//! assembly. No data-dependent trip counts anywhere (TPU-friendly).
+
+use crate::golay::{GolayCode, WEIGHTS};
+use crate::leech::index::LeechIndexer;
+use crate::leech::leaders::Parity;
+use crate::util::json::Json;
+use crate::DIM;
+
+/// Maximum number of distinct |values| on either side of any class we
+/// support. Verified at build time; 8 is ample for m ≤ 19.
+pub const MAX_DISTINCT: usize = 8;
+
+/// Dense dequantization tables (one "group" per subclass).
+#[derive(Clone, Debug)]
+pub struct KernelTables {
+    pub max_m: usize,
+    pub num_groups: usize,
+    /// Global cumulative index offsets, len = num_groups + 1.
+    pub group_offsets: Vec<i64>,
+    /// Golay weight w per group.
+    pub weight: Vec<i32>,
+    /// A = number of admissible codewords per group.
+    pub num_codewords: Vec<i32>,
+    /// Offset of the group's weight bucket in `golay_sorted`.
+    pub cw_base: Vec<i32>,
+    /// Free sign bits B per group.
+    pub sign_bits: Vec<i32>,
+    /// 1 if the group belongs to the odd coset.
+    pub parity_odd: Vec<i32>,
+    /// Required parity of negative signs among F₁ (even groups).
+    pub f1_neg_parity: Vec<i32>,
+    /// (24−w)!/∏(c_v−k_v)! per group.
+    pub f0_arrangements: Vec<i64>,
+    /// w!/∏k_v! per group (diagnostics / ref implementations).
+    pub f1_arrangements: Vec<i64>,
+    /// F₁ distinct values / multiplicities, row-major [num_groups × MAX_DISTINCT].
+    pub f1_values: Vec<i32>,
+    pub f1_counts: Vec<i32>,
+    /// F₀ distinct values / multiplicities, row-major [num_groups × MAX_DISTINCT].
+    pub f0_values: Vec<i32>,
+    pub f0_counts: Vec<i32>,
+    /// All 4096 codewords sorted by (weight, value) — unrank-in-weight is
+    /// `golay_sorted[cw_base[g] + rank]`.
+    pub golay_sorted: Vec<i32>,
+    /// Start offset of each weight bucket in `golay_sorted`, len = 6.
+    pub weight_offsets: Vec<i32>,
+}
+
+impl KernelTables {
+    pub fn build(ix: &LeechIndexer) -> Self {
+        let golay = ix.golay();
+        // golay table sorted by (weight, value)
+        let mut golay_sorted = Vec::with_capacity(4096);
+        let mut weight_offsets = Vec::with_capacity(WEIGHTS.len() + 1);
+        weight_offsets.push(0i32);
+        for &w in &WEIGHTS {
+            for &c in golay.of_weight(w) {
+                golay_sorted.push(c as i32);
+            }
+            weight_offsets.push(golay_sorted.len() as i32);
+        }
+
+        let weight_offsets_copy = weight_offsets.clone();
+        let cw_base_of = move |w: usize| -> i32 {
+            let b = WEIGHTS.iter().position(|&x| x == w).unwrap();
+            weight_offsets_copy[b]
+        };
+
+        let mut t = KernelTables {
+            max_m: ix.max_m(),
+            num_groups: 0,
+            group_offsets: vec![0],
+            weight: vec![],
+            num_codewords: vec![],
+            cw_base: vec![],
+            sign_bits: vec![],
+            parity_odd: vec![],
+            f1_neg_parity: vec![],
+            f0_arrangements: vec![],
+            f1_arrangements: vec![],
+            f1_values: vec![],
+            f1_counts: vec![],
+            f0_values: vec![],
+            f0_counts: vec![],
+            golay_sorted,
+            weight_offsets,
+        };
+
+        let mut acc: u128 = 0;
+        for shell in ix.shells() {
+            for class in &shell.classes {
+                for sub in &class.subclasses {
+                    acc += sub.size;
+                    t.group_offsets.push(acc as i64);
+                    t.weight.push(sub.weight as i32);
+                    t.num_codewords.push(sub.num_codewords as i32);
+                    t.cw_base.push(cw_base_of(sub.weight));
+                    t.sign_bits.push(sub.sign_bits as i32);
+                    t.parity_odd.push((class.parity == Parity::Odd) as i32);
+                    t.f1_neg_parity.push(class.f1_neg_parity as i32);
+                    t.f0_arrangements.push(sub.f0_arrangements as i64);
+                    t.f1_arrangements.push(sub.f1_arrangements as i64);
+
+                    let pack = |seq: &[u8], values: &mut Vec<i32>, counts: &mut Vec<i32>| {
+                        let mut pairs: Vec<(u8, u8)> = Vec::new();
+                        for &v in seq {
+                            match pairs.last_mut() {
+                                Some((lv, c)) if *lv == v => *c += 1,
+                                _ => pairs.push((v, 1)),
+                            }
+                        }
+                        assert!(
+                            pairs.len() <= MAX_DISTINCT,
+                            "class exceeds MAX_DISTINCT: {pairs:?}"
+                        );
+                        for k in 0..MAX_DISTINCT {
+                            if k < pairs.len() {
+                                values.push(pairs[k].0 as i32);
+                                counts.push(pairs[k].1 as i32);
+                            } else {
+                                values.push(0);
+                                counts.push(0);
+                            }
+                        }
+                    };
+                    pack(&sub.f1_seq, &mut t.f1_values, &mut t.f1_counts);
+                    pack(&sub.f0_seq, &mut t.f0_values, &mut t.f0_counts);
+                }
+            }
+        }
+        t.num_groups = t.weight.len();
+        assert_eq!(acc, ix.num_points());
+        t
+    }
+
+    /// Total number of indexable points.
+    pub fn num_points(&self) -> i64 {
+        *self.group_offsets.last().unwrap()
+    }
+
+    /// Fast table-driven dequantization — mirrors the Pallas kernel's
+    /// arithmetic exactly (used by benches, the serving path, and as the
+    /// rust-side oracle for the kernel integration test).
+    pub fn dequantize(&self, index: u64) -> [i32; DIM] {
+        let idx = index as i64;
+        debug_assert!(idx < self.num_points());
+        // group lookup
+        let g = match self.group_offsets.binary_search(&idx) {
+            Ok(e) => e,
+            Err(ins) => ins - 1,
+        };
+        let mut local = (idx - self.group_offsets[g]) as u128;
+
+        let a = self.num_codewords[g] as u128;
+        let c_rank = (local % a) as usize;
+        local /= a;
+        let b = self.sign_bits[g] as u32;
+        let sign_rank = (local & ((1u128 << b) - 1)) as u64;
+        local >>= b;
+        let f0_arr = self.f0_arrangements[g] as u128;
+        let f1_rank = local / f0_arr;
+        let f0_rank = local % f0_arr;
+
+        let codeword = self.golay_sorted[(self.cw_base[g] + c_rank as i32) as usize] as u32;
+        let w = self.weight[g] as usize;
+
+        // unrank both multiset permutations
+        let row = g * MAX_DISTINCT;
+        let mut f1_vals = [0u8; DIM];
+        let mut f0_vals = [0u8; DIM];
+        unrank_into(
+            &self.f1_values[row..row + MAX_DISTINCT],
+            &self.f1_counts[row..row + MAX_DISTINCT],
+            w,
+            f1_rank,
+            &mut f1_vals,
+        );
+        unrank_into(
+            &self.f0_values[row..row + MAX_DISTINCT],
+            &self.f0_counts[row..row + MAX_DISTINCT],
+            DIM - w,
+            f0_rank,
+            &mut f0_vals,
+        );
+
+        // assemble with signs
+        let mut x = [0i32; DIM];
+        if self.parity_odd[g] == 1 {
+            let (mut i1, mut i0) = (0usize, 0usize);
+            for i in 0..DIM {
+                if codeword & (1 << i) != 0 {
+                    x[i] = crate::leech::leaders::odd_signed_value(f1_vals[i1], true);
+                    i1 += 1;
+                } else {
+                    x[i] = crate::leech::leaders::odd_signed_value(f0_vals[i0], false);
+                    i0 += 1;
+                }
+            }
+        } else {
+            let mut bit = 0u32;
+            let (mut i1, mut i0) = (0usize, 0usize);
+            let mut f1_negs = 0u32;
+            let mut last_f1 = usize::MAX;
+            for i in 0..DIM {
+                if codeword & (1 << i) != 0 {
+                    x[i] = f1_vals[i1] as i32;
+                    i1 += 1;
+                    last_f1 = i;
+                } else {
+                    let v = f0_vals[i0] as i32;
+                    i0 += 1;
+                    if v != 0 {
+                        if (sign_rank >> bit) & 1 == 1 {
+                            x[i] = -v;
+                        } else {
+                            x[i] = v;
+                        }
+                        bit += 1;
+                    }
+                }
+            }
+            if w > 0 {
+                // w−1 free F1 sign bits (ascending order over F1 positions
+                // except the last), then parity repair on the last
+                for i in 0..DIM {
+                    if codeword & (1 << i) != 0 && i != last_f1 {
+                        if (sign_rank >> bit) & 1 == 1 {
+                            x[i] = -x[i];
+                            f1_negs += 1;
+                        }
+                        bit += 1;
+                    }
+                }
+                if f1_negs % 2 != self.f1_neg_parity[g] as u32 {
+                    x[last_f1] = -x[last_f1];
+                }
+            }
+            debug_assert_eq!(bit, b);
+        }
+        x
+    }
+
+    /// Serialize to JSON (consumed by pytest cross-checks and available for
+    /// external tooling). Large i64s are exact: our JSON codec keeps
+    /// integers as i64.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("max_m", Json::Int(self.max_m as i64)),
+            ("num_groups", Json::Int(self.num_groups as i64)),
+            ("max_distinct", Json::Int(MAX_DISTINCT as i64)),
+            ("group_offsets", Json::arr_i64(&self.group_offsets)),
+            (
+                "weight",
+                Json::Arr(self.weight.iter().map(|&v| Json::Int(v as i64)).collect()),
+            ),
+            (
+                "num_codewords",
+                Json::Arr(
+                    self.num_codewords
+                        .iter()
+                        .map(|&v| Json::Int(v as i64))
+                        .collect(),
+                ),
+            ),
+            (
+                "cw_base",
+                Json::Arr(self.cw_base.iter().map(|&v| Json::Int(v as i64)).collect()),
+            ),
+            (
+                "sign_bits",
+                Json::Arr(self.sign_bits.iter().map(|&v| Json::Int(v as i64)).collect()),
+            ),
+            (
+                "parity_odd",
+                Json::Arr(
+                    self.parity_odd
+                        .iter()
+                        .map(|&v| Json::Int(v as i64))
+                        .collect(),
+                ),
+            ),
+            (
+                "f1_neg_parity",
+                Json::Arr(
+                    self.f1_neg_parity
+                        .iter()
+                        .map(|&v| Json::Int(v as i64))
+                        .collect(),
+                ),
+            ),
+            ("f0_arrangements", Json::arr_i64(&self.f0_arrangements)),
+            ("f1_arrangements", Json::arr_i64(&self.f1_arrangements)),
+            (
+                "f1_values",
+                Json::Arr(self.f1_values.iter().map(|&v| Json::Int(v as i64)).collect()),
+            ),
+            (
+                "f1_counts",
+                Json::Arr(self.f1_counts.iter().map(|&v| Json::Int(v as i64)).collect()),
+            ),
+            (
+                "f0_values",
+                Json::Arr(self.f0_values.iter().map(|&v| Json::Int(v as i64)).collect()),
+            ),
+            (
+                "f0_counts",
+                Json::Arr(self.f0_counts.iter().map(|&v| Json::Int(v as i64)).collect()),
+            ),
+            (
+                "golay_sorted",
+                Json::Arr(
+                    self.golay_sorted
+                        .iter()
+                        .map(|&v| Json::Int(v as i64))
+                        .collect(),
+                ),
+            ),
+            (
+                "weight_offsets",
+                Json::Arr(
+                    self.weight_offsets
+                        .iter()
+                        .map(|&v| Json::Int(v as i64))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Approximate VMEM footprint of all tables in bytes — used by the
+    /// §Hardware-Adaptation analysis (must stay well under a TPU core's
+    /// ~16 MiB VMEM; measured ≈ 1.8 MiB at M = 13, dominated by the
+    /// ~10k odd-class subclass groups).
+    pub fn vmem_bytes(&self) -> usize {
+        self.group_offsets.len() * 8
+            + self.num_groups * (4 * 7 + 8 * 2 + MAX_DISTINCT * 4 * 4)
+            + self.golay_sorted.len() * 4
+            + self.weight_offsets.len() * 4
+    }
+}
+
+fn unrank_into(values: &[i32], counts: &[i32], len: usize, mut rank: u128, out: &mut [u8]) {
+    let mut cnt = [0i64; MAX_DISTINCT];
+    for k in 0..MAX_DISTINCT {
+        cnt[k] = counts[k] as i64;
+    }
+    let mut total: u128 = {
+        let mut t = (1..=len as u128).product::<u128>();
+        for &c in counts {
+            t /= (1..=c as u128).product::<u128>();
+        }
+        t
+    };
+    let mut rem = len as u128;
+    for pos in 0..len {
+        for k in 0..MAX_DISTINCT {
+            if cnt[k] == 0 {
+                continue;
+            }
+            let c = total * cnt[k] as u128 / rem;
+            if rank < c {
+                out[pos] = values[k] as u8;
+                total = c;
+                cnt[k] -= 1;
+                rem -= 1;
+                break;
+            }
+            rank -= c;
+        }
+    }
+}
+
+/// The `GolayCode` used to build tables; re-exported for tests.
+pub fn build_default(max_m: usize) -> (LeechIndexer, KernelTables) {
+    let _ = GolayCode::new(); // (cheap; explicit for readability)
+    let ix = LeechIndexer::new(max_m);
+    let t = KernelTables::build(&ix);
+    (ix, t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn tables_match_indexer_dequantizer() {
+        let (ix, t) = build_default(4);
+        let mut rng = Xoshiro256pp::new(123);
+        let n = ix.num_points() as u64;
+        for _ in 0..3000 {
+            let idx = rng.next_range(n);
+            assert_eq!(
+                t.dequantize(idx),
+                ix.decode_index(idx),
+                "table dequant disagrees at {idx}"
+            );
+        }
+        // boundaries
+        for idx in [0u64, 1, n - 1, 196_559, 196_560] {
+            assert_eq!(t.dequantize(idx), ix.decode_index(idx));
+        }
+    }
+
+    #[test]
+    fn group_offsets_cover_everything() {
+        let (ix, t) = build_default(3);
+        assert_eq!(t.num_points() as u128, ix.num_points());
+        for w in t.group_offsets.windows(2) {
+            assert!(w[0] < w[1], "empty or unordered group");
+        }
+    }
+
+    #[test]
+    fn vmem_budget_holds_at_2bpd() {
+        let (_, t) = build_default(13);
+        let bytes = t.vmem_bytes();
+        assert!(
+            bytes < 4 * 1024 * 1024,
+            "kernel tables {bytes}B exceed the 4 MiB VMEM budget"
+        );
+    }
+
+    #[test]
+    fn json_roundtrip_shapes() {
+        let (_, t) = build_default(2);
+        let j = t.to_json();
+        let s = j.to_string_compact();
+        let back = crate::util::json::parse(&s).unwrap();
+        assert_eq!(
+            back.get("num_groups").unwrap().as_i64().unwrap() as usize,
+            t.num_groups
+        );
+        assert_eq!(
+            back.get("group_offsets").unwrap().as_arr().unwrap().len(),
+            t.num_groups + 1
+        );
+    }
+}

@@ -1,0 +1,145 @@
+//! Theta series of the Leech lattice — independent ground truth for the
+//! shell enumeration.
+//!
+//! The number of lattice vectors of squared norm `2m` is
+//!
+//! ```text
+//! n(m) = 65520/691 · (σ₁₁(m) − τ(m))
+//! ```
+//!
+//! where σ₁₁ is the 11th-power divisor sum and τ is the Ramanujan tau
+//! function (coefficients of the discriminant cusp form
+//! Δ = q·∏(1−qⁿ)²⁴). We compute τ exactly with i128 power-series
+//! arithmetic; the enumeration layer ([`super::leaders`]) must reproduce
+//! these counts exactly — this is the strongest self-test in the crate.
+
+/// Ramanujan τ(1..=max_m) via the η-product Δ = q ∏ₙ (1−qⁿ)²⁴.
+pub fn ramanujan_tau(max_m: usize) -> Vec<i128> {
+    // coefficients of ∏ (1-q^n)^24 up to q^(max_m-1)
+    let n = max_m; // need coef index up to max_m-1
+    let mut coef = vec![0i128; n];
+    coef[0] = 1;
+    for k in 1..n {
+        for _ in 0..24 {
+            // multiply in-place by (1 - q^k)
+            for i in (k..n).rev() {
+                let (lo, hi) = coef.split_at_mut(i);
+                hi[0] -= lo[i - k];
+            }
+        }
+    }
+    // tau[m] = coef[m-1]; tau[0] unused (set 0)
+    let mut tau = vec![0i128; max_m + 1];
+    for m in 1..=max_m {
+        tau[m] = coef[m - 1];
+    }
+    tau
+}
+
+/// σ₁₁(m) = Σ_{d|m} d¹¹.
+pub fn sigma11(m: usize) -> i128 {
+    let mut s: i128 = 0;
+    for d in 1..=m {
+        if m % d == 0 {
+            s += (d as i128).pow(11);
+        }
+    }
+    s
+}
+
+/// Shell sizes n(m) = |{v ∈ Λ₂₄ : ‖v‖² = 2m}| for m = 0..=max_m.
+/// n(0) = 1 (the origin), n(1) = 0 (minimum norm is 4 = 2·2).
+pub fn shell_sizes(max_m: usize) -> Vec<u128> {
+    let tau = ramanujan_tau(max_m);
+    let mut out = Vec::with_capacity(max_m + 1);
+    out.push(1u128); // the origin
+    for m in 1..=max_m {
+        let v = 65520 * (sigma11(m) - tau[m]);
+        assert!(v >= 0 && v % 691 == 0, "theta arithmetic broke at m={m}");
+        out.push((v / 691) as u128);
+    }
+    out
+}
+
+/// Cumulative counts N(M) = Σ_{m=2..=M} n(m) — the codebook sizes of the
+/// ball-cut Λ₂₄(M) (paper Table 1; the origin and the empty shell m=1 are
+/// excluded, matching the paper's convention of starting at the first
+/// nonempty shell).
+pub fn cumulative_sizes(max_m: usize) -> Vec<u128> {
+    let n = shell_sizes(max_m);
+    let mut cum = vec![0u128; max_m + 1];
+    let mut acc = 0u128;
+    for m in 2..=max_m {
+        acc += n[m];
+        cum[m] = acc;
+    }
+    cum
+}
+
+/// Bits per dimension of an index over Λ₂₄(M): ⌈log₂ N(M)⌉ / 24.
+pub fn bits_per_dim(n_points: u128) -> f64 {
+    ((n_points as f64).log2()).ceil() / 24.0
+}
+
+/// Exact log2 (not ceiled) — used for rate accounting in experiments.
+pub fn exact_bits_per_dim(n_points: u128) -> f64 {
+    (n_points as f64).log2() / 24.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tau_known_values() {
+        let tau = ramanujan_tau(13);
+        assert_eq!(tau[1], 1);
+        assert_eq!(tau[2], -24);
+        assert_eq!(tau[3], 252);
+        assert_eq!(tau[4], -1472);
+        assert_eq!(tau[5], 4830);
+        assert_eq!(tau[6], -6048);
+        assert_eq!(tau[7], -16744);
+        assert_eq!(tau[11], 534612);
+        assert_eq!(tau[12], -370944);
+        assert_eq!(tau[13], -577738);
+    }
+
+    #[test]
+    fn shell_sizes_match_table1() {
+        let n = shell_sizes(19);
+        assert_eq!(n[0], 1);
+        assert_eq!(n[1], 0); // minimum squared norm of Λ24 is 4
+        assert_eq!(n[2], 196_560); // kissing number
+        assert_eq!(n[3], 16_773_120);
+        assert_eq!(n[4], 398_034_000);
+        assert_eq!(n[5], 4_629_381_120);
+        // Paper Table 1 prints n(13)=16,993,109,532,672 — a dropped digit;
+        // the cumulative N(13) below confirms the correct value is 10×.
+        assert_eq!(n[13], 169_931_095_326_720);
+        assert_eq!(n[19], 11_045_500_816_896_000);
+    }
+
+    #[test]
+    fn cumulative_match_table1() {
+        let cum = cumulative_sizes(19);
+        assert_eq!(cum[2], 196_560);
+        assert_eq!(cum[3], 16_969_680);
+        assert_eq!(cum[4], 415_003_680);
+        assert_eq!(cum[5], 5_044_384_800);
+        assert_eq!(cum[13], 280_974_212_784_720); // exactly the paper's N(13)
+        // bits/dim at M=13 is 48/24 = 2.0 — the paper's headline bitrate
+        assert_eq!(bits_per_dim(cum[13]), 2.0);
+        assert!((exact_bits_per_dim(cum[3]) - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn bits_per_dim_table1_column() {
+        let cum = cumulative_sizes(19);
+        assert!((bits_per_dim(cum[2]) - 0.75).abs() < 1e-12);
+        assert!((bits_per_dim(cum[3]) - 25.0 / 24.0).abs() < 1e-12); // 1.042
+        assert!((bits_per_dim(cum[4]) - 29.0 / 24.0).abs() < 1e-12); // 1.208
+        assert!((bits_per_dim(cum[5]) - 33.0 / 24.0).abs() < 1e-12); // 1.375
+        assert!((bits_per_dim(cum[19]) - 55.0 / 24.0).abs() < 1e-12); // 2.292
+    }
+}

@@ -1,0 +1,87 @@
+//! # LLVQ — Leech Lattice Vector Quantization for LLM compression
+//!
+//! Reproduction of *"Leech Lattice Vector Quantization for Efficient LLM
+//! Compression"* (van der Ouderaa et al., 2026) as a production-shaped
+//! three-layer system:
+//!
+//! * **L3 (this crate)** — the coordination layer: the Leech lattice
+//!   substrate (Golay code, shell/class enumeration, exact coset decoding,
+//!   the paper's bijective indexing scheme), the quantizer zoo (LLVQ
+//!   spherical-shaping and shape–gain plus all same-pipeline baselines),
+//!   the GPTQ-style PTQ pipeline with Hessian corrections, a tiny
+//!   transformer model substrate, a PJRT runtime that executes AOT-lowered
+//!   JAX/Pallas artifacts, and a batching inference coordinator.
+//! * **L2 (python/compile)** — JAX compute graphs (quantized linear /
+//!   transformer forward), lowered once to HLO text.
+//! * **L1 (python/compile/kernels)** — the Pallas dequantization kernel
+//!   (paper §3.3 step 5), interpret-mode on CPU.
+//!
+//! Python never runs on the request path: artifacts are produced by
+//! `make artifacts` and the rust binary is self-contained afterwards.
+//!
+//! Entry points:
+//! * [`leech::index::LeechIndexer`] — index ↔ lattice-point bijection.
+//! * [`leech::decode`] — nearest-neighbour search (Euclidean + angular).
+//! * [`quant`] — the [`quant::VectorQuantizer`] trait and implementations.
+//! * [`pipeline`] — layer-wise PTQ with Hessian correction.
+//! * [`coordinator`] — batched inference service over the PJRT runtime.
+//! * [`experiments`] — regenerators for every table/figure in the paper.
+
+pub mod util {
+    pub mod rng;
+    pub mod json;
+    pub mod cli;
+    pub mod bench;
+    pub mod threadpool;
+    pub mod proptest;
+}
+
+pub mod math {
+    pub mod linalg;
+    pub mod hadamard;
+    pub mod stats;
+}
+
+pub mod golay;
+
+pub mod leech {
+    pub mod theta;
+    pub mod leaders;
+    pub mod coset;
+    pub mod decode;
+    pub mod index;
+    pub mod tables;
+}
+
+pub mod quant {
+    mod traits;
+    pub use traits::*;
+    pub mod scalar;
+    pub mod gain;
+    pub mod e8;
+    pub mod llvq;
+    pub mod product;
+}
+
+pub mod pipeline {
+    pub mod hessian;
+    pub mod rotation;
+    pub mod gptq;
+    pub mod finetune;
+    pub mod driver;
+}
+
+pub mod model {
+    pub mod config;
+    pub mod transformer;
+    pub mod io;
+    pub mod eval;
+    pub mod corpus;
+}
+
+pub mod runtime;
+pub mod coordinator;
+pub mod experiments;
+
+/// Dimension of the Leech lattice and of every LLVQ block.
+pub const DIM: usize = 24;

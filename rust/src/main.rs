@@ -1,0 +1,403 @@
+//! `llvq` — command-line entry point of the LLVQ coordinator.
+//!
+//! Subcommands:
+//! * `exp <id>` — regenerate a paper table/figure (table1, table2, fig1,
+//!   table4, table3, table5, table6, fig6, table7, all).
+//! * `tables` — export the kernel dequantization tables as JSON.
+//! * `quantize` — PTQ a model artifact with a chosen method.
+//! * `eval` — evaluate a model artifact (PPL + probes).
+//! * `serve` — start the batching inference server (TCP line protocol).
+//! * `gen-model` — write a random-weight model (testing without python).
+//! * `info` — lattice summary (shell sizes, codebook bits, table VMEM).
+
+use std::sync::Arc;
+
+use llvq::coordinator::{BatcherConfig, Coordinator, NativeEngine};
+use llvq::experiments as exp;
+use llvq::leech::index::LeechIndexer;
+use llvq::leech::tables::KernelTables;
+use llvq::model::config::{config_by_name, model_zoo};
+use llvq::model::eval::evaluate;
+use llvq::model::io as model_io;
+use llvq::model::transformer::Weights;
+use llvq::pipeline::driver::{quantize_model, PtqOptions};
+use llvq::pipeline::rotation::RotationMode;
+use llvq::util::cli::Args;
+
+fn main() {
+    let mut argv = std::env::args().skip(1);
+    let cmd = argv.next().unwrap_or_else(|| "help".to_string());
+    let rest: Vec<String> = argv.collect();
+    let code = match cmd.as_str() {
+        "exp" => cmd_exp(rest),
+        "tables" => cmd_tables(rest),
+        "quantize" => cmd_quantize(rest),
+        "eval" => cmd_eval(rest),
+        "serve" => cmd_serve(rest),
+        "gen-model" => cmd_gen_model(rest),
+        "info" => cmd_info(rest),
+        _ => {
+            eprintln!(
+                "usage: llvq <exp|tables|quantize|eval|serve|gen-model|info> [flags]\n\
+                 try: llvq exp table1"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn effort_from(a: &Args) -> exp::Effort {
+    let mut e = if a.get_bool("quick") {
+        exp::Effort::quick()
+    } else {
+        exp::Effort::default()
+    };
+    if let Some(n) = a.get("leech-blocks").and_then(|v| v.parse().ok()) {
+        e.leech_blocks = n;
+    }
+    if let Some(n) = a.get("eval-seqs").and_then(|v| v.parse().ok()) {
+        e.eval_seqs = n;
+    }
+    e
+}
+
+fn cmd_exp(rest: Vec<String>) -> i32 {
+    let a = Args::new("llvq exp <id> — regenerate a paper table/figure")
+        .switch("quick", "reduced sample counts")
+        .switch("allow-random", "fall back to random weights if artifacts missing")
+        .flag("leech-blocks", "", "override Leech-quantizer sample blocks")
+        .flag("eval-seqs", "", "override eval sequence count")
+        .parse(rest.into_iter())
+        .unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2)
+        });
+    let e = effort_from(&a);
+    let allow_random = a.get_bool("allow-random");
+    let ids: Vec<String> = if a.positional().is_empty() {
+        vec!["all".into()]
+    } else {
+        a.positional().to_vec()
+    };
+    for id in ids {
+        let run_all = id == "all";
+        let ok: Result<(), String> = (|| {
+            let mut matched = run_all;
+            if run_all || id == "table1" {
+                exp::table1(true);
+                matched = true;
+            }
+            if run_all || id == "table2" {
+                exp::table2();
+                matched = true;
+            }
+            if run_all || id == "fig1" {
+                exp::fig1(&e);
+                matched = true;
+            }
+            if run_all || id == "table4" {
+                exp::table4(&e);
+                matched = true;
+            }
+            if run_all || id == "table7" {
+                exp::table7(&e);
+                matched = true;
+            }
+            if run_all || id == "fig6" {
+                exp::fig6(&e);
+                matched = true;
+            }
+            if run_all || id == "table3" {
+                exp::table3(&e, allow_random)?;
+                matched = true;
+            }
+            if run_all || id == "table5" {
+                exp::table5(&e, allow_random)?;
+                matched = true;
+            }
+            if run_all || id == "table6" {
+                exp::table6(&e, allow_random)?;
+                matched = true;
+            }
+            if !matched {
+                return Err(format!("unknown experiment id '{id}'"));
+            }
+            Ok(())
+        })();
+        if let Err(msg) = ok {
+            eprintln!("experiment {id} failed: {msg}");
+            return 1;
+        }
+    }
+    0
+}
+
+fn cmd_tables(rest: Vec<String>) -> i32 {
+    let a = Args::new("llvq tables — export kernel dequant tables as JSON")
+        .flag("max-m", "13", "ball cut (max shell)")
+        .flag("out", "artifacts/tables.rust.json", "output path")
+        .parse(rest.into_iter())
+        .unwrap();
+    let max_m = a.get_usize("max-m");
+    let ix = LeechIndexer::new(max_m);
+    let t = KernelTables::build(&ix);
+    let json = t.to_json().to_string_compact();
+    let out = a.get("out").unwrap();
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    match std::fs::write(&out, &json) {
+        Ok(()) => {
+            println!(
+                "wrote {} groups ({} points, {} bits, ~{} B VMEM) to {out}",
+                t.num_groups,
+                t.num_points(),
+                ix.index_bits(),
+                t.vmem_bytes()
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("write failed: {e}");
+            1
+        }
+    }
+}
+
+fn parse_method(name: &str) -> Option<exp::Method> {
+    match name {
+        "scalar" | "gptq" => Some(exp::Method::ScalarGptq),
+        "e8p" => Some(exp::Method::E8p),
+        "llvq-spherical" | "spherical" => Some(exp::Method::LlvqSpherical),
+        "llvq-shape-gain" | "shape-gain" => Some(exp::Method::LlvqShapeGain),
+        _ => None,
+    }
+}
+
+fn cmd_quantize(rest: Vec<String>) -> i32 {
+    let a = Args::new("llvq quantize — PTQ a model artifact")
+        .flag("model", "llama2-tiny", "model name from the zoo")
+        .flag("method", "llvq-shape-gain", "scalar|e8p|llvq-spherical|llvq-shape-gain")
+        .flag("rotation", "input+output", "none|input|input+output")
+        .switch("finetune", "closed-form per-column scale finetuning")
+        .switch("allow-random", "use random weights if artifact missing")
+        .flag("out", "", "output .llvqw path (default artifacts/<model>.<method>.llvqw)")
+        .parse(rest.into_iter())
+        .unwrap();
+    let cfg = match config_by_name(&a.get("model").unwrap()) {
+        Some(c) => c,
+        None => {
+            eprintln!(
+                "unknown model; zoo: {:?}",
+                model_zoo().iter().map(|c| c.name.clone()).collect::<Vec<_>>()
+            );
+            return 2;
+        }
+    };
+    let w = match exp::load_model(&cfg, a.get_bool("allow-random")) {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let method_name = a.get("method").unwrap();
+    let method = match parse_method(&method_name) {
+        Some(m) => m,
+        None => {
+            eprintln!("unknown method {method_name}");
+            return 2;
+        }
+    };
+    let rotation = match a.get("rotation").unwrap().as_str() {
+        "none" => RotationMode::None,
+        "input" => RotationMode::Input,
+        _ => RotationMode::InputOutput,
+    };
+    let q = method.build();
+    let opts = PtqOptions {
+        rotation,
+        finetune_scales: a.get_bool("finetune"),
+        ..Default::default()
+    };
+    println!("quantizing {} with {} …", cfg.name, q.name());
+    let t0 = std::time::Instant::now();
+    let (wq, rep) = quantize_model(&w, q.as_ref(), &opts);
+    println!(
+        "done in {:.1}s — {:.4} bits/weight over {} linear params",
+        t0.elapsed().as_secs_f64(),
+        rep.bits_per_weight(),
+        rep.total_params
+    );
+    let out = {
+        let o = a.get("out").unwrap();
+        if o.is_empty() {
+            llvq::runtime::artifact(&format!("{}.{}.llvqw", cfg.name, method_name))
+        } else {
+            o.into()
+        }
+    };
+    if let Some(dir) = out.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    if let Err(e) = model_io::save(&wq, &out) {
+        eprintln!("save failed: {e}");
+        return 1;
+    }
+    println!("wrote {}", out.display());
+    0
+}
+
+fn cmd_eval(rest: Vec<String>) -> i32 {
+    let a = Args::new("llvq eval — perplexity + probes of a .llvqw artifact")
+        .flag("path", "", "model file (or zoo name via --model)")
+        .flag("model", "", "zoo model name (loads artifacts/<name>.llvqw)")
+        .flag("seqs", "64", "eval sequences")
+        .parse(rest.into_iter())
+        .unwrap();
+    let path = {
+        let p = a.get("path").unwrap();
+        if !p.is_empty() {
+            std::path::PathBuf::from(p)
+        } else {
+            let m = a.get("model").unwrap();
+            if m.is_empty() {
+                eprintln!("need --path or --model");
+                return 2;
+            }
+            llvq::runtime::artifact(&format!("{m}.llvqw"))
+        }
+    };
+    match model_io::load(&path) {
+        Ok(w) => {
+            let m = evaluate(
+                &w,
+                a.get_usize("seqs"),
+                2000,
+                llvq::util::threadpool::default_threads(),
+            );
+            println!(
+                "{}: ppl={:.3} acc(csr*)={:.1}% cloze(mmlu*)={:.1}% over {} tokens",
+                path.display(),
+                m.perplexity,
+                m.accuracy_pct,
+                m.cloze_pct,
+                m.tokens
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    }
+}
+
+fn cmd_serve(rest: Vec<String>) -> i32 {
+    let a = Args::new("llvq serve — batching inference server")
+        .flag("path", "", "model .llvqw to serve")
+        .flag("model", "llama2-tiny", "zoo name (artifacts/<name>.llvqw)")
+        .flag("addr", "127.0.0.1:7199", "listen address")
+        .flag("max-batch", "8", "dynamic batch limit")
+        .flag("max-wait-ms", "2", "batch window")
+        .switch("allow-random", "serve random weights if artifact missing")
+        .parse(rest.into_iter())
+        .unwrap();
+    let w = {
+        let p = a.get("path").unwrap();
+        if !p.is_empty() {
+            match model_io::load(std::path::Path::new(&p)) {
+                Ok(w) => w,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 1;
+                }
+            }
+        } else {
+            let cfg = config_by_name(&a.get("model").unwrap()).expect("unknown model");
+            match exp::load_model(&cfg, a.get_bool("allow-random")) {
+                Ok(w) => w,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 1;
+                }
+            }
+        }
+    };
+    let engine = Arc::new(NativeEngine { weights: w });
+    let coord = Coordinator::start(
+        engine,
+        BatcherConfig {
+            max_batch: a.get_usize("max-batch"),
+            max_wait: std::time::Duration::from_millis(a.get_u64("max-wait-ms")),
+        },
+    );
+    let addr = a.get("addr").unwrap();
+    let listener = match std::net::TcpListener::bind(&addr) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("bind {addr}: {e}");
+            return 1;
+        }
+    };
+    println!("serving on {addr} (line protocol: NEXT t1,t2,… | STATS | QUIT)");
+    if let Err(e) = llvq::coordinator::serve_tcp(coord, listener) {
+        eprintln!("server error: {e}");
+        return 1;
+    }
+    0
+}
+
+fn cmd_gen_model(rest: Vec<String>) -> i32 {
+    let a = Args::new("llvq gen-model — write random weights (testing)")
+        .flag("model", "llama2-tiny", "zoo model name")
+        .flag("seed", "7", "rng seed")
+        .flag("out", "", "output path (default artifacts/<name>.llvqw)")
+        .parse(rest.into_iter())
+        .unwrap();
+    let cfg = config_by_name(&a.get("model").unwrap()).expect("unknown model");
+    let w = Weights::random(&cfg, a.get_u64("seed"));
+    let out = {
+        let o = a.get("out").unwrap();
+        if o.is_empty() {
+            llvq::runtime::artifact(&format!("{}.llvqw", cfg.name))
+        } else {
+            o.into()
+        }
+    };
+    if let Some(dir) = out.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    match model_io::save(&w, &out) {
+        Ok(()) => {
+            println!("wrote {} ({} params)", out.display(), cfg.num_params());
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    }
+}
+
+fn cmd_info(rest: Vec<String>) -> i32 {
+    let a = Args::new("llvq info — lattice/codebook summary")
+        .flag("max-m", "13", "ball cut")
+        .parse(rest.into_iter())
+        .unwrap();
+    let max_m = a.get_usize("max-m");
+    let ix = LeechIndexer::new(max_m);
+    let t = KernelTables::build(&ix);
+    println!("Leech ball cut Λ24({max_m}):");
+    println!("  points        : {}", ix.num_points());
+    println!("  index bits    : {}", ix.index_bits());
+    println!("  bits/dim      : {:.4}", ix.bits_per_dim());
+    println!(
+        "  classes       : {}",
+        ix.shells().iter().map(|s| s.classes.len()).sum::<usize>()
+    );
+    println!("  kernel groups : {}", t.num_groups);
+    println!("  table bytes   : {} (VMEM budget 262144)", t.vmem_bytes());
+    0
+}

@@ -1,0 +1,173 @@
+//! Hadamard transforms for incoherence processing (paper §5.3).
+//!
+//! QuIP#/QuaRot-style randomized Hadamard rotations make weight marginals
+//! more Gaussian before quantization. We implement the fast Walsh–Hadamard
+//! transform for power-of-two sizes and a block-diagonal extension for
+//! arbitrary dimensions (largest power-of-two blocks, remainder handled by
+//! a smaller block), plus the sign-randomized orthogonal variant
+//! `H·diag(s)/√n` used by the pipeline.
+
+use crate::util::rng::Xoshiro256pp;
+
+/// In-place fast Walsh–Hadamard transform (unnormalized). `data.len()`
+/// must be a power of two.
+pub fn fwht(data: &mut [f64]) {
+    let n = data.len();
+    assert!(n.is_power_of_two(), "FWHT needs a power-of-two length");
+    let mut h = 1;
+    while h < n {
+        for i in (0..n).step_by(h * 2) {
+            for j in i..i + h {
+                let x = data[j];
+                let y = data[j + h];
+                data[j] = x + y;
+                data[j + h] = x - y;
+            }
+        }
+        h *= 2;
+    }
+}
+
+/// Orthonormal FWHT: divides by √n so the transform is an isometry.
+pub fn fwht_orthonormal(data: &mut [f64]) {
+    let n = data.len();
+    fwht(data);
+    let s = 1.0 / (n as f64).sqrt();
+    for v in data.iter_mut() {
+        *v *= s;
+    }
+}
+
+/// A randomized Hadamard rotation `R = H·diag(s)/√n` over a (possibly
+/// non-power-of-two) dimension, realized block-diagonally: the dimension is
+/// split into power-of-two blocks (greedy largest-first). Orthogonal, so
+/// `inverse ∘ forward = id` and norms are preserved.
+#[derive(Clone, Debug)]
+pub struct RandomizedHadamard {
+    pub dim: usize,
+    /// (offset, len) of each power-of-two block.
+    blocks: Vec<(usize, usize)>,
+    /// Random ±1 signs, one per coordinate.
+    signs: Vec<f64>,
+}
+
+impl RandomizedHadamard {
+    pub fn new(dim: usize, seed: u64) -> Self {
+        let mut rng = Xoshiro256pp::new(seed);
+        let mut blocks = Vec::new();
+        let mut off = 0;
+        let mut rem = dim;
+        while rem > 0 {
+            let b = if rem.is_power_of_two() {
+                rem
+            } else {
+                rem.next_power_of_two() / 2
+            };
+            blocks.push((off, b));
+            off += b;
+            rem -= b;
+        }
+        let signs = (0..dim)
+            .map(|_| if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 })
+            .collect();
+        Self { dim, blocks, signs }
+    }
+
+    /// y = R·x (in place).
+    pub fn forward(&self, x: &mut [f64]) {
+        assert_eq!(x.len(), self.dim);
+        for (v, s) in x.iter_mut().zip(&self.signs) {
+            *v *= s;
+        }
+        for &(off, len) in &self.blocks {
+            fwht_orthonormal(&mut x[off..off + len]);
+        }
+    }
+
+    /// x = Rᵀ·y (in place) — R is orthogonal so this is the inverse.
+    pub fn inverse(&self, x: &mut [f64]) {
+        assert_eq!(x.len(), self.dim);
+        for &(off, len) in &self.blocks {
+            // H is symmetric; orthonormal H is its own inverse
+            fwht_orthonormal(&mut x[off..off + len]);
+        }
+        for (v, s) in x.iter_mut().zip(&self.signs) {
+            *v *= s; // s ∈ {±1} ⇒ s⁻¹ = s
+        }
+    }
+
+    /// Apply to every row of a row-major matrix.
+    pub fn forward_rows(&self, data: &mut [f64], cols: usize) {
+        assert_eq!(cols, self.dim);
+        for row in data.chunks_mut(cols) {
+            self.forward(row);
+        }
+    }
+
+    /// Apply the inverse to every row.
+    pub fn inverse_rows(&self, data: &mut [f64], cols: usize) {
+        assert_eq!(cols, self.dim);
+        for row in data.chunks_mut(cols) {
+            self.inverse(row);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fwht_matches_definition_small() {
+        // H2 = [[1,1],[1,-1]]
+        let mut v = vec![3.0, 5.0];
+        fwht(&mut v);
+        assert_eq!(v, vec![8.0, -2.0]);
+        // H4 on a unit vector gives a ±1 column
+        let mut e = vec![0.0, 1.0, 0.0, 0.0];
+        fwht(&mut e);
+        assert_eq!(e, vec![1.0, -1.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn orthonormal_preserves_norm() {
+        let mut rng = Xoshiro256pp::new(9);
+        let mut v: Vec<f64> = (0..256).map(|_| rng.next_gaussian()).collect();
+        let n0: f64 = v.iter().map(|x| x * x).sum();
+        fwht_orthonormal(&mut v);
+        let n1: f64 = v.iter().map(|x| x * x).sum();
+        assert!((n0 - n1).abs() < 1e-9 * n0);
+    }
+
+    #[test]
+    fn randomized_roundtrip_non_pow2() {
+        for dim in [24usize, 96, 100, 768, 257] {
+            let h = RandomizedHadamard::new(dim, 77);
+            let mut rng = Xoshiro256pp::new(13);
+            let orig: Vec<f64> = (0..dim).map(|_| rng.next_gaussian()).collect();
+            let mut v = orig.clone();
+            h.forward(&mut v);
+            // norm preserved
+            let n0: f64 = orig.iter().map(|x| x * x).sum();
+            let n1: f64 = v.iter().map(|x| x * x).sum();
+            assert!((n0 - n1).abs() < 1e-9 * n0.max(1.0));
+            h.inverse(&mut v);
+            for (a, b) in v.iter().zip(&orig) {
+                assert!((a - b).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn gaussianizes_spiky_vectors() {
+        // a one-hot "outlier" spreads to uniform magnitude — the incoherence
+        // property the rotation exists for
+        let dim = 128;
+        let h = RandomizedHadamard::new(dim, 5);
+        let mut v = vec![0.0; dim];
+        v[17] = 1.0;
+        h.forward(&mut v);
+        let maxabs = v.iter().fold(0.0f64, |a, &b| a.max(b.abs()));
+        assert!(maxabs < 2.5 / (dim as f64).sqrt(), "max |v| = {maxabs}");
+    }
+}

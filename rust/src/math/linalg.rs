@@ -1,0 +1,291 @@
+//! Dense linear algebra substrate (no external BLAS in the offline build).
+//!
+//! Provides exactly what the PTQ pipeline (App. D.2) needs: a row-major
+//! `Matrix`, Cholesky factorization with diagonal jitter, triangular solves
+//! (single and batched RHS), SPD solves, and least squares via normal
+//! equations — all in f64 for numerical headroom, with f32 views at the
+//! model boundary.
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c);
+            data.extend_from_slice(row);
+        }
+        Self {
+            rows: r,
+            cols: c,
+            data,
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.at(i, j);
+            }
+        }
+        t
+    }
+
+    /// C = A · B (naive triple loop with the k-j inner order for locality).
+    pub fn matmul(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.rows);
+        let mut c = Matrix::zeros(self.rows, b.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a_ik = self.at(i, k);
+                if a_ik == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[k * b.cols..(k + 1) * b.cols];
+                let crow = &mut c.data[i * b.cols..(i + 1) * b.cols];
+                for j in 0..b.cols {
+                    crow[j] += a_ik * brow[j];
+                }
+            }
+        }
+        c
+    }
+
+    /// y = A·x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mut s = 0.0;
+            for j in 0..self.cols {
+                s += row[j] * x[j];
+            }
+            y[i] = s;
+        }
+        y
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Add `eps · mean(diag)` to the diagonal (GPTQ-style damping).
+    pub fn damp_diagonal(&mut self, eps: f64) {
+        assert_eq!(self.rows, self.cols);
+        let mean_diag = (0..self.rows).map(|i| self.at(i, i)).sum::<f64>() / self.rows as f64;
+        let add = eps * mean_diag.max(1e-12);
+        for i in 0..self.rows {
+            *self.at_mut(i, i) += add;
+        }
+    }
+}
+
+/// Lower-triangular Cholesky factor L with A = L·Lᵀ. Fails on non-SPD
+/// input (after optional damping the pipeline applies).
+pub fn cholesky(a: &Matrix) -> Result<Matrix, String> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.at(i, j);
+            for k in 0..j {
+                s -= l.at(i, k) * l.at(j, k);
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return Err(format!("not SPD at pivot {i} (s = {s:.3e})"));
+                }
+                *l.at_mut(i, j) = s.sqrt();
+            } else {
+                *l.at_mut(i, j) = s / l.at(j, j);
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L·x = b with L lower-triangular.
+pub fn solve_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut x = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l.at(i, k) * x[k];
+        }
+        x[i] = s / l.at(i, i);
+    }
+    x
+}
+
+/// Solve Lᵀ·x = b with L lower-triangular.
+pub fn solve_lower_t(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for k in i + 1..n {
+            s -= l.at(k, i) * x[k];
+        }
+        x[i] = s / l.at(i, i);
+    }
+    x
+}
+
+/// Solve the SPD system A·x = b via Cholesky.
+pub fn solve_spd(a: &Matrix, b: &[f64]) -> Result<Vec<f64>, String> {
+    let l = cholesky(a)?;
+    Ok(solve_lower_t(&l, &solve_lower(&l, b)))
+}
+
+/// Least squares: minimize ‖A·x − b‖² via damped normal equations.
+pub fn least_squares(a: &Matrix, b: &[f64], damp: f64) -> Result<Vec<f64>, String> {
+    let at = a.transpose();
+    let mut ata = at.matmul(a);
+    ata.damp_diagonal(damp.max(1e-10));
+    let atb = at.matvec(b);
+    solve_spd(&ata, &atb)
+}
+
+/// Inverse of an SPD matrix via Cholesky (used once per layer — not hot).
+pub fn invert_spd(a: &Matrix) -> Result<Matrix, String> {
+    let n = a.rows;
+    let l = cholesky(a)?;
+    let mut inv = Matrix::zeros(n, n);
+    let mut e = vec![0.0; n];
+    for j in 0..n {
+        e[j] = 1.0;
+        let col = solve_lower_t(&l, &solve_lower(&l, &e));
+        for i in 0..n {
+            *inv.at_mut(i, j) = col[i];
+        }
+        e[j] = 0.0;
+    }
+    Ok(inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn random_spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Xoshiro256pp::new(seed);
+        let mut g = Matrix::zeros(n, n);
+        for v in g.data.iter_mut() {
+            *v = rng.next_gaussian();
+        }
+        let mut a = g.transpose().matmul(&g);
+        a.damp_diagonal(0.05);
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = random_spd(16, 1);
+        let l = cholesky(&a).unwrap();
+        let back = l.matmul(&l.transpose());
+        for i in 0..16 {
+            for j in 0..16 {
+                assert!((back.at(i, j) - a.at(i, j)).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn spd_solve_accuracy() {
+        let a = random_spd(24, 2);
+        let mut rng = Xoshiro256pp::new(3);
+        let x_true: Vec<f64> = (0..24).map(|_| rng.next_gaussian()).collect();
+        let b = a.matvec(&x_true);
+        let x = solve_spd(&a, &b).unwrap();
+        for (xs, xt) in x.iter().zip(&x_true) {
+            assert!((xs - xt).abs() < 1e-8, "{xs} vs {xt}");
+        }
+    }
+
+    #[test]
+    fn triangular_solves_invert_each_other() {
+        let a = random_spd(12, 4);
+        let l = cholesky(&a).unwrap();
+        let b: Vec<f64> = (0..12).map(|i| i as f64 - 3.0).collect();
+        let y = solve_lower(&l, &b);
+        // L·y should equal b
+        let ly = l.matvec(&y);
+        for (u, v) in ly.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-10);
+        }
+        let z = solve_lower_t(&l, &b);
+        let ltz = l.transpose().matvec(&z);
+        for (u, v) in ltz.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn least_squares_recovers_planted_solution() {
+        let mut rng = Xoshiro256pp::new(5);
+        let mut a = Matrix::zeros(64, 8);
+        for v in a.data.iter_mut() {
+            *v = rng.next_gaussian();
+        }
+        let x_true: Vec<f64> = (0..8).map(|_| rng.next_gaussian()).collect();
+        let b = a.matvec(&x_true);
+        let x = least_squares(&a, &b, 1e-9).unwrap();
+        for (xs, xt) in x.iter().zip(&x_true) {
+            assert!((xs - xt).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(cholesky(&a).is_err());
+    }
+}

@@ -1,0 +1,225 @@
+//! Quantization metrics and distribution utilities (paper §3 eqs. 16–20,
+//! App. F).
+//!
+//! * MSE / SQNR-in-bits / Shannon retention — the paper's Gaussian-source
+//!   scoreboard (Fig. 1, Table 4).
+//! * χ distribution with 24 degrees of freedom — the gain prior of the
+//!   shape–gain construction; quantile tables are built by numerical
+//!   integration of the χ²₂₄ density plus bisection (no special-function
+//!   dependency).
+//! * Simple summary-statistics helpers for the violin data of Fig. 6.
+
+/// Mean squared error per weight between two equal-length slices.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = a
+        .iter()
+        .zip(b.iter())
+        .map(|(&x, &y)| {
+            let d = x as f64 - y as f64;
+            d * d
+        })
+        .sum();
+    s / a.len() as f64
+}
+
+/// SQNR in *bits* (paper eq. 17): −½·log₂(MSE) for a unit-variance source.
+pub fn sqnr_bits(mse_val: f64) -> f64 {
+    -0.5 * mse_val.log2()
+}
+
+/// Shannon retention at rate R bits/dim (paper eq. 20).
+pub fn retention_pct(sqnr: f64, rate: f64) -> f64 {
+    100.0 * sqnr / rate
+}
+
+/// SQNR in dB: bits × 20·log₁₀(2) ≈ bits × 6.0206 (paper §3).
+pub fn sqnr_db(sqnr_bits: f64) -> f64 {
+    sqnr_bits * 20.0 * std::f64::consts::LOG10_2
+}
+
+/// Percentile of a (sorted-in-place) sample; p ∈ [0, 100].
+pub fn percentile(samples: &mut [f64], p: f64) -> f64 {
+    assert!(!samples.is_empty());
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = (p / 100.0 * (samples.len() - 1) as f64).round() as usize;
+    samples[idx.min(samples.len() - 1)]
+}
+
+/// Five-number summary used for the Fig. 6 violin rows.
+#[derive(Clone, Copy, Debug)]
+pub struct Summary {
+    pub p5: f64,
+    pub p25: f64,
+    pub p50: f64,
+    pub p75: f64,
+    pub p95: f64,
+    pub mean: f64,
+}
+
+pub fn summarize(samples: &mut [f64]) -> Summary {
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    Summary {
+        p5: percentile(samples, 5.0),
+        p25: percentile(samples, 25.0),
+        p50: percentile(samples, 50.0),
+        p75: percentile(samples, 75.0),
+        p95: percentile(samples, 95.0),
+        mean,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// χ²₂₄ / χ₂₄ distribution (gain prior for 24-dim Gaussian blocks)
+// ---------------------------------------------------------------------------
+
+/// χ² density with k degrees of freedom.
+fn chi2_pdf(k: usize, x: f64) -> f64 {
+    if x <= 0.0 {
+        return 0.0;
+    }
+    // f(x) = x^{k/2-1} e^{-x/2} / (2^{k/2} Γ(k/2)); k = 24 ⇒ Γ(12) = 11!
+    let half_k = k as f64 / 2.0;
+    let ln_gamma_half_k = ln_gamma(half_k);
+    ((half_k - 1.0) * x.ln() - x / 2.0 - half_k * std::f64::consts::LN_2 - ln_gamma_half_k).exp()
+}
+
+/// Lanczos log-gamma (g = 7, n = 9) — standard coefficients.
+pub fn ln_gamma(x: f64) -> f64 {
+    const G: f64 = 7.0;
+    const C: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_571_6e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // reflection
+        return (std::f64::consts::PI / (std::f64::consts::PI * x).sin()).ln()
+            - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = C[0];
+    let t = x + G + 0.5;
+    for (i, &c) in C.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// χ²_k CDF by adaptive Simpson integration of the density (k = 24 use).
+pub fn chi2_cdf(k: usize, x: f64) -> f64 {
+    if x <= 0.0 {
+        return 0.0;
+    }
+    // Simpson on [0, x] with enough panels for 1e-10-ish accuracy at k=24
+    let n = 2000;
+    let h = x / n as f64;
+    let mut s = chi2_pdf(k, 0.0) + chi2_pdf(k, x);
+    for i in 1..n {
+        let w = if i % 2 == 1 { 4.0 } else { 2.0 };
+        s += w * chi2_pdf(k, i as f64 * h);
+    }
+    (s * h / 3.0).min(1.0)
+}
+
+/// Quantile (inverse CDF) of χ_k — i.e. of the NORM √(χ²_k) — by bisection.
+pub fn chi_quantile(k: usize, p: f64) -> f64 {
+    assert!((0.0..1.0).contains(&p));
+    if p == 0.0 {
+        return 0.0;
+    }
+    let (mut lo, mut hi) = (0.0f64, (k as f64).sqrt() * 6.0 + 10.0);
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if chi2_cdf(k, mid * mid) < p {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// Lloyd–Max-style codebook for the χ_k gain prior: centroids of
+/// equal-probability bins (a strong, standard gain quantizer; App. F's
+/// "χ-matched scalar quantizer").
+pub fn chi_gain_codebook(k: usize, levels: usize) -> Vec<f64> {
+    assert!(levels >= 1);
+    let mut out = Vec::with_capacity(levels);
+    for i in 0..levels {
+        // centroid ≈ median of the bin [i/L, (i+1)/L]
+        let p = (i as f64 + 0.5) / levels as f64;
+        out.push(chi_quantile(k, p));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sqnr_and_retention_examples_from_table4() {
+        // Table 4: MSE 0.078 → SQNR 1.84 bits → 92.1% at R=2
+        let s = sqnr_bits(0.078);
+        assert!((s - 1.84).abs() < 0.005, "sqnr {s}");
+        assert!((retention_pct(s, 2.0) - 92.1).abs() < 0.3);
+        // theoretical limit: MSE 0.0625 → 2 bits → 100%
+        assert!((sqnr_bits(0.0625) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ln_gamma_matches_factorials() {
+        // Γ(12) = 11! = 39916800
+        assert!((ln_gamma(12.0) - (39_916_800f64).ln()).abs() < 1e-9);
+        assert!((ln_gamma(0.5) - (std::f64::consts::PI.sqrt()).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chi2_cdf_sane() {
+        // mean of chi2_24 is 24; CDF at the mean is a bit over 0.5
+        let c = chi2_cdf(24, 24.0);
+        assert!(c > 0.5 && c < 0.56, "cdf(24) = {c}");
+        assert!(chi2_cdf(24, 1.0) < 1e-6);
+        assert!(chi2_cdf(24, 80.0) > 0.999999);
+    }
+
+    #[test]
+    fn chi_quantile_roundtrip() {
+        for &p in &[0.05, 0.25, 0.5, 0.75, 0.95] {
+            let q = chi_quantile(24, p);
+            let back = chi2_cdf(24, q * q);
+            assert!((back - p).abs() < 1e-6, "p {p} → q {q} → {back}");
+        }
+        // E[χ_24] ≈ √24·(1 − 1/(4·24)) ≈ 4.85 ⇒ median close to that
+        let med = chi_quantile(24, 0.5);
+        assert!((med - 4.88).abs() < 0.1, "median {med}");
+    }
+
+    #[test]
+    fn gain_codebook_monotone() {
+        let cb = chi_gain_codebook(24, 16);
+        assert_eq!(cb.len(), 16);
+        for w in cb.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        assert!(cb[0] > 2.5 && cb[15] < 8.5);
+    }
+
+    #[test]
+    fn summary_orders() {
+        let mut v: Vec<f64> = (0..1000).map(|i| (i as f64) / 999.0).collect();
+        let s = summarize(&mut v);
+        assert!(s.p5 < s.p25 && s.p25 < s.p50 && s.p50 < s.p75 && s.p75 < s.p95);
+        assert!((s.mean - 0.5).abs() < 1e-9);
+    }
+}

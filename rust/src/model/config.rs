@@ -1,0 +1,134 @@
+//! Model zoo configuration.
+//!
+//! The paper evaluates five LLM families (Llama-2 7B, Llama-3 8B,
+//! Ministral 8B, Qwen-3 4B/8B). Running 7–8 B-parameter models is out of
+//! scope for this testbed (see DESIGN.md substitution ledger), so the zoo
+//! holds five *architecturally analogous* tiny decoder-only transformers
+//! that differ along the same axes the real families do (depth, width,
+//! FFN ratio). Head dim is fixed at 24 — matching the Leech block size, so
+//! attention projections quantize without padding (the general padding
+//! path is exercised by separate tests and by `qwen3-4b-tiny`'s FFN).
+
+/// Decoder-only transformer hyperparameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Total parameter count (embeddings + blocks + head).
+    pub fn num_params(&self) -> usize {
+        let d = self.d_model;
+        let attn = 4 * d * d;
+        let mlp = 2 * d * self.d_ff;
+        let norms = 2 * d;
+        self.vocab * d                  // token embedding
+            + self.max_seq * d          // positional embedding
+            + self.n_layers * (attn + mlp + norms)
+            + d                         // final norm
+            + self.vocab * d // lm head
+    }
+
+    /// Parameters inside quantizable linear layers only (what the paper's
+    /// bits-per-weight figures cover; embeddings/norms stay fp16/fp32).
+    pub fn num_linear_params(&self) -> usize {
+        let d = self.d_model;
+        self.n_layers * (4 * d * d + 2 * d * self.d_ff)
+    }
+
+    pub fn validate(&self) {
+        assert!(self.d_model % self.n_heads == 0, "head dim must divide");
+        assert!(self.vocab > 1 && self.max_seq > 1);
+    }
+}
+
+/// The five tiny analogues used by Tables 3/5/6.
+pub fn model_zoo() -> Vec<ModelConfig> {
+    vec![
+        ModelConfig {
+            name: "llama2-tiny".into(),
+            vocab: 64,
+            d_model: 144,
+            n_layers: 3,
+            n_heads: 6,
+            d_ff: 384,
+            max_seq: 64,
+        },
+        ModelConfig {
+            name: "llama3-tiny".into(),
+            vocab: 64,
+            d_model: 168,
+            n_layers: 3,
+            n_heads: 7,
+            d_ff: 456,
+            max_seq: 64,
+        },
+        ModelConfig {
+            name: "ministral-tiny".into(),
+            vocab: 64,
+            d_model: 144,
+            n_layers: 4,
+            n_heads: 6,
+            d_ff: 384,
+            max_seq: 64,
+        },
+        ModelConfig {
+            name: "qwen3-4b-tiny".into(),
+            vocab: 64,
+            d_model: 120,
+            n_layers: 2,
+            n_heads: 5,
+            d_ff: 308, // deliberately NOT a multiple of 24: exercises padding
+            max_seq: 64,
+        },
+        ModelConfig {
+            name: "qwen3-8b-tiny".into(),
+            vocab: 64,
+            d_model: 168,
+            n_layers: 4,
+            n_heads: 7,
+            d_ff: 432,
+            max_seq: 64,
+        },
+    ]
+}
+
+pub fn config_by_name(name: &str) -> Option<ModelConfig> {
+    model_zoo().into_iter().find(|c| c.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_is_valid_and_distinct() {
+        let zoo = model_zoo();
+        assert_eq!(zoo.len(), 5);
+        for c in &zoo {
+            c.validate();
+            assert_eq!(c.head_dim(), 24, "{}: head dim must be 24", c.name);
+            assert!(c.num_params() > 100_000, "{} too small", c.name);
+        }
+        let names: std::collections::HashSet<_> = zoo.iter().map(|c| c.name.clone()).collect();
+        assert_eq!(names.len(), 5);
+    }
+
+    #[test]
+    fn param_counts_consistent() {
+        let c = config_by_name("llama2-tiny").unwrap();
+        assert!(c.num_linear_params() < c.num_params());
+        // llama2-tiny: 3·(4·144² + 2·144·384) = 580 608 linear params
+        assert_eq!(c.num_linear_params(), 3 * (4 * 144 * 144 + 2 * 144 * 384));
+    }
+}

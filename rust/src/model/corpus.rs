@@ -1,0 +1,217 @@
+//! Synthetic structured corpus (DESIGN.md substitution for DCLM-edu /
+//! Wikitext-2).
+//!
+//! A seeded second-order Markov chain over a 64-symbol alphabet, overlaid
+//! with deterministic *motifs* (fixed 6-token phrases that always complete
+//! the same way once their 2-token prefix appears). The motifs make two
+//! probe tasks well-defined:
+//!
+//! * **cloze accuracy** ("MMLU-proxy"): next-token accuracy restricted to
+//!   positions inside a motif body, where the continuation is deterministic
+//!   given context — a knowledge-recall probe;
+//! * **copy/common-sense accuracy** ("CSR-proxy"): top-1 next-token
+//!   accuracy over all positions — a broad-coverage probe.
+//!
+//! The generator is reimplemented identically in `python/compile/corpus.py`
+//! for training; cross-language agreement is pinned by a golden prefix
+//! test in both suites.
+
+use crate::util::rng::Xoshiro256pp;
+
+pub const VOCAB: usize = 64;
+pub const NUM_MOTIFS: usize = 8;
+pub const MOTIF_LEN: usize = 6;
+
+/// Deterministic corpus generator.
+pub struct Corpus {
+    /// Transition logits table [VOCAB × VOCAB] (first-order backbone).
+    trans: Vec<u16>, // cumulative distribution rows, fixed-point /65535
+    motifs: Vec<[u8; MOTIF_LEN]>,
+    rng: Xoshiro256pp,
+    /// Probability (per token) of entering a motif, ×2^16.
+    motif_p16: u32,
+}
+
+impl Corpus {
+    pub fn new(seed: u64) -> Self {
+        // Build a sparse-ish random Markov backbone deterministically from
+        // the seed. Row r: unnormalized weights w_c = 1 + (mix(r,c) % 97)
+        // boosted ×24 for 6 "preferred" successors — gives low-entropy,
+        // learnable structure.
+        // The "language" (Markov table + motifs) is FIXED: all seeds sample
+        // the same distribution, so train/calibration/eval streams are i.i.d.
+        // draws from one corpus rather than different languages.
+        let mut setup = Xoshiro256pp::new(0xC0_FFEE);
+        let mut trans = vec![0u16; VOCAB * VOCAB];
+        for r in 0..VOCAB {
+            let mut w = [0f64; VOCAB];
+            for c in 0..VOCAB {
+                w[c] = 1.0 + (setup.next_range(97)) as f64;
+            }
+            for _ in 0..6 {
+                w[setup.next_range(VOCAB as u64) as usize] *= 24.0;
+            }
+            let total: f64 = w.iter().sum();
+            let mut acc = 0.0;
+            for c in 0..VOCAB {
+                acc += w[c];
+                trans[r * VOCAB + c] = ((acc / total) * 65535.0) as u16;
+            }
+            trans[r * VOCAB + VOCAB - 1] = 65535;
+        }
+        let mut motifs = Vec::with_capacity(NUM_MOTIFS);
+        for _ in 0..NUM_MOTIFS {
+            let mut m = [0u8; MOTIF_LEN];
+            for v in m.iter_mut() {
+                *v = setup.next_range(VOCAB as u64) as u8;
+            }
+            motifs.push(m);
+        }
+        Self {
+            trans,
+            motifs,
+            rng: Xoshiro256pp::new(seed),
+            motif_p16: (0.08 * 65536.0) as u32,
+        }
+    }
+
+    /// Generate `n` tokens, also returning a mask of positions whose value
+    /// is deterministic given context (inside a motif body, offset ≥ 2).
+    pub fn generate(&mut self, n: usize) -> (Vec<u8>, Vec<bool>) {
+        let mut out = Vec::with_capacity(n);
+        let mut det = Vec::with_capacity(n);
+        let mut prev = 0u8;
+        while out.len() < n {
+            if ((self.rng.next_u64() & 0xFFFF) as u32) < self.motif_p16 {
+                // emit a full motif
+                let m = self.motifs[self.rng.next_range(NUM_MOTIFS as u64) as usize];
+                for (k, &t) in m.iter().enumerate() {
+                    if out.len() >= n {
+                        break;
+                    }
+                    out.push(t);
+                    det.push(k >= 2); // body is deterministic after 2-prefix
+                    prev = t;
+                }
+            } else {
+                // markov step
+                let u = (self.rng.next_u64() & 0xFFFF) as u16;
+                let row = &self.trans[prev as usize * VOCAB..(prev as usize + 1) * VOCAB];
+                // first bucket whose cumulative weight reaches u
+                // (bisect_left — matches python/compile/corpus.py exactly)
+                let c = row.partition_point(|&x| x < u).min(VOCAB - 1);
+                out.push(c as u8);
+                det.push(false);
+                prev = c as u8;
+            }
+        }
+        (out, det)
+    }
+
+    /// Convenience: `count` sequences of length `seq_len` (+1 for targets).
+    pub fn sequences(&mut self, count: usize, seq_len: usize) -> Vec<(Vec<u8>, Vec<bool>)> {
+        (0..count)
+            .map(|_| {
+                let (t, d) = self.generate(seq_len + 1);
+                (t, d)
+            })
+            .collect()
+    }
+
+    pub fn motifs(&self) -> &[[u8; MOTIF_LEN]] {
+        &self.motifs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_prefix_cross_language() {
+        // pinned in python/tests/test_corpus.py as GOLDEN_1234
+        let mut c = Corpus::new(1234);
+        let (t, _) = c.generate(12);
+        assert_eq!(t, vec![58, 7, 5, 18, 19, 22, 32, 43, 37, 28, 52, 21]);
+    }
+
+    #[test]
+    fn all_seeds_share_one_language() {
+        // the transition table is seed-independent
+        let a = Corpus::new(1);
+        let b = Corpus::new(999);
+        assert_eq!(a.trans, b.trans);
+        assert_eq!(a.motifs, b.motifs);
+    }
+
+    #[test]
+    fn deterministic_and_in_vocab() {
+        let mut a = Corpus::new(1234);
+        let mut b = Corpus::new(1234);
+        let (ta, _) = a.generate(5000);
+        let (tb, _) = b.generate(5000);
+        assert_eq!(ta, tb);
+        assert!(ta.iter().all(|&t| (t as usize) < VOCAB));
+        let mut c = Corpus::new(99);
+        let (tc, _) = c.generate(5000);
+        assert_ne!(ta, tc);
+    }
+
+    #[test]
+    fn motif_positions_are_deterministic() {
+        let mut g = Corpus::new(7);
+        let (toks, det) = g.generate(200_000);
+        let motifs = g.motifs().to_vec();
+        let frac = det.iter().filter(|&&d| d).count() as f64 / det.len() as f64;
+        assert!(frac > 0.02 && frac < 0.35, "det fraction {frac}");
+        // every deterministic position must indeed extend some motif prefix
+        for i in 0..toks.len() {
+            if det[i] {
+                let ok = motifs.iter().any(|m| {
+                    (2..MOTIF_LEN).any(|k| {
+                        i >= k
+                            && toks[i - k..=i]
+                                .iter()
+                                .zip(m[..=k].iter())
+                                .all(|(a, b)| a == b)
+                    })
+                });
+                assert!(ok, "position {i} marked deterministic but no motif matches");
+            }
+        }
+    }
+
+    #[test]
+    fn corpus_has_learnable_structure() {
+        // backbone bigram entropy must be clearly below uniform (6 bits)
+        let mut g = Corpus::new(5);
+        let (toks, _) = g.generate(300_000);
+        let mut counts = vec![0u32; VOCAB * VOCAB];
+        for w in toks.windows(2) {
+            counts[w[0] as usize * VOCAB + w[1] as usize] += 1;
+        }
+        let mut h = 0.0f64;
+        let mut row_tot = vec![0u32; VOCAB];
+        for r in 0..VOCAB {
+            row_tot[r] = (0..VOCAB).map(|c| counts[r * VOCAB + c]).sum();
+        }
+        let total: u32 = row_tot.iter().sum();
+        for r in 0..VOCAB {
+            if row_tot[r] == 0 {
+                continue;
+            }
+            let pr = row_tot[r] as f64 / total as f64;
+            let mut hr = 0.0;
+            for c in 0..VOCAB {
+                let n = counts[r * VOCAB + c];
+                if n > 0 {
+                    let p = n as f64 / row_tot[r] as f64;
+                    hr -= p * p.log2();
+                }
+            }
+            h += pr * hr;
+        }
+        assert!(h < 5.3, "conditional entropy {h} too close to uniform");
+        assert!(h > 2.0, "degenerate corpus, entropy {h}");
+    }
+}

@@ -1,0 +1,105 @@
+//! Model evaluation: perplexity and probe-task accuracies (the Wiki /
+//! MMLU / CSR columns of Tables 3/5/6, under the DESIGN.md substitutions).
+//!
+//! Evaluation runs over held-out synthetic-corpus sequences through the
+//! Rust-native forward pass. Sequences are processed in parallel; metrics
+//! aggregate exactly (token-weighted).
+
+use crate::model::corpus::Corpus;
+use crate::model::transformer::{forward, sequence_loss, ActivationCapture, Weights};
+use crate::util::threadpool;
+
+/// Evaluation metrics for one model.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalMetrics {
+    /// Perplexity = exp(mean NLL in nats) — the "Wiki ↓" column analogue.
+    pub perplexity: f64,
+    /// Top-1 next-token accuracy (%) — the "CSR ↑" analogue.
+    pub accuracy_pct: f64,
+    /// Accuracy on deterministic motif positions (%) — the "MMLU ↑"
+    /// analogue (knowledge recall).
+    pub cloze_pct: f64,
+    pub tokens: usize,
+}
+
+/// Evaluate on `num_seqs` held-out sequences from `seed` (use a seed
+/// disjoint from training — the convention is train seed 1000, eval 2000).
+pub fn evaluate(w: &Weights, num_seqs: usize, seed: u64, threads: usize) -> EvalMetrics {
+    let seq_len = w.cfg.max_seq.min(64);
+    let mut corpus = Corpus::new(seed);
+    let seqs = corpus.sequences(num_seqs, seq_len);
+
+    #[derive(Clone, Default)]
+    struct Partial {
+        nll_sum: f64,
+        hits: f64,
+        cloze_hits: f64,
+        cloze_n: f64,
+        tokens: usize,
+    }
+
+    let partials = threadpool::parallel_map(seqs.len(), threads, |i| {
+        let (toks, det) = &seqs[i];
+        let inputs = &toks[..seq_len];
+        let targets = &toks[1..=seq_len];
+        let det_mask = &det[1..=seq_len];
+        let mut cap = ActivationCapture::default();
+        let logits = forward(w, inputs, &mut cap);
+        let (nll, acc, _cloze) = sequence_loss(&logits, targets, det_mask, w.cfg.vocab);
+        // recompute cloze counts exactly (weighted)
+        let det_n = det_mask.iter().filter(|&&d| d).count();
+        Partial {
+            nll_sum: nll * seq_len as f64,
+            hits: acc * seq_len as f64,
+            cloze_hits: _cloze * det_n as f64,
+            cloze_n: det_n as f64,
+            tokens: seq_len,
+        }
+    });
+
+    let mut total = Partial::default();
+    for p in partials {
+        total.nll_sum += p.nll_sum;
+        total.hits += p.hits;
+        total.cloze_hits += p.cloze_hits;
+        total.cloze_n += p.cloze_n;
+        total.tokens += p.tokens;
+    }
+    EvalMetrics {
+        perplexity: (total.nll_sum / total.tokens as f64).exp(),
+        accuracy_pct: 100.0 * total.hits / total.tokens as f64,
+        cloze_pct: if total.cloze_n > 0.0 {
+            100.0 * total.cloze_hits / total.cloze_n
+        } else {
+            0.0
+        },
+        tokens: total.tokens,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::config_by_name;
+
+    #[test]
+    fn random_model_is_near_chance() {
+        let cfg = config_by_name("qwen3-4b-tiny").unwrap();
+        let w = Weights::random(&cfg, 7);
+        let m = evaluate(&w, 8, 2000, 2);
+        // untrained → ppl near vocab size (64), accuracy near 1/64
+        assert!(m.perplexity > 25.0, "ppl {}", m.perplexity);
+        assert!(m.accuracy_pct < 20.0, "acc {}", m.accuracy_pct);
+        assert_eq!(m.tokens, 8 * 64);
+    }
+
+    #[test]
+    fn eval_is_deterministic() {
+        let cfg = config_by_name("qwen3-4b-tiny").unwrap();
+        let w = Weights::random(&cfg, 7);
+        let a = evaluate(&w, 4, 2000, 1);
+        let b = evaluate(&w, 4, 2000, 4);
+        assert!((a.perplexity - b.perplexity).abs() < 1e-9);
+        assert!((a.cloze_pct - b.cloze_pct).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,186 @@
+//! Model weight serialization — the `artifacts/<name>.llvqw` format shared
+//! with the JAX training script.
+//!
+//! Layout: magic `LLVQWTS1` · u32 LE header length · JSON header (config) ·
+//! raw little-endian f32 tensors in canonical order (tok_emb, pos_emb,
+//! per-block [norm1, wq, wk, wv, wo, norm2, w1, w2], norm_f, lm_head).
+//! `python/compile/train.py` writes exactly this; both sides assert the
+//! total byte count so silent shape drift is impossible.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::model::config::ModelConfig;
+use crate::model::transformer::{BlockWeights, Weights};
+use crate::util::json::{self, Json};
+
+const MAGIC: &[u8; 8] = b"LLVQWTS1";
+
+fn header_json(cfg: &ModelConfig) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(cfg.name.clone())),
+        ("vocab", Json::Int(cfg.vocab as i64)),
+        ("d_model", Json::Int(cfg.d_model as i64)),
+        ("n_layers", Json::Int(cfg.n_layers as i64)),
+        ("n_heads", Json::Int(cfg.n_heads as i64)),
+        ("d_ff", Json::Int(cfg.d_ff as i64)),
+        ("max_seq", Json::Int(cfg.max_seq as i64)),
+    ])
+}
+
+fn config_from_header(j: &Json) -> Result<ModelConfig, String> {
+    let geti = |k: &str| -> Result<usize, String> {
+        j.get(k)
+            .and_then(|v| v.as_i64())
+            .map(|v| v as usize)
+            .ok_or_else(|| format!("header missing {k}"))
+    };
+    Ok(ModelConfig {
+        name: j
+            .get("name")
+            .and_then(|v| v.as_str())
+            .unwrap_or("unnamed")
+            .to_string(),
+        vocab: geti("vocab")?,
+        d_model: geti("d_model")?,
+        n_layers: geti("n_layers")?,
+        n_heads: geti("n_heads")?,
+        d_ff: geti("d_ff")?,
+        max_seq: geti("max_seq")?,
+    })
+}
+
+fn push_f32s(buf: &mut Vec<u8>, v: &[f32]) {
+    for &x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Serialize weights to bytes.
+pub fn to_bytes(w: &Weights) -> Vec<u8> {
+    let hdr = header_json(&w.cfg).to_string_compact();
+    let mut buf = Vec::with_capacity(hdr.len() + 64 + 4 * w.cfg.num_params());
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&(hdr.len() as u32).to_le_bytes());
+    buf.extend_from_slice(hdr.as_bytes());
+    push_f32s(&mut buf, &w.tok_emb);
+    push_f32s(&mut buf, &w.pos_emb);
+    for b in &w.blocks {
+        push_f32s(&mut buf, &b.norm1);
+        push_f32s(&mut buf, &b.wq);
+        push_f32s(&mut buf, &b.wk);
+        push_f32s(&mut buf, &b.wv);
+        push_f32s(&mut buf, &b.wo);
+        push_f32s(&mut buf, &b.norm2);
+        push_f32s(&mut buf, &b.w1);
+        push_f32s(&mut buf, &b.w2);
+    }
+    push_f32s(&mut buf, &w.norm_f);
+    push_f32s(&mut buf, &w.lm_head);
+    buf
+}
+
+/// Parse weights from bytes.
+pub fn from_bytes(data: &[u8]) -> Result<Weights, String> {
+    if data.len() < 12 || &data[..8] != MAGIC {
+        return Err("bad magic".into());
+    }
+    let hlen = u32::from_le_bytes(data[8..12].try_into().unwrap()) as usize;
+    if 12 + hlen > data.len() {
+        return Err("truncated header".into());
+    }
+    let hdr = std::str::from_utf8(&data[12..12 + hlen]).map_err(|e| e.to_string())?;
+    let cfg = config_from_header(&json::parse(hdr)?)?;
+    cfg.validate();
+    let mut off = 12 + hlen;
+    let mut take = |n: usize| -> Result<Vec<f32>, String> {
+        let bytes = n * 4;
+        if off + bytes > data.len() {
+            return Err(format!("truncated tensor at byte {off}"));
+        }
+        let mut v = Vec::with_capacity(n);
+        for c in data[off..off + bytes].chunks_exact(4) {
+            v.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        off += bytes;
+        Ok(v)
+    };
+    let d = cfg.d_model;
+    let tok_emb = take(cfg.vocab * d)?;
+    let pos_emb = take(cfg.max_seq * d)?;
+    let mut blocks = Vec::with_capacity(cfg.n_layers);
+    for _ in 0..cfg.n_layers {
+        blocks.push(BlockWeights {
+            norm1: take(d)?,
+            wq: take(d * d)?,
+            wk: take(d * d)?,
+            wv: take(d * d)?,
+            wo: take(d * d)?,
+            norm2: take(d)?,
+            w1: take(cfg.d_ff * d)?,
+            w2: take(d * cfg.d_ff)?,
+        });
+    }
+    let norm_f = take(d)?;
+    let lm_head = take(cfg.vocab * d)?;
+    if off != data.len() {
+        return Err(format!(
+            "trailing bytes: consumed {off}, file has {}",
+            data.len()
+        ));
+    }
+    Ok(Weights {
+        cfg,
+        tok_emb,
+        pos_emb,
+        blocks,
+        norm_f,
+        lm_head,
+    })
+}
+
+pub fn save(w: &Weights, path: &Path) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&to_bytes(w))
+}
+
+pub fn load(path: &Path) -> Result<Weights, String> {
+    let mut data = Vec::new();
+    std::fs::File::open(path)
+        .map_err(|e| format!("open {}: {e}", path.display()))?
+        .read_to_end(&mut data)
+        .map_err(|e| e.to_string())?;
+    from_bytes(&data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::config_by_name;
+
+    #[test]
+    fn roundtrip_bytes() {
+        let cfg = config_by_name("qwen3-4b-tiny").unwrap();
+        let w = Weights::random(&cfg, 11);
+        let bytes = to_bytes(&w);
+        let back = from_bytes(&bytes).unwrap();
+        assert_eq!(back.cfg, cfg);
+        assert_eq!(back.tok_emb, w.tok_emb);
+        assert_eq!(back.blocks.len(), w.blocks.len());
+        assert_eq!(back.blocks[1].w2, w.blocks[1].w2);
+        assert_eq!(back.lm_head, w.lm_head);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let cfg = config_by_name("qwen3-4b-tiny").unwrap();
+        let w = Weights::random(&cfg, 1);
+        let mut bytes = to_bytes(&w);
+        assert!(from_bytes(&bytes[..100]).is_err()); // truncated
+        bytes[0] = b'X';
+        assert!(from_bytes(&bytes).is_err()); // bad magic
+        let mut extra = to_bytes(&w);
+        extra.extend_from_slice(&[0, 0, 0, 0]);
+        assert!(from_bytes(&extra).is_err()); // trailing bytes
+    }
+}

@@ -1,0 +1,422 @@
+//! Decoder-only transformer forward pass (Rust-native f32 oracle).
+//!
+//! This is the evaluation substrate for the PTQ experiments: the same
+//! architecture is trained in JAX (`python/compile/train.py`), its weights
+//! load here, and the quantization pipeline swaps individual linear-layer
+//! weights while this module measures perplexity / probe accuracy. It also
+//! exposes *activation capture* for Hessian calibration (layer inputs X
+//! feed `pipeline::hessian`).
+//!
+//! Architecture (kept deliberately mirror-friendly with the JAX side):
+//! token embedding + learned positional embedding → N × [RMSNorm →
+//! causal MHA (head dim 24) → residual → RMSNorm → MLP (SiLU) → residual]
+//! → final RMSNorm → LM head.
+
+use crate::model::config::ModelConfig;
+
+/// Which linear layers exist per block (the quantization targets).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LinearKind {
+    Wq,
+    Wk,
+    Wv,
+    Wo,
+    W1,
+    W2,
+}
+
+pub const LINEAR_KINDS: [LinearKind; 6] = [
+    LinearKind::Wq,
+    LinearKind::Wk,
+    LinearKind::Wv,
+    LinearKind::Wo,
+    LinearKind::W1,
+    LinearKind::W2,
+];
+
+impl LinearKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            LinearKind::Wq => "wq",
+            LinearKind::Wk => "wk",
+            LinearKind::Wv => "wv",
+            LinearKind::Wo => "wo",
+            LinearKind::W1 => "w1",
+            LinearKind::W2 => "w2",
+        }
+    }
+
+    /// (rows, cols) = (d_out, d_in) for this layer under `cfg`.
+    pub fn shape(&self, cfg: &ModelConfig) -> (usize, usize) {
+        let d = cfg.d_model;
+        match self {
+            LinearKind::Wq | LinearKind::Wk | LinearKind::Wv | LinearKind::Wo => (d, d),
+            LinearKind::W1 => (cfg.d_ff, d),
+            LinearKind::W2 => (d, cfg.d_ff),
+        }
+    }
+}
+
+/// One transformer block's weights (row-major `(d_out × d_in)` matrices).
+#[derive(Clone, Debug)]
+pub struct BlockWeights {
+    pub norm1: Vec<f32>,
+    pub wq: Vec<f32>,
+    pub wk: Vec<f32>,
+    pub wv: Vec<f32>,
+    pub wo: Vec<f32>,
+    pub norm2: Vec<f32>,
+    pub w1: Vec<f32>,
+    pub w2: Vec<f32>,
+}
+
+impl BlockWeights {
+    pub fn linear(&self, k: LinearKind) -> &Vec<f32> {
+        match k {
+            LinearKind::Wq => &self.wq,
+            LinearKind::Wk => &self.wk,
+            LinearKind::Wv => &self.wv,
+            LinearKind::Wo => &self.wo,
+            LinearKind::W1 => &self.w1,
+            LinearKind::W2 => &self.w2,
+        }
+    }
+
+    pub fn linear_mut(&mut self, k: LinearKind) -> &mut Vec<f32> {
+        match k {
+            LinearKind::Wq => &mut self.wq,
+            LinearKind::Wk => &mut self.wk,
+            LinearKind::Wv => &mut self.wv,
+            LinearKind::Wo => &mut self.wo,
+            LinearKind::W1 => &mut self.w1,
+            LinearKind::W2 => &mut self.w2,
+        }
+    }
+}
+
+/// Full model weights.
+#[derive(Clone, Debug)]
+pub struct Weights {
+    pub cfg: ModelConfig,
+    pub tok_emb: Vec<f32>,  // vocab × d
+    pub pos_emb: Vec<f32>,  // max_seq × d
+    pub blocks: Vec<BlockWeights>,
+    pub norm_f: Vec<f32>,   // d
+    pub lm_head: Vec<f32>,  // vocab × d
+}
+
+impl Weights {
+    /// Random initialization (for tests and the untrained baseline).
+    pub fn random(cfg: &ModelConfig, seed: u64) -> Self {
+        let mut rng = crate::util::rng::Xoshiro256pp::new(seed);
+        let d = cfg.d_model;
+        let mut mk = |n: usize, scale: f64| -> Vec<f32> {
+            (0..n).map(|_| (rng.next_gaussian() * scale) as f32).collect()
+        };
+        let s_attn = 1.0 / (d as f64).sqrt();
+        let s_mlp = 1.0 / (cfg.d_ff as f64).sqrt();
+        let blocks = (0..cfg.n_layers)
+            .map(|_| BlockWeights {
+                norm1: vec![1.0; d],
+                wq: mk(d * d, s_attn),
+                wk: mk(d * d, s_attn),
+                wv: mk(d * d, s_attn),
+                wo: mk(d * d, s_attn),
+                norm2: vec![1.0; d],
+                w1: mk(cfg.d_ff * d, s_attn),
+                w2: mk(d * cfg.d_ff, s_mlp),
+            })
+            .collect();
+        Self {
+            cfg: cfg.clone(),
+            tok_emb: mk(cfg.vocab * d, 0.05),
+            pos_emb: mk(cfg.max_seq * d, 0.05),
+            blocks,
+            norm_f: vec![1.0; d],
+            lm_head: mk(cfg.vocab * d, s_attn),
+        }
+    }
+}
+
+/// Captured layer inputs during a forward pass, keyed (layer, kind).
+/// Row-major token activations; feeds the Hessian accumulator.
+#[derive(Default)]
+pub struct ActivationCapture {
+    pub store: std::collections::HashMap<(usize, LinearKind), Vec<f32>>,
+    pub enabled: bool,
+}
+
+impl ActivationCapture {
+    pub fn enabled() -> Self {
+        Self {
+            enabled: true,
+            ..Default::default()
+        }
+    }
+
+    fn record(&mut self, layer: usize, kind: LinearKind, x: &[f32]) {
+        if self.enabled {
+            self.store
+                .entry((layer, kind))
+                .or_default()
+                .extend_from_slice(x);
+        }
+    }
+}
+
+fn rmsnorm(x: &mut [f32], gamma: &[f32]) {
+    let d = x.len();
+    let ms: f64 = x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / d as f64;
+    let inv = 1.0 / (ms + 1e-6).sqrt();
+    for i in 0..d {
+        x[i] = ((x[i] as f64) * inv) as f32 * gamma[i];
+    }
+}
+
+/// y = W·x for row-major W (d_out × d_in).
+fn linear(w: &[f32], d_out: usize, d_in: usize, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(w.len(), d_out * d_in);
+    for o in 0..d_out {
+        let row = &w[o * d_in..(o + 1) * d_in];
+        let mut acc = 0f32;
+        for i in 0..d_in {
+            acc += row[i] * x[i];
+        }
+        y[o] = acc;
+    }
+}
+
+#[inline]
+fn silu(v: f32) -> f32 {
+    v / (1.0 + (-v).exp())
+}
+
+/// Run the model on a token sequence, returning per-position logits
+/// (seq × vocab, row-major). Optionally captures linear-layer inputs.
+pub fn forward(
+    w: &Weights,
+    tokens: &[u8],
+    capture: &mut ActivationCapture,
+) -> Vec<f32> {
+    let cfg = &w.cfg;
+    let (s, d) = (tokens.len(), cfg.d_model);
+    assert!(s <= cfg.max_seq);
+    let hd = cfg.head_dim();
+    let nh = cfg.n_heads;
+
+    // embeddings
+    let mut h = vec![0f32; s * d];
+    for t in 0..s {
+        let tok = tokens[t] as usize;
+        for i in 0..d {
+            h[t * d + i] = w.tok_emb[tok * d + i] + w.pos_emb[t * d + i];
+        }
+    }
+
+    let mut q = vec![0f32; s * d];
+    let mut k = vec![0f32; s * d];
+    let mut v = vec![0f32; s * d];
+    let mut attn_out = vec![0f32; s * d];
+    let mut normed = vec![0f32; d];
+    let mut ff = vec![0f32; cfg.d_ff];
+    let mut ff2 = vec![0f32; d];
+
+    for (li, blk) in w.blocks.iter().enumerate() {
+        // --- attention ---
+        for t in 0..s {
+            normed.copy_from_slice(&h[t * d..(t + 1) * d]);
+            rmsnorm(&mut normed, &blk.norm1);
+            capture.record(li, LinearKind::Wq, &normed);
+            capture.record(li, LinearKind::Wk, &normed);
+            capture.record(li, LinearKind::Wv, &normed);
+            linear(&blk.wq, d, d, &normed, &mut q[t * d..(t + 1) * d]);
+            linear(&blk.wk, d, d, &normed, &mut k[t * d..(t + 1) * d]);
+            linear(&blk.wv, d, d, &normed, &mut v[t * d..(t + 1) * d]);
+        }
+        let scale = 1.0 / (hd as f32).sqrt();
+        for t in 0..s {
+            let ao = &mut attn_out[t * d..(t + 1) * d];
+            ao.iter_mut().for_each(|x| *x = 0.0);
+            for head in 0..nh {
+                let off = head * hd;
+                // scores over 0..=t
+                let mut scores = vec![0f32; t + 1];
+                let qt = &q[t * d + off..t * d + off + hd];
+                let mut maxs = f32::NEG_INFINITY;
+                for u in 0..=t {
+                    let ku = &k[u * d + off..u * d + off + hd];
+                    let mut sdot = 0f32;
+                    for i in 0..hd {
+                        sdot += qt[i] * ku[i];
+                    }
+                    scores[u] = sdot * scale;
+                    maxs = maxs.max(scores[u]);
+                }
+                let mut z = 0f32;
+                for u in 0..=t {
+                    scores[u] = (scores[u] - maxs).exp();
+                    z += scores[u];
+                }
+                let zi = 1.0 / z;
+                for u in 0..=t {
+                    let p = scores[u] * zi;
+                    let vu = &v[u * d + off..u * d + off + hd];
+                    for i in 0..hd {
+                        ao[off + i] += p * vu[i];
+                    }
+                }
+            }
+        }
+        for t in 0..s {
+            capture.record(li, LinearKind::Wo, &attn_out[t * d..(t + 1) * d]);
+            linear(&blk.wo, d, d, &attn_out[t * d..(t + 1) * d], &mut normed);
+            for i in 0..d {
+                h[t * d + i] += normed[i];
+            }
+        }
+        // --- MLP ---
+        for t in 0..s {
+            normed.copy_from_slice(&h[t * d..(t + 1) * d]);
+            rmsnorm(&mut normed, &blk.norm2);
+            capture.record(li, LinearKind::W1, &normed);
+            linear(&blk.w1, cfg.d_ff, d, &normed, &mut ff);
+            for x in ff.iter_mut() {
+                *x = silu(*x);
+            }
+            capture.record(li, LinearKind::W2, &ff);
+            linear(&blk.w2, d, cfg.d_ff, &ff, &mut ff2);
+            for i in 0..d {
+                h[t * d + i] += ff2[i];
+            }
+        }
+    }
+
+    // final norm + head
+    let mut logits = vec![0f32; s * cfg.vocab];
+    for t in 0..s {
+        normed.copy_from_slice(&h[t * d..(t + 1) * d]);
+        rmsnorm(&mut normed, &w.norm_f);
+        linear(
+            &w.lm_head,
+            cfg.vocab,
+            d,
+            &normed,
+            &mut logits[t * cfg.vocab..(t + 1) * cfg.vocab],
+        );
+    }
+    logits
+}
+
+/// Cross-entropy (nats) of targets under the logits; also returns top-1
+/// accuracy overall and on masked positions.
+pub fn sequence_loss(
+    logits: &[f32],
+    targets: &[u8],
+    det_mask: &[bool],
+    vocab: usize,
+) -> (f64, f64, f64) {
+    let s = targets.len();
+    assert_eq!(logits.len(), s * vocab);
+    let mut nll = 0.0f64;
+    let (mut hit, mut det_hit, mut det_n) = (0usize, 0usize, 0usize);
+    for t in 0..s {
+        let row = &logits[t * vocab..(t + 1) * vocab];
+        let maxv = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut z = 0f64;
+        for &l in row {
+            z += ((l - maxv) as f64).exp();
+        }
+        let tgt = targets[t] as usize;
+        nll += -((row[tgt] - maxv) as f64 - z.ln());
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if argmax == tgt {
+            hit += 1;
+            if det_mask[t] {
+                det_hit += 1;
+            }
+        }
+        if det_mask[t] {
+            det_n += 1;
+        }
+    }
+    (
+        nll / s as f64,
+        hit as f64 / s as f64,
+        if det_n > 0 {
+            det_hit as f64 / det_n as f64
+        } else {
+            0.0
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::config_by_name;
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        let cfg = config_by_name("qwen3-4b-tiny").unwrap();
+        let w = Weights::random(&cfg, 3);
+        let toks: Vec<u8> = (0..32).map(|i| (i * 7 % 64) as u8).collect();
+        let mut cap = ActivationCapture::default();
+        let logits = forward(&w, &toks, &mut cap);
+        assert_eq!(logits.len(), 32 * cfg.vocab);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        assert!(cap.store.is_empty());
+    }
+
+    #[test]
+    fn capture_collects_layer_inputs() {
+        let cfg = config_by_name("qwen3-4b-tiny").unwrap();
+        let w = Weights::random(&cfg, 3);
+        let toks: Vec<u8> = (0..16).map(|i| (i % 64) as u8).collect();
+        let mut cap = ActivationCapture::enabled();
+        forward(&w, &toks, &mut cap);
+        for li in 0..cfg.n_layers {
+            for kind in LINEAR_KINDS {
+                let (_, d_in) = kind.shape(&cfg);
+                let x = cap.store.get(&(li, kind)).expect("missing capture");
+                assert_eq!(x.len(), 16 * d_in, "{li} {:?}", kind);
+            }
+        }
+    }
+
+    #[test]
+    fn causality_prefix_invariance() {
+        // logits at position t must not change when future tokens change
+        let cfg = config_by_name("qwen3-4b-tiny").unwrap();
+        let w = Weights::random(&cfg, 5);
+        let mut cap = ActivationCapture::default();
+        let a: Vec<u8> = (0..20).map(|i| (i * 3 % 64) as u8).collect();
+        let mut b = a.clone();
+        b[15] = 9;
+        b[19] = 1;
+        let la = forward(&w, &a, &mut cap);
+        let lb = forward(&w, &b, &mut cap);
+        for t in 0..15 {
+            for c in 0..cfg.vocab {
+                assert!(
+                    (la[t * cfg.vocab + c] - lb[t * cfg.vocab + c]).abs() < 1e-5,
+                    "future token leaked into position {t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn loss_of_uniform_logits_is_log_vocab() {
+        let vocab = 64;
+        let logits = vec![0f32; 10 * vocab];
+        let targets = vec![5u8; 10];
+        let mask = vec![false; 10];
+        let (nll, _, _) = sequence_loss(&logits, &targets, &mask, vocab);
+        assert!((nll - (vocab as f64).ln()).abs() < 1e-9);
+    }
+}

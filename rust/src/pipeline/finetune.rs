@@ -1,0 +1,136 @@
+//! Closed-form per-column scale fine-tuning (paper §5.4, App. D.1 eq. 23).
+//!
+//! After quantization we learn an element-wise multiplicative correction on
+//! the layer *inputs* — equivalently per-column scales β for the quantized
+//! weights Q: the model computes `Q·diag(β)·x ≈ W·x`. Because β is shared
+//! across rows its bit cost is negligible (< 0.001 bpw, per the paper).
+//!
+//! Minimizing `E‖(W − Q·diag(β))x‖²  = Tr((W−QD)·H·(W−QD)ᵀ)` in β is a
+//! linear system:  `M·β = v` with `M = (QᵀQ) ⊙ Hᵀ` (Hadamard product, SPD)
+//! and `v = diag(Qᵀ·W·H)` — solved by one Cholesky. This is eq. 23 in its
+//! population (Hessian) form.
+
+use crate::math::linalg::{solve_spd, Matrix};
+
+/// Solve for the optimal per-column scales of `q_hat` against reference
+/// weights `w` (both row-major rows×cols) under input Hessian `h`.
+/// Returns β (len = cols).
+pub fn optimal_column_scales(
+    w: &[f32],
+    q_hat: &[f32],
+    rows: usize,
+    cols: usize,
+    h: &Matrix,
+) -> Vec<f64> {
+    assert_eq!(w.len(), rows * cols);
+    assert_eq!(q_hat.len(), rows * cols);
+    // QᵀQ and QᵀW (cols × cols) — accumulate in f64
+    let mut qtq = Matrix::zeros(cols, cols);
+    let mut qtw = Matrix::zeros(cols, cols);
+    for r in 0..rows {
+        let wr = &w[r * cols..(r + 1) * cols];
+        let qr = &q_hat[r * cols..(r + 1) * cols];
+        for i in 0..cols {
+            let qi = qr[i] as f64;
+            if qi == 0.0 {
+                continue;
+            }
+            let rowq = &mut qtq.data[i * cols..(i + 1) * cols];
+            let roww = &mut qtw.data[i * cols..(i + 1) * cols];
+            for j in 0..cols {
+                rowq[j] += qi * qr[j] as f64;
+                roww[j] += qi * wr[j] as f64;
+            }
+        }
+    }
+    // M = (QᵀQ) ⊙ Hᵀ ;  v_k = [Qᵀ W H]_{kk} = Σ_j (QᵀW)_{kj} H_{jk}
+    let mut m = Matrix::zeros(cols, cols);
+    let mut v = vec![0f64; cols];
+    for k in 0..cols {
+        for j in 0..cols {
+            *m.at_mut(k, j) = qtq.at(k, j) * h.at(j, k);
+            v[k] += qtw.at(k, j) * h.at(j, k);
+        }
+    }
+    m.damp_diagonal(1e-6);
+    match solve_spd(&m, &v) {
+        Ok(beta) => beta
+            .into_iter()
+            .map(|b| if b.is_finite() { b.clamp(0.25, 4.0) } else { 1.0 })
+            .collect(),
+        Err(_) => vec![1.0; cols],
+    }
+}
+
+/// Apply scales in place: `q_hat[:, j] *= β[j]`.
+pub fn apply_column_scales(q_hat: &mut [f32], cols: usize, beta: &[f64]) {
+    for row in q_hat.chunks_exact_mut(cols) {
+        for (x, &b) in row.iter_mut().zip(beta) {
+            *x = (*x as f64 * b) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::gptq::proxy_loss;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn recovers_planted_scales_exactly() {
+        // if Q = W·diag(1/β) then β must be recovered and the loss → 0
+        let (rows, cols) = (32, 16);
+        let mut rng = Xoshiro256pp::new(1);
+        let w: Vec<f32> = (0..rows * cols).map(|_| rng.next_gaussian() as f32).collect();
+        let beta_true: Vec<f64> = (0..cols).map(|j| 0.8 + 0.03 * j as f64).collect();
+        let q: Vec<f32> = w
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| (x as f64 / beta_true[i % cols]) as f32)
+            .collect();
+        let h = Matrix::identity(cols);
+        let beta = optimal_column_scales(&w, &q, rows, cols, &h);
+        for (b, bt) in beta.iter().zip(&beta_true) {
+            assert!((b - bt).abs() < 1e-3, "{b} vs {bt}");
+        }
+    }
+
+    #[test]
+    fn finetune_never_hurts_proxy_loss() {
+        let (rows, cols) = (24, 24);
+        let mut rng = Xoshiro256pp::new(2);
+        let w: Vec<f32> = (0..rows * cols).map(|_| rng.next_gaussian() as f32).collect();
+        // crude quantization: round to 0.5 grid
+        let q: Vec<f32> = w.iter().map(|&x| (x * 2.0).round() / 2.0).collect();
+        // correlated H
+        let mut a = Matrix::zeros(cols, cols);
+        for v in a.data.iter_mut() {
+            *v = rng.next_gaussian() * 0.2;
+        }
+        for i in 0..cols {
+            *a.at_mut(i, i) += 1.0;
+        }
+        let h = a.matmul(&a.transpose());
+        let before = proxy_loss(&w, &q, rows, cols, &h);
+        let beta = optimal_column_scales(&w, &q, rows, cols, &h);
+        let mut q2 = q.clone();
+        apply_column_scales(&mut q2, cols, &beta);
+        let after = proxy_loss(&w, &q2, rows, cols, &h);
+        assert!(
+            after <= before * 1.0001,
+            "finetune increased loss: {before} → {after}"
+        );
+    }
+
+    #[test]
+    fn scales_are_clamped_and_finite() {
+        let w = vec![0f32; 4 * 4];
+        let q = vec![0f32; 4 * 4]; // degenerate: all zeros
+        let h = Matrix::identity(4);
+        let beta = optimal_column_scales(&w, &q, 4, 4, &h);
+        for b in beta {
+            assert!(b.is_finite() && (0.25..=4.0).contains(&b));
+        }
+    }
+}

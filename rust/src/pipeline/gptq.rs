@@ -1,0 +1,301 @@
+//! Hessian-corrected layer quantization — GPTQ generalized to 24-dim
+//! vector quantization (paper App. D.2; the LDLQ-style block update).
+//!
+//! Columns of `W ∈ ℝ^{N×D}` are processed in blocks matching the
+//! quantizer's dimension. After quantizing block `C`, the *remaining*
+//! columns receive the analytic correction
+//!
+//! ```text
+//! ΔW_R★ = −ΔW_C · H_CR · H_RR⁻¹     (H restricted to remaining columns)
+//! ```
+//!
+//! — sequential Gaussian conditioning, the explicit form of the paper's
+//! `Δw_R★ = −L_RR⁻¹ L_RC Δw_C` — so errors committed on early blocks are
+//! compensated by later ones. All quantizers run through the *same* update
+//! — the paper's point that comparisons isolate the representation.
+//!
+//! Rows are independent (eq. after 25), so the row loop is parallelized
+//! over the thread pool.
+
+use crate::math::linalg::Matrix;
+use crate::quant::VectorQuantizer;
+use crate::util::threadpool;
+
+/// Per-layer quantization result.
+pub struct QuantizedLayer {
+    /// Reconstructed (dequantized) weights, row-major N×D.
+    pub w_hat: Vec<f32>,
+    /// Exact payload bits consumed.
+    pub total_bits: u64,
+    /// Tr(ΔW·H·ΔWᵀ) proxy loss after correction (diagnostic).
+    pub proxy_loss: f64,
+}
+
+/// Configuration for the correction pass.
+#[derive(Clone, Copy, Debug)]
+pub struct GptqConfig {
+    /// Diagonal damping as a fraction of mean(diag(H)) (GPTQ default 0.01).
+    pub damp: f64,
+    /// If false, skip error propagation (pure round-to-nearest per block —
+    /// the "RTN" ablation).
+    pub use_corrections: bool,
+    /// Worker threads for the row loop.
+    pub threads: usize,
+}
+
+impl Default for GptqConfig {
+    fn default() -> Self {
+        Self {
+            damp: 0.01,
+            use_corrections: true,
+            threads: threadpool::default_threads(),
+        }
+    }
+}
+
+/// Quantize `w` (row-major, `rows × cols`) against input Hessian `h`
+/// (cols × cols) with the given block quantizer.
+///
+/// A per-layer scale is applied so the quantizer sees ≈ unit-variance
+/// blocks: `σ = rms(w)`; LLVQ/E8/scalar codebooks are all calibrated for
+/// N(0,1) inputs.
+pub fn quantize_layer(
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    h: &Matrix,
+    q: &dyn VectorQuantizer,
+    cfg: &GptqConfig,
+) -> QuantizedLayer {
+    assert_eq!(w.len(), rows * cols);
+    assert_eq!(h.rows, cols);
+    let d = q.dim();
+    let nblocks = cols.div_ceil(d);
+
+    // layer scale: unit RMS for the quantizer
+    let sigma = {
+        let ss: f64 = w.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        (ss / w.len() as f64).sqrt().max(1e-12)
+    };
+
+    // damped Hessian (shared across rows)
+    let hd = {
+        let mut hd = h.clone();
+        hd.damp_diagonal(cfg.damp);
+        hd
+    };
+
+    // Precompute, per block b, the conditional-mean operator
+    //   M_b = (H_RR⁻¹ · H_RC)ᵀ = H_CR · H_RR⁻¹            (bw × rest)
+    // over the REMAINING columns R = hi..cols (sequential Gaussian
+    // conditioning — the greedy-optimal update of App. D.2). The row
+    // update is then ΔW_R ← ΔW_R − Δ_B · M_b.
+    let mut correction: Vec<Matrix> = Vec::with_capacity(nblocks);
+    for b in 0..nblocks {
+        let lo = b * d;
+        let hi = ((b + 1) * d).min(cols);
+        let bw = hi - lo;
+        let rest = cols - hi;
+        if !cfg.use_corrections || rest == 0 {
+            correction.push(Matrix::zeros(bw, 0));
+            continue;
+        }
+        // H_RR (rest × rest) of the damped Hessian
+        let mut hrr = Matrix::zeros(rest, rest);
+        for i in 0..rest {
+            for j in 0..rest {
+                *hrr.at_mut(i, j) = hd.at(hi + i, hi + j);
+            }
+        }
+        let l = crate::math::linalg::cholesky(&hrr).expect("damped H_RR must be SPD");
+        // columns of H_RC are rows of H_CR: solve H_RR · m_i = H_{R, lo+i}
+        let mut m = Matrix::zeros(bw, rest);
+        let mut rhs = vec![0f64; rest];
+        for i in 0..bw {
+            for r in 0..rest {
+                rhs[r] = hd.at(hi + r, lo + i);
+            }
+            let y = crate::math::linalg::solve_lower(&l, &rhs);
+            let col = crate::math::linalg::solve_lower_t(&l, &y);
+            for r in 0..rest {
+                *m.at_mut(i, r) = col[r];
+            }
+        }
+        correction.push(m);
+    }
+
+    // Row-parallel quantization with error propagation.
+    let w_hat: Vec<std::sync::Mutex<Vec<f32>>> =
+        (0..rows).map(|_| std::sync::Mutex::new(Vec::new())).collect();
+    let bits_acc = std::sync::atomic::AtomicU64::new(0);
+
+    threadpool::parallel_dynamic(rows, cfg.threads, 4, |r| {
+        let mut row: Vec<f64> = w[r * cols..(r + 1) * cols]
+            .iter()
+            .map(|&v| v as f64 / sigma)
+            .collect();
+        let mut out = vec![0f32; cols];
+        let mut bits = 0u64;
+        let mut blk_in = vec![0f32; d];
+        let mut blk_out = vec![0f32; d];
+        for b in 0..nblocks {
+            let lo = b * d;
+            let hi = ((b + 1) * d).min(cols);
+            let bw = hi - lo;
+            for i in 0..bw {
+                blk_in[i] = row[lo + i] as f32;
+            }
+            for v in blk_in[bw..].iter_mut() {
+                *v = 0.0;
+            }
+            let code = q.quantize(&blk_in);
+            bits += code.bits as u64;
+            q.dequantize(&code, &mut blk_out);
+            for i in 0..bw {
+                out[lo + i] = blk_out[i];
+            }
+            // propagate the committed error into remaining columns:
+            // Δ_R★ = −Δ_B · H_CR·H_RR⁻¹ , applied as W_R ← W_R + Δ_R★
+            let m = &correction[b];
+            if m.cols > 0 {
+                let mut delta = vec![0f64; bw];
+                for i in 0..bw {
+                    delta[i] = blk_out[i] as f64 - row[lo + i];
+                }
+                for jc in 0..m.cols {
+                    let mut acc = 0.0;
+                    for i in 0..bw {
+                        acc += delta[i] * m.at(i, jc);
+                    }
+                    row[hi + jc] -= acc;
+                }
+            }
+        }
+        for v in out.iter_mut() {
+            *v = (*v as f64 * sigma) as f32;
+        }
+        bits_acc.fetch_add(bits, std::sync::atomic::Ordering::Relaxed);
+        *w_hat[r].lock().unwrap() = out;
+    });
+
+    // assemble + proxy loss
+    let mut flat = vec![0f32; rows * cols];
+    for (r, m) in w_hat.iter().enumerate() {
+        let v = m.lock().unwrap();
+        flat[r * cols..(r + 1) * cols].copy_from_slice(&v);
+    }
+    let proxy_loss = proxy_loss(w, &flat, rows, cols, h);
+    QuantizedLayer {
+        w_hat: flat,
+        total_bits: bits_acc.into_inner(),
+        proxy_loss,
+    }
+}
+
+/// Tr(ΔW·H·ΔWᵀ) — the paper's local objective (eq. 25), for diagnostics
+/// and for the Table 6 style ablations.
+pub fn proxy_loss(w: &[f32], w_hat: &[f32], rows: usize, cols: usize, h: &Matrix) -> f64 {
+    let mut total = 0.0;
+    let mut delta = vec![0f64; cols];
+    for r in 0..rows {
+        for j in 0..cols {
+            delta[j] = w_hat[r * cols + j] as f64 - w[r * cols + j] as f64;
+        }
+        let hd = h.matvec(&delta);
+        for j in 0..cols {
+            total += delta[j] * hd[j];
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::scalar::UniformQuantizer;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn random_problem(rows: usize, cols: usize, seed: u64) -> (Vec<f32>, Matrix) {
+        let mut rng = Xoshiro256pp::new(seed);
+        let w: Vec<f32> = (0..rows * cols).map(|_| rng.next_gaussian() as f32).collect();
+        // correlated activations: x = A g → H = A Aᵀ-ish
+        let mut a = Matrix::zeros(cols, cols);
+        for v in a.data.iter_mut() {
+            *v = rng.next_gaussian() * 0.3;
+        }
+        for i in 0..cols {
+            *a.at_mut(i, i) += 1.0;
+        }
+        let h = a.matmul(&a.transpose());
+        (w, h)
+    }
+
+    #[test]
+    fn corrections_reduce_proxy_loss() {
+        let (w, h) = random_problem(16, 48, 5);
+        let q = UniformQuantizer::new_gaussian_optimal(3);
+        let cfg_on = GptqConfig {
+            threads: 2,
+            ..Default::default()
+        };
+        let cfg_off = GptqConfig {
+            use_corrections: false,
+            threads: 2,
+            ..Default::default()
+        };
+        let on = quantize_layer(&w, 16, 48, &h, &q, &cfg_on);
+        let off = quantize_layer(&w, 16, 48, &h, &q, &cfg_off);
+        assert!(
+            on.proxy_loss < off.proxy_loss,
+            "GPTQ correction did not help: {} vs {}",
+            on.proxy_loss,
+            off.proxy_loss
+        );
+        // typical gains are substantial on correlated Hessians
+        assert!(on.proxy_loss < 0.9 * off.proxy_loss);
+    }
+
+    #[test]
+    fn bit_accounting_exact() {
+        let (w, h) = random_problem(4, 24, 6);
+        let q = UniformQuantizer::new_gaussian_optimal(2);
+        let out = quantize_layer(&w, 4, 24, &h, &q, &GptqConfig::default());
+        assert_eq!(out.total_bits, 4 * 24 * 2);
+    }
+
+    #[test]
+    fn identity_hessian_reduces_to_rtn() {
+        // with H = I the correction matrix M = 0ish? No: Hinv = I; M =
+        // (I_BB)^-1 I_BR = 0 since off-diagonal blocks vanish → update is 0,
+        // so corrected == uncorrected exactly.
+        let mut rng = Xoshiro256pp::new(9);
+        let w: Vec<f32> = (0..8 * 16).map(|_| rng.next_gaussian() as f32).collect();
+        let h = Matrix::identity(16);
+        let q = UniformQuantizer::new_gaussian_optimal(4);
+        let a = quantize_layer(&w, 8, 16, &h, &q, &GptqConfig::default());
+        let b = quantize_layer(
+            &w,
+            8,
+            16,
+            &h,
+            &q,
+            &GptqConfig {
+                use_corrections: false,
+                ..Default::default()
+            },
+        );
+        for (x, y) in a.w_hat.iter().zip(&b.w_hat) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let (w, h) = random_problem(12, 24, 11);
+        let q = UniformQuantizer::new_gaussian_optimal(3);
+        let a = quantize_layer(&w, 12, 24, &h, &q, &GptqConfig { threads: 1, ..Default::default() });
+        let b = quantize_layer(&w, 12, 24, &h, &q, &GptqConfig { threads: 8, ..Default::default() });
+        assert_eq!(a.w_hat, b.w_hat);
+        assert_eq!(a.total_bits, b.total_bits);
+    }
+}

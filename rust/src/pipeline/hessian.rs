@@ -1,0 +1,148 @@
+//! Layer-input Hessian estimation (paper §D.2, eq. 25).
+//!
+//! The local proxy objective is `Tr(ΔW · H_in · ΔWᵀ)` with
+//! `H_in = E[x xᵀ]`, estimated as `X̃ᵀX̃/N` over the calibration set. The
+//! accumulator is streaming (constant memory in the number of calibration
+//! sequences) and symmetrized on finalize; GPTQ-style `damp·mean(diag)`
+//! regularization is applied by the caller.
+
+use crate::math::linalg::Matrix;
+
+/// Streaming accumulator for `H = Σ xxᵀ / N`.
+pub struct HessianAccumulator {
+    dim: usize,
+    h: Matrix,
+    count: u64,
+}
+
+impl HessianAccumulator {
+    pub fn new(dim: usize) -> Self {
+        Self {
+            dim,
+            h: Matrix::zeros(dim, dim),
+            count: 0,
+        }
+    }
+
+    /// Accumulate one activation vector.
+    pub fn add(&mut self, x: &[f64]) {
+        assert_eq!(x.len(), self.dim);
+        for i in 0..self.dim {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &mut self.h.data[i * self.dim..(i + 1) * self.dim];
+            for j in 0..self.dim {
+                row[j] += xi * x[j];
+            }
+        }
+        self.count += 1;
+    }
+
+    /// Accumulate a batch of row-major activations (rows = tokens).
+    pub fn add_batch(&mut self, xs: &[f32], cols: usize) {
+        assert_eq!(cols, self.dim);
+        let mut buf = vec![0f64; cols];
+        for row in xs.chunks_exact(cols) {
+            for (b, &v) in buf.iter_mut().zip(row) {
+                *b = v as f64;
+            }
+            self.add(&buf);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Finalize: H/N, symmetrized.
+    pub fn finalize(mut self) -> Matrix {
+        let n = self.count.max(1) as f64;
+        for v in self.h.data.iter_mut() {
+            *v /= n;
+        }
+        // enforce exact symmetry (floating accumulation drift)
+        for i in 0..self.dim {
+            for j in 0..i {
+                let s = 0.5 * (self.h.at(i, j) + self.h.at(j, i));
+                *self.h.at_mut(i, j) = s;
+                *self.h.at_mut(j, i) = s;
+            }
+        }
+        self.h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::linalg::cholesky;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn recovers_identity_for_white_noise() {
+        let mut acc = HessianAccumulator::new(16);
+        let mut rng = Xoshiro256pp::new(1);
+        let mut x = vec![0f64; 16];
+        for _ in 0..20_000 {
+            rng.fill_gaussian_f64(&mut x);
+            acc.add(&x);
+        }
+        let h = acc.finalize();
+        for i in 0..16 {
+            for j in 0..16 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (h.at(i, j) - want).abs() < 0.05,
+                    "H[{i}][{j}] = {}",
+                    h.at(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn captures_correlation_structure() {
+        // x = (g, g, independent...) → H[0][1] ≈ 1
+        let mut acc = HessianAccumulator::new(4);
+        let mut rng = Xoshiro256pp::new(2);
+        for _ in 0..20_000 {
+            let g = rng.next_gaussian();
+            acc.add(&[g, g, rng.next_gaussian(), 0.5 * rng.next_gaussian()]);
+        }
+        let h = acc.finalize();
+        assert!((h.at(0, 1) - 1.0).abs() < 0.05);
+        assert!((h.at(3, 3) - 0.25).abs() < 0.02);
+    }
+
+    #[test]
+    fn damped_hessian_is_spd() {
+        let mut acc = HessianAccumulator::new(8);
+        let mut rng = Xoshiro256pp::new(3);
+        // rank-deficient inputs (only 3 distinct directions)
+        for _ in 0..100 {
+            let a = rng.next_gaussian();
+            acc.add(&[a, 2.0 * a, 0.0, 0.0, a, 0.0, 0.0, -a]);
+        }
+        let mut h = acc.finalize();
+        assert!(cholesky(&h).is_err(), "rank-1 H should not be SPD");
+        h.damp_diagonal(0.01);
+        assert!(cholesky(&h).is_ok(), "damped H must be SPD");
+    }
+
+    #[test]
+    fn batch_equals_loop() {
+        let mut a1 = HessianAccumulator::new(3);
+        let mut a2 = HessianAccumulator::new(3);
+        let data: Vec<f32> = (0..30).map(|i| (i as f32).sin()).collect();
+        a1.add_batch(&data, 3);
+        for row in data.chunks_exact(3) {
+            a2.add(&[row[0] as f64, row[1] as f64, row[2] as f64]);
+        }
+        let (h1, h2) = (a1.finalize(), a2.finalize());
+        for (x, y) in h1.data.iter().zip(&h2.data) {
+            assert!((x - y).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! Hadamard incoherence preprocessing (paper §5.3, Table 6).
+//!
+//! A linear layer `y = W·x` is reparameterized with randomized Hadamard
+//! rotations: `W ← R_out · W · R_inᵀ`, `x ← R_in·x`, `y ← R_outᵀ·y` — the
+//! function is preserved while the weight marginals become Gaussian-like.
+//! Three modes, matching the paper's ablation: none / input / input+output.
+//!
+//! The pipeline rotates (W, H) before quantization and un-rotates the
+//! reconstruction afterwards, so downstream evaluation never needs to know
+//! which mode was used (this mirrors "fused/merged" rotations; the paper's
+//! discussion of *online* Hadamard cost is reproduced in the serving bench,
+//! which can apply R_in on the request path).
+
+use crate::math::hadamard::RandomizedHadamard;
+use crate::math::linalg::Matrix;
+
+/// Rotation mode for a layer (paper Table 6 rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RotationMode {
+    None,
+    Input,
+    InputOutput,
+}
+
+impl RotationMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RotationMode::None => "No Rotation",
+            RotationMode::Input => "Input",
+            RotationMode::InputOutput => "Input + Output",
+        }
+    }
+}
+
+/// The rotation pair for one layer.
+pub struct LayerRotation {
+    pub mode: RotationMode,
+    r_in: Option<RandomizedHadamard>,
+    r_out: Option<RandomizedHadamard>,
+}
+
+impl LayerRotation {
+    pub fn new(mode: RotationMode, d_in: usize, d_out: usize, seed: u64) -> Self {
+        let r_in = match mode {
+            RotationMode::None => None,
+            _ => Some(RandomizedHadamard::new(d_in, seed ^ 0x1A)),
+        };
+        let r_out = match mode {
+            RotationMode::InputOutput => Some(RandomizedHadamard::new(d_out, seed ^ 0x0B)),
+        _ => None,
+        };
+        Self { mode, r_in, r_out }
+    }
+
+    /// Rotate the weight matrix in place: `W ← R_out · W · R_inᵀ`.
+    /// Row-major W is (d_out × d_in): right-multiplying by R_inᵀ rotates
+    /// every row; left-multiplying by R_out rotates every column.
+    pub fn rotate_weights(&self, w: &mut Matrix) {
+        if let Some(r) = &self.r_in {
+            // rows of W get R_in applied (W·R_inᵀ ⇔ rowᵢ ← R_in·rowᵢ since
+            // (W·R_inᵀ)[i,:] = R_in·W[i,:] for orthogonal symmetric-block R)
+            for i in 0..w.rows {
+                r.forward(w.row_mut(i));
+            }
+        }
+        if let Some(r) = &self.r_out {
+            // columns: transpose-process
+            let mut col = vec![0f64; w.rows];
+            for j in 0..w.cols {
+                for i in 0..w.rows {
+                    col[i] = w.at(i, j);
+                }
+                r.forward(&mut col);
+                for i in 0..w.rows {
+                    *w.at_mut(i, j) = col[i];
+                }
+            }
+        }
+    }
+
+    /// Undo [`rotate_weights`] on a reconstruction.
+    pub fn unrotate_weights(&self, w: &mut Matrix) {
+        if let Some(r) = &self.r_out {
+            let mut col = vec![0f64; w.rows];
+            for j in 0..w.cols {
+                for i in 0..w.rows {
+                    col[i] = w.at(i, j);
+                }
+                r.inverse(&mut col);
+                for i in 0..w.rows {
+                    *w.at_mut(i, j) = col[i];
+                }
+            }
+        }
+        if let Some(r) = &self.r_in {
+            for i in 0..w.rows {
+                r.inverse(w.row_mut(i));
+            }
+        }
+    }
+
+    /// Rotate the input Hessian: `H ← R_in · H · R_inᵀ` (activations are
+    /// rotated by R_in, so their second moment conjugates).
+    pub fn rotate_hessian(&self, h: &mut Matrix) {
+        if let Some(r) = &self.r_in {
+            // rows then columns (R H Rᵀ)
+            for i in 0..h.rows {
+                r.forward(h.row_mut(i));
+            }
+            let mut col = vec![0f64; h.rows];
+            for j in 0..h.cols {
+                for i in 0..h.rows {
+                    col[i] = h.at(i, j);
+                }
+                r.forward(&mut col);
+                for i in 0..h.rows {
+                    *h.at_mut(i, j) = col[i];
+                }
+            }
+        }
+    }
+
+    /// Apply R_in to a single activation vector (the *online* Hadamard of
+    /// §5.3 — used by the serving bench to price unfused rotations).
+    pub fn rotate_activation(&self, x: &mut [f64]) {
+        if let Some(r) = &self.r_in {
+            r.forward(x);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn random_matrix(r: usize, c: usize, seed: u64) -> Matrix {
+        let mut rng = Xoshiro256pp::new(seed);
+        let mut m = Matrix::zeros(r, c);
+        for v in m.data.iter_mut() {
+            *v = rng.next_gaussian();
+        }
+        m
+    }
+
+    #[test]
+    fn rotate_unrotate_is_identity() {
+        for mode in [RotationMode::None, RotationMode::Input, RotationMode::InputOutput] {
+            let rot = LayerRotation::new(mode, 96, 64, 5);
+            let orig = random_matrix(64, 96, 1);
+            let mut w = orig.clone();
+            rot.rotate_weights(&mut w);
+            rot.unrotate_weights(&mut w);
+            for (a, b) in w.data.iter().zip(&orig.data) {
+                assert!((a - b).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn function_preservation() {
+        // y = W x must equal R_outᵀ · (RW) · (R_in x)
+        let rot = LayerRotation::new(RotationMode::InputOutput, 32, 16, 9);
+        let w0 = random_matrix(16, 32, 2);
+        let mut wr = w0.clone();
+        rot.rotate_weights(&mut wr);
+        let mut rng = Xoshiro256pp::new(3);
+        let x: Vec<f64> = (0..32).map(|_| rng.next_gaussian()).collect();
+        let y_ref = w0.matvec(&x);
+        let mut xr = x.clone();
+        rot.rotate_activation(&mut xr);
+        let mut y = wr.matvec(&xr);
+        // undo output rotation
+        if let Some(r) = &rot.r_out {
+            r.inverse(&mut y);
+        }
+        for (a, b) in y.iter().zip(&y_ref) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn hessian_conjugation_matches_rotated_activations() {
+        let rot = LayerRotation::new(RotationMode::Input, 16, 8, 11);
+        let mut rng = Xoshiro256pp::new(4);
+        use crate::pipeline::hessian::HessianAccumulator;
+        let mut acc_plain = HessianAccumulator::new(16);
+        let mut acc_rot = HessianAccumulator::new(16);
+        for _ in 0..2000 {
+            let x: Vec<f64> = (0..16).map(|_| rng.next_gaussian() * 2.0).collect();
+            acc_plain.add(&x);
+            let mut xr = x.clone();
+            rot.rotate_activation(&mut xr);
+            acc_rot.add(&xr);
+        }
+        let mut h = acc_plain.finalize();
+        let h_rot_direct = acc_rot.finalize();
+        rot.rotate_hessian(&mut h);
+        for (a, b) in h.data.iter().zip(&h_rot_direct.data) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn rotation_gaussianizes_outlier_rows() {
+        // spiky weight row → rotated row has much smaller kurtosis proxy
+        let rot = LayerRotation::new(RotationMode::Input, 128, 4, 21);
+        let mut w = Matrix::zeros(4, 128);
+        *w.at_mut(0, 7) = 10.0; // single huge outlier
+        *w.at_mut(0, 80) = -9.0;
+        let max_before = w.row(0).iter().fold(0.0f64, |a, &b| a.max(b.abs()));
+        rot.rotate_weights(&mut w);
+        let max_after = w.row(0).iter().fold(0.0f64, |a, &b| a.max(b.abs()));
+        assert!(max_after < max_before / 3.0, "{max_before} → {max_after}");
+    }
+}

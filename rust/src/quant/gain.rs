@@ -1,0 +1,124 @@
+//! Gain quantizers for the shape–gain construction (paper App. B, App. F).
+//!
+//! The gain of a 24-dim Gaussian block follows the χ₂₄ distribution; the
+//! paper matches the scalar gain code to it. [`ChiGainQuantizer`] holds a
+//! fixed codebook of equal-probability χ₂₄ centroids ("b χ-gain bits" rows
+//! of Table 7); `bits = 0` degenerates to the single median centroid.
+//!
+//! The *shape-conditioned optimal-scales* flow (paper Fig. 4): the LLVQ
+//! shape–gain quantizer first picks the shape ŝ, computes the optimal gain
+//! γ* = ⟨w, ŝ⟩ (App. D.1), and quantizes γ* with this codebook — that
+//! logic lives in [`crate::quant::llvq`], conditioned on the chosen shape.
+
+use crate::math::stats;
+use crate::quant::{Code, VectorQuantizer};
+
+/// Scalar quantizer over gains with a χ_k-matched codebook.
+#[derive(Clone, Debug)]
+pub struct ChiGainQuantizer {
+    pub bits: u32,
+    /// Sorted reconstruction levels (χ_k bin centroids).
+    pub levels: Vec<f64>,
+}
+
+impl ChiGainQuantizer {
+    pub fn new(k: usize, bits: u32) -> Self {
+        let levels = stats::chi_gain_codebook(k, 1usize << bits);
+        Self { bits, levels }
+    }
+
+    /// Scale every level by `s` (used when the source has σ ≠ 1 or when a
+    /// cosine-retention correction is applied).
+    pub fn scaled(mut self, s: f64) -> Self {
+        for l in self.levels.iter_mut() {
+            *l *= s;
+        }
+        self
+    }
+
+    /// Index of the nearest level.
+    pub fn nearest(&self, g: f64) -> usize {
+        let mut best = 0usize;
+        let mut bd = f64::INFINITY;
+        for (i, &l) in self.levels.iter().enumerate() {
+            let d = (l - g).abs();
+            if d < bd {
+                bd = d;
+                best = i;
+            }
+        }
+        best
+    }
+
+    pub fn level(&self, idx: usize) -> f64 {
+        self.levels[idx]
+    }
+}
+
+impl VectorQuantizer for ChiGainQuantizer {
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn bits_per_weight(&self) -> f64 {
+        self.bits as f64
+    }
+
+    fn quantize(&self, x: &[f32]) -> Code {
+        Code {
+            words: vec![self.nearest(x[0] as f64) as u64],
+            bits: self.bits,
+        }
+    }
+
+    fn dequantize(&self, code: &Code, out: &mut [f32]) {
+        out[0] = self.levels[code.words[0] as usize] as f32;
+    }
+
+    fn name(&self) -> String {
+        format!("chi24-gain-{}b", self.bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn zero_bit_gain_is_mean_like() {
+        let g = ChiGainQuantizer::new(24, 0);
+        assert_eq!(g.levels.len(), 1);
+        // median of chi_24 ≈ 4.88
+        assert!((g.levels[0] - 4.88).abs() < 0.1);
+    }
+
+    #[test]
+    fn gain_quantizer_matches_chi24_statistics() {
+        // quantizing ‖N(0,I_24)‖ with 4 bits must give small relative error
+        let g = ChiGainQuantizer::new(24, 4);
+        let mut rng = Xoshiro256pp::new(21);
+        let mut rel = 0.0;
+        let n = 20_000;
+        for _ in 0..n {
+            let mut v = [0f64; 24];
+            rng.fill_gaussian_f64(&mut v);
+            let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            let q = g.level(g.nearest(norm));
+            rel += ((q - norm) / norm).abs();
+        }
+        rel /= n as f64;
+        assert!(rel < 0.03, "mean relative gain error {rel}");
+    }
+
+    #[test]
+    fn nearest_is_argmin() {
+        let g = ChiGainQuantizer::new(24, 3);
+        for &x in &[0.1, 3.0, 4.9, 6.2, 12.0] {
+            let i = g.nearest(x);
+            for (j, &l) in g.levels.iter().enumerate() {
+                assert!((g.levels[i] - x).abs() <= (l - x).abs() + 1e-12, "level {j} beats chosen");
+            }
+        }
+    }
+}

@@ -1,0 +1,321 @@
+//! LLVQ — the paper's quantizers (§3, App. C).
+//!
+//! * [`LlvqSpherical`] — *spherical shaping*: quantize `x/β` to the nearest
+//!   point of the ball cut Λ₂₄(M) (Fig. 2), store the bijective index.
+//!   The global scale β is Gaussian-optimized at construction.
+//! * [`LlvqShapeGain`] — *shape–gain with optimal scales* (Fig. 4, the
+//!   paper's main configuration): the direction is quantized by angular
+//!   search over the union of shells 2..=M (§3.1), the gain is the
+//!   shape-conditioned optimum γ* = ⟨w, ŝ⟩ (App. D.1) quantized with a
+//!   χ₂₄-matched codebook. `M` and the gain bits trade off per Table 7
+//!   (2 bits/dim ⇒ M=12 shape + 1 gain bit is the paper's best).
+//!
+//! Both are **codebook-free**: codes are lattice indices, reconstruction
+//! goes through the hierarchical dequantizer — never a materialized table.
+
+use std::sync::Arc;
+
+use crate::leech::coset;
+use crate::leech::decode::LeechDecoder;
+use crate::leech::index::LeechIndexer;
+use crate::quant::gain::ChiGainQuantizer;
+use crate::quant::{Code, VectorQuantizer};
+use crate::util::rng::Xoshiro256pp;
+use crate::DIM;
+
+/// √8 — scale between Λ₂₄ (unit covolume) and the integer embedding.
+const SQRT8: f64 = 2.828_427_124_746_190_3;
+
+/// Shared lattice machinery for both LLVQ variants.
+pub struct LlvqContext {
+    pub indexer: Arc<LeechIndexer>,
+}
+
+impl LlvqContext {
+    pub fn new(max_m: usize) -> Arc<Self> {
+        Arc::new(Self {
+            indexer: Arc::new(LeechIndexer::new(max_m)),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Spherical shaping
+// ---------------------------------------------------------------------------
+
+pub struct LlvqSpherical {
+    indexer: Arc<LeechIndexer>,
+    /// Input scale β: quantize x/β, reconstruct ×β.
+    pub scale: f64,
+    bits: u32,
+}
+
+impl LlvqSpherical {
+    /// Build with a Gaussian-optimal scale (golden-section on sampled MSE).
+    pub fn new(indexer: Arc<LeechIndexer>) -> Self {
+        let bits = indexer.index_bits();
+        let mut q = Self {
+            indexer,
+            scale: 1.0,
+            bits,
+        };
+        q.scale = q.optimize_scale(1500, 0x5CA1E);
+        q
+    }
+
+    /// Build with an explicit scale (used by the pipeline's per-group
+    /// scaling and by tests).
+    pub fn with_scale(indexer: Arc<LeechIndexer>, scale: f64) -> Self {
+        let bits = indexer.index_bits();
+        Self {
+            indexer,
+            scale,
+            bits,
+        }
+    }
+
+    fn optimize_scale(&self, blocks: usize, seed: u64) -> f64 {
+        let mut rng = Xoshiro256pp::new(seed);
+        let mut sample = vec![0f32; DIM * blocks];
+        rng.fill_gaussian_f32(&mut sample);
+        let mse_at = |beta: f64| -> f64 {
+            let mut se = 0.0;
+            let golay = self.indexer.golay();
+            let dec = LeechDecoder::new(golay);
+            for blk in sample.chunks_exact(DIM) {
+                let mut t = [0f64; DIM];
+                for i in 0..DIM {
+                    t[i] = blk[i] as f64 * SQRT8 / beta;
+                }
+                let d = dec.decode_in_ball(&t, self.indexer.max_m());
+                for i in 0..DIM {
+                    let r = d.point[i] as f64 / SQRT8 * beta;
+                    let e = blk[i] as f64 - r;
+                    se += e * e;
+                }
+            }
+            se
+        };
+        // the ball radius √(2·max_m) should cover ≈ the χ₂₄ bulk (~√24·σ):
+        // β ≈ √24/√(2M) is the right ballpark; search around it
+        let center = (24.0f64).sqrt() / (2.0 * self.indexer.max_m() as f64).sqrt();
+        let (mut a, mut b) = (center * 0.5, center * 2.0);
+        let inv_phi = (5f64.sqrt() - 1.0) / 2.0;
+        for _ in 0..18 {
+            let c = b - (b - a) * inv_phi;
+            let d = a + (b - a) * inv_phi;
+            if mse_at(c) < mse_at(d) {
+                b = d;
+            } else {
+                a = c;
+            }
+        }
+        0.5 * (a + b)
+    }
+}
+
+impl VectorQuantizer for LlvqSpherical {
+    fn dim(&self) -> usize {
+        DIM
+    }
+
+    fn bits_per_weight(&self) -> f64 {
+        self.bits as f64 / DIM as f64
+    }
+
+    fn quantize(&self, x: &[f32]) -> Code {
+        let mut t = [0f64; DIM];
+        for i in 0..DIM {
+            t[i] = x[i] as f64 * SQRT8 / self.scale;
+        }
+        let dec = LeechDecoder::new(self.indexer.golay());
+        let d = dec.decode_in_ball(&t, self.indexer.max_m());
+        let idx = self
+            .indexer
+            .encode_point(&d.point)
+            .expect("in-ball decode produced unindexable point");
+        Code {
+            words: vec![idx],
+            bits: self.bits,
+        }
+    }
+
+    fn dequantize(&self, code: &Code, out: &mut [f32]) {
+        let x = self.indexer.decode_index(code.words[0]);
+        for i in 0..DIM {
+            out[i] = (x[i] as f64 / SQRT8 * self.scale) as f32;
+        }
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "llvq-spherical-M{} ({:.3} bpw)",
+            self.indexer.max_m(),
+            self.bits_per_weight()
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shape–gain with optimal scales
+// ---------------------------------------------------------------------------
+
+pub struct LlvqShapeGain {
+    indexer: Arc<LeechIndexer>,
+    pub gain: ChiGainQuantizer,
+    shape_bits: u32,
+    /// Lowest shell included in the angular search (2 = full union).
+    pub min_m: usize,
+}
+
+impl LlvqShapeGain {
+    /// `gain_bits` of χ₂₄-matched gain; the shape code is the normalized
+    /// union of shells 2..=max_m of `indexer` (App. F's norm(Λ₂₄(m)) + b
+    /// χ-gain bits construction).
+    pub fn new(indexer: Arc<LeechIndexer>, gain_bits: u32) -> Self {
+        let shape_bits = indexer.index_bits();
+        // Optimal-scales gain: γ* = ‖x‖·cos θ. cosθ loses ≈ 1−angular-MSE/2;
+        // the χ codebook is left unscaled — γ* is quantized directly against
+        // it, and empirically the cos-retention shrinkage is < 1%, inside
+        // one bin width even at 4 gain bits.
+        let gain = ChiGainQuantizer::new(DIM, gain_bits);
+        Self {
+            indexer,
+            gain,
+            shape_bits,
+            min_m: 2,
+        }
+    }
+
+    /// Quantize returning (shape index, gain level index).
+    fn quantize_parts(&self, x: &[f32]) -> (u64, u64) {
+        let mut u = [0f64; DIM];
+        for i in 0..DIM {
+            u[i] = x[i] as f64;
+        }
+        let dec = LeechDecoder::new(self.indexer.golay());
+        let d = dec.decode_angular(&u, self.min_m, self.indexer.max_m());
+        let shape_idx = self
+            .indexer
+            .encode_point(&d.point)
+            .expect("angular decode produced unindexable point");
+        // optimal gain given the chosen shape: γ* = ⟨x, ŝ⟩
+        let m = coset::shell_of(&d.point).expect("angular returned origin");
+        let pnorm = (16.0 * m as f64).sqrt();
+        let mut dot = 0.0;
+        for i in 0..DIM {
+            dot += x[i] as f64 * d.point[i] as f64;
+        }
+        let gamma_star = (dot / pnorm).max(0.0);
+        let g_idx = self.gain.nearest(gamma_star) as u64;
+        (shape_idx, g_idx)
+    }
+}
+
+impl VectorQuantizer for LlvqShapeGain {
+    fn dim(&self) -> usize {
+        DIM
+    }
+
+    fn bits_per_weight(&self) -> f64 {
+        (self.shape_bits + self.gain.bits) as f64 / DIM as f64
+    }
+
+    fn quantize(&self, x: &[f32]) -> Code {
+        let (s, g) = self.quantize_parts(x);
+        Code {
+            words: vec![s, g],
+            bits: self.shape_bits + self.gain.bits,
+        }
+    }
+
+    fn dequantize(&self, code: &Code, out: &mut [f32]) {
+        let v = self.indexer.decode_index(code.words[0]);
+        let m = coset::shell_of(&v).expect("bad shape index");
+        let pnorm = (16.0 * m as f64).sqrt();
+        let g = self.gain.level(code.words[1] as usize);
+        for i in 0..DIM {
+            out[i] = (v[i] as f64 / pnorm * g) as f32;
+        }
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "llvq-shape-gain-M{}+{}g ({:.3} bpw)",
+            self.indexer.max_m(),
+            self.gain.bits,
+            self.bits_per_weight()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::gaussian_rd;
+
+    fn small_ctx() -> Arc<LeechIndexer> {
+        Arc::new(LeechIndexer::new(4))
+    }
+
+    #[test]
+    fn spherical_roundtrip_is_lattice_consistent() {
+        let ix = small_ctx();
+        let q = LlvqSpherical::with_scale(ix.clone(), 0.8);
+        let mut rng = Xoshiro256pp::new(2);
+        let mut x = [0f32; DIM];
+        let mut y = [0f32; DIM];
+        let mut z = [0f32; DIM];
+        for _ in 0..20 {
+            rng.fill_gaussian_f32(&mut x);
+            let c = q.quantize(&x);
+            assert_eq!(c.bits, ix.index_bits());
+            q.dequantize(&c, &mut y);
+            // quantizing the reconstruction must be a fixed point
+            let c2 = q.quantize(&y);
+            q.dequantize(&c2, &mut z);
+            for i in 0..DIM {
+                assert!((y[i] - z[i]).abs() < 1e-6, "not a fixed point");
+            }
+        }
+    }
+
+    #[test]
+    fn spherical_beats_naive_rate_distortion_floor() {
+        // At M=4 the rate is 29/24 ≈ 1.21 bpw; Shannon MSE* = 2^-2.42 ≈ 0.187.
+        // A structured lattice quantizer must land well under 2× Shannon.
+        let ix = small_ctx();
+        let q = LlvqSpherical::new(ix);
+        let (mse, bits) = gaussian_rd(&q, 1200, 3);
+        assert!((bits - 29.0 / 24.0).abs() < 1e-9);
+        assert!(mse < 0.30, "mse {mse} too high for {bits} bpw");
+    }
+
+    #[test]
+    fn shape_gain_roundtrip_and_rate() {
+        let ix = small_ctx();
+        let q = LlvqShapeGain::new(ix, 2);
+        let mut rng = Xoshiro256pp::new(4);
+        let mut x = [0f32; DIM];
+        let mut y = [0f32; DIM];
+        rng.fill_gaussian_f32(&mut x);
+        let c = q.quantize(&x);
+        assert_eq!(c.bits, 29 + 2);
+        q.dequantize(&c, &mut y);
+        // direction of y must be the quantized shape: renormalized y is a
+        // lattice direction; cosine with x should be high
+        let dot: f64 = x.iter().zip(&y).map(|(&a, &b)| a as f64 * b as f64).sum();
+        let nx: f64 = x.iter().map(|&a| (a as f64).powi(2)).sum::<f64>().sqrt();
+        let ny: f64 = y.iter().map(|&a| (a as f64).powi(2)).sum::<f64>().sqrt();
+        assert!(dot / (nx * ny) > 0.8, "cos {}", dot / (nx * ny));
+    }
+
+    #[test]
+    fn gain_bits_accounting() {
+        let ix = small_ctx();
+        for gb in [0u32, 1, 2, 4] {
+            let q = LlvqShapeGain::new(ix.clone(), gb);
+            assert!((q.bits_per_weight() - (29 + gb) as f64 / 24.0).abs() < 1e-12);
+        }
+    }
+}

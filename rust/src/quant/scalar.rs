@@ -1,0 +1,269 @@
+//! Scalar quantization baselines (paper Fig. 1, Table 4, Table 6).
+//!
+//! * [`UniformQuantizer`] — symmetric uniform mid-rise quantizer with a
+//!   clipping range optimized for the N(0,1) source at each bit width
+//!   (the "Uniform" row of Table 4, and the RTN baseline of §5).
+//! * [`LloydMaxQuantizer`] — the optimal scalar quantizer for a Gaussian
+//!   source, trained by Lloyd's algorithm on a large sample (Table 4's
+//!   "Lloyd-Max" row).
+
+use crate::quant::{Code, VectorQuantizer};
+use crate::util::rng::Xoshiro256pp;
+
+/// Symmetric uniform quantizer with 2^bits levels over [−c·σ, +c·σ].
+#[derive(Clone, Debug)]
+pub struct UniformQuantizer {
+    pub bits: u32,
+    pub clip: f64,
+    step: f64,
+    levels: i64,
+}
+
+impl UniformQuantizer {
+    /// Gaussian-optimal clip ranges (minimize MSE for N(0,1)): found by a
+    /// quick golden-section sweep; values match the classical tables
+    /// (e.g. 2 bits → clip ≈ 1.49·σ... computed at construction).
+    pub fn new_gaussian_optimal(bits: u32) -> Self {
+        // golden-section search on clip ∈ [0.5, 6.0] minimizing analytic MSE
+        // approximated by dense numerical integration of the N(0,1) density.
+        let mse_for = |clip: f64| -> f64 {
+            let levels = 1i64 << bits;
+            let step = 2.0 * clip / levels as f64;
+            // integrate (x - q(x))² φ(x) dx over [-8, 8]
+            let n = 4000;
+            let lo = -8.0;
+            let hi = 8.0;
+            let h = (hi - lo) / n as f64;
+            let mut acc = 0.0;
+            for i in 0..=n {
+                let x = lo + i as f64 * h;
+                let q = {
+                    let k = ((x + clip) / step).floor();
+                    let k = k.clamp(0.0, (levels - 1) as f64);
+                    -clip + (k + 0.5) * step
+                };
+                let phi = (-0.5 * x * x).exp() / (2.0 * std::f64::consts::PI).sqrt();
+                let w = if i == 0 || i == n { 0.5 } else { 1.0 };
+                acc += w * (x - q) * (x - q) * phi;
+            }
+            acc * h
+        };
+        let (mut a, mut b) = (0.5f64, 6.0f64);
+        let inv_phi = (5f64.sqrt() - 1.0) / 2.0;
+        for _ in 0..60 {
+            let c = b - (b - a) * inv_phi;
+            let d = a + (b - a) * inv_phi;
+            if mse_for(c) < mse_for(d) {
+                b = d;
+            } else {
+                a = c;
+            }
+        }
+        let clip = 0.5 * (a + b);
+        Self::with_clip(bits, clip)
+    }
+
+    pub fn with_clip(bits: u32, clip: f64) -> Self {
+        let levels = 1i64 << bits;
+        Self {
+            bits,
+            clip,
+            step: 2.0 * clip / levels as f64,
+            levels,
+        }
+    }
+
+    #[inline]
+    fn level_of(&self, x: f64) -> i64 {
+        let k = ((x + self.clip) / self.step).floor() as i64;
+        k.clamp(0, self.levels - 1)
+    }
+
+    #[inline]
+    fn value_of(&self, k: i64) -> f64 {
+        -self.clip + (k as f64 + 0.5) * self.step
+    }
+}
+
+impl VectorQuantizer for UniformQuantizer {
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn bits_per_weight(&self) -> f64 {
+        self.bits as f64
+    }
+
+    fn quantize(&self, x: &[f32]) -> Code {
+        Code {
+            words: vec![self.level_of(x[0] as f64) as u64],
+            bits: self.bits,
+        }
+    }
+
+    fn dequantize(&self, code: &Code, out: &mut [f32]) {
+        out[0] = self.value_of(code.words[0] as i64) as f32;
+    }
+
+    fn name(&self) -> String {
+        format!("uniform-{}b", self.bits)
+    }
+}
+
+/// Lloyd–Max quantizer trained on a Gaussian sample.
+#[derive(Clone, Debug)]
+pub struct LloydMaxQuantizer {
+    pub bits: u32,
+    /// Sorted reconstruction levels.
+    pub centers: Vec<f64>,
+    /// Decision boundaries (midpoints), len = centers.len() − 1.
+    boundaries: Vec<f64>,
+}
+
+impl LloydMaxQuantizer {
+    /// Train on `n` Gaussian samples with Lloyd iterations to convergence.
+    pub fn train_gaussian(bits: u32, n: usize, seed: u64) -> Self {
+        let mut rng = Xoshiro256pp::new(seed);
+        let mut samples: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let k = 1usize << bits;
+        // init: quantiles
+        let mut centers: Vec<f64> = (0..k)
+            .map(|i| samples[(i * n + n / (2 * k)) / k])
+            .collect();
+        for _ in 0..200 {
+            // assignment via sorted sweep
+            let mut sums = vec![0.0f64; k];
+            let mut counts = vec![0usize; k];
+            let mut ci = 0usize;
+            for &s in &samples {
+                while ci + 1 < k && (centers[ci + 1] + centers[ci]) * 0.5 < s {
+                    ci += 1;
+                }
+                // ci may need to move back for the next (sorted) sample? no:
+                // samples ascend, boundaries ascend → monotone sweep is exact
+                sums[ci] += s;
+                counts[ci] += 1;
+            }
+            let mut moved = 0.0f64;
+            for i in 0..k {
+                if counts[i] > 0 {
+                    let c = sums[i] / counts[i] as f64;
+                    moved += (c - centers[i]).abs();
+                    centers[i] = c;
+                }
+            }
+            if moved < 1e-9 {
+                break;
+            }
+        }
+        let boundaries = centers
+            .windows(2)
+            .map(|w| 0.5 * (w[0] + w[1]))
+            .collect();
+        Self {
+            bits,
+            centers,
+            boundaries,
+        }
+    }
+
+    #[inline]
+    fn level_of(&self, x: f64) -> usize {
+        match self
+            .boundaries
+            .binary_search_by(|b| b.partial_cmp(&x).unwrap())
+        {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        }
+    }
+}
+
+impl VectorQuantizer for LloydMaxQuantizer {
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn bits_per_weight(&self) -> f64 {
+        self.bits as f64
+    }
+
+    fn quantize(&self, x: &[f32]) -> Code {
+        Code {
+            words: vec![self.level_of(x[0] as f64) as u64],
+            bits: self.bits,
+        }
+    }
+
+    fn dequantize(&self, code: &Code, out: &mut [f32]) {
+        out[0] = self.centers[code.words[0] as usize] as f32;
+    }
+
+    fn name(&self) -> String {
+        format!("lloyd-max-{}b", self.bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::gaussian_rd;
+
+    #[test]
+    fn uniform_2bit_matches_table4() {
+        // Table 4: Uniform @2 bits → MSE ≈ 0.12 (clip-optimized uniform on
+        // a Gaussian achieves ≈ 0.118; the paper prints 0.15 for a
+        // non-optimized range — we accept the tighter value and assert the
+        // qualitative band).
+        let q = UniformQuantizer::new_gaussian_optimal(2);
+        let (mse, bits) = gaussian_rd(&q, 200_000, 42);
+        assert_eq!(bits, 2.0);
+        assert!(mse > 0.10 && mse < 0.16, "mse = {mse}");
+    }
+
+    #[test]
+    fn lloyd_max_beats_uniform() {
+        let u = UniformQuantizer::new_gaussian_optimal(2);
+        let l = LloydMaxQuantizer::train_gaussian(2, 400_000, 7);
+        let (mu, _) = gaussian_rd(&u, 100_000, 1);
+        let (ml, _) = gaussian_rd(&l, 100_000, 1);
+        assert!(ml < mu, "lloyd {ml} !< uniform {mu}");
+        // Table 4: Lloyd-Max 2-bit ≈ 0.117–0.12
+        assert!((ml - 0.118).abs() < 0.01, "lloyd mse {ml}");
+    }
+
+    #[test]
+    fn lloyd_max_centers_symmetric_and_sorted() {
+        let l = LloydMaxQuantizer::train_gaussian(3, 400_000, 9);
+        for w in l.centers.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        // symmetry of the Gaussian → centers ≈ mirrored
+        let k = l.centers.len();
+        for i in 0..k / 2 {
+            assert!(
+                (l.centers[i] + l.centers[k - 1 - i]).abs() < 0.05,
+                "asymmetric centers {} vs {}",
+                l.centers[i],
+                l.centers[k - 1 - i]
+            );
+        }
+    }
+
+    #[test]
+    fn quantize_dequantize_hits_nearest_center() {
+        let l = LloydMaxQuantizer::train_gaussian(2, 100_000, 3);
+        let mut out = [0f32];
+        for &x in &[-3.0f32, -0.2, 0.0, 0.7, 2.5] {
+            l.reconstruct(&[x], &mut out);
+            // verify it picked the argmin center
+            let best = l
+                .centers
+                .iter()
+                .map(|&c| (c as f32 - x).abs())
+                .fold(f32::INFINITY, f32::min);
+            assert!(((out[0] - x).abs() - best).abs() < 1e-6);
+        }
+    }
+}

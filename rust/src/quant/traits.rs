@@ -1,0 +1,105 @@
+//! The quantizer abstraction shared by LLVQ and every baseline.
+//!
+//! A [`VectorQuantizer`] maps a `dim`-length block of weights to a compact
+//! integer code and back. The PTQ pipeline (and the Gaussian-source
+//! experiments) treat all methods through this trait, which is what makes
+//! the paper's "same pipeline, swap the representation" comparisons
+//! apples-to-apples.
+
+/// A quantized block: the stored code plus its bit cost.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Code {
+    /// Opaque integer payload(s). For product codes, one entry per sub-block.
+    pub words: Vec<u64>,
+    /// Exact bits this code occupies in the serialized model.
+    pub bits: u32,
+}
+
+/// A (possibly vector) quantizer over fixed-length blocks.
+pub trait VectorQuantizer: Send + Sync {
+    /// Block length this quantizer consumes (1 for scalar quantizers).
+    fn dim(&self) -> usize;
+
+    /// Nominal rate in bits per weight.
+    fn bits_per_weight(&self) -> f64;
+
+    /// Quantize one block (`x.len() == self.dim()`), returning the code.
+    fn quantize(&self, x: &[f32]) -> Code;
+
+    /// Reconstruct a block from its code into `out`.
+    fn dequantize(&self, code: &Code, out: &mut [f32]);
+
+    /// Convenience: quantize-dequantize round trip.
+    fn reconstruct(&self, x: &[f32], out: &mut [f32]) {
+        let c = self.quantize(x);
+        self.dequantize(&c, out);
+    }
+
+    /// Human-readable name for experiment tables.
+    fn name(&self) -> String;
+}
+
+/// Measure empirical rate–distortion of `q` on an i.i.d. N(0,1) source
+/// (paper eq. 16): returns (mse_per_weight, actual_bits_per_weight).
+pub fn gaussian_rd(
+    q: &dyn VectorQuantizer,
+    num_blocks: usize,
+    seed: u64,
+) -> (f64, f64) {
+    let mut rng = crate::util::rng::Xoshiro256pp::new(seed);
+    let d = q.dim();
+    let mut x = vec![0f32; d];
+    let mut y = vec![0f32; d];
+    let mut se = 0f64;
+    let mut bits = 0u64;
+    for _ in 0..num_blocks {
+        rng.fill_gaussian_f32(&mut x);
+        let c = q.quantize(&x);
+        bits += c.bits as u64;
+        q.dequantize(&c, &mut y);
+        for i in 0..d {
+            let e = x[i] as f64 - y[i] as f64;
+            se += e * e;
+        }
+    }
+    let n = (num_blocks * d) as f64;
+    (se / n, bits as f64 / n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Trivial pass-through quantizer for trait plumbing tests.
+    struct Identity(usize);
+    impl VectorQuantizer for Identity {
+        fn dim(&self) -> usize {
+            self.0
+        }
+        fn bits_per_weight(&self) -> f64 {
+            32.0
+        }
+        fn quantize(&self, x: &[f32]) -> Code {
+            Code {
+                words: x.iter().map(|&v| v.to_bits() as u64).collect(),
+                bits: 32 * x.len() as u32,
+            }
+        }
+        fn dequantize(&self, code: &Code, out: &mut [f32]) {
+            for (o, &w) in out.iter_mut().zip(&code.words) {
+                *o = f32::from_bits(w as u32);
+            }
+        }
+        fn name(&self) -> String {
+            "identity".into()
+        }
+    }
+
+    #[test]
+    fn identity_has_zero_distortion() {
+        let q = Identity(8);
+        let (mse, bits) = gaussian_rd(&q, 100, 1);
+        assert_eq!(mse, 0.0);
+        assert_eq!(bits, 32.0);
+    }
+}

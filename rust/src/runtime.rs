@@ -1,0 +1,124 @@
+//! PJRT runtime — loads AOT-compiled JAX/Pallas artifacts and executes
+//! them from the rust request path (Python is never loaded at runtime).
+//!
+//! Interchange format is **HLO text** (see /opt-level docs in
+//! DESIGN.md §1): `python/compile/aot.py` lowers jitted functions with
+//! `return_tuple=True`; this module parses the text with
+//! `HloModuleProto::from_text_file`, compiles on the PJRT CPU client, and
+//! wraps execution with typed literal conversion. Compiled executables are
+//! cached per artifact path.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+/// A thin registry of compiled executables over one PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (or fetch from cache) an HLO-text artifact.
+    pub fn load(&self, path: &Path) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(path) {
+            return Ok(e.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?,
+        );
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute with f32 input buffers of the given shapes; returns the
+    /// flattened f32 outputs of the result tuple.
+    pub fn run_f32(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let lits = inputs
+            .iter()
+            .map(|(data, shape)| {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims).map_err(Into::into)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        self.run_literals(exe, &lits)
+            .and_then(|outs| outs.iter().map(|l| l.to_vec::<f32>().map_err(Into::into)).collect())
+    }
+
+    /// Execute with i64 + f32 mixed inputs (for the dequant kernel, which
+    /// takes index arrays and table arrays).
+    pub fn run_mixed(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        int_inputs: &[(&[i64], &[usize])],
+        f32_inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<xla::Literal>> {
+        let mut lits = Vec::with_capacity(int_inputs.len() + f32_inputs.len());
+        for (data, shape) in int_inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            lits.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+        for (data, shape) in f32_inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            lits.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+        self.run_literals(exe, &lits)
+    }
+
+    /// Core execution: run and unpack the (tupled) result.
+    pub fn run_literals(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → decompose the tuple
+        let outs = result.to_tuple()?;
+        Ok(outs)
+    }
+}
+
+/// Canonical artifact locations relative to the repo root.
+pub fn artifact_dir() -> PathBuf {
+    std::env::var("LLVQ_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+pub fn artifact(name: &str) -> PathBuf {
+    artifact_dir().join(name)
+}
+
+/// True when `make artifacts` has produced the AOT bundle (tests that need
+/// PJRT skip politely otherwise).
+pub fn artifacts_available() -> bool {
+    artifact("config.json").exists()
+}

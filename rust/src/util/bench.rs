@@ -1,0 +1,160 @@
+//! Benchmark harness (criterion replacement for the offline build).
+//!
+//! `cargo bench` runs our bench binaries with `harness = false`; they call
+//! into this module. Methodology: warmup, then timed batches whose size is
+//! auto-scaled so each measurement batch takes ≥ `min_batch_time`, with
+//! mean/median/p10/p90 over `samples` batches, plus items/sec throughput.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters_per_batch: u64,
+    pub samples: Vec<f64>, // seconds per iteration
+    pub mean: f64,
+    pub median: f64,
+    pub p10: f64,
+    pub p90: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} mean {:>12}  median {:>12}  p10 {:>12}  p90 {:>12}",
+            self.name,
+            fmt_time(self.mean),
+            fmt_time(self.median),
+            fmt_time(self.p10),
+            fmt_time(self.p90),
+        )
+    }
+}
+
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+pub struct Bench {
+    pub warmup: Duration,
+    pub min_batch_time: Duration,
+    pub num_samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        // Keep whole-suite runtime reasonable; override via env for deep runs.
+        let quick = std::env::var("LLVQ_BENCH_QUICK").is_ok();
+        Self {
+            warmup: Duration::from_millis(if quick { 50 } else { 300 }),
+            min_batch_time: Duration::from_millis(if quick { 30 } else { 150 }),
+            num_samples: if quick { 5 } else { 12 },
+        }
+    }
+}
+
+impl Bench {
+    /// Measure `f`, which performs ONE logical iteration per call.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // warmup + calibration
+        let cal_start = Instant::now();
+        let mut cal_iters = 0u64;
+        while cal_start.elapsed() < self.warmup {
+            f();
+            cal_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / cal_iters.max(1) as f64;
+        let iters_per_batch =
+            ((self.min_batch_time.as_secs_f64() / per_iter.max(1e-9)).ceil() as u64).max(1);
+
+        let mut samples = Vec::with_capacity(self.num_samples);
+        for _ in 0..self.num_samples {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_batch {
+                f();
+            }
+            samples.push(t0.elapsed().as_secs_f64() / iters_per_batch as f64);
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let pct = |p: f64| sorted[((p * (sorted.len() - 1) as f64).round()) as usize];
+        let res = BenchResult {
+            name: name.to_string(),
+            iters_per_batch,
+            mean,
+            median: pct(0.5),
+            p10: pct(0.1),
+            p90: pct(0.9),
+            samples,
+        };
+        println!("{}", res.report());
+        res
+    }
+
+    /// Measure with an explicit item count per iteration; also prints
+    /// throughput.
+    pub fn run_throughput<F: FnMut()>(
+        &self,
+        name: &str,
+        items_per_iter: f64,
+        f: F,
+    ) -> BenchResult {
+        let res = self.run(name, f);
+        println!(
+            "{:<44} throughput {:>14.0} items/s",
+            format!("{name} [thpt]"),
+            res.throughput(items_per_iter)
+        );
+        res
+    }
+}
+
+/// Black-box: prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bench {
+            warmup: Duration::from_millis(5),
+            min_batch_time: Duration::from_millis(2),
+            num_samples: 3,
+        };
+        let mut acc = 0u64;
+        let r = b.run("spin", || {
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert!(r.mean > 0.0);
+        assert!(r.p10 <= r.p90);
+        assert_eq!(r.samples.len(), 3);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2e-9).contains("ns"));
+        assert!(fmt_time(2e-6).contains("µs"));
+        assert!(fmt_time(2e-3).contains("ms"));
+        assert!(fmt_time(2.0).contains(" s"));
+    }
+}

@@ -1,0 +1,178 @@
+//! Declarative command-line parsing (no `clap` in the offline build).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, and generated `--help` text. Used by the `llvq` binary and
+//! the examples.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_bool: bool,
+}
+
+#[derive(Default)]
+pub struct Args {
+    specs: Vec<ArgSpec>,
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+    program: String,
+    about: &'static str,
+}
+
+impl Args {
+    pub fn new(about: &'static str) -> Self {
+        Self {
+            about,
+            ..Default::default()
+        }
+    }
+
+    pub fn flag(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_bool: false,
+        });
+        self
+    }
+
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_bool: true,
+        });
+        self
+    }
+
+    /// Parse from an iterator (typically `std::env::args().skip(n)`).
+    /// On `--help` prints usage and exits.
+    pub fn parse<I: Iterator<Item = String>>(mut self, iter: I) -> Result<Self, String> {
+        let mut iter = iter.peekable();
+        if self.program.is_empty() {
+            self.program = "llvq".to_string();
+        }
+        while let Some(arg) = iter.next() {
+            if arg == "--help" || arg == "-h" {
+                eprintln!("{}", self.usage());
+                std::process::exit(0);
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}\n{}", self.usage()))?;
+                let val = if spec.is_bool {
+                    inline_val.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline_val {
+                    v
+                } else {
+                    iter.next()
+                        .ok_or_else(|| format!("--{name} expects a value"))?
+                };
+                self.values.insert(name, val);
+            } else {
+                self.positional.push(arg);
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{}\n\nflags:\n", self.about);
+        for spec in &self.specs {
+            let d = spec
+                .default
+                .as_deref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{:<18} {}{}\n", spec.name, spec.help, d));
+        }
+        s
+    }
+
+    pub fn get(&self, name: &str) -> Option<String> {
+        if let Some(v) = self.values.get(name) {
+            return Some(v.clone());
+        }
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .and_then(|s| s.default.clone())
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| panic!("flag --{name} missing or not a usize"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| panic!("flag --{name} missing or not a u64"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| panic!("flag --{name} missing or not an f64"))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.get(name).map(|v| v == "true" || v == "1").unwrap_or(false)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> impl Iterator<Item = String> + '_ {
+        s.split_whitespace().map(|x| x.to_string())
+    }
+
+    #[test]
+    fn parses_flags_and_defaults() {
+        let a = Args::new("test")
+            .flag("bits", "2", "bitrate")
+            .flag("seed", "0", "rng seed")
+            .switch("verbose", "chatty")
+            .parse(argv("--bits 4 --verbose pos1"))
+            .unwrap();
+        assert_eq!(a.get_usize("bits"), 4);
+        assert_eq!(a.get_u64("seed"), 0); // default
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::new("t")
+            .flag("rate", "1.0", "r")
+            .parse(argv("--rate=2.5"))
+            .unwrap();
+        assert!((a.get_f64("rate") - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let r = Args::new("t").parse(argv("--nope 3"));
+        assert!(r.is_err());
+    }
+}

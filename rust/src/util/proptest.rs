@@ -1,0 +1,79 @@
+//! Minimal property-testing driver (no `proptest` crate offline).
+//!
+//! A property is a closure over a seeded RNG; the driver runs it for many
+//! cases and reports the failing seed, so failures are reproducible with
+//! `check_with_seed`. Used by `rust/tests/proptests.rs` to pin the crate's
+//! core invariants (index bijectivity, decoder optimality, pipeline
+//! conservation laws).
+
+use crate::util::rng::Xoshiro256pp;
+
+/// Outcome of a property over one generated case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `prop` over `cases` generated cases. Panics with the failing case
+/// seed and message on the first violation.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Xoshiro256pp) -> CaseResult,
+{
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Xoshiro256pp::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}): {msg}\n\
+                 reproduce with LLVQ_PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case.
+pub fn check_with_seed<F>(name: &str, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Xoshiro256pp) -> CaseResult,
+{
+    let mut rng = Xoshiro256pp::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property '{name}' failed (seed {seed:#x}): {msg}");
+    }
+}
+
+fn base_seed() -> u64 {
+    std::env::var("LLVQ_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_5EED)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("commutativity", 50, |rng| {
+            let a = rng.next_f64();
+            let b = rng.next_f64();
+            if (a + b - (b + a)).abs() < 1e-15 {
+                Ok(())
+            } else {
+                Err("addition not commutative?!".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'sometimes-false'")]
+    fn failing_property_reports() {
+        check("sometimes-false", 100, |rng| {
+            if rng.next_f64() < 0.7 {
+                Ok(())
+            } else {
+                Err("drew a large value".into())
+            }
+        });
+    }
+}

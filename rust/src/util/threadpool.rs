@@ -1,0 +1,138 @@
+//! Scoped data-parallel helpers over `std::thread` (no rayon offline).
+//!
+//! The PTQ pipeline quantizes thousands of independent 24-dim blocks per
+//! layer; [`parallel_chunks`] splits an index range across worker threads
+//! with static partitioning (blocks are uniform cost), and
+//! [`parallel_map`] collects per-item results in order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (env `LLVQ_THREADS` overrides).
+pub fn default_threads() -> usize {
+    if let Ok(s) = std::env::var("LLVQ_THREADS") {
+        if let Ok(n) = s.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// Run `f(start, end)` over `nthreads` contiguous chunks of `0..n` in
+/// parallel. `f` must be `Sync` (immutable captures; use interior
+/// mutability or per-chunk outputs for writes).
+pub fn parallel_chunks<F>(n: usize, nthreads: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let nthreads = nthreads.max(1).min(n.max(1));
+    if nthreads <= 1 || n == 0 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(nthreads);
+    std::thread::scope(|s| {
+        for t in 0..nthreads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let fr = &f;
+            s.spawn(move || fr(lo, hi));
+        }
+    });
+}
+
+/// Work-stealing flavour for uneven item costs: threads grab items from a
+/// shared atomic counter in small batches.
+pub fn parallel_dynamic<F>(n: usize, nthreads: usize, batch: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let nthreads = nthreads.max(1).min(n.max(1));
+    if nthreads <= 1 || n == 0 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    let batch = batch.max(1);
+    std::thread::scope(|s| {
+        for _ in 0..nthreads {
+            let fr = &f;
+            let c = &counter;
+            s.spawn(move || loop {
+                let start = c.fetch_add(batch, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                for i in start..(start + batch).min(n) {
+                    fr(i);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel map preserving order. `f` runs on worker threads; results land
+/// in a `Vec<T>` indexed by item.
+pub fn parallel_map<T, F>(n: usize, nthreads: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let slots: Vec<std::sync::Mutex<&mut T>> =
+            out.iter_mut().map(std::sync::Mutex::new).collect();
+        parallel_dynamic(n, nthreads, 8, |i| {
+            let r = f(i);
+            **slots[i].lock().unwrap() = r;
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn chunks_cover_range_exactly_once() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        parallel_chunks(1000, 7, |lo, hi| {
+            for i in lo..hi {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn dynamic_covers_range_exactly_once() {
+        let hits: Vec<AtomicU64> = (0..537).map(|_| AtomicU64::new(0)).collect();
+        parallel_dynamic(537, 5, 3, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let v = parallel_map(100, 4, |i| i * i);
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i * i);
+        }
+    }
+
+    #[test]
+    fn single_thread_degenerate() {
+        // empty range degenerates to a single (0, 0) call
+        parallel_chunks(0, 4, |lo, hi| assert_eq!((lo, hi), (0, 0)));
+        parallel_dynamic(0, 4, 2, |_| panic!("no items to visit"));
+    }
+}

@@ -1,0 +1,225 @@
+//! Property tests over the crate's core invariants (custom driver in
+//! `util::proptest`; failing seeds are printed for reproduction).
+
+use std::sync::Arc;
+
+use llvq::golay::GolayCode;
+use llvq::leech::decode::LeechDecoder;
+use llvq::leech::index::{ms_perm_rank, ms_perm_unrank, LeechIndexer};
+use llvq::leech::{coset, leaders};
+use llvq::math::hadamard::RandomizedHadamard;
+use llvq::math::linalg::{cholesky, solve_spd, Matrix};
+use llvq::quant::product;
+use llvq::quant::scalar::UniformQuantizer;
+use llvq::quant::VectorQuantizer;
+use llvq::util::proptest::check;
+
+#[test]
+fn prop_index_roundtrip_uniform_over_ball() {
+    let ix = LeechIndexer::new(8);
+    let n = ix.num_points() as u64;
+    check("index-roundtrip-M8", 600, |rng| {
+        let idx = rng.next_range(n);
+        let x = ix.decode_index(idx);
+        if !coset::is_lattice_point(ix.golay(), &x) {
+            return Err(format!("decode({idx}) → non-lattice {x:?}"));
+        }
+        match ix.encode_point(&x) {
+            Some(back) if back == idx => Ok(()),
+            Some(back) => Err(format!("{idx} → {x:?} → {back}")),
+            None => Err(format!("{idx} → {x:?} → encode failed")),
+        }
+    });
+}
+
+#[test]
+fn prop_random_lattice_points_encode() {
+    // build random lattice points CONSTRUCTIVELY (not via the indexer):
+    // x = 2·(golay word) + 4·z, fixed up mod 8 — then encode must succeed
+    // and decode back to the same point.
+    let ix = LeechIndexer::new(10);
+    let golay = GolayCode::new();
+    check("constructive-points-encode", 300, |rng| {
+        let c = golay.unrank(rng.next_range(4096) as u32);
+        let mut x = [0i32; 24];
+        for (i, v) in x.iter_mut().enumerate() {
+            let z = (rng.next_range(3) as i32) - 1; // small multiples of 4
+            *v = 4 * z + 2 * ((c >> i) & 1) as i32;
+        }
+        // repair Σ ≡ 0 (mod 8) by adjusting one coordinate by ±4
+        let sum: i32 = x.iter().sum();
+        if sum.rem_euclid(8) != 0 {
+            x[0] += if sum.rem_euclid(8) == 4 { 4 } else { return Ok(()) };
+        }
+        if !coset::is_lattice_point(&golay, &x) {
+            return Ok(()); // repair occasionally changes the Golay word; skip
+        }
+        let m = match coset::shell_of(&x) {
+            Some(m) if (2..=10).contains(&m) => m,
+            _ => return Ok(()), // outside the ball (or the origin) — skip
+        };
+        let idx = ix
+            .encode_point(&x)
+            .ok_or_else(|| format!("valid shell-{m} point failed to encode: {x:?}"))?;
+        if ix.decode_index(idx) != x {
+            return Err(format!("roundtrip mismatch for {x:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ms_perm_rank_bijection() {
+    check("ms-perm-rank", 300, |rng| {
+        // random multiset over ≤4 symbols, length ≤ 12
+        let k = 1 + rng.next_range(4) as usize;
+        let mut mults: Vec<(u8, u8)> = (0..k)
+            .map(|i| ((10 - 2 * i) as u8, 1 + rng.next_range(3) as u8))
+            .collect();
+        mults.sort_by(|a, b| b.0.cmp(&a.0));
+        let total: u128 = {
+            let len: usize = mults.iter().map(|&(_, c)| c as usize).sum();
+            let mut t: u128 = (1..=len as u128).product();
+            for &(_, c) in &mults {
+                t /= (1..=c as u128).product::<u128>();
+            }
+            t
+        };
+        let r = rng.next_range(total.min(1_000_000) as u64) as u128;
+        let mut seq = Vec::new();
+        ms_perm_unrank(&mults, r, &mut seq);
+        if ms_perm_rank(&seq) != r {
+            return Err(format!("rank(unrank({r})) = {}", ms_perm_rank(&seq)));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_decoder_beats_random_lattice_points() {
+    let golay = GolayCode::new();
+    let dec = LeechDecoder::new(&golay);
+    let ix = LeechIndexer::new(4);
+    let n = ix.num_points() as u64;
+    check("decoder-optimality-vs-sampling", 40, |rng| {
+        let mut t = [0f64; 24];
+        for v in t.iter_mut() {
+            *v = rng.next_gaussian() * 5.0;
+        }
+        let out = dec.decode_infinite(&t);
+        for _ in 0..50 {
+            let p = ix.decode_index(rng.next_range(n));
+            let d: f64 = p
+                .iter()
+                .zip(t.iter())
+                .map(|(&a, &b)| (a as f64 - b) * (a as f64 - b))
+                .sum();
+            if d < out.dist_sq - 1e-9 {
+                return Err(format!("sampled point beats decoder: {d} < {}", out.dist_sq));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_shell_class_sizes_factorization() {
+    // eq. 12 invariant: every subclass size = A·2^B·arr_f1·arr_f0 and the
+    // class sizes sum to the shell size for random shells ≤ 16
+    let golay = GolayCode::new();
+    let theta = llvq::leech::theta::shell_sizes(16);
+    check("eq12-factorization", 8, |rng| {
+        let m = 2 + rng.next_range(15) as usize;
+        let s = leaders::enumerate_shell(&golay, m);
+        let total: u128 = s.classes.iter().map(|c| c.size).sum();
+        if total != theta[m] {
+            return Err(format!("shell {m}: {total} != theta {}", theta[m]));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hadamard_isometry_and_involution() {
+    check("hadamard-isometry", 100, |rng| {
+        let dim = 8 + rng.next_range(200) as usize;
+        let h = RandomizedHadamard::new(dim, rng.next_u64());
+        let orig: Vec<f64> = (0..dim).map(|_| rng.next_gaussian()).collect();
+        let mut v = orig.clone();
+        h.forward(&mut v);
+        let n0: f64 = orig.iter().map(|x| x * x).sum();
+        let n1: f64 = v.iter().map(|x| x * x).sum();
+        if (n0 - n1).abs() > 1e-8 * n0.max(1.0) {
+            return Err(format!("norm not preserved: {n0} → {n1} (dim {dim})"));
+        }
+        h.inverse(&mut v);
+        for (a, b) in v.iter().zip(&orig) {
+            if (a - b).abs() > 1e-9 {
+                return Err("inverse∘forward ≠ id".to_string());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spd_solve_residual() {
+    check("spd-solve", 60, |rng| {
+        let n = 2 + rng.next_range(24) as usize;
+        let mut g = Matrix::zeros(n, n);
+        for v in g.data.iter_mut() {
+            *v = rng.next_gaussian();
+        }
+        let mut a = g.transpose().matmul(&g);
+        a.damp_diagonal(0.05);
+        if cholesky(&a).is_err() {
+            return Err("damped Gram matrix not SPD".into());
+        }
+        let b: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let x = solve_spd(&a, &b).map_err(|e| e)?;
+        let r = a.matvec(&x);
+        for (ri, bi) in r.iter().zip(&b) {
+            if (ri - bi).abs() > 1e-6 {
+                return Err(format!("residual too large: {}", (ri - bi).abs()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_product_code_roundtrip_any_length() {
+    let q = UniformQuantizer::new_gaussian_optimal(8);
+    check("product-roundtrip", 80, |rng| {
+        let len = 1 + rng.next_range(96) as usize;
+        let row: Vec<f32> = (0..len).map(|_| rng.next_gaussian() as f32 * 0.5).collect();
+        let mut out = vec![0f32; len];
+        product::quantize_row(&q, &row, &mut out);
+        for (a, b) in row.iter().zip(&out) {
+            if (a - b).abs() > 0.05 {
+                return Err(format!("8-bit roundtrip error {} too large", (a - b).abs()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_llvq_spherical_quantize_is_idempotent() {
+    let ix = Arc::new(LeechIndexer::new(3));
+    let q = llvq::quant::llvq::LlvqSpherical::with_scale(ix, 0.9);
+    check("llvq-idempotent", 60, |rng| {
+        let mut x = [0f32; 24];
+        rng.fill_gaussian_f32(&mut x);
+        let mut y = [0f32; 24];
+        let mut z = [0f32; 24];
+        q.reconstruct(&x, &mut y);
+        q.reconstruct(&y, &mut z);
+        for (a, b) in y.iter().zip(&z) {
+            if (a - b).abs() > 1e-6 {
+                return Err("reconstruction not a fixed point".into());
+            }
+        }
+        Ok(())
+    });
+}

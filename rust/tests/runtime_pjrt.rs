@@ -1,0 +1,239 @@
+//! PJRT integration tests — the full three-layer contract:
+//! JAX/Pallas kernels AOT-lowered to HLO text execute on the rust PJRT
+//! runtime and agree numerically with the rust-native implementations.
+//!
+//! These tests need `make artifacts`; they skip politely when the bundle
+//! is absent so `cargo test` works on a fresh checkout.
+
+use llvq::leech::index::LeechIndexer;
+use llvq::leech::tables::KernelTables;
+use llvq::runtime::{artifact, artifacts_available, Runtime};
+use llvq::util::json;
+use llvq::util::rng::Xoshiro256pp;
+
+fn config() -> Option<json::Json> {
+    let text = std::fs::read_to_string(artifact("config.json")).ok()?;
+    json::parse(&text).ok()
+}
+
+enum Cols {
+    I64(Vec<i64>),
+    I32(Vec<i32>),
+}
+
+/// Table literals in the exact argument order of `compile/aot.py`.
+fn table_literals(t: &KernelTables, cfg: &json::Json) -> Vec<xla::Literal> {
+    let g = t.num_groups as i64;
+    let v = llvq::leech::tables::MAX_DISTINCT as i64;
+    let keys: Vec<String> = cfg
+        .path(&["table_keys"])
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|k| k.as_str().unwrap().to_string())
+        .collect();
+    keys.iter()
+        .map(|k| {
+            let (data, shape): (Cols, Vec<i64>) = match k.as_str() {
+                "group_offsets" => (Cols::I64(t.group_offsets.clone()), vec![g + 1]),
+                "num_codewords" => (
+                    Cols::I64(t.num_codewords.iter().map(|&x| x as i64).collect()),
+                    vec![g],
+                ),
+                "sign_bits" => (
+                    Cols::I64(t.sign_bits.iter().map(|&x| x as i64).collect()),
+                    vec![g],
+                ),
+                "f0_arrangements" => (Cols::I64(t.f0_arrangements.clone()), vec![g]),
+                "f1_arrangements" => (Cols::I64(t.f1_arrangements.clone()), vec![g]),
+                "weight" => (Cols::I32(t.weight.clone()), vec![g]),
+                "cw_base" => (Cols::I32(t.cw_base.clone()), vec![g]),
+                "parity_odd" => (Cols::I32(t.parity_odd.clone()), vec![g]),
+                "f1_neg_parity" => (Cols::I32(t.f1_neg_parity.clone()), vec![g]),
+                "f1_values" => (Cols::I32(t.f1_values.clone()), vec![g, v]),
+                "f1_counts" => (Cols::I32(t.f1_counts.clone()), vec![g, v]),
+                "f0_values" => (Cols::I32(t.f0_values.clone()), vec![g, v]),
+                "f0_counts" => (Cols::I32(t.f0_counts.clone()), vec![g, v]),
+                "golay_sorted" => (Cols::I32(t.golay_sorted.clone()), vec![4096]),
+                other => panic!("unknown table key {other}"),
+            };
+            match data {
+                Cols::I64(d) => xla::Literal::vec1(&d[..]).reshape(&shape).unwrap(),
+                Cols::I32(d) => xla::Literal::vec1(&d[..]).reshape(&shape).unwrap(),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn dequant_kernel_matches_rust_tables() {
+    if !artifacts_available() {
+        eprintln!("[skip] artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    let cfg = config().expect("config.json unreadable");
+    let max_m = cfg.path(&["max_m"]).unwrap().as_i64().unwrap() as usize;
+    let n = cfg.path(&["dequant_batch"]).unwrap().as_i64().unwrap() as usize;
+
+    let ix = LeechIndexer::new(max_m);
+    let t = KernelTables::build(&ix);
+    assert_eq!(
+        t.num_groups as i64,
+        cfg.path(&["num_groups"]).unwrap().as_i64().unwrap(),
+        "rust and python enumerations disagree on group count"
+    );
+
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let exe = rt
+        .load(&artifact(&format!("dequant_M{max_m}_N{n}.hlo.txt")))
+        .expect("load dequant artifact");
+
+    let mut rng = Xoshiro256pp::new(0xA07);
+    let mut idx = vec![0i64; n];
+    let np = t.num_points() as u64;
+    for (i, v) in idx.iter_mut().enumerate() {
+        *v = if i < 4 {
+            [0, 1, 196_559, 196_560][i]
+        } else {
+            rng.next_range(np) as i64
+        };
+    }
+
+    let mut lits = vec![xla::Literal::vec1(&idx[..]).reshape(&[n as i64]).unwrap()];
+    lits.extend(table_literals(&t, &cfg));
+    let outs = rt.run_literals(&exe, &lits).expect("execute dequant");
+    assert_eq!(outs.len(), 1);
+    let flat: Vec<i32> = outs[0].to_vec().expect("i32 output");
+    assert_eq!(flat.len(), n * 24);
+
+    for (i, &index) in idx.iter().enumerate() {
+        let expect = t.dequantize(index as u64);
+        let got = &flat[i * 24..(i + 1) * 24];
+        assert_eq!(got, &expect[..], "kernel disagrees at index {index}");
+    }
+    println!("dequant kernel ✓ ({n} indices, M={max_m})");
+}
+
+#[test]
+fn lm_forward_artifact_matches_native_oracle() {
+    if !artifacts_available() {
+        eprintln!("[skip] artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    let name = "llama2-tiny";
+    let path = artifact(&format!("{name}.llvqw"));
+    let w = match llvq::model::io::load(&path) {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("[skip] {e}");
+            return;
+        }
+    };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let exe = rt
+        .load(&artifact(&format!("lm_forward_{name}_B1.hlo.txt")))
+        .expect("load lm artifact");
+
+    let s = w.cfg.max_seq;
+    let mut corpus = llvq::model::corpus::Corpus::new(4242);
+    let (toks, _) = corpus.generate(s);
+    let toks_i32: Vec<i32> = toks.iter().map(|&t| t as i32).collect();
+
+    let d = w.cfg.d_model as i64;
+    let mut lits = vec![xla::Literal::vec1(&toks_i32[..])
+        .reshape(&[1, s as i64])
+        .unwrap()];
+    let push = |lits: &mut Vec<xla::Literal>, data: &[f32], dims: &[i64]| {
+        lits.push(xla::Literal::vec1(data).reshape(dims).unwrap());
+    };
+    push(&mut lits, &w.tok_emb, &[w.cfg.vocab as i64, d]);
+    push(&mut lits, &w.pos_emb, &[w.cfg.max_seq as i64, d]);
+    for b in &w.blocks {
+        push(&mut lits, &b.norm1, &[d]);
+        push(&mut lits, &b.wq, &[d, d]);
+        push(&mut lits, &b.wk, &[d, d]);
+        push(&mut lits, &b.wv, &[d, d]);
+        push(&mut lits, &b.wo, &[d, d]);
+        push(&mut lits, &b.norm2, &[d]);
+        push(&mut lits, &b.w1, &[w.cfg.d_ff as i64, d]);
+        push(&mut lits, &b.w2, &[d, w.cfg.d_ff as i64]);
+    }
+    push(&mut lits, &w.norm_f, &[d]);
+    push(&mut lits, &w.lm_head, &[w.cfg.vocab as i64, d]);
+
+    let outs = rt.run_literals(&exe, &lits).expect("execute lm forward");
+    let logits: Vec<f32> = outs[0].to_vec().expect("f32 logits");
+    assert_eq!(logits.len(), s * w.cfg.vocab);
+
+    let mut cap = llvq::model::transformer::ActivationCapture::default();
+    let native = llvq::model::transformer::forward(&w, &toks, &mut cap);
+    let mut max_abs = 0f32;
+    for (a, b) in logits.iter().zip(&native) {
+        max_abs = max_abs.max((a - b).abs());
+    }
+    assert!(
+        max_abs < 2e-3,
+        "PJRT vs native logits diverge: max |Δ| = {max_abs}"
+    );
+    println!("lm forward ✓ (max |Δ| = {max_abs:.2e})");
+}
+
+#[test]
+fn quant_linear_artifact_runs_end_to_end() {
+    if !artifacts_available() {
+        eprintln!("[skip] artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    let cfg = config().expect("config.json unreadable");
+    let max_m = cfg.path(&["max_m"]).unwrap().as_i64().unwrap() as usize;
+    let rows = cfg.path(&["quant_linear", "rows"]).unwrap().as_i64().unwrap() as usize;
+    let cols = cfg.path(&["quant_linear", "cols"]).unwrap().as_i64().unwrap() as usize;
+    let batch = cfg.path(&["quant_linear", "batch"]).unwrap().as_i64().unwrap() as usize;
+    let nblocks = rows * cols / 24;
+
+    let ix = LeechIndexer::new(max_m);
+    let t = KernelTables::build(&ix);
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let exe = rt
+        .load(&artifact(&format!("quant_linear_M{max_m}.hlo.txt")))
+        .expect("load quant_linear artifact");
+
+    let mut rng = Xoshiro256pp::new(0x91);
+    let np = t.num_points() as u64;
+    let idx: Vec<i64> = (0..nblocks).map(|_| rng.next_range(np) as i64).collect();
+    let gains: Vec<f32> = (0..nblocks).map(|_| rng.next_f32() * 0.2 + 0.05).collect();
+    let mut x = vec![0f32; batch * cols];
+    rng.fill_gaussian_f32(&mut x);
+
+    let mut lits = vec![
+        xla::Literal::vec1(&idx[..]).reshape(&[nblocks as i64]).unwrap(),
+        xla::Literal::vec1(&gains[..]).reshape(&[nblocks as i64]).unwrap(),
+        xla::Literal::vec1(&x[..]).reshape(&[batch as i64, cols as i64]).unwrap(),
+    ];
+    lits.extend(table_literals(&t, &cfg));
+    let outs = rt.run_literals(&exe, &lits).expect("execute quant_linear");
+    let y: Vec<f32> = outs[0].to_vec().expect("f32 output");
+    assert_eq!(y.len(), batch * rows);
+
+    // native reference: dequantize blocks, assemble W, multiply
+    let mut w_hat = vec![0f32; rows * cols];
+    for (bidx, (&i, &g)) in idx.iter().zip(&gains).enumerate() {
+        let pt = t.dequantize(i as u64);
+        for k in 0..24 {
+            w_hat[bidx * 24 + k] = pt[k] as f32 * g;
+        }
+    }
+    let mut max_abs = 0f32;
+    for bi in 0..batch {
+        for r in 0..rows {
+            let mut acc = 0f32;
+            for c in 0..cols {
+                acc += w_hat[r * cols + c] * x[bi * cols + c];
+            }
+            max_abs = max_abs.max((acc - y[bi * rows + r]).abs());
+        }
+    }
+    assert!(max_abs < 1e-2, "quant_linear diverges: {max_abs}");
+    println!("quant_linear ✓ (max |Δ| = {max_abs:.2e})");
+}
