@@ -21,7 +21,6 @@ use std::sync::Arc;
 
 use llvq::experiments::load_model;
 use llvq::leech::index::LeechIndexer;
-use llvq::leech::tables::KernelTables;
 use llvq::model::config::config_by_name;
 use llvq::model::eval::evaluate;
 use llvq::pipeline::driver::{quantize_model, PtqOptions};
@@ -103,16 +102,33 @@ fn main() {
     // PJRT leg: execute the AOT-compiled forward + dequant kernel
     if llvq::runtime::artifacts_available() {
         println!("\n--- PJRT leg (AOT HLO artifacts) ---");
-        match pjrt_leg(&cfg.name) {
-            Ok(msg) => println!("{msg}"),
-            Err(e) => println!("[warn] PJRT leg failed: {e:#}"),
-        }
+        run_pjrt_leg(&cfg.name);
     } else {
         println!("\n(artifacts/ missing — run `make artifacts` for the PJRT leg)");
     }
 }
 
+#[cfg(pjrt_runtime)]
+fn run_pjrt_leg(name: &str) {
+    match pjrt_leg(name) {
+        Ok(msg) => println!("{msg}"),
+        Err(e) => println!("[warn] PJRT leg failed: {e:#}"),
+    }
+}
+
+/// The offline default build carries no `xla`/`anyhow` dependency; the
+/// PJRT leg needs `RUSTFLAGS="--cfg pjrt_runtime"` (see `src/runtime.rs`).
+#[cfg(not(pjrt_runtime))]
+fn run_pjrt_leg(_name: &str) {
+    println!(
+        "(PJRT runtime not compiled in — rebuild with \
+         RUSTFLAGS=\"--cfg pjrt_runtime\" and the xla/anyhow deps)"
+    );
+}
+
+#[cfg(pjrt_runtime)]
 fn pjrt_leg(name: &str) -> anyhow::Result<String> {
+    use llvq::leech::tables::KernelTables;
     use llvq::runtime::{artifact, Runtime};
     let rt = Runtime::cpu()?;
     // dequant kernel smoke: 768 random indices through the compiled kernel

@@ -1,0 +1,195 @@
+//! Packed-artifact (`.llvqm`) benchmarks — the storage hot paths.
+//!
+//! Rows: block codec throughput (encode/decode of LLVQ shape–gain codes,
+//! the paper's 2 bits/weight configuration), whole-model pack/unpack
+//! throughput, and packed-vs-dense artifact load latency.
+//!
+//! Besides the human-readable report, every measurement lands as a JSON
+//! row in `BENCH_packed.json` (override with `LLVQ_BENCH_OUT`; the file is
+//! rewritten each run), in the flat row shape the `BENCH_*.json`
+//! trajectories use:
+//! `{"suite","name","mean_s","median_s","p10_s","p90_s", ...throughput}`.
+
+use std::sync::Arc;
+
+use llvq::leech::index::LeechIndexer;
+use llvq::model::config::config_by_name;
+use llvq::model::io as model_io;
+use llvq::model::packed::PackedModel;
+use llvq::model::transformer::Weights;
+use llvq::pipeline::driver::{quantize_model_packed, PtqOptions};
+use llvq::pipeline::rotation::RotationMode;
+use llvq::quant::llvq::LlvqShapeGain;
+use llvq::quant::{read_code_with, write_code_with, Code, VectorQuantizer};
+use llvq::util::bench::{black_box, Bench, BenchResult};
+use llvq::util::bits::{BitReader, BitWriter};
+use llvq::util::json::Json;
+use llvq::util::rng::Xoshiro256pp;
+
+fn row(name: &str, r: &BenchResult, extra: Vec<(&str, Json)>) -> Json {
+    let mut pairs = vec![
+        ("suite", Json::Str("packed".into())),
+        ("name", Json::Str(name.into())),
+        ("mean_s", Json::Num(r.mean)),
+        ("median_s", Json::Num(r.median)),
+        ("p10_s", Json::Num(r.p10)),
+        ("p90_s", Json::Num(r.p90)),
+    ];
+    pairs.extend(extra);
+    Json::obj(pairs)
+}
+
+fn main() {
+    let b = Bench::default();
+    let mut rows: Vec<Json> = Vec::new();
+
+    // ---- block codec: LLVQ shape–gain M=12 + 1 gain bit (2 bpw) ----
+    println!("== block codec (llvq shape-gain, 2 bpw) ==");
+    let q = LlvqShapeGain::new(Arc::new(LeechIndexer::new(12)), 1);
+    let widths = q.code_widths();
+    let mut rng = Xoshiro256pp::new(7);
+    let nblk = 512usize;
+    let blocks: Vec<[f32; 24]> = (0..nblk)
+        .map(|_| std::array::from_fn(|_| rng.next_gaussian() as f32))
+        .collect();
+    let codes: Vec<Code> = blocks.iter().map(|x| q.quantize(x)).collect();
+
+    let r = b.run_throughput("encode stream (512 codes)", nblk as f64, || {
+        let mut w = BitWriter::with_capacity(nblk * 8);
+        for c in &codes {
+            write_code_with(&widths, c, &mut w);
+        }
+        black_box(w.finish());
+    });
+    rows.push(row(
+        "encode_blocks",
+        &r,
+        vec![("blocks_per_s", Json::Num(nblk as f64 / r.mean))],
+    ));
+
+    let mut w = BitWriter::new();
+    for c in &codes {
+        write_code_with(&widths, c, &mut w);
+    }
+    let stream = w.finish();
+    let r = b.run_throughput("decode stream (512 blocks)", nblk as f64, || {
+        let mut br = BitReader::new(&stream);
+        let mut code = Code::empty();
+        let mut out = [0f32; 24];
+        for _ in 0..nblk {
+            read_code_with(&widths, &mut br, &mut code);
+            q.dequantize(&code, &mut out);
+            black_box(out[0]);
+        }
+    });
+    rows.push(row(
+        "decode_blocks",
+        &r,
+        vec![
+            ("blocks_per_s", Json::Num(nblk as f64 / r.mean)),
+            (
+                "weights_gb_per_s",
+                Json::Num(nblk as f64 * 24.0 * 4.0 / r.mean / 1e9),
+            ),
+        ],
+    ));
+
+    // ---- whole-model artifact: PTQ once (outside timers), then measure ----
+    println!("\n== whole-model artifact (llama2-tiny, 2 bpw shape-gain) ==");
+    let cfg = config_by_name("llama2-tiny").unwrap();
+    let model = Weights::random(&cfg, 42);
+    let opts = PtqOptions {
+        rotation: RotationMode::Input,
+        calib_seqs: 4,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let art = quantize_model_packed(&model, &q, &opts);
+    println!(
+        "(one-time PTQ: {:.1}s, {:.4} code bpw)",
+        t0.elapsed().as_secs_f64(),
+        art.report.bits_per_weight()
+    );
+    let packed_bytes = art.packed.to_bytes();
+    let dense_bytes = model_io::to_bytes(&art.weights);
+    let total_blocks: usize = art
+        .packed
+        .layers
+        .iter()
+        .map(|l| l.rows * l.codes.blocks_per_row)
+        .sum();
+    println!(
+        "packed {} B vs dense {} B ({:.1}x)",
+        packed_bytes.len(),
+        dense_bytes.len(),
+        dense_bytes.len() as f64 / packed_bytes.len() as f64
+    );
+
+    let r = b.run_throughput("pack (PackedModel::to_bytes)", 1.0, || {
+        black_box(art.packed.to_bytes());
+    });
+    rows.push(row(
+        "pack_to_bytes",
+        &r,
+        vec![(
+            "gb_per_s",
+            Json::Num(packed_bytes.len() as f64 / r.mean / 1e9),
+        )],
+    ));
+
+    let r = b.run_throughput("parse (PackedModel::from_bytes)", 1.0, || {
+        black_box(PackedModel::from_bytes(&packed_bytes).unwrap());
+    });
+    rows.push(row(
+        "parse_from_bytes",
+        &r,
+        vec![(
+            "gb_per_s",
+            Json::Num(packed_bytes.len() as f64 / r.mean / 1e9),
+        )],
+    ));
+
+    let threads = llvq::util::threadpool::default_threads();
+    let r = b.run_throughput("unpack (block-parallel dequant)", total_blocks as f64, || {
+        black_box(art.packed.unpack(threads).unwrap());
+    });
+    rows.push(row(
+        "unpack_model",
+        &r,
+        vec![
+            ("blocks_per_s", Json::Num(total_blocks as f64 / r.mean)),
+            (
+                "weights_gb_per_s",
+                Json::Num(dense_bytes.len() as f64 / r.mean / 1e9),
+            ),
+            ("threads", Json::Int(threads as i64)),
+        ],
+    ));
+
+    // ---- load latency: packed (parse+unpack) vs dense parse ----
+    println!("\n== load latency ==");
+    let r = b.run_throughput("packed load (parse + unpack)", 1.0, || {
+        let p = PackedModel::from_bytes(&packed_bytes).unwrap();
+        black_box(p.unpack(threads).unwrap());
+    });
+    rows.push(row(
+        "load_packed",
+        &r,
+        vec![("file_bytes", Json::Int(packed_bytes.len() as i64))],
+    ));
+    let r = b.run_throughput("dense load (from_bytes)", 1.0, || {
+        black_box(model_io::from_bytes(&dense_bytes).unwrap());
+    });
+    rows.push(row(
+        "load_dense",
+        &r,
+        vec![("file_bytes", Json::Int(dense_bytes.len() as i64))],
+    ));
+
+    let out_path = std::env::var("LLVQ_BENCH_OUT").unwrap_or_else(|_| "BENCH_packed.json".into());
+    let doc = Json::Arr(rows).to_string_pretty();
+    match std::fs::write(&out_path, &doc) {
+        Ok(()) => println!("\nwrote {out_path}"),
+        Err(e) => eprintln!("\n[warn] could not write {out_path}: {e}"),
+    }
+}

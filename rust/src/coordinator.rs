@@ -7,11 +7,14 @@
 //! back through per-request channels. A line-protocol TCP front-end and
 //! latency/throughput metrics round out the service.
 //!
-//! The quantized model's weights were produced by the PTQ pipeline; the
-//! dequantization happened at load time (weights are dense f32 again), so
-//! serving latency is identical across quantizers — the paper's "no
-//! expensive lookups on the inference path" claim shows up here as: the
-//! decode path executes exactly one HLO module regardless of method.
+//! The quantized model's weights were produced by the PTQ pipeline and are
+//! deployed as a packed `.llvqm` artifact (`model::packed`); `llvq serve
+//! --packed <file>` dequantizes the code streams block-parallel at load
+//! time, so the engine always sees dense f32 and serving latency is
+//! identical across quantizers — the paper's "no expensive lookups on the
+//! inference path" claim shows up here as: the decode path executes
+//! exactly one HLO module regardless of method, and logits from a packed
+//! artifact match the dense artifact bit-for-bit (unpacking is exact).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};

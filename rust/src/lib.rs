@@ -19,11 +19,38 @@
 //! Python never runs on the request path: artifacts are produced by
 //! `make artifacts` and the rust binary is self-contained afterwards.
 //!
+//! ## The packed `.llvqm` layer stack
+//!
+//! The paper's storage claim — bijective indices convert "to and from
+//! bitstrings without materializing the codebook" — is realized as a codec
+//! stack that every layer of the crate speaks:
+//!
+//! ```text
+//! quant::VectorQuantizer      code_widths / encode_into / decode_from /
+//!                             spec  — per-block codec + self-describing
+//!                             quantizer header (all five quantizers)
+//! util::bits                  MSB-first BitWriter/BitReader substrate
+//! pipeline::gptq              emits per-row bit-packed code streams while
+//!                             quantizing (one scratch Code per row worker)
+//! pipeline::driver            quantize_model_packed → PtqArtifacts
+//!                             { weights, report, PackedModel }
+//! model::packed               the .llvqm on-disk format (magic LLVQMDL1):
+//!                             JSON header + per-layer code streams + σ /
+//!                             rotation-seed / fine-tune-scale metadata +
+//!                             dense fp32 embeddings/norms/head; unpack()
+//!                             dequantizes block-parallel and reproduces
+//!                             the driver's reconstruction bit-exactly
+//! main (llvq pack/unpack/     CLI: produce, expand, and serve packed
+//!       serve --packed)       artifacts; stats report on-disk bytes and
+//!                             effective bits/weight
+//! ```
+//!
 //! Entry points:
 //! * [`leech::index::LeechIndexer`] — index ↔ lattice-point bijection.
 //! * [`leech::decode`] — nearest-neighbour search (Euclidean + angular).
 //! * [`quant`] — the [`quant::VectorQuantizer`] trait and implementations.
 //! * [`pipeline`] — layer-wise PTQ with Hessian correction.
+//! * [`model::packed`] — the packed quantized-model artifact (`.llvqm`).
 //! * [`coordinator`] — batched inference service over the PJRT runtime.
 //! * [`experiments`] — regenerators for every table/figure in the paper.
 
@@ -32,6 +59,7 @@ pub mod util {
     pub mod json;
     pub mod cli;
     pub mod bench;
+    pub mod bits;
     pub mod threadpool;
     pub mod proptest;
 }
@@ -75,6 +103,7 @@ pub mod model {
     pub mod config;
     pub mod transformer;
     pub mod io;
+    pub mod packed;
     pub mod eval;
     pub mod corpus;
 }

@@ -4,9 +4,12 @@
 //! * `exp <id>` — regenerate a paper table/figure (table1, table2, fig1,
 //!   table4, table3, table5, table6, fig6, table7, all).
 //! * `tables` — export the kernel dequantization tables as JSON.
-//! * `quantize` — PTQ a model artifact with a chosen method.
+//! * `quantize` — PTQ a model artifact with a chosen method (dense out).
+//! * `pack` — PTQ a model and write the packed `.llvqm` artifact.
+//! * `unpack` — expand a `.llvqm` back to a dense `.llvqw`.
 //! * `eval` — evaluate a model artifact (PPL + probes).
-//! * `serve` — start the batching inference server (TCP line protocol).
+//! * `serve` — start the batching inference server (TCP line protocol);
+//!   `--packed <file>` serves straight from a packed artifact.
 //! * `gen-model` — write a random-weight model (testing without python).
 //! * `info` — lattice summary (shell sizes, codebook bits, table VMEM).
 
@@ -16,13 +19,16 @@ use llvq::coordinator::{BatcherConfig, Coordinator, NativeEngine};
 use llvq::experiments as exp;
 use llvq::leech::index::LeechIndexer;
 use llvq::leech::tables::KernelTables;
-use llvq::model::config::{config_by_name, model_zoo};
+use llvq::model::config::{config_by_name, model_zoo, ModelConfig};
 use llvq::model::eval::evaluate;
 use llvq::model::io as model_io;
+use llvq::model::packed::PackedModel;
 use llvq::model::transformer::Weights;
-use llvq::pipeline::driver::{quantize_model, PtqOptions};
+use llvq::pipeline::driver::{quantize_model, quantize_model_packed, PtqOptions};
 use llvq::pipeline::rotation::RotationMode;
+use llvq::quant::VectorQuantizer;
 use llvq::util::cli::Args;
+use llvq::util::threadpool;
 
 fn main() {
     let mut argv = std::env::args().skip(1);
@@ -32,19 +38,35 @@ fn main() {
         "exp" => cmd_exp(rest),
         "tables" => cmd_tables(rest),
         "quantize" => cmd_quantize(rest),
+        "pack" => cmd_pack(rest),
+        "unpack" => cmd_unpack(rest),
         "eval" => cmd_eval(rest),
         "serve" => cmd_serve(rest),
         "gen-model" => cmd_gen_model(rest),
         "info" => cmd_info(rest),
         _ => {
             eprintln!(
-                "usage: llvq <exp|tables|quantize|eval|serve|gen-model|info> [flags]\n\
+                "usage: llvq <exp|tables|quantize|pack|unpack|eval|serve|gen-model|info> [flags]\n\
                  try: llvq exp table1"
             );
             2
         }
     };
     std::process::exit(code);
+}
+
+/// The pack stats line: on-disk bytes and the effective rate of the file
+/// (codes + header + fp32 embeddings/norms) over the linear parameters.
+fn packed_stats_line(file_bytes: usize, packed: &PackedModel, cfg: &ModelConfig) -> String {
+    let linear = cfg.num_linear_params().max(1);
+    format!(
+        "on-disk {} B | effective {:.4} bits/weight over {} linear params \
+         (codes alone: {:.4} bpw; fp32 dense parts included in the file)",
+        file_bytes,
+        file_bytes as f64 * 8.0 / linear as f64,
+        linear,
+        packed.code_bits() as f64 / linear as f64,
+    )
 }
 
 fn effort_from(a: &Args) -> exp::Effort {
@@ -175,6 +197,67 @@ fn parse_method(name: &str) -> Option<exp::Method> {
     }
 }
 
+/// Everything the PTQ subcommands (`quantize`, `pack`) resolve from their
+/// shared flags: zoo config, source weights, quantizer, and PTQ options.
+struct PtqSetup {
+    cfg: ModelConfig,
+    w: Weights,
+    q: Box<dyn VectorQuantizer>,
+    method_name: String,
+    opts: PtqOptions,
+}
+
+/// Resolve the shared `--model/--method/--rotation/--finetune/--allow-random`
+/// flags; `Err` carries the process exit code (usage errors already printed).
+fn ptq_setup(a: &Args) -> Result<PtqSetup, i32> {
+    let cfg = match config_by_name(&a.get("model").unwrap()) {
+        Some(c) => c,
+        None => {
+            eprintln!(
+                "unknown model; zoo: {:?}",
+                model_zoo().iter().map(|c| c.name.clone()).collect::<Vec<_>>()
+            );
+            return Err(2);
+        }
+    };
+    let w = match exp::load_model(&cfg, a.get_bool("allow-random")) {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("{e}");
+            return Err(1);
+        }
+    };
+    let method_name = a.get("method").unwrap();
+    let method = match parse_method(&method_name) {
+        Some(m) => m,
+        None => {
+            eprintln!("unknown method {method_name}");
+            return Err(2);
+        }
+    };
+    let rotation = match a.get("rotation").unwrap().as_str() {
+        "none" => RotationMode::None,
+        "input" => RotationMode::Input,
+        "input+output" => RotationMode::InputOutput,
+        other => {
+            eprintln!("unknown rotation '{other}' (none|input|input+output)");
+            return Err(2);
+        }
+    };
+    let opts = PtqOptions {
+        rotation,
+        finetune_scales: a.get_bool("finetune"),
+        ..Default::default()
+    };
+    Ok(PtqSetup {
+        cfg,
+        w,
+        q: method.build(),
+        method_name,
+        opts,
+    })
+}
+
 fn cmd_quantize(rest: Vec<String>) -> i32 {
     let a = Args::new("llvq quantize — PTQ a model artifact")
         .flag("model", "llama2-tiny", "model name from the zoo")
@@ -185,45 +268,13 @@ fn cmd_quantize(rest: Vec<String>) -> i32 {
         .flag("out", "", "output .llvqw path (default artifacts/<model>.<method>.llvqw)")
         .parse(rest.into_iter())
         .unwrap();
-    let cfg = match config_by_name(&a.get("model").unwrap()) {
-        Some(c) => c,
-        None => {
-            eprintln!(
-                "unknown model; zoo: {:?}",
-                model_zoo().iter().map(|c| c.name.clone()).collect::<Vec<_>>()
-            );
-            return 2;
-        }
+    let s = match ptq_setup(&a) {
+        Ok(s) => s,
+        Err(code) => return code,
     };
-    let w = match exp::load_model(&cfg, a.get_bool("allow-random")) {
-        Ok(w) => w,
-        Err(e) => {
-            eprintln!("{e}");
-            return 1;
-        }
-    };
-    let method_name = a.get("method").unwrap();
-    let method = match parse_method(&method_name) {
-        Some(m) => m,
-        None => {
-            eprintln!("unknown method {method_name}");
-            return 2;
-        }
-    };
-    let rotation = match a.get("rotation").unwrap().as_str() {
-        "none" => RotationMode::None,
-        "input" => RotationMode::Input,
-        _ => RotationMode::InputOutput,
-    };
-    let q = method.build();
-    let opts = PtqOptions {
-        rotation,
-        finetune_scales: a.get_bool("finetune"),
-        ..Default::default()
-    };
-    println!("quantizing {} with {} …", cfg.name, q.name());
+    println!("quantizing {} with {} …", s.cfg.name, s.q.name());
     let t0 = std::time::Instant::now();
-    let (wq, rep) = quantize_model(&w, q.as_ref(), &opts);
+    let (wq, rep) = quantize_model(&s.w, s.q.as_ref(), &s.opts);
     println!(
         "done in {:.1}s — {:.4} bits/weight over {} linear params",
         t0.elapsed().as_secs_f64(),
@@ -233,7 +284,7 @@ fn cmd_quantize(rest: Vec<String>) -> i32 {
     let out = {
         let o = a.get("out").unwrap();
         if o.is_empty() {
-            llvq::runtime::artifact(&format!("{}.{}.llvqw", cfg.name, method_name))
+            llvq::runtime::artifact(&format!("{}.{}.llvqw", s.cfg.name, s.method_name))
         } else {
             o.into()
         }
@@ -246,6 +297,146 @@ fn cmd_quantize(rest: Vec<String>) -> i32 {
         return 1;
     }
     println!("wrote {}", out.display());
+    0
+}
+
+fn cmd_pack(rest: Vec<String>) -> i32 {
+    let a = Args::new("llvq pack — PTQ a model and write the packed .llvqm artifact")
+        .flag("model", "llama2-tiny", "model name from the zoo")
+        .flag("method", "llvq-shape-gain", "scalar|e8p|llvq-spherical|llvq-shape-gain")
+        .flag("rotation", "input+output", "none|input|input+output")
+        .switch("finetune", "closed-form per-column scale finetuning")
+        .switch("allow-random", "use random weights if artifact missing")
+        .flag("out", "", "output .llvqm path (default artifacts/<model>.<method>.llvqm)")
+        .flag("dense-out", "", "also write the dequantized dense .llvqw here")
+        .parse(rest.into_iter())
+        .unwrap();
+    let s = match ptq_setup(&a) {
+        Ok(s) => s,
+        Err(code) => return code,
+    };
+    println!("packing {} with {} …", s.cfg.name, s.q.name());
+    let t0 = std::time::Instant::now();
+    let art = quantize_model_packed(&s.w, s.q.as_ref(), &s.opts);
+    println!(
+        "quantized in {:.1}s — {:.4} code bits/weight over {} linear params",
+        t0.elapsed().as_secs_f64(),
+        art.report.bits_per_weight(),
+        art.report.total_params
+    );
+    let out = {
+        let o = a.get("out").unwrap();
+        if o.is_empty() {
+            llvq::runtime::artifact(&format!("{}.{}.llvqm", s.cfg.name, s.method_name))
+        } else {
+            o.into()
+        }
+    };
+    if let Some(dir) = out.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    let bytes = art.packed.to_bytes();
+    if let Err(e) = std::fs::write(&out, &bytes) {
+        eprintln!("save failed: {e}");
+        return 1;
+    }
+    let dense_len = model_io::dense_file_size(&s.cfg);
+    println!("wrote {}", out.display());
+    println!(
+        "pack stats: {} | dense .llvqw equivalent {} B ({:.1}x smaller)",
+        packed_stats_line(bytes.len(), &art.packed, &s.cfg),
+        dense_len,
+        dense_len as f64 / bytes.len() as f64
+    );
+    let dense_out = a.get("dense-out").unwrap();
+    if !dense_out.is_empty() {
+        let p = std::path::PathBuf::from(dense_out);
+        if let Err(e) = model_io::save(&art.weights, &p) {
+            eprintln!("dense save failed: {e}");
+            return 1;
+        }
+        println!("wrote {} (dense reconstruction)", p.display());
+    }
+    0
+}
+
+fn cmd_unpack(rest: Vec<String>) -> i32 {
+    let a = Args::new("llvq unpack — expand a packed .llvqm to a dense .llvqw")
+        .flag("path", "", "input .llvqm file")
+        .flag("out", "", "output .llvqw path (default: input with .llvqw extension)")
+        .flag("threads", "0", "dequant workers (0 = auto)")
+        .flag("verify", "", "optional dense .llvqw to compare bit-exactly against")
+        .parse(rest.into_iter())
+        .unwrap();
+    let path = a.get("path").unwrap();
+    if path.is_empty() {
+        eprintln!("need --path <file.llvqm>");
+        return 2;
+    }
+    let path = std::path::PathBuf::from(path);
+    let packed = match PackedModel::load(&path) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let threads = match a.get_usize("threads") {
+        0 => threadpool::default_threads(),
+        n => n,
+    };
+    let t0 = std::time::Instant::now();
+    let w = match packed.unpack(threads) {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("unpack failed: {e}");
+            return 1;
+        }
+    };
+    let unpack_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let out = {
+        let o = a.get("out").unwrap();
+        if o.is_empty() {
+            path.with_extension("llvqw")
+        } else {
+            o.into()
+        }
+    };
+    if let Err(e) = model_io::save(&w, &out) {
+        eprintln!("save failed: {e}");
+        return 1;
+    }
+    let dense_len = model_io::dense_file_size(&w.cfg);
+    let packed_len = std::fs::metadata(&path).map(|m| m.len() as usize).unwrap_or(0);
+    println!(
+        "unpacked {} → {} in {unpack_ms:.0} ms ({threads} threads)",
+        path.display(),
+        out.display()
+    );
+    println!(
+        "unpack stats: {} | dense {} B",
+        packed_stats_line(packed_len, &packed, &w.cfg),
+        dense_len
+    );
+    let verify = a.get("verify").unwrap();
+    if !verify.is_empty() {
+        match model_io::load(std::path::Path::new(&verify)) {
+            Ok(reference) => {
+                let same = model_io::to_bytes(&reference) == model_io::to_bytes(&w);
+                println!(
+                    "verify vs {verify}: {}",
+                    if same { "bit-exact ✓" } else { "MISMATCH ✗" }
+                );
+                if !same {
+                    return 1;
+                }
+            }
+            Err(e) => {
+                eprintln!("verify load failed: {e}");
+                return 1;
+            }
+        }
+    }
     0
 }
 
@@ -297,6 +488,7 @@ fn cmd_eval(rest: Vec<String>) -> i32 {
 fn cmd_serve(rest: Vec<String>) -> i32 {
     let a = Args::new("llvq serve — batching inference server")
         .flag("path", "", "model .llvqw to serve")
+        .flag("packed", "", "packed .llvqm to serve (dequantized at load, block-parallel)")
         .flag("model", "llama2-tiny", "zoo name (artifacts/<name>.llvqw)")
         .flag("addr", "127.0.0.1:7199", "listen address")
         .flag("max-batch", "8", "dynamic batch limit")
@@ -305,8 +497,33 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
         .parse(rest.into_iter())
         .unwrap();
     let w = {
+        let packed_path = a.get("packed").unwrap();
         let p = a.get("path").unwrap();
-        if !p.is_empty() {
+        if !packed_path.is_empty() {
+            let path = std::path::PathBuf::from(&packed_path);
+            let packed = match PackedModel::load(&path) {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 1;
+                }
+            };
+            let t0 = std::time::Instant::now();
+            let w = match packed.unpack(threadpool::default_threads()) {
+                Ok(w) => w,
+                Err(e) => {
+                    eprintln!("unpack failed: {e}");
+                    return 1;
+                }
+            };
+            let file_len = std::fs::metadata(&path).map(|m| m.len() as usize).unwrap_or(0);
+            println!(
+                "loaded packed model in {:.0} ms: {}",
+                t0.elapsed().as_secs_f64() * 1e3,
+                packed_stats_line(file_len, &packed, &w.cfg)
+            );
+            w
+        } else if !p.is_empty() {
             match model_io::load(std::path::Path::new(&p)) {
                 Ok(w) => w,
                 Err(e) => {

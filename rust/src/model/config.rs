@@ -47,8 +47,38 @@ impl ModelConfig {
     }
 
     pub fn validate(&self) {
-        assert!(self.d_model % self.n_heads == 0, "head dim must divide");
-        assert!(self.vocab > 1 && self.max_seq > 1);
+        self.check().unwrap();
+    }
+
+    /// Non-panicking validation — the artifact parsers (`model::io`,
+    /// `model::packed`) run untrusted headers through this so a corrupt
+    /// file yields an `Err`, not an abort. The size ceiling also keeps
+    /// every derived `rows × cols × 4` product far from usize overflow.
+    pub fn check(&self) -> Result<(), String> {
+        const MAX_DIM: usize = 1 << 24;
+        let dims = [
+            ("vocab", self.vocab),
+            ("max_seq", self.max_seq),
+            ("d_model", self.d_model),
+            ("d_ff", self.d_ff),
+            ("n_layers", self.n_layers),
+            ("n_heads", self.n_heads),
+        ];
+        for (name, v) in dims {
+            if v == 0 || v > MAX_DIM {
+                return Err(format!("config {name}={v} out of range [1, {MAX_DIM}]"));
+            }
+        }
+        if self.vocab < 2 || self.max_seq < 2 {
+            return Err("config vocab and max_seq must be > 1".into());
+        }
+        if self.d_model % self.n_heads != 0 {
+            return Err(format!(
+                "d_model {} not divisible by n_heads {}",
+                self.d_model, self.n_heads
+            ));
+        }
+        Ok(())
     }
 }
 

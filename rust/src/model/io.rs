@@ -16,7 +16,7 @@ use crate::util::json::{self, Json};
 
 const MAGIC: &[u8; 8] = b"LLVQWTS1";
 
-fn header_json(cfg: &ModelConfig) -> Json {
+pub(crate) fn header_json(cfg: &ModelConfig) -> Json {
     Json::obj(vec![
         ("name", Json::Str(cfg.name.clone())),
         ("vocab", Json::Int(cfg.vocab as i64)),
@@ -28,7 +28,7 @@ fn header_json(cfg: &ModelConfig) -> Json {
     ])
 }
 
-fn config_from_header(j: &Json) -> Result<ModelConfig, String> {
+pub(crate) fn config_from_header(j: &Json) -> Result<ModelConfig, String> {
     let geti = |k: &str| -> Result<usize, String> {
         j.get(k)
             .and_then(|v| v.as_i64())
@@ -50,7 +50,7 @@ fn config_from_header(j: &Json) -> Result<ModelConfig, String> {
     })
 }
 
-fn push_f32s(buf: &mut Vec<u8>, v: &[f32]) {
+pub(crate) fn push_f32s(buf: &mut Vec<u8>, v: &[f32]) {
     for &x in v {
         buf.extend_from_slice(&x.to_le_bytes());
     }
@@ -80,6 +80,13 @@ pub fn to_bytes(w: &Weights) -> Vec<u8> {
     buf
 }
 
+/// Exact on-disk size of the dense `.llvqw` artifact for `cfg`, without
+/// serializing any weights — the pack/unpack stats lines use this instead
+/// of materializing a full dense copy just to measure it.
+pub fn dense_file_size(cfg: &ModelConfig) -> usize {
+    12 + header_json(cfg).to_string_compact().len() + 4 * cfg.num_params()
+}
+
 /// Parse weights from bytes.
 pub fn from_bytes(data: &[u8]) -> Result<Weights, String> {
     if data.len() < 12 || &data[..8] != MAGIC {
@@ -91,7 +98,7 @@ pub fn from_bytes(data: &[u8]) -> Result<Weights, String> {
     }
     let hdr = std::str::from_utf8(&data[12..12 + hlen]).map_err(|e| e.to_string())?;
     let cfg = config_from_header(&json::parse(hdr)?)?;
-    cfg.validate();
+    cfg.check()?;
     let mut off = 12 + hlen;
     let mut take = |n: usize| -> Result<Vec<f32>, String> {
         let bytes = n * 4;
@@ -169,6 +176,8 @@ mod tests {
         assert_eq!(back.blocks.len(), w.blocks.len());
         assert_eq!(back.blocks[1].w2, w.blocks[1].w2);
         assert_eq!(back.lm_head, w.lm_head);
+        // the analytic size must track the serializer exactly
+        assert_eq!(dense_file_size(&cfg), bytes.len());
     }
 
     #[test]

@@ -1,0 +1,567 @@
+//! The packed quantized-model format — `artifacts/<name>.llvqm`.
+//!
+//! This is where the paper's storage claim becomes real: the deployment
+//! artifact holds the **bijective lattice indices themselves** as bit
+//! streams (paper §3.3, "conversion to and from bitstrings without
+//! materializing the codebook"), not dequantized f32 tensors. A 2
+//! bits/weight model therefore occupies ≈ bits/32 of its dense `.llvqw`
+//! size on disk, plus the fp32 parts the paper also keeps dense
+//! (embeddings, norms, LM head).
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic "LLVQMDL1"
+//! u32   header length
+//! JSON  header { config, quantizer spec, per-layer metadata }
+//! per layer (header order):
+//!     rows × row_bytes   bit-packed code streams (MSB-first, row-aligned)
+//!     cols × f64         optional fine-tuned column scales β
+//! dense f32 section: tok_emb · pos_emb · per block [norm1, norm2] ·
+//!                    norm_f · lm_head
+//! ```
+//!
+//! Per-layer metadata records everything the PTQ driver applied around the
+//! quantizer — input scale σ, rotation mode + seed, fine-tuned scales — so
+//! [`PackedModel::unpack`] replays the exact same float operations and
+//! reproduces the driver's reconstructed weights **bit-exactly**. Rows
+//! decode independently (each row stream is byte-aligned), which is what
+//! lets the load path fan out over the thread pool.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::math::linalg::Matrix;
+use crate::model::config::ModelConfig;
+use crate::model::io;
+use crate::model::transformer::{BlockWeights, LinearKind, Weights, LINEAR_KINDS};
+use crate::pipeline::finetune;
+use crate::pipeline::rotation::{LayerRotation, RotationMode};
+use crate::quant::{product, quantizer_from_spec, Code, PackedCodes, VectorQuantizer};
+use crate::util::bits::BitReader;
+use crate::util::json::{self, Json};
+use crate::util::threadpool;
+
+const MAGIC: &[u8; 8] = b"LLVQMDL1";
+
+/// One quantized linear layer: packed codes plus the reconstruction
+/// metadata the PTQ driver applied around them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedLayer {
+    /// Transformer block index.
+    pub layer: usize,
+    pub kind: LinearKind,
+    pub rows: usize,
+    pub cols: usize,
+    /// Per-layer input scale σ (weights were quantized as w/σ).
+    pub sigma: f64,
+    pub rot_mode: RotationMode,
+    pub rot_seed: u64,
+    /// Fine-tuned per-column scales β (paper §5.4), when enabled.
+    pub col_scales: Option<Vec<f64>>,
+    pub codes: PackedCodes,
+}
+
+/// A whole quantized model in packed form: codes for every linear layer,
+/// fp32 for everything the paper keeps dense.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedModel {
+    pub cfg: ModelConfig,
+    /// Quantizer spec header ([`VectorQuantizer::spec`]); the load path
+    /// rebuilds the quantizer from this, never from a stored codebook.
+    pub quantizer: Json,
+    pub layers: Vec<PackedLayer>,
+    pub tok_emb: Vec<f32>,
+    pub pos_emb: Vec<f32>,
+    /// Per-block RMSNorm weights (norm1, norm2).
+    pub norms1: Vec<Vec<f32>>,
+    pub norms2: Vec<Vec<f32>>,
+    pub norm_f: Vec<f32>,
+    pub lm_head: Vec<f32>,
+}
+
+fn kind_to_str(k: LinearKind) -> &'static str {
+    k.label()
+}
+
+fn kind_from_str(s: &str) -> Option<LinearKind> {
+    LINEAR_KINDS.iter().copied().find(|k| k.label() == s)
+}
+
+fn rot_to_str(m: RotationMode) -> &'static str {
+    match m {
+        RotationMode::None => "none",
+        RotationMode::Input => "input",
+        RotationMode::InputOutput => "input+output",
+    }
+}
+
+fn rot_from_str(s: &str) -> Option<RotationMode> {
+    match s {
+        "none" => Some(RotationMode::None),
+        "input" => Some(RotationMode::Input),
+        "input+output" => Some(RotationMode::InputOutput),
+        _ => None,
+    }
+}
+
+fn take<'a>(data: &'a [u8], off: &mut usize, n: usize) -> Result<&'a [u8], String> {
+    // `data.len() - *off` never underflows (off only advances past checks)
+    // and, unlike `*off + n`, cannot overflow on a hostile header's n.
+    if n > data.len() - *off {
+        return Err(format!("truncated .llvqm at byte {}", *off));
+    }
+    let s = &data[*off..*off + n];
+    *off += n;
+    Ok(s)
+}
+
+fn take_f32s(data: &[u8], off: &mut usize, n: usize) -> Result<Vec<f32>, String> {
+    let bytes = n.checked_mul(4).ok_or("tensor size overflow")?;
+    let raw = take(data, off, bytes)?;
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn take_f64s(data: &[u8], off: &mut usize, n: usize) -> Result<Vec<f64>, String> {
+    let bytes = n.checked_mul(8).ok_or("tensor size overflow")?;
+    let raw = take(data, off, bytes)?;
+    Ok(raw
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+impl PackedModel {
+    /// Total bytes of code payload (excluding header, scales, and the
+    /// dense fp32 section).
+    pub fn code_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.codes.data.len()).sum()
+    }
+
+    /// Exact code bits over the quantized linear parameters.
+    pub fn code_bits(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| l.rows as u64 * l.codes.blocks_per_row as u64 * l.codes.code_bits as u64)
+            .sum()
+    }
+
+    /// Linear parameters covered by codes.
+    pub fn linear_params(&self) -> usize {
+        self.layers.iter().map(|l| l.rows * l.cols).sum()
+    }
+
+    /// Serialize to the `.llvqm` byte format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let layer_rows: Vec<Json> = self
+            .layers
+            .iter()
+            .map(|pl| {
+                Json::obj(vec![
+                    ("layer", Json::Int(pl.layer as i64)),
+                    ("kind", Json::Str(kind_to_str(pl.kind).into())),
+                    ("rows", Json::Int(pl.rows as i64)),
+                    ("cols", Json::Int(pl.cols as i64)),
+                    ("sigma", Json::Num(pl.sigma)),
+                    ("rot_mode", Json::Str(rot_to_str(pl.rot_mode).into())),
+                    ("rot_seed", Json::Int(pl.rot_seed as i64)),
+                    ("code_bits", Json::Int(pl.codes.code_bits as i64)),
+                    (
+                        "blocks_per_row",
+                        Json::Int(pl.codes.blocks_per_row as i64),
+                    ),
+                    ("row_bytes", Json::Int(pl.codes.row_bytes as i64)),
+                    ("code_bytes", Json::Int(pl.codes.data.len() as i64)),
+                    ("has_scales", Json::Bool(pl.col_scales.is_some())),
+                ])
+            })
+            .collect();
+        let hdr = Json::obj(vec![
+            ("config", io::header_json(&self.cfg)),
+            ("quantizer", self.quantizer.clone()),
+            ("layers", Json::Arr(layer_rows)),
+        ])
+        .to_string_compact();
+
+        let mut buf = Vec::with_capacity(hdr.len() + 64 + self.code_bytes());
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&(hdr.len() as u32).to_le_bytes());
+        buf.extend_from_slice(hdr.as_bytes());
+        for pl in &self.layers {
+            buf.extend_from_slice(&pl.codes.data);
+            if let Some(beta) = &pl.col_scales {
+                for &b in beta {
+                    buf.extend_from_slice(&b.to_le_bytes());
+                }
+            }
+        }
+        io::push_f32s(&mut buf, &self.tok_emb);
+        io::push_f32s(&mut buf, &self.pos_emb);
+        for (n1, n2) in self.norms1.iter().zip(&self.norms2) {
+            io::push_f32s(&mut buf, n1);
+            io::push_f32s(&mut buf, n2);
+        }
+        io::push_f32s(&mut buf, &self.norm_f);
+        io::push_f32s(&mut buf, &self.lm_head);
+        buf
+    }
+
+    /// Parse the `.llvqm` byte format, validating every section length.
+    pub fn from_bytes(data: &[u8]) -> Result<Self, String> {
+        if data.len() < 12 || &data[..8] != MAGIC {
+            return Err("bad .llvqm magic".into());
+        }
+        let hlen = u32::from_le_bytes(data[8..12].try_into().unwrap()) as usize;
+        if 12 + hlen > data.len() {
+            return Err("truncated .llvqm header".into());
+        }
+        let hdr_text =
+            std::str::from_utf8(&data[12..12 + hlen]).map_err(|e| e.to_string())?;
+        let hdr = json::parse(hdr_text)?;
+        let cfg = io::config_from_header(
+            hdr.get("config").ok_or("header missing 'config'")?,
+        )?;
+        cfg.check()?;
+        let quantizer = hdr
+            .get("quantizer")
+            .ok_or("header missing 'quantizer'")?
+            .clone();
+        let layer_rows = hdr
+            .get("layers")
+            .and_then(|v| v.as_arr())
+            .ok_or("header missing 'layers' array")?;
+
+        let mut off = 12 + hlen;
+        let mut layers = Vec::with_capacity(layer_rows.len());
+        for (i, row) in layer_rows.iter().enumerate() {
+            let geti = |k: &str| -> Result<i64, String> {
+                row.get(k)
+                    .and_then(|v| v.as_i64())
+                    .ok_or_else(|| format!("layer {i}: missing int '{k}'"))
+            };
+            // size fields must be non-negative and small enough that no
+            // product below can overflow (cfg dims are already ≤ 2^24)
+            let getsize = |k: &str| -> Result<usize, String> {
+                match geti(k)? {
+                    v if (0..=1 << 40).contains(&v) => Ok(v as usize),
+                    v => Err(format!("layer {i}: '{k}' = {v} out of range")),
+                }
+            };
+            let kind = row
+                .get("kind")
+                .and_then(|v| v.as_str())
+                .and_then(kind_from_str)
+                .ok_or_else(|| format!("layer {i}: missing or unknown kind"))?;
+            let rot_mode = row
+                .get("rot_mode")
+                .and_then(|v| v.as_str())
+                .and_then(rot_from_str)
+                .ok_or_else(|| format!("layer {i}: missing or unknown rot_mode"))?;
+            let sigma = row
+                .get("sigma")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| format!("layer {i}: missing sigma"))?;
+            let rows = getsize("rows")?;
+            let cols = getsize("cols")?;
+            let row_bytes = getsize("row_bytes")?;
+            let code_bytes = getsize("code_bytes")?;
+            if rows.checked_mul(row_bytes) != Some(code_bytes) {
+                return Err(format!(
+                    "layer {i}: code_bytes {code_bytes} != rows {rows} × row_bytes {row_bytes}"
+                ));
+            }
+            let code_bits = getsize("code_bits")?;
+            if code_bits > u32::MAX as usize {
+                return Err(format!("layer {i}: code_bits {code_bits} out of range"));
+            }
+            let codes = PackedCodes {
+                code_bits: code_bits as u32,
+                blocks_per_row: getsize("blocks_per_row")?,
+                row_bytes,
+                data: take(data, &mut off, code_bytes)?.to_vec(),
+            };
+            let has_scales = matches!(row.get("has_scales"), Some(Json::Bool(true)));
+            let col_scales = if has_scales {
+                Some(take_f64s(data, &mut off, cols)?)
+            } else {
+                None
+            };
+            layers.push(PackedLayer {
+                layer: getsize("layer")?,
+                kind,
+                rows,
+                cols,
+                sigma,
+                rot_mode,
+                rot_seed: geti("rot_seed")? as u64,
+                col_scales,
+                codes,
+            });
+        }
+
+        let d = cfg.d_model;
+        let tok_emb = take_f32s(data, &mut off, cfg.vocab * d)?;
+        let pos_emb = take_f32s(data, &mut off, cfg.max_seq * d)?;
+        let mut norms1 = Vec::with_capacity(cfg.n_layers);
+        let mut norms2 = Vec::with_capacity(cfg.n_layers);
+        for _ in 0..cfg.n_layers {
+            norms1.push(take_f32s(data, &mut off, d)?);
+            norms2.push(take_f32s(data, &mut off, d)?);
+        }
+        let norm_f = take_f32s(data, &mut off, d)?;
+        let lm_head = take_f32s(data, &mut off, cfg.vocab * d)?;
+        if off != data.len() {
+            return Err(format!(
+                "trailing bytes: consumed {off}, file has {}",
+                data.len()
+            ));
+        }
+        Ok(Self {
+            cfg,
+            quantizer,
+            layers,
+            tok_emb,
+            pos_emb,
+            norms1,
+            norms2,
+            norm_f,
+            lm_head,
+        })
+    }
+
+    /// Dequantize the whole model back into dense [`Weights`], replaying
+    /// the driver's reconstruction (σ scaling → fine-tuned column scales →
+    /// inverse rotation) bit-exactly. Rows of each layer decode in
+    /// parallel over `threads` workers.
+    pub fn unpack(&self, threads: usize) -> Result<Weights, String> {
+        let q = quantizer_from_spec(&self.quantizer)?;
+        let cfg = &self.cfg;
+        if self.layers.len() != cfg.n_layers * LINEAR_KINDS.len() {
+            return Err(format!(
+                "packed model has {} layers, config implies {}",
+                self.layers.len(),
+                cfg.n_layers * LINEAR_KINDS.len()
+            ));
+        }
+        let d = cfg.d_model;
+        let mut blocks: Vec<BlockWeights> = (0..cfg.n_layers)
+            .map(|li| BlockWeights {
+                norm1: self.norms1[li].clone(),
+                wq: Vec::new(),
+                wk: Vec::new(),
+                wv: Vec::new(),
+                wo: Vec::new(),
+                norm2: self.norms2[li].clone(),
+                w1: Vec::new(),
+                w2: Vec::new(),
+            })
+            .collect();
+        for pl in &self.layers {
+            if pl.layer >= cfg.n_layers {
+                return Err(format!("layer index {} out of range", pl.layer));
+            }
+            let (rows, cols) = pl.kind.shape(cfg);
+            if (rows, cols) != (pl.rows, pl.cols) {
+                return Err(format!(
+                    "layer {} {:?}: shape {}×{} does not match config {}×{}",
+                    pl.layer, pl.kind, pl.rows, pl.cols, rows, cols
+                ));
+            }
+            let dst = blocks[pl.layer].linear_mut(pl.kind);
+            if !dst.is_empty() {
+                return Err(format!("duplicate layer {} {:?}", pl.layer, pl.kind));
+            }
+            *dst = unpack_layer(q.as_ref(), pl, threads)?;
+        }
+        if self.tok_emb.len() != cfg.vocab * d || self.lm_head.len() != cfg.vocab * d {
+            return Err("dense tensor size mismatch".into());
+        }
+        Ok(Weights {
+            cfg: cfg.clone(),
+            tok_emb: self.tok_emb.clone(),
+            pos_emb: self.pos_emb.clone(),
+            blocks,
+            norm_f: self.norm_f.clone(),
+            lm_head: self.lm_head.clone(),
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(&self.to_bytes())
+    }
+
+    pub fn load(path: &Path) -> Result<Self, String> {
+        let mut data = Vec::new();
+        std::fs::File::open(path)
+            .map_err(|e| format!("open {}: {e}", path.display()))?
+            .read_to_end(&mut data)
+            .map_err(|e| e.to_string())?;
+        Self::from_bytes(&data)
+    }
+}
+
+/// Dequantize one packed layer to its row-major reconstruction — the same
+/// float-op sequence as the PTQ driver, hence bit-exact agreement with the
+/// weights it kept for evaluation. Row streams decode block-parallel over
+/// the thread pool.
+pub fn unpack_layer(
+    q: &dyn VectorQuantizer,
+    pl: &PackedLayer,
+    threads: usize,
+) -> Result<Vec<f32>, String> {
+    let d = q.dim();
+    let nblocks = pl.cols.div_ceil(d);
+    if nblocks != pl.codes.blocks_per_row {
+        return Err(format!(
+            "blocks_per_row {} does not match cols {} / quantizer dim {}",
+            pl.codes.blocks_per_row, pl.cols, d
+        ));
+    }
+    let widths = q.code_widths();
+    if widths.iter().sum::<u32>() != pl.codes.code_bits {
+        return Err(format!(
+            "quantizer code width {} != recorded code_bits {}",
+            widths.iter().sum::<u32>(),
+            pl.codes.code_bits
+        ));
+    }
+    let rb = pl.codes.row_bytes;
+    if pl.codes.data.len() != pl.rows * rb
+        || rb < ((nblocks as u64 * pl.codes.code_bits as u64).div_ceil(8)) as usize
+    {
+        return Err("packed payload size mismatch".into());
+    }
+
+    // 1) decode rows in parallel: codes → blocks → ×σ (exactly as gptq)
+    let rows_out: Vec<Vec<f32>> = threadpool::parallel_map(pl.rows, threads, |r| {
+        let mut br = BitReader::new(&pl.codes.data[r * rb..(r + 1) * rb]);
+        let mut code = Code::empty();
+        let mut scratch = vec![0f32; d];
+        let mut out = vec![0f32; pl.cols];
+        product::decode_row_with(q, &widths, &mut br, &mut code, &mut scratch, &mut out);
+        for v in out.iter_mut() {
+            *v = (*v as f64 * pl.sigma) as f32;
+        }
+        out
+    });
+    let mut flat = vec![0f32; pl.rows * pl.cols];
+    for (r, row) in rows_out.iter().enumerate() {
+        flat[r * pl.cols..(r + 1) * pl.cols].copy_from_slice(row);
+    }
+
+    // 2) fine-tuned column scales (if the driver applied them)
+    if let Some(beta) = &pl.col_scales {
+        if beta.len() != pl.cols {
+            return Err("column scale count mismatch".into());
+        }
+        finetune::apply_column_scales(&mut flat, pl.cols, beta);
+    }
+
+    // 3) undo the incoherence rotation in f64, as the driver did
+    let rot = LayerRotation::new(pl.rot_mode, pl.cols, pl.rows, pl.rot_seed);
+    let mut rec = Matrix::zeros(pl.rows, pl.cols);
+    for (dst, &s) in rec.data.iter_mut().zip(flat.iter()) {
+        *dst = s as f64;
+    }
+    rot.unrotate_weights(&mut rec);
+    for (dst, &s) in flat.iter_mut().zip(rec.data.iter()) {
+        *dst = s as f32;
+    }
+    Ok(flat)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::config_by_name;
+    use crate::pipeline::driver::{quantize_model_packed, PtqOptions};
+    use crate::quant::scalar::UniformQuantizer;
+
+    fn packed_fixture() -> (crate::pipeline::driver::PtqArtifacts, ModelConfig) {
+        let cfg = config_by_name("qwen3-4b-tiny").unwrap();
+        let w = Weights::random(&cfg, 21);
+        let q = UniformQuantizer::new_gaussian_optimal(4);
+        let opts = PtqOptions {
+            calib_seqs: 4,
+            finetune_scales: true,
+            ..Default::default()
+        };
+        (quantize_model_packed(&w, &q, &opts), cfg)
+    }
+
+    #[test]
+    fn bytes_roundtrip_and_unpack_is_bit_exact() {
+        let (art, cfg) = packed_fixture();
+        let bytes = art.packed.to_bytes();
+        let back = PackedModel::from_bytes(&bytes).unwrap();
+        assert_eq!(back.cfg, cfg);
+        assert_eq!(back, art.packed);
+        let wq = back.unpack(3).unwrap();
+        assert_eq!(wq.tok_emb, art.weights.tok_emb);
+        for (a, b) in wq.blocks.iter().zip(&art.weights.blocks) {
+            assert_eq!(a.wq, b.wq);
+            assert_eq!(a.wk, b.wk);
+            assert_eq!(a.wv, b.wv);
+            assert_eq!(a.wo, b.wo);
+            assert_eq!(a.w1, b.w1);
+            assert_eq!(a.w2, b.w2);
+            assert_eq!(a.norm1, b.norm1);
+            assert_eq!(a.norm2, b.norm2);
+        }
+        assert_eq!(wq.lm_head, art.weights.lm_head);
+        // unpack must be thread-count independent too
+        let wq1 = back.unpack(1).unwrap();
+        assert_eq!(wq1.blocks[0].wq, wq.blocks[0].wq);
+    }
+
+    #[test]
+    fn packed_is_much_smaller_than_dense() {
+        let (art, _) = packed_fixture();
+        let packed_len = art.packed.to_bytes().len();
+        let dense_len = crate::model::io::to_bytes(&art.weights).len();
+        // 4-bit codes + fp32 dense parts + scales: well under half
+        assert!(
+            (packed_len as f64) < 0.5 * dense_len as f64,
+            "packed {packed_len} vs dense {dense_len}"
+        );
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let (art, _) = packed_fixture();
+        let mut bytes = art.packed.to_bytes();
+        assert!(PackedModel::from_bytes(&bytes[..64]).is_err()); // truncated
+        let n = bytes.len();
+        bytes.truncate(n - 3);
+        assert!(PackedModel::from_bytes(&bytes).is_err()); // short dense tail
+        let mut bad_magic = art.packed.to_bytes();
+        bad_magic[0] = b'X';
+        assert!(PackedModel::from_bytes(&bad_magic).is_err());
+        let mut trailing = art.packed.to_bytes();
+        trailing.extend_from_slice(&[0, 0, 0, 0]);
+        assert!(PackedModel::from_bytes(&trailing).is_err());
+    }
+
+    #[test]
+    fn rejects_hostile_header_without_panicking() {
+        // negative size fields in the JSON header must yield Err, not a
+        // wrapped-arithmetic panic deep in the section parser
+        let (art, _) = packed_fixture();
+        let bytes = art.packed.to_bytes();
+        let hlen = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        for field in ["\"rows\":", "\"code_bytes\":", "\"d_model\":"] {
+            let mut tampered = bytes.clone();
+            let hdr = std::str::from_utf8(&tampered[12..12 + hlen]).unwrap();
+            let pos = 12 + hdr.find(field).unwrap() + field.len();
+            tampered[pos] = b'-'; // first digit → minus sign
+            assert!(
+                PackedModel::from_bytes(&tampered).is_err(),
+                "tampered {field} accepted"
+            );
+        }
+    }
+}

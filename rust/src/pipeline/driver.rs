@@ -7,10 +7,17 @@
 //! for layer ℓ come from the ORIGINAL model, the standard layer-local GPTQ
 //! setup — §D.2 "local vs global"), while rows inside a layer fan out over
 //! the thread pool.
+//!
+//! The driver's primary output is a [`PackedModel`]: the bit-packed lattice
+//! codes plus the per-layer reconstruction metadata (σ, rotation seed,
+//! fine-tuned scales) — the deployment artifact of the `.llvqm` format. The
+//! dense reconstruction is kept alongside for evaluation; `PackedModel::
+//! unpack` reproduces it bit-exactly.
 
 use std::collections::HashMap;
 
 use crate::model::corpus::Corpus;
+use crate::model::packed::{PackedLayer, PackedModel};
 use crate::model::transformer::{forward, ActivationCapture, LinearKind, Weights, LINEAR_KINDS};
 use crate::pipeline::finetune;
 use crate::pipeline::gptq::{self, GptqConfig};
@@ -79,18 +86,59 @@ pub fn calibrate(w: &Weights, opts: &PtqOptions) -> ActivationCapture {
     cap
 }
 
-/// Quantize every linear layer of the model; returns the quantized model
-/// and the report. Embeddings, norms, and the LM head stay in f32 (as in
-/// the paper, whose bpw covers linear weights).
-pub fn quantize_model(
+/// Everything one PTQ run produces: the dense reconstruction (for eval),
+/// the packed `.llvqm` artifact (for deployment), and the report.
+pub struct PtqArtifacts {
+    pub weights: Weights,
+    pub report: PtqReport,
+    pub packed: PackedModel,
+}
+
+/// Quantize every linear layer of the model. Embeddings, norms, and the
+/// LM head stay in f32 (as in the paper, whose bpw covers linear weights).
+///
+/// Returns the dense reconstruction **and** the [`PackedModel`] built from
+/// the very codes the GPTQ pass committed — `packed.unpack(..)` reproduces
+/// `weights` bit-exactly (the σ scaling, fine-tuned column scales, and
+/// inverse rotation are replayed in the same float-op order).
+pub fn quantize_model_packed(
     w: &Weights,
     q: &dyn VectorQuantizer,
     opts: &PtqOptions,
-) -> (Weights, PtqReport) {
+) -> PtqArtifacts {
+    let (out, report, packed_layers) = quantize_model_core(w, q, opts);
+    let packed = PackedModel {
+        cfg: w.cfg.clone(),
+        quantizer: q.spec(),
+        layers: packed_layers,
+        tok_emb: out.tok_emb.clone(),
+        pos_emb: out.pos_emb.clone(),
+        norms1: out.blocks.iter().map(|b| b.norm1.clone()).collect(),
+        norms2: out.blocks.iter().map(|b| b.norm2.clone()).collect(),
+        norm_f: out.norm_f.clone(),
+        lm_head: out.lm_head.clone(),
+    };
+    PtqArtifacts {
+        weights: out,
+        report,
+        packed,
+    }
+}
+
+/// Shared PTQ loop. Collecting [`PackedLayer`]s is free (the code streams
+/// already exist inside each gptq result); the fp32 clones that assemble a
+/// [`PackedModel`] are not, so dense-only callers ([`quantize_model`])
+/// stop here.
+fn quantize_model_core(
+    w: &Weights,
+    q: &dyn VectorQuantizer,
+    opts: &PtqOptions,
+) -> (Weights, PtqReport, Vec<PackedLayer>) {
     let t0 = std::time::Instant::now();
     let cap = calibrate(w, opts);
     let mut out = w.clone();
     let mut report = PtqReport::default();
+    let mut packed_layers: Vec<PackedLayer> = Vec::with_capacity(w.cfg.n_layers * 6);
 
     for li in 0..w.cfg.n_layers {
         for kind in LINEAR_KINDS {
@@ -105,13 +153,10 @@ pub fn quantize_model(
             acc.add_batch(x, cols);
             let mut h = acc.finalize();
 
-            // rotation (deterministic per layer/kind so eval reproduces)
-            let rot = LayerRotation::new(
-                opts.rotation,
-                cols,
-                rows,
-                opts.seed ^ ((li as u64) << 8) ^ kind_tag(kind),
-            );
+            // rotation (deterministic per layer/kind so eval — and the
+            // packed load path — reproduces it from the recorded seed)
+            let rot_seed = opts.seed ^ ((li as u64) << 8) ^ kind_tag(kind);
+            let rot = LayerRotation::new(opts.rotation, cols, rows, rot_seed);
             let mut wmat = crate::math::linalg::Matrix::zeros(rows, cols);
             {
                 let src = w.blocks[li].linear(kind);
@@ -126,10 +171,13 @@ pub fn quantize_model(
             let result = gptq::quantize_layer(&wf, rows, cols, &h, q, &opts.gptq);
             let mut w_hat = result.w_hat;
 
-            if opts.finetune_scales {
+            let col_scales = if opts.finetune_scales {
                 let beta = finetune::optimal_column_scales(&wf, &w_hat, rows, cols, &h);
                 finetune::apply_column_scales(&mut w_hat, cols, &beta);
-            }
+                Some(beta)
+            } else {
+                None
+            };
 
             // un-rotate the reconstruction back to model coordinates
             let mut rec = crate::math::linalg::Matrix::zeros(rows, cols);
@@ -142,6 +190,17 @@ pub fn quantize_model(
                 *d = s as f32;
             }
 
+            packed_layers.push(PackedLayer {
+                layer: li,
+                kind,
+                rows,
+                cols,
+                sigma: result.sigma,
+                rot_mode: opts.rotation,
+                rot_seed,
+                col_scales,
+                codes: result.packed,
+            });
             report.layers.push(LayerReport {
                 layer: li,
                 kind,
@@ -154,6 +213,18 @@ pub fn quantize_model(
         }
     }
     report.wall_secs = t0.elapsed().as_secs_f64();
+    (out, report, packed_layers)
+}
+
+/// Compatibility entry for callers that only need the dense
+/// reconstruction (experiments, examples, tests) — skips the fp32 clones
+/// of [`quantize_model_packed`]'s artifact assembly.
+pub fn quantize_model(
+    w: &Weights,
+    q: &dyn VectorQuantizer,
+    opts: &PtqOptions,
+) -> (Weights, PtqReport) {
+    let (out, report, _) = quantize_model_core(w, q, opts);
     (out, report)
 }
 
@@ -205,9 +276,15 @@ mod tests {
             rotation: RotationMode::Input,
             ..Default::default()
         };
-        let (wq, rep) = quantize_model(&w, &q, &opts);
+        let art = quantize_model_packed(&w, &q, &opts);
+        let (wq, rep) = (art.weights, art.report);
         assert_eq!(rep.total_params, cfg.num_linear_params());
         assert!((rep.bits_per_weight() - 4.0).abs() < 1e-9);
+        // the packed artifact covers every linear layer with exact bit
+        // accounting (padding lanes included in the payload, not the rate)
+        assert_eq!(art.packed.layers.len(), rep.layers.len());
+        assert_eq!(art.packed.linear_params(), rep.total_params);
+        assert!(art.packed.code_bits() >= rep.total_bits);
         // quantized model still runs
         let m = evaluate(&wq, 2, 2000, 1);
         assert!(m.perplexity.is_finite());

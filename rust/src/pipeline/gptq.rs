@@ -18,7 +18,8 @@
 //! over the thread pool.
 
 use crate::math::linalg::Matrix;
-use crate::quant::VectorQuantizer;
+use crate::quant::{write_code_with, Code, PackedCodes, VectorQuantizer};
+use crate::util::bits::BitWriter;
 use crate::util::threadpool;
 
 /// Per-layer quantization result.
@@ -29,6 +30,13 @@ pub struct QuantizedLayer {
     pub total_bits: u64,
     /// Tr(ΔW·H·ΔWᵀ) proxy loss after correction (diagnostic).
     pub proxy_loss: f64,
+    /// Per-layer input scale applied before quantization (`w_hat` is
+    /// already multiplied back); recorded in the packed artifact so the
+    /// load path reproduces the reconstruction bit-exactly.
+    pub sigma: f64,
+    /// The codes themselves, bit-packed per row — the payload of the
+    /// `.llvqm` packed-model format.
+    pub packed: PackedCodes,
 }
 
 /// Configuration for the correction pass.
@@ -124,9 +132,18 @@ pub fn quantize_layer(
         correction.push(m);
     }
 
-    // Row-parallel quantization with error propagation.
-    let w_hat: Vec<std::sync::Mutex<Vec<f32>>> =
-        (0..rows).map(|_| std::sync::Mutex::new(Vec::new())).collect();
+    // Codec geometry for the packed payload: every row becomes one
+    // byte-aligned MSB-first stream so the load path can decode rows in
+    // parallel from fixed byte offsets.
+    let widths = q.code_widths();
+    let code_bits: u32 = widths.iter().sum();
+    let row_bytes = ((nblocks as u64 * code_bits as u64).div_ceil(8)) as usize;
+
+    // Row-parallel quantization with error propagation. Each row slot
+    // holds (reconstructed weights, packed code stream).
+    let w_hat: Vec<std::sync::Mutex<(Vec<f32>, Vec<u8>)>> = (0..rows)
+        .map(|_| std::sync::Mutex::new((Vec::new(), Vec::new())))
+        .collect();
     let bits_acc = std::sync::atomic::AtomicU64::new(0);
 
     threadpool::parallel_dynamic(rows, cfg.threads, 4, |r| {
@@ -138,6 +155,10 @@ pub fn quantize_layer(
         let mut bits = 0u64;
         let mut blk_in = vec![0f32; d];
         let mut blk_out = vec![0f32; d];
+        // one scratch code + one bit stream per row: the block loop never
+        // allocates (`quantize_into` reuses the words buffer)
+        let mut code = Code::empty();
+        let mut stream = BitWriter::with_capacity(row_bytes);
         for b in 0..nblocks {
             let lo = b * d;
             let hi = ((b + 1) * d).min(cols);
@@ -148,8 +169,9 @@ pub fn quantize_layer(
             for v in blk_in[bw..].iter_mut() {
                 *v = 0.0;
             }
-            let code = q.quantize(&blk_in);
+            q.quantize_into(&blk_in, &mut code);
             bits += code.bits as u64;
+            write_code_with(&widths, &code, &mut stream);
             q.dequantize(&code, &mut blk_out);
             for i in 0..bw {
                 out[lo + i] = blk_out[i];
@@ -174,21 +196,32 @@ pub fn quantize_layer(
         for v in out.iter_mut() {
             *v = (*v as f64 * sigma) as f32;
         }
+        let row_stream = stream.finish();
+        debug_assert_eq!(row_stream.len(), row_bytes);
         bits_acc.fetch_add(bits, std::sync::atomic::Ordering::Relaxed);
-        *w_hat[r].lock().unwrap() = out;
+        *w_hat[r].lock().unwrap() = (out, row_stream);
     });
 
     // assemble + proxy loss
     let mut flat = vec![0f32; rows * cols];
+    let mut data = vec![0u8; rows * row_bytes];
     for (r, m) in w_hat.iter().enumerate() {
         let v = m.lock().unwrap();
-        flat[r * cols..(r + 1) * cols].copy_from_slice(&v);
+        flat[r * cols..(r + 1) * cols].copy_from_slice(&v.0);
+        data[r * row_bytes..(r + 1) * row_bytes].copy_from_slice(&v.1);
     }
     let proxy_loss = proxy_loss(w, &flat, rows, cols, h);
     QuantizedLayer {
         w_hat: flat,
         total_bits: bits_acc.into_inner(),
         proxy_loss,
+        sigma,
+        packed: PackedCodes {
+            code_bits,
+            blocks_per_row: nblocks,
+            row_bytes,
+            data,
+        },
     }
 }
 
@@ -297,5 +330,31 @@ mod tests {
         let b = quantize_layer(&w, 12, 24, &h, &q, &GptqConfig { threads: 8, ..Default::default() });
         assert_eq!(a.w_hat, b.w_hat);
         assert_eq!(a.total_bits, b.total_bits);
+        assert_eq!(a.packed, b.packed);
+    }
+
+    #[test]
+    fn packed_codes_reproduce_w_hat_bit_exactly() {
+        // decoding the per-row bitstreams and re-applying σ must land on
+        // exactly the reconstruction the pipeline produced
+        let (w, h) = random_problem(6, 48, 13);
+        let q = UniformQuantizer::new_gaussian_optimal(3);
+        let out = quantize_layer(&w, 6, 48, &h, &q, &GptqConfig::default());
+        let widths = q.code_widths();
+        let nblocks = out.packed.blocks_per_row;
+        assert_eq!(nblocks, 48);
+        assert_eq!(out.packed.rows(), 6);
+        let mut code = crate::quant::Code::empty();
+        let mut blk = vec![0f32; q.dim()];
+        for r in 0..6 {
+            let rb = out.packed.row_bytes;
+            let mut br = crate::util::bits::BitReader::new(&out.packed.data[r * rb..(r + 1) * rb]);
+            for b in 0..nblocks {
+                crate::quant::read_code_with(&widths, &mut br, &mut code);
+                q.dequantize(&code, &mut blk);
+                let got = (blk[0] as f64 * out.sigma) as f32;
+                assert_eq!(got, out.w_hat[r * 48 + b], "row {r} block {b}");
+            }
+        }
     }
 }

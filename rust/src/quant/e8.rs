@@ -18,6 +18,7 @@
 use std::collections::HashMap;
 
 use crate::quant::{Code, VectorQuantizer};
+use crate::util::json::Json;
 use crate::util::rng::Xoshiro256pp;
 
 const D8: usize = 8;
@@ -111,6 +112,15 @@ impl E8Codebook {
     /// Enumerate E₈ points ordered by the cut functional and keep exactly
     /// 2^16, then optimize the Gaussian scale.
     pub fn new(cut: E8Cut) -> Self {
+        let mut cb = Self::with_scale(cut, 1.0);
+        cb.scale = cb.optimize_scale();
+        cb
+    }
+
+    /// Build the (deterministic) codebook with an explicit scale, skipping
+    /// scale optimization — the `.llvqm` load path, where the scale comes
+    /// from the serialized spec.
+    pub fn with_scale(cut: E8Cut, scale: f64) -> Self {
         let target = 1usize << 16;
         // enumerate all points with doubled norm² ≤ bound (bound chosen to
         // comfortably exceed 2^16 points: E8 cumulative counts reach 117k
@@ -159,15 +169,13 @@ impl E8Codebook {
         for (i, p) in pts.iter().enumerate() {
             index_of.insert(*p, i as u32);
         }
-        let mut cb = Self {
+        Self {
             cut,
-            scale: 1.0,
+            scale,
             points: pts,
             index_of,
             max_norm2_doubled,
-        };
-        cb.scale = cb.optimize_scale();
-        cb
+        }
     }
 
     /// Golden-section search for the Gaussian-MSE-optimal input scale.
@@ -246,15 +254,20 @@ impl VectorQuantizer for E8Codebook {
     }
 
     fn quantize(&self, x: &[f32]) -> Code {
+        let mut code = Code::empty();
+        self.quantize_into(x, &mut code);
+        code
+    }
+
+    fn quantize_into(&self, x: &[f32], code: &mut Code) {
         let mut t = [0f64; D8];
         for i in 0..D8 {
             t[i] = x[i] as f64 / self.scale;
         }
         let p = self.nearest_in_book(&t);
-        Code {
-            words: vec![self.index_of[&p] as u64],
-            bits: 16,
-        }
+        code.words.clear();
+        code.words.push(self.index_of[&p] as u64);
+        code.bits = 16;
     }
 
     fn dequantize(&self, code: &Code, out: &mut [f32]) {
@@ -262,6 +275,26 @@ impl VectorQuantizer for E8Codebook {
         for i in 0..D8 {
             out[i] = (p[i] as f64 * 0.5 * self.scale) as f32;
         }
+    }
+
+    fn code_widths(&self) -> Vec<u32> {
+        vec![16]
+    }
+
+    fn spec(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str("e8".into())),
+            ("name", Json::Str(self.name())),
+            ("dim", Json::Int(D8 as i64)),
+            (
+                "cut",
+                Json::Str(match self.cut {
+                    E8Cut::Ball => "ball".into(),
+                    E8Cut::Cube => "cube".into(),
+                }),
+            ),
+            ("scale", Json::Num(self.scale)),
+        ])
     }
 
     fn name(&self) -> String {

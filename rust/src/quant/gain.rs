@@ -12,6 +12,7 @@
 
 use crate::math::stats;
 use crate::quant::{Code, VectorQuantizer};
+use crate::util::json::Json;
 
 /// Scalar quantizer over gains with a χ_k-matched codebook.
 #[derive(Clone, Debug)]
@@ -24,6 +25,13 @@ pub struct ChiGainQuantizer {
 impl ChiGainQuantizer {
     pub fn new(k: usize, bits: u32) -> Self {
         let levels = stats::chi_gain_codebook(k, 1usize << bits);
+        Self { bits, levels }
+    }
+
+    /// Rebuild from serialized levels (the `.llvqm` load path) — exact,
+    /// including any [`ChiGainQuantizer::scaled`] correction baked in.
+    pub fn from_levels(bits: u32, levels: Vec<f64>) -> Self {
+        assert_eq!(levels.len(), 1usize << bits, "level count vs bits");
         Self { bits, levels }
     }
 
@@ -71,8 +79,28 @@ impl VectorQuantizer for ChiGainQuantizer {
         }
     }
 
+    fn quantize_into(&self, x: &[f32], code: &mut Code) {
+        code.words.clear();
+        code.words.push(self.nearest(x[0] as f64) as u64);
+        code.bits = self.bits;
+    }
+
     fn dequantize(&self, code: &Code, out: &mut [f32]) {
         out[0] = self.levels[code.words[0] as usize] as f32;
+    }
+
+    fn code_widths(&self) -> Vec<u32> {
+        vec![self.bits]
+    }
+
+    fn spec(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str("chi-gain".into())),
+            ("name", Json::Str(self.name())),
+            ("dim", Json::Int(1)),
+            ("bits", Json::Int(self.bits as i64)),
+            ("levels", Json::arr_f64(&self.levels)),
+        ])
     }
 
     fn name(&self) -> String {

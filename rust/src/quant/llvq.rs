@@ -20,6 +20,7 @@ use crate::leech::decode::LeechDecoder;
 use crate::leech::index::LeechIndexer;
 use crate::quant::gain::ChiGainQuantizer;
 use crate::quant::{Code, VectorQuantizer};
+use crate::util::json::Json;
 use crate::util::rng::Xoshiro256pp;
 use crate::DIM;
 
@@ -124,6 +125,12 @@ impl VectorQuantizer for LlvqSpherical {
     }
 
     fn quantize(&self, x: &[f32]) -> Code {
+        let mut code = Code::empty();
+        self.quantize_into(x, &mut code);
+        code
+    }
+
+    fn quantize_into(&self, x: &[f32], code: &mut Code) {
         let mut t = [0f64; DIM];
         for i in 0..DIM {
             t[i] = x[i] as f64 * SQRT8 / self.scale;
@@ -134,10 +141,9 @@ impl VectorQuantizer for LlvqSpherical {
             .indexer
             .encode_point(&d.point)
             .expect("in-ball decode produced unindexable point");
-        Code {
-            words: vec![idx],
-            bits: self.bits,
-        }
+        code.words.clear();
+        code.words.push(idx);
+        code.bits = self.bits;
     }
 
     fn dequantize(&self, code: &Code, out: &mut [f32]) {
@@ -145,6 +151,20 @@ impl VectorQuantizer for LlvqSpherical {
         for i in 0..DIM {
             out[i] = (x[i] as f64 / SQRT8 * self.scale) as f32;
         }
+    }
+
+    fn code_widths(&self) -> Vec<u32> {
+        vec![self.bits]
+    }
+
+    fn spec(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str("llvq-spherical".into())),
+            ("name", Json::Str(self.name())),
+            ("dim", Json::Int(DIM as i64)),
+            ("max_m", Json::Int(self.indexer.max_m() as i64)),
+            ("scale", Json::Num(self.scale)),
+        ])
     }
 
     fn name(&self) -> String {
@@ -173,17 +193,23 @@ impl LlvqShapeGain {
     /// union of shells 2..=max_m of `indexer` (App. F's norm(Λ₂₄(m)) + b
     /// χ-gain bits construction).
     pub fn new(indexer: Arc<LeechIndexer>, gain_bits: u32) -> Self {
-        let shape_bits = indexer.index_bits();
         // Optimal-scales gain: γ* = ‖x‖·cos θ. cosθ loses ≈ 1−angular-MSE/2;
         // the χ codebook is left unscaled — γ* is quantized directly against
         // it, and empirically the cos-retention shrinkage is < 1%, inside
         // one bin width even at 4 gain bits.
         let gain = ChiGainQuantizer::new(DIM, gain_bits);
+        Self::with_parts(indexer, gain, 2)
+    }
+
+    /// Assemble from explicit parts (the `.llvqm` load path: the gain
+    /// codebook comes from the serialized spec instead of being re-fit).
+    pub fn with_parts(indexer: Arc<LeechIndexer>, gain: ChiGainQuantizer, min_m: usize) -> Self {
+        let shape_bits = indexer.index_bits();
         Self {
             indexer,
             gain,
             shape_bits,
-            min_m: 2,
+            min_m,
         }
     }
 
@@ -229,6 +255,14 @@ impl VectorQuantizer for LlvqShapeGain {
         }
     }
 
+    fn quantize_into(&self, x: &[f32], code: &mut Code) {
+        let (s, g) = self.quantize_parts(x);
+        code.words.clear();
+        code.words.push(s);
+        code.words.push(g);
+        code.bits = self.shape_bits + self.gain.bits;
+    }
+
     fn dequantize(&self, code: &Code, out: &mut [f32]) {
         let v = self.indexer.decode_index(code.words[0]);
         let m = coset::shell_of(&v).expect("bad shape index");
@@ -237,6 +271,24 @@ impl VectorQuantizer for LlvqShapeGain {
         for i in 0..DIM {
             out[i] = (v[i] as f64 / pnorm * g) as f32;
         }
+    }
+
+    /// Split shape/gain fields: the shape index and the gain level are
+    /// serialized as two separate bit fields.
+    fn code_widths(&self) -> Vec<u32> {
+        vec![self.shape_bits, self.gain.bits]
+    }
+
+    fn spec(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str("llvq-shape-gain".into())),
+            ("name", Json::Str(self.name())),
+            ("dim", Json::Int(DIM as i64)),
+            ("max_m", Json::Int(self.indexer.max_m() as i64)),
+            ("min_m", Json::Int(self.min_m as i64)),
+            ("gain_bits", Json::Int(self.gain.bits as i64)),
+            ("gain_levels", Json::arr_f64(&self.gain.levels)),
+        ])
     }
 
     fn name(&self) -> String {

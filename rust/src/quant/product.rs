@@ -5,7 +5,8 @@
 //! independently per block — "assigning a dedicated dtype to an entire
 //! block of weights" (paper §1).
 
-use crate::quant::{Code, VectorQuantizer};
+use crate::quant::{read_code_with, write_code_with, Code, VectorQuantizer};
+use crate::util::bits::{BitReader, BitWriter};
 
 /// Quantize a full row (any length) with `q`, writing the reconstruction
 /// into `out`, and returning total bits consumed.
@@ -49,6 +50,62 @@ pub fn quantize_row_codes(q: &dyn VectorQuantizer, row: &[f32]) -> Vec<Code> {
     codes
 }
 
+/// Quantize a full row (any length, tail zero-padded) straight into an
+/// MSB-first bitstream — the product-code serialization path of the packed
+/// `.llvqm` format. One scratch code is reused across blocks, so the loop
+/// is allocation-free after warm-up. Returns total bits written.
+pub fn encode_row_into(q: &dyn VectorQuantizer, row: &[f32], w: &mut BitWriter) -> u64 {
+    let d = q.dim();
+    let widths = q.code_widths();
+    let mut scratch = vec![0f32; d];
+    let mut code = Code::empty();
+    let mut bits = 0u64;
+    let mut i = 0;
+    while i < row.len() {
+        let take = d.min(row.len() - i);
+        scratch[..take].copy_from_slice(&row[i..i + take]);
+        for v in scratch[take..].iter_mut() {
+            *v = 0.0;
+        }
+        q.quantize_into(&scratch, &mut code);
+        write_code_with(&widths, &code, w);
+        bits += code.bits as u64;
+        i += take;
+    }
+    bits
+}
+
+/// Inverse of [`encode_row_into`]: read `⌈out.len()/dim⌉` codes from the
+/// bitstream and reconstruct the row (padding lanes discarded).
+pub fn decode_row_from(q: &dyn VectorQuantizer, r: &mut BitReader, out: &mut [f32]) {
+    let mut scratch = vec![0f32; q.dim()];
+    let mut code = Code::empty();
+    decode_row_with(q, &q.code_widths(), r, &mut code, &mut scratch, out);
+}
+
+/// [`decode_row_from`] against pre-fetched widths and caller-owned scratch
+/// (`scratch.len() == q.dim()`) — the block-parallel unpack path hoists
+/// these out of its row loop, mirroring the encode side in
+/// `pipeline::gptq`.
+pub fn decode_row_with(
+    q: &dyn VectorQuantizer,
+    widths: &[u32],
+    r: &mut BitReader,
+    code: &mut Code,
+    scratch: &mut [f32],
+    out: &mut [f32],
+) {
+    let d = q.dim();
+    let mut i = 0;
+    while i < out.len() {
+        read_code_with(widths, r, code);
+        q.dequantize(code, scratch);
+        let take = d.min(out.len() - i);
+        out[i..i + take].copy_from_slice(&scratch[..take]);
+        i += take;
+    }
+}
+
 /// Reconstruct a row from its codes.
 pub fn dequantize_row(q: &dyn VectorQuantizer, codes: &[Code], out: &mut [f32]) {
     let d = q.dim();
@@ -79,6 +136,23 @@ mod tests {
             for (a, b) in row.iter().zip(&out) {
                 assert!((a - b).abs() < 0.3);
             }
+        }
+    }
+
+    #[test]
+    fn bitstream_roundtrip_matches_direct_any_length() {
+        let q = UniformQuantizer::new_gaussian_optimal(5);
+        for len in [1usize, 7, 24, 25, 60] {
+            let row: Vec<f32> = (0..len).map(|i| ((i * 31 % 13) as f32 - 6.0) / 7.0).collect();
+            let mut direct = vec![0f32; len];
+            quantize_row(&q, &row, &mut direct);
+            let mut w = BitWriter::new();
+            let bits = encode_row_into(&q, &row, &mut w);
+            assert_eq!(bits, 5 * len as u64);
+            let bytes = w.finish();
+            let mut via_stream = vec![0f32; len];
+            decode_row_from(&q, &mut BitReader::new(&bytes), &mut via_stream);
+            assert_eq!(direct, via_stream);
         }
     }
 

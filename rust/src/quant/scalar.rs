@@ -8,6 +8,7 @@
 //!   "Lloyd-Max" row).
 
 use crate::quant::{Code, VectorQuantizer};
+use crate::util::json::Json;
 use crate::util::rng::Xoshiro256pp;
 
 /// Symmetric uniform quantizer with 2^bits levels over [−c·σ, +c·σ].
@@ -101,8 +102,28 @@ impl VectorQuantizer for UniformQuantizer {
         }
     }
 
+    fn quantize_into(&self, x: &[f32], code: &mut Code) {
+        code.words.clear();
+        code.words.push(self.level_of(x[0] as f64) as u64);
+        code.bits = self.bits;
+    }
+
     fn dequantize(&self, code: &Code, out: &mut [f32]) {
         out[0] = self.value_of(code.words[0] as i64) as f32;
+    }
+
+    fn code_widths(&self) -> Vec<u32> {
+        vec![self.bits]
+    }
+
+    fn spec(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str("uniform".into())),
+            ("name", Json::Str(self.name())),
+            ("dim", Json::Int(1)),
+            ("bits", Json::Int(self.bits as i64)),
+            ("clip", Json::Num(self.clip)),
+        ])
     }
 
     fn name(&self) -> String {
@@ -157,6 +178,13 @@ impl LloydMaxQuantizer {
                 break;
             }
         }
+        Self::from_centers(bits, centers)
+    }
+
+    /// Rebuild from serialized reconstruction levels (the `.llvqm` load
+    /// path); boundaries are re-derived exactly as training derives them.
+    pub fn from_centers(bits: u32, centers: Vec<f64>) -> Self {
+        assert_eq!(centers.len(), 1usize << bits, "center count vs bits");
         let boundaries = centers
             .windows(2)
             .map(|w| 0.5 * (w[0] + w[1]))
@@ -196,8 +224,28 @@ impl VectorQuantizer for LloydMaxQuantizer {
         }
     }
 
+    fn quantize_into(&self, x: &[f32], code: &mut Code) {
+        code.words.clear();
+        code.words.push(self.level_of(x[0] as f64) as u64);
+        code.bits = self.bits;
+    }
+
     fn dequantize(&self, code: &Code, out: &mut [f32]) {
         out[0] = self.centers[code.words[0] as usize] as f32;
+    }
+
+    fn code_widths(&self) -> Vec<u32> {
+        vec![self.bits]
+    }
+
+    fn spec(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str("lloyd-max".into())),
+            ("name", Json::Str(self.name())),
+            ("dim", Json::Int(1)),
+            ("bits", Json::Int(self.bits as i64)),
+            ("centers", Json::arr_f64(&self.centers)),
+        ])
     }
 
     fn name(&self) -> String {

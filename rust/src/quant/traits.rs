@@ -5,6 +5,20 @@
 //! experiments) treat all methods through this trait, which is what makes
 //! the paper's "same pipeline, swap the representation" comparisons
 //! apples-to-apples.
+//!
+//! Beyond quantize/dequantize, the trait carries the **codec surface** of
+//! the packed `.llvqm` model format:
+//!
+//! * [`VectorQuantizer::code_widths`] — the bit width of every code field;
+//! * [`VectorQuantizer::encode_into`] / [`VectorQuantizer::decode_from`] —
+//!   (de)serialization of one block against an MSB-first bitstream;
+//! * [`VectorQuantizer::spec`] — a self-describing JSON header (kind, dim,
+//!   rate, parameters) from which [`quantizer_from_spec`] reconstructs the
+//!   exact quantizer at model-load time, so a packed artifact is
+//!   self-contained: no codebook is ever materialized on disk.
+
+use crate::util::bits::{BitReader, BitWriter};
+use crate::util::json::Json;
 
 /// A quantized block: the stored code plus its bit cost.
 #[derive(Clone, Debug, PartialEq)]
@@ -13,6 +27,61 @@ pub struct Code {
     pub words: Vec<u64>,
     /// Exact bits this code occupies in the serialized model.
     pub bits: u32,
+}
+
+impl Code {
+    /// An empty scratch code for reuse in hot loops (see
+    /// [`VectorQuantizer::quantize_into`]).
+    pub fn empty() -> Self {
+        Self {
+            words: Vec::new(),
+            bits: 0,
+        }
+    }
+}
+
+/// Bit-packed code streams for one weight matrix: `rows` independent
+/// MSB-first streams of `blocks_per_row` codes, each stream padded to a
+/// whole byte so rows can be decoded in parallel from byte offsets.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedCodes {
+    /// Bits per block code (sum of the quantizer's field widths).
+    pub code_bits: u32,
+    pub blocks_per_row: usize,
+    /// `ceil(blocks_per_row · code_bits / 8)` — stride between row streams.
+    pub row_bytes: usize,
+    /// `rows × row_bytes` payload.
+    pub data: Vec<u8>,
+}
+
+impl PackedCodes {
+    pub fn rows(&self) -> usize {
+        if self.row_bytes == 0 {
+            0
+        } else {
+            self.data.len() / self.row_bytes
+        }
+    }
+}
+
+/// Write one code against pre-fetched field widths (alloc-free; hot loops
+/// hoist `q.code_widths()` out of their block loop).
+pub fn write_code_with(widths: &[u32], code: &Code, w: &mut BitWriter) {
+    debug_assert_eq!(widths.len(), code.words.len(), "code field count mismatch");
+    for (&width, &word) in widths.iter().zip(&code.words) {
+        w.write(word, width);
+    }
+}
+
+/// Read one code into caller-provided scratch against pre-fetched field
+/// widths (alloc-free after the scratch warms up).
+pub fn read_code_with(widths: &[u32], r: &mut BitReader, code: &mut Code) {
+    code.words.clear();
+    code.bits = 0;
+    for &width in widths {
+        code.words.push(r.read(width));
+        code.bits += width;
+    }
 }
 
 /// A (possibly vector) quantizer over fixed-length blocks.
@@ -29,6 +98,47 @@ pub trait VectorQuantizer: Send + Sync {
     /// Reconstruct a block from its code into `out`.
     fn dequantize(&self, code: &Code, out: &mut [f32]);
 
+    /// Quantize into caller-provided scratch, reusing its `words`
+    /// allocation. The PTQ inner loop calls this once per 24-dim block, so
+    /// implementations should avoid allocating.
+    fn quantize_into(&self, x: &[f32], code: &mut Code) {
+        let c = self.quantize(x);
+        code.bits = c.bits;
+        code.words.clear();
+        code.words.extend_from_slice(&c.words);
+    }
+
+    /// Bit width of each `Code::words` field, in order. Constant for a
+    /// given quantizer instance; every width is ≤ 64.
+    fn code_widths(&self) -> Vec<u32>;
+
+    /// Serialize one code into an MSB-first bitstream.
+    fn encode_into(&self, code: &Code, w: &mut BitWriter) {
+        write_code_with(&self.code_widths(), code, w);
+    }
+
+    /// Read one code from the bitstream and reconstruct the block into
+    /// `out` — the exact inverse of [`VectorQuantizer::encode_into`]
+    /// followed by [`VectorQuantizer::dequantize`].
+    fn decode_from(&self, r: &mut BitReader, out: &mut [f32]) {
+        let widths = self.code_widths();
+        let mut code = Code::empty();
+        read_code_with(&widths, r, &mut code);
+        self.dequantize(&code, out);
+    }
+
+    /// Self-describing spec: JSON with a `kind` tag plus every parameter
+    /// needed to rebuild this exact quantizer via [`quantizer_from_spec`].
+    /// The default is display-only (no `kind`), which the factory rejects —
+    /// serializable quantizers override it.
+    fn spec(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name())),
+            ("dim", Json::Int(self.dim() as i64)),
+            ("bits_per_weight", Json::Num(self.bits_per_weight())),
+        ])
+    }
+
     /// Convenience: quantize-dequantize round trip.
     fn reconstruct(&self, x: &[f32], out: &mut [f32]) {
         let c = self.quantize(x);
@@ -37,6 +147,123 @@ pub trait VectorQuantizer: Send + Sync {
 
     /// Human-readable name for experiment tables.
     fn name(&self) -> String;
+}
+
+/// Rebuild a quantizer from its [`VectorQuantizer::spec`] header — the
+/// model-load half of the `.llvqm` codec. Reconstruction is exact: the
+/// rebuilt quantizer dequantizes every code to bit-identical f32 values.
+pub fn quantizer_from_spec(spec: &Json) -> Result<Box<dyn VectorQuantizer>, String> {
+    use std::sync::Arc;
+
+    use crate::leech::index::LeechIndexer;
+    use crate::quant::e8::{E8Codebook, E8Cut};
+    use crate::quant::gain::ChiGainQuantizer;
+    use crate::quant::llvq::{LlvqShapeGain, LlvqSpherical};
+    use crate::quant::scalar::{LloydMaxQuantizer, UniformQuantizer};
+
+    let kind = spec
+        .get("kind")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| "quantizer spec missing string field 'kind'".to_string())?;
+    let geti = |k: &str| -> Result<i64, String> {
+        spec.get(k)
+            .and_then(|v| v.as_i64())
+            .ok_or_else(|| format!("quantizer spec ({kind}) missing int field '{k}'"))
+    };
+    // range-checked integers: specs come from untrusted `.llvqm` headers,
+    // so out-of-range values must Err here, not panic (shift overflow,
+    // 2^bits allocations) inside a constructor.
+    let getr = |k: &str, lo: i64, hi: i64| -> Result<i64, String> {
+        match geti(k)? {
+            v if (lo..=hi).contains(&v) => Ok(v),
+            v => Err(format!(
+                "quantizer spec ({kind}): '{k}' = {v} outside [{lo}, {hi}]"
+            )),
+        }
+    };
+    let getf = |k: &str| -> Result<f64, String> {
+        let v = spec
+            .get(k)
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("quantizer spec ({kind}) missing number field '{k}'"))?;
+        if v.is_finite() {
+            Ok(v)
+        } else {
+            Err(format!("quantizer spec ({kind}): '{k}' is not finite"))
+        }
+    };
+    let getfs = |k: &str| -> Result<Vec<f64>, String> {
+        spec.get(k)
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| format!("quantizer spec ({kind}) missing array field '{k}'"))?
+            .iter()
+            .map(|x| {
+                x.as_f64()
+                    .ok_or_else(|| format!("non-numeric entry in '{k}'"))
+            })
+            .collect()
+    };
+
+    // scalar codebooks materialize 2^bits levels; 24 bits is already far
+    // beyond any rate the pipeline produces. Shell counts explode
+    // combinatorially in max_m, so cap it well past the paper's M range.
+    const MAX_BITS: i64 = 24;
+    const MAX_M: i64 = 32;
+    let levels_for = |bits: u32, v: Vec<f64>, k: &str| -> Result<Vec<f64>, String> {
+        if v.len() == 1usize << bits {
+            Ok(v)
+        } else {
+            Err(format!(
+                "quantizer spec ({kind}): '{k}' has {} entries, bits={bits} needs {}",
+                v.len(),
+                1usize << bits
+            ))
+        }
+    };
+
+    match kind {
+        "uniform" => Ok(Box::new(UniformQuantizer::with_clip(
+            getr("bits", 1, MAX_BITS)? as u32,
+            getf("clip")?,
+        ))),
+        "lloyd-max" => {
+            let bits = getr("bits", 1, MAX_BITS)? as u32;
+            let centers = levels_for(bits, getfs("centers")?, "centers")?;
+            Ok(Box::new(LloydMaxQuantizer::from_centers(bits, centers)))
+        }
+        "chi-gain" => {
+            let bits = getr("bits", 0, MAX_BITS)? as u32;
+            let levels = levels_for(bits, getfs("levels")?, "levels")?;
+            Ok(Box::new(ChiGainQuantizer::from_levels(bits, levels)))
+        }
+        "e8" => {
+            let cut = match spec.get("cut").and_then(|v| v.as_str()) {
+                Some("ball") => E8Cut::Ball,
+                Some("cube") => E8Cut::Cube,
+                other => return Err(format!("bad e8 cut {other:?}")),
+            };
+            Ok(Box::new(E8Codebook::with_scale(cut, getf("scale")?)))
+        }
+        "llvq-spherical" => {
+            let ix = Arc::new(LeechIndexer::new(getr("max_m", 2, MAX_M)? as usize));
+            Ok(Box::new(LlvqSpherical::with_scale(ix, getf("scale")?)))
+        }
+        "llvq-shape-gain" => {
+            let max_m = getr("max_m", 2, MAX_M)?;
+            let ix = Arc::new(LeechIndexer::new(max_m as usize));
+            let gain_bits = getr("gain_bits", 0, MAX_BITS)? as u32;
+            let gain = ChiGainQuantizer::from_levels(
+                gain_bits,
+                levels_for(gain_bits, getfs("gain_levels")?, "gain_levels")?,
+            );
+            Ok(Box::new(LlvqShapeGain::with_parts(
+                ix,
+                gain,
+                getr("min_m", 1, max_m)? as usize,
+            )))
+        }
+        other => Err(format!("unknown quantizer kind '{other}'")),
+    }
 }
 
 /// Measure empirical rate–distortion of `q` on an i.i.d. N(0,1) source
@@ -90,6 +317,9 @@ mod tests {
                 *o = f32::from_bits(w as u32);
             }
         }
+        fn code_widths(&self) -> Vec<u32> {
+            vec![32; self.0]
+        }
         fn name(&self) -> String {
             "identity".into()
         }
@@ -101,5 +331,57 @@ mod tests {
         let (mse, bits) = gaussian_rd(&q, 100, 1);
         assert_eq!(mse, 0.0);
         assert_eq!(bits, 32.0);
+    }
+
+    #[test]
+    fn default_codec_roundtrips_through_bitstream() {
+        let q = Identity(6);
+        let x: Vec<f32> = (0..6).map(|i| i as f32 * 0.25 - 0.7).collect();
+        let code = q.quantize(&x);
+        let mut w = BitWriter::new();
+        q.encode_into(&code, &mut w);
+        assert_eq!(w.bit_len() as u32, code.bits);
+        let bytes = w.finish();
+        let mut out = vec![0f32; 6];
+        q.decode_from(&mut BitReader::new(&bytes), &mut out);
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn default_quantize_into_reuses_scratch() {
+        let q = Identity(4);
+        let mut code = Code::empty();
+        q.quantize_into(&[1.0, 2.0, 3.0, 4.0], &mut code);
+        assert_eq!(code.bits, 128);
+        assert_eq!(code.words.len(), 4);
+        q.quantize_into(&[5.0, 6.0, 7.0, 8.0], &mut code);
+        assert_eq!(code.words.len(), 4);
+        assert_eq!(code.words[0], 5f32.to_bits() as u64);
+    }
+
+    #[test]
+    fn factory_rejects_unknown_and_specless() {
+        let q = Identity(2);
+        assert!(quantizer_from_spec(&q.spec()).is_err());
+        let bad = crate::util::json::parse(r#"{"kind":"warp-drive"}"#).unwrap();
+        assert!(quantizer_from_spec(&bad).is_err());
+    }
+
+    #[test]
+    fn factory_rejects_out_of_range_specs() {
+        // hostile .llvqm headers must Err, not panic/OOM in a constructor
+        for s in [
+            r#"{"kind":"uniform","bits":70,"clip":2.0}"#,
+            r#"{"kind":"uniform","bits":0,"clip":2.0}"#,
+            r#"{"kind":"lloyd-max","bits":3,"centers":[0.0]}"#,
+            r#"{"kind":"chi-gain","bits":2,"levels":[1.0,2.0,3.0]}"#,
+            r#"{"kind":"llvq-spherical","max_m":-3,"scale":1.0}"#,
+            r#"{"kind":"llvq-spherical","max_m":4096,"scale":1.0}"#,
+            r#"{"kind":"llvq-shape-gain","max_m":4,"min_m":9,"gain_bits":1,"gain_levels":[1.0,2.0]}"#,
+            r#"{"kind":"e8","cut":"donut","scale":1.0}"#,
+        ] {
+            let spec = crate::util::json::parse(s).unwrap();
+            assert!(quantizer_from_spec(&spec).is_err(), "accepted: {s}");
+        }
     }
 }

@@ -1,0 +1,201 @@
+//! MSB-first bit-level I/O — the substrate of the packed `.llvqm` model
+//! format (paper §3.3: bijective indices "convert to and from bitstrings
+//! without materializing the codebook").
+//!
+//! [`BitWriter`] packs arbitrary ≤64-bit fields into a byte buffer,
+//! most-significant bit first, so a hex dump reads in field order and the
+//! format is independent of host endianness. [`BitReader`] is the exact
+//! inverse. Both are branch-light and allocation-free per field, which is
+//! what the per-row code streams in `pipeline::gptq` and the block-parallel
+//! dequantization in `model::packed` need.
+
+/// MSB-first bit sink over a growable byte buffer.
+#[derive(Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Partial byte being filled (top `nbits` of the value are valid,
+    /// stored left-aligned as they are shifted in from the right).
+    cur: u8,
+    nbits: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(bytes: usize) -> Self {
+        Self {
+            buf: Vec::with_capacity(bytes),
+            cur: 0,
+            nbits: 0,
+        }
+    }
+
+    /// Append the low `width` bits of `v` (MSB of the field first).
+    /// `width` may be 0 (no-op) up to 64.
+    pub fn write(&mut self, v: u64, width: u32) {
+        debug_assert!(width <= 64, "field width {width} > 64");
+        if width < 64 {
+            debug_assert!(v >> width == 0, "value {v:#x} exceeds {width} bits");
+        }
+        let mut left = width;
+        while left > 0 {
+            let take = (8 - self.nbits).min(left);
+            let shift = left - take;
+            let bits = ((v >> shift) & ((1u64 << take) - 1)) as u8;
+            // `take` can be 8 (empty partial byte, ≥8 bits left), where
+            // `cur << 8` would overflow the u8 shift; cur is 0 then.
+            self.cur = if take == 8 { bits } else { (self.cur << take) | bits };
+            self.nbits += take;
+            left -= take;
+            if self.nbits == 8 {
+                self.buf.push(self.cur);
+                self.cur = 0;
+                self.nbits = 0;
+            }
+        }
+    }
+
+    /// Total bits written so far.
+    pub fn bit_len(&self) -> usize {
+        self.buf.len() * 8 + self.nbits as usize
+    }
+
+    /// Flush the final partial byte (zero-padded on the right) and return
+    /// the buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.buf.push(self.cur << (8 - self.nbits));
+        }
+        self.buf
+    }
+}
+
+/// MSB-first bit source over a byte slice.
+pub struct BitReader<'a> {
+    data: &'a [u8],
+    /// Absolute bit position of the next read.
+    pos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(data: &'a [u8]) -> Self {
+        Self { data, pos: 0 }
+    }
+
+    /// Read the next `width` bits (0..=64) as the low bits of a u64.
+    /// Panics when the stream is exhausted — callers validate payload
+    /// sizes up front (`model::packed` does).
+    pub fn read(&mut self, width: u32) -> u64 {
+        debug_assert!(width <= 64, "field width {width} > 64");
+        assert!(
+            self.pos + width as usize <= self.data.len() * 8,
+            "BitReader overrun: need {width} bits at bit {}, stream has {}",
+            self.pos,
+            self.data.len() * 8
+        );
+        let mut out = 0u64;
+        let mut left = width;
+        while left > 0 {
+            let byte = self.data[self.pos / 8];
+            let avail = 8 - (self.pos % 8) as u32;
+            let take = avail.min(left);
+            let shift = avail - take;
+            let bits = ((byte >> shift) as u64) & ((1u64 << take) - 1);
+            out = (out << take) | bits;
+            self.pos += take as usize;
+            left -= take;
+        }
+        out
+    }
+
+    /// Absolute bit position of the next read.
+    pub fn bit_pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Bits left in the stream (including any trailing pad bits).
+    pub fn bits_remaining(&self) -> usize {
+        self.data.len() * 8 - self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn msb_first_known_pattern() {
+        let mut w = BitWriter::new();
+        w.write(0b1, 1);
+        w.write(0xFF, 8);
+        assert_eq!(w.bit_len(), 9);
+        let bytes = w.finish();
+        // 1 then 11111111, zero-padded: 1111_1111 1000_0000
+        assert_eq!(bytes, vec![0xFF, 0x80]);
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read(1), 0b1);
+        assert_eq!(r.read(8), 0xFF);
+        assert_eq!(r.bits_remaining(), 7);
+        assert_eq!(r.read(7), 0); // pad bits
+    }
+
+    #[test]
+    fn zero_and_full_width_fields() {
+        let mut w = BitWriter::new();
+        w.write(0, 0); // no-op
+        w.write(u64::MAX, 64);
+        w.write(0, 0);
+        w.write(0xDEAD_BEEF_CAFE_F00D, 64);
+        let bytes = w.finish();
+        assert_eq!(bytes.len(), 16);
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read(0), 0);
+        assert_eq!(r.read(64), u64::MAX);
+        assert_eq!(r.read(64), 0xDEAD_BEEF_CAFE_F00D);
+    }
+
+    #[test]
+    fn random_field_sequences_roundtrip() {
+        let mut rng = Xoshiro256pp::new(0xB175);
+        for _ in 0..200 {
+            let n = 1 + rng.next_range(40) as usize;
+            let fields: Vec<(u64, u32)> = (0..n)
+                .map(|_| {
+                    let width = rng.next_range(65) as u32;
+                    let v = if width == 0 {
+                        0
+                    } else if width == 64 {
+                        rng.next_u64()
+                    } else {
+                        rng.next_u64() & ((1u64 << width) - 1)
+                    };
+                    (v, width)
+                })
+                .collect();
+            let mut w = BitWriter::new();
+            for &(v, width) in &fields {
+                w.write(v, width);
+            }
+            let total: usize = fields.iter().map(|&(_, wd)| wd as usize).sum();
+            assert_eq!(w.bit_len(), total);
+            let bytes = w.finish();
+            assert_eq!(bytes.len(), total.div_ceil(8));
+            let mut r = BitReader::new(&bytes);
+            for &(v, width) in &fields {
+                assert_eq!(r.read(width), v, "width {width}");
+            }
+            assert_eq!(r.bit_pos(), total);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "BitReader overrun")]
+    fn overrun_panics() {
+        let bytes = [0u8; 2];
+        let mut r = BitReader::new(&bytes);
+        r.read(17);
+    }
+}

@@ -9,10 +9,21 @@ use llvq::leech::index::{ms_perm_rank, ms_perm_unrank, LeechIndexer};
 use llvq::leech::{coset, leaders};
 use llvq::math::hadamard::RandomizedHadamard;
 use llvq::math::linalg::{cholesky, solve_spd, Matrix};
+use llvq::model::config::config_by_name;
+use llvq::model::packed::{unpack_layer, PackedLayer, PackedModel};
+use llvq::model::transformer::Weights;
+use llvq::pipeline::driver::{quantize_model_packed, PtqOptions};
+use llvq::pipeline::gptq::{quantize_layer, GptqConfig};
+use llvq::pipeline::rotation::RotationMode;
+use llvq::quant::e8::{E8Codebook, E8Cut};
+use llvq::quant::gain::ChiGainQuantizer;
+use llvq::quant::llvq::{LlvqShapeGain, LlvqSpherical};
 use llvq::quant::product;
-use llvq::quant::scalar::UniformQuantizer;
-use llvq::quant::VectorQuantizer;
+use llvq::quant::scalar::{LloydMaxQuantizer, UniformQuantizer};
+use llvq::quant::{quantizer_from_spec, VectorQuantizer};
+use llvq::util::bits::{BitReader, BitWriter};
 use llvq::util::proptest::check;
+use llvq::util::rng::Xoshiro256pp;
 
 #[test]
 fn prop_index_roundtrip_uniform_over_ball() {
@@ -202,6 +213,140 @@ fn prop_product_code_roundtrip_any_length() {
         }
         Ok(())
     });
+}
+
+/// Shared codec property: for a random Gaussian block, `encode_into` →
+/// `decode_from` must reproduce `dequantize` of the original code
+/// bit-exactly, the stream must occupy exactly `code.bits` bits, and the
+/// quantizer rebuilt from its own spec must decode the same stream to the
+/// same floats (the `.llvqm` load-path contract).
+fn codec_roundtrip_prop(
+    q: &dyn VectorQuantizer,
+    rebuilt: &dyn VectorQuantizer,
+    rng: &mut Xoshiro256pp,
+) -> Result<(), String> {
+    let d = q.dim();
+    let mut x = vec![0f32; d];
+    rng.fill_gaussian_f32(&mut x);
+    let code = q.quantize(&x);
+    let widths = q.code_widths();
+    if widths.iter().sum::<u32>() != code.bits {
+        return Err(format!(
+            "{}: code_widths sum {} != code.bits {}",
+            q.name(),
+            widths.iter().sum::<u32>(),
+            code.bits
+        ));
+    }
+    let mut w = BitWriter::new();
+    q.encode_into(&code, &mut w);
+    if w.bit_len() != code.bits as usize {
+        return Err(format!("{}: wrote {} of {} bits", q.name(), w.bit_len(), code.bits));
+    }
+    let bytes = w.finish();
+    let mut want = vec![0f32; d];
+    q.dequantize(&code, &mut want);
+    let mut got = vec![0f32; d];
+    q.decode_from(&mut BitReader::new(&bytes), &mut got);
+    if got != want {
+        return Err(format!("{}: bitstream roundtrip diverged", q.name()));
+    }
+    let mut got2 = vec![0f32; d];
+    rebuilt.decode_from(&mut BitReader::new(&bytes), &mut got2);
+    if got2 != want {
+        return Err(format!("{}: spec-rebuilt quantizer diverged", q.name()));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_codec_roundtrips_every_quantizer() {
+    let ix = Arc::new(LeechIndexer::new(4));
+    let quantizers: Vec<Box<dyn VectorQuantizer>> = vec![
+        Box::new(UniformQuantizer::new_gaussian_optimal(2)),
+        Box::new(UniformQuantizer::new_gaussian_optimal(7)),
+        Box::new(LloydMaxQuantizer::train_gaussian(3, 60_000, 5)),
+        Box::new(ChiGainQuantizer::new(24, 0)), // zero-bit degenerate field
+        Box::new(ChiGainQuantizer::new(24, 3)),
+        Box::new(E8Codebook::new(E8Cut::Ball)),
+        Box::new(LlvqSpherical::with_scale(ix.clone(), 0.8)),
+        Box::new(LlvqShapeGain::new(ix.clone(), 1)), // split shape/gain fields
+        Box::new(LlvqShapeGain::new(ix, 0)),
+    ];
+    for q in &quantizers {
+        let rebuilt = quantizer_from_spec(&q.spec())
+            .unwrap_or_else(|e| panic!("{}: spec not loadable: {e}", q.name()));
+        assert_eq!(rebuilt.dim(), q.dim());
+        assert_eq!(rebuilt.code_widths(), q.code_widths(), "{}", q.name());
+        check(&format!("codec-{}", q.name()), 40, |rng| {
+            codec_roundtrip_prop(q.as_ref(), rebuilt.as_ref(), rng)
+        });
+    }
+}
+
+#[test]
+fn prop_packed_layer_reproduces_gptq_reconstruction() {
+    // layer-level contract: gptq's packed code streams, pushed through
+    // model::packed::unpack_layer with the recorded σ, reproduce w_hat
+    // bit-exactly — for a scalar and a true 24-dim lattice quantizer.
+    let ix = Arc::new(LeechIndexer::new(3));
+    let quantizers: Vec<Box<dyn VectorQuantizer>> = vec![
+        Box::new(UniformQuantizer::new_gaussian_optimal(4)),
+        Box::new(LlvqShapeGain::new(ix, 1)),
+    ];
+    for q in &quantizers {
+        check(&format!("packed-layer-{}", q.name()), 4, |rng| {
+            let (rows, cols) = (6, 48);
+            let w: Vec<f32> = (0..rows * cols)
+                .map(|_| rng.next_gaussian() as f32)
+                .collect();
+            let h = Matrix::identity(cols);
+            let out = quantize_layer(&w, rows, cols, &h, q.as_ref(), &GptqConfig::default());
+            let pl = PackedLayer {
+                layer: 0,
+                kind: llvq::model::transformer::LinearKind::Wq,
+                rows,
+                cols,
+                sigma: out.sigma,
+                rot_mode: RotationMode::None,
+                rot_seed: 0,
+                col_scales: None,
+                codes: out.packed.clone(),
+            };
+            let rec = unpack_layer(q.as_ref(), &pl, 2)?;
+            if rec != out.w_hat {
+                return Err(format!("{}: unpack_layer != w_hat", q.name()));
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn packed_model_write_read_unpack_is_bit_exact() {
+    // whole-artifact contract (rotation + finetune scales on): the .llvqm
+    // bytes round-trip and unpack to exactly the driver's reconstruction.
+    let cfg = config_by_name("qwen3-4b-tiny").unwrap();
+    let w = Weights::random(&cfg, 9);
+    let q = UniformQuantizer::new_gaussian_optimal(3);
+    let opts = PtqOptions {
+        calib_seqs: 4,
+        rotation: RotationMode::InputOutput,
+        finetune_scales: true,
+        ..Default::default()
+    };
+    let art = quantize_model_packed(&w, &q, &opts);
+    let bytes = art.packed.to_bytes();
+    let back = PackedModel::from_bytes(&bytes).unwrap();
+    assert_eq!(back, art.packed);
+    let unpacked = back.unpack(llvq::util::threadpool::default_threads()).unwrap();
+    assert_eq!(
+        llvq::model::io::to_bytes(&unpacked),
+        llvq::model::io::to_bytes(&art.weights),
+        "packed unpack does not reproduce the driver's weights"
+    );
+    // and the packed file is smaller than the dense artifact
+    assert!(bytes.len() < llvq::model::io::to_bytes(&art.weights).len() / 2);
 }
 
 #[test]

@@ -3,7 +3,10 @@
 //! runtime and agree numerically with the rust-native implementations.
 //!
 //! These tests need `make artifacts`; they skip politely when the bundle
-//! is absent so `cargo test` works on a fresh checkout.
+//! is absent so `cargo test` works on a fresh checkout. The whole file is
+//! additionally gated on the `pjrt_runtime` cfg (the offline default build
+//! has no `xla` dependency — see `src/runtime.rs`).
+#![cfg(pjrt_runtime)]
 
 use llvq::leech::index::LeechIndexer;
 use llvq::leech::tables::KernelTables;
