@@ -1,37 +1,43 @@
-//! Serving example: quantize a model, serve batched requests, report
-//! latency/throughput (the paper-adjacent serving claim: the dequantized
-//! model costs the same to serve regardless of quantizer, and the batching
-//! coordinator keeps the engine saturated).
+//! Serving example: quantize a model to a packed `.llvqm`, pick an
+//! execution backend (dense / cached / fused), serve batched requests, and
+//! report latency/throughput plus resident weight bytes — the paper's "no
+//! expensive lookups on the inference path" claim as a serving demo: the
+//! fused backend answers every request straight from the bit-packed code
+//! streams, never materializing dense f32.
 //!
 //! ```bash
-//! cargo run --release --example serve_quantized -- --requests 200
+//! cargo run --release --example serve_quantized -- --requests 200 --backend fused
 //! ```
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use llvq::coordinator::{BatcherConfig, Coordinator, NativeEngine};
+use llvq::coordinator::{BackendEngine, BatchForward, BatcherConfig, Coordinator};
 use llvq::experiments::load_model;
 use llvq::leech::index::LeechIndexer;
+use llvq::model::backend::{BackendKind, ExecutionBackend};
 use llvq::model::config::config_by_name;
 use llvq::model::corpus::Corpus;
-use llvq::pipeline::driver::{quantize_model, PtqOptions};
+use llvq::model::packed::PackedFile;
+use llvq::pipeline::driver::{quantize_model_packed, PtqOptions};
 use llvq::quant::llvq::LlvqShapeGain;
 use llvq::util::cli::Args;
 
 fn main() {
     let a = Args::new("serve_quantized — batched serving benchmark")
         .flag("model", "llama2-tiny", "zoo model name")
+        .flag("backend", "dense", "dense|cached|fused execution backend")
         .flag("requests", "200", "total requests to issue")
         .flag("clients", "16", "concurrent client threads")
         .flag("max-batch", "8", "dynamic batch limit")
         .flag("max-wait-ms", "2", "batch window")
         .switch("allow-random", "use random weights if artifacts missing")
-        .switch("skip-quantize", "serve fp32 weights directly")
+        .switch("skip-quantize", "serve fp32 weights directly (dense only)")
         .parse(std::env::args().skip(1))
         .unwrap();
 
     let cfg = config_by_name(&a.get("model").unwrap()).expect("unknown model");
+    let kind = BackendKind::parse(&a.get("backend").unwrap()).expect("dense|cached|fused");
     let w = match load_model(&cfg, a.get_bool("allow-random")) {
         Ok(w) => w,
         Err(e) => {
@@ -40,19 +46,58 @@ fn main() {
         }
     };
 
-    let weights = if a.get_bool("skip-quantize") {
-        w
+    // kept alive while a cached backend serves (layers fault in from it);
+    // removed on exit
+    let mut temp_artifact: Option<std::path::PathBuf> = None;
+    let backend = if a.get_bool("skip-quantize") {
+        assert!(
+            kind == BackendKind::Dense,
+            "--skip-quantize serves fp32; packed backends need a quantized artifact"
+        );
+        ExecutionBackend::dense(w)
     } else {
         println!("quantizing {} at 2 bits/weight before serving …", cfg.name);
         let q = LlvqShapeGain::new(Arc::new(LeechIndexer::new(12)), 1);
-        let (wq, rep) = quantize_model(&w, &q, &PtqOptions::default());
-        println!("  {:.4} bits/weight", rep.bits_per_weight());
-        wq
+        let art = quantize_model_packed(&w, &q, &PtqOptions::default());
+        println!("  {:.4} bits/weight", art.report.bits_per_weight());
+        match kind {
+            BackendKind::Dense => ExecutionBackend::dense(art.weights),
+            _ => {
+                // packed backends execute from the artifact itself
+                let path = std::env::temp_dir().join(format!(
+                    "llvq-serve-quantized-{}.llvqm",
+                    std::process::id()
+                ));
+                art.packed.save(&path).expect("write artifact");
+                let f = PackedFile::open(&path).expect("open artifact");
+                let be = match kind {
+                    BackendKind::Cached => ExecutionBackend::packed_cached(
+                        f,
+                        llvq::util::threadpool::default_threads(),
+                    ),
+                    _ => ExecutionBackend::packed_fused(f),
+                }
+                .expect("build backend");
+                if kind == BackendKind::Fused {
+                    // fused read all its code streams up front; cached
+                    // still faults layers in from the file on first touch
+                    std::fs::remove_file(&path).ok();
+                } else {
+                    temp_artifact = Some(path);
+                }
+                be
+            }
+        }
     };
+    println!(
+        "backend: {} | resident weight bytes at start: {}",
+        backend.kind().label(),
+        backend.resident_weight_bytes()
+    );
 
-    let engine = Arc::new(NativeEngine { weights });
+    let engine = Arc::new(BackendEngine { backend });
     let coord = Coordinator::start(
-        engine,
+        engine.clone(),
         BatcherConfig {
             max_batch: a.get_usize("max-batch"),
             max_wait: std::time::Duration::from_millis(a.get_u64("max-wait-ms")),
@@ -81,10 +126,14 @@ fn main() {
     let served = coord.metrics.requests.load(std::sync::atomic::Ordering::Relaxed);
     println!(
         "served {served} requests in {wall:.2}s → {:.1} req/s | mean batch {:.2} | \
-         mean latency {:.2} ms",
+         mean latency {:.2} ms | resident weight bytes now: {}",
         served as f64 / wall,
         coord.metrics.mean_batch(),
-        coord.metrics.mean_latency_ms()
+        coord.metrics.mean_latency_ms(),
+        engine.resident_weight_bytes()
     );
     coord.stop();
+    if let Some(p) = temp_artifact {
+        std::fs::remove_file(p).ok();
+    }
 }

@@ -1,16 +1,55 @@
-//! Serving-coordinator benchmark: batched vs unbatched latency and
-//! throughput on the native engine (and the online-Hadamard overhead the
-//! paper's §5.3 discusses for unfused rotations).
+//! Serving benchmarks: dense vs packed-cached vs packed-fused execution
+//! backends (load time, first-token latency, steady-state throughput,
+//! resident weight bytes), plus the coordinator's batched-vs-unbatched
+//! latency and the online-Hadamard overhead of §5.3.
+//!
+//! Besides the human-readable report, every backend measurement lands as a
+//! JSON row in `BENCH_serving.json` (override with `LLVQ_BENCH_OUT`; the
+//! file is rewritten each run), in the flat row shape the `BENCH_*.json`
+//! trajectories use.
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use llvq::coordinator::{BatchForward, BatcherConfig, Coordinator, NativeEngine};
+use llvq::coordinator::{BackendEngine, BatchForward, BatcherConfig, Coordinator};
 use llvq::math::hadamard::RandomizedHadamard;
+use llvq::model::backend::{BackendKind, ExecutionBackend};
 use llvq::model::config::config_by_name;
 use llvq::model::corpus::Corpus;
+use llvq::model::packed::{PackedFile, PackedModel};
 use llvq::model::transformer::Weights;
-use llvq::util::bench::{black_box, Bench};
+use llvq::pipeline::driver::{quantize_model_packed, PtqOptions};
+use llvq::pipeline::rotation::RotationMode;
+use llvq::quant::llvq::LlvqShapeGain;
+use llvq::util::bench::{black_box, Bench, BenchResult};
+use llvq::util::json::Json;
+
+fn row(name: &str, r: &BenchResult, extra: Vec<(&str, Json)>) -> Json {
+    let mut pairs = vec![
+        ("suite", Json::Str("serving".into())),
+        ("name", Json::Str(name.into())),
+        ("mean_s", Json::Num(r.mean)),
+        ("median_s", Json::Num(r.median)),
+        ("p10_s", Json::Num(r.p10)),
+        ("p90_s", Json::Num(r.p90)),
+    ];
+    pairs.extend(extra);
+    Json::obj(pairs)
+}
+
+fn build_backend(path: &std::path::Path, kind: BackendKind, threads: usize) -> ExecutionBackend {
+    match kind {
+        BackendKind::Dense => ExecutionBackend::dense(
+            PackedModel::load(path).unwrap().unpack(threads).unwrap(),
+        ),
+        BackendKind::Cached => {
+            ExecutionBackend::packed_cached(PackedFile::open(path).unwrap(), threads).unwrap()
+        }
+        BackendKind::Fused => {
+            ExecutionBackend::packed_fused(PackedFile::open(path).unwrap()).unwrap()
+        }
+    }
+}
 
 fn main() {
     let b = Bench {
@@ -18,14 +57,94 @@ fn main() {
         min_batch_time: Duration::from_millis(200),
         num_samples: 6,
     };
+    let mut rows: Vec<Json> = Vec::new();
     let cfg = config_by_name("llama2-tiny").unwrap();
     let weights = Weights::random(&cfg, 1);
-    let engine = Arc::new(NativeEngine { weights });
 
     let mut corpus = Corpus::new(17);
     let seqs: Vec<Vec<u8>> = (0..64).map(|_| corpus.generate(32).0).collect();
 
-    println!("== engine forward (no coordinator) ==");
+    // ---- one-time PTQ: the paper's 2 bpw shape–gain configuration ----
+    println!("== one-time PTQ (llama2-tiny, 2 bpw shape-gain) ==");
+    let q = LlvqShapeGain::new(Arc::new(llvq::leech::index::LeechIndexer::new(12)), 1);
+    let opts = PtqOptions {
+        rotation: RotationMode::Input,
+        calib_seqs: 4,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let art = quantize_model_packed(&weights, &q, &opts);
+    println!(
+        "(PTQ: {:.1}s, {:.4} code bpw)",
+        t0.elapsed().as_secs_f64(),
+        art.report.bits_per_weight()
+    );
+    let path = std::env::temp_dir().join(format!(
+        "llvq-bench-serving-{}.llvqm",
+        std::process::id()
+    ));
+    art.packed.save(&path).unwrap();
+    let file_bytes = std::fs::metadata(&path).unwrap().len() as usize;
+    let code_bytes = art.packed.code_bytes();
+    let threads = llvq::util::threadpool::default_threads();
+
+    // ---- backend comparison: load / first token / steady state ----
+    let bq = Bench {
+        warmup: Duration::from_millis(100),
+        min_batch_time: Duration::from_millis(100),
+        num_samples: 5,
+    };
+    let short: Vec<Vec<u8>> = (0..4).map(|i| seqs[i][..16].to_vec()).collect();
+    for kind in [BackendKind::Dense, BackendKind::Cached, BackendKind::Fused] {
+        let label = kind.label();
+        println!("\n== backend: {label} ==");
+        // load: open the artifact and build the backend (dense pays the
+        // full parse+unpack; cached reads header+dense tail; fused reads
+        // header+codes)
+        let r = bq.run(&format!("{label}: load"), || {
+            black_box(build_backend(&path, kind, threads));
+        });
+        rows.push(row(
+            &format!("load_{label}"),
+            &r,
+            vec![("file_bytes", Json::Int(file_bytes as i64))],
+        ));
+        // first token: cold backend through one request (for cached this
+        // includes the lazy decode of every touched layer)
+        let r = bq.run(&format!("{label}: first token (cold)"), || {
+            let be = build_backend(&path, kind, threads);
+            let engine = BackendEngine { backend: be };
+            black_box(engine.forward_batch(std::slice::from_ref(&short[0])));
+        });
+        rows.push(row(&format!("first_token_{label}"), &r, vec![]));
+        // steady state: warm backend, batched forward throughput
+        let engine = BackendEngine {
+            backend: build_backend(&path, kind, threads),
+        };
+        engine.forward_batch(&short); // warm every layer
+        let r = bq.run_throughput(
+            &format!("{label}: steady batch=4 (seq/s)"),
+            4.0,
+            || {
+                black_box(engine.forward_batch(&short));
+            },
+        );
+        let resident = engine.resident_weight_bytes();
+        println!("{label}: resident weight bytes = {resident} (codes on disk {code_bytes})");
+        rows.push(row(
+            &format!("steady_{label}"),
+            &r,
+            vec![
+                ("seq_per_s", Json::Num(4.0 / r.mean)),
+                ("resident_bytes", Json::Int(resident as i64)),
+                ("code_bytes", Json::Int(code_bytes as i64)),
+            ],
+        ));
+    }
+
+    // ---- dense engine + coordinator (the historical serving numbers) ----
+    let engine = Arc::new(BackendEngine::dense(weights));
+    println!("\n== engine forward (no coordinator) ==");
     let mut i = 0;
     b.run_throughput("forward batch=1 (seq/s)", 1.0, || {
         black_box(engine.forward_batch(std::slice::from_ref(&seqs[i % seqs.len()])));
@@ -75,4 +194,13 @@ fn main() {
     b.run_throughput("R_in · x (144-dim, ops/s)", 1.0, || {
         h.forward(black_box(&mut x));
     });
+
+    std::fs::remove_file(&path).ok();
+    let out_path =
+        std::env::var("LLVQ_BENCH_OUT").unwrap_or_else(|_| "BENCH_serving.json".into());
+    let doc = Json::Arr(rows).to_string_pretty();
+    match std::fs::write(&out_path, &doc) {
+        Ok(()) => println!("\nwrote {out_path}"),
+        Err(e) => eprintln!("\n[warn] could not write {out_path}: {e}"),
+    }
 }

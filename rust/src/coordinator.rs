@@ -8,21 +8,23 @@
 //! latency/throughput metrics round out the service.
 //!
 //! The quantized model's weights were produced by the PTQ pipeline and are
-//! deployed as a packed `.llvqm` artifact (`model::packed`); `llvq serve
-//! --packed <file>` dequantizes the code streams block-parallel at load
-//! time, so the engine always sees dense f32 and serving latency is
-//! identical across quantizers — the paper's "no expensive lookups on the
-//! inference path" claim shows up here as: the decode path executes
-//! exactly one HLO module regardless of method, and logits from a packed
-//! artifact match the dense artifact bit-for-bit (unpacking is exact).
+//! deployed as a packed `.llvqm` artifact (`model::packed`). Serving runs
+//! through a [`BackendEngine`] over any `model::backend::ExecutionBackend`:
+//! `serve --backend dense` dequantizes at load (the historical behavior,
+//! bit-exact oracle), `--backend cached` decodes layers lazily on first
+//! touch, and `--backend fused` executes matvecs straight over the
+//! bit-packed code streams — the paper's "no expensive lookups on the
+//! inference path" claim served without ever materializing dense f32.
+//! `STATS` reports which backend is live and its resident weight bytes.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::model::backend::ExecutionBackend;
 use crate::model::transformer::{forward, ActivationCapture, Weights};
 
 /// A forward engine maps a batch of token sequences to per-sequence
@@ -33,20 +35,41 @@ pub trait BatchForward: Send + Sync {
     /// `batch[i]` has uniform length ≤ max_seq; returns, per sequence, the
     /// logits at the LAST position.
     fn forward_batch(&self, batch: &[Vec<u8>]) -> Vec<Vec<f32>>;
+
+    /// Label of the executing representation (for `STATS`).
+    fn backend_name(&self) -> String {
+        "unknown".into()
+    }
+
+    /// Weight-payload bytes currently resident (for `STATS`; 0 when the
+    /// engine does not track it).
+    fn resident_weight_bytes(&self) -> usize {
+        0
+    }
 }
 
-/// Rust-native engine (oracle; also the no-artifacts fallback).
-pub struct NativeEngine {
-    pub weights: Weights,
+/// Rust-native engine over an [`ExecutionBackend`] — dense (the oracle),
+/// lazily-decoded packed, or fused packed, all behind one forward pass.
+pub struct BackendEngine {
+    pub backend: ExecutionBackend,
 }
 
-impl BatchForward for NativeEngine {
+impl BackendEngine {
+    /// Wrap dense weights (the no-artifacts fallback and oracle).
+    pub fn dense(weights: Weights) -> Self {
+        Self {
+            backend: ExecutionBackend::dense(weights),
+        }
+    }
+}
+
+impl BatchForward for BackendEngine {
     fn vocab(&self) -> usize {
-        self.weights.cfg.vocab
+        self.backend.cfg().vocab
     }
 
     fn max_seq(&self) -> usize {
-        self.weights.cfg.max_seq
+        self.backend.cfg().max_seq
     }
 
     fn forward_batch(&self, batch: &[Vec<u8>]) -> Vec<Vec<f32>> {
@@ -55,10 +78,18 @@ impl BatchForward for NativeEngine {
             .iter()
             .map(|toks| {
                 let mut cap = ActivationCapture::default();
-                let logits = forward(&self.weights, toks, &mut cap);
+                let logits = forward(&self.backend, toks, &mut cap);
                 logits[(toks.len() - 1) * v..toks.len() * v].to_vec()
             })
             .collect()
+    }
+
+    fn backend_name(&self) -> String {
+        self.backend.kind().label().into()
+    }
+
+    fn resident_weight_bytes(&self) -> usize {
+        self.backend.resident_weight_bytes()
     }
 }
 
@@ -120,6 +151,9 @@ impl Default for BatcherConfig {
 pub struct Coordinator {
     tx: Mutex<Option<Sender<Pending>>>,
     pub metrics: Arc<Metrics>,
+    /// Kept for live introspection (`STATS` queries backend name and
+    /// resident bytes while the worker owns its own clone).
+    engine: Arc<dyn BatchForward>,
     worker: Mutex<Option<std::thread::JoinHandle<()>>>,
     stopping: Arc<AtomicBool>,
 }
@@ -131,13 +165,20 @@ impl Coordinator {
         let stopping = Arc::new(AtomicBool::new(false));
         let m2 = metrics.clone();
         let s2 = stopping.clone();
-        let worker = std::thread::spawn(move || batch_loop(engine, rx, cfg, m2, s2));
+        let e2 = engine.clone();
+        let worker = std::thread::spawn(move || batch_loop(e2, rx, cfg, m2, s2));
         Arc::new(Self {
             tx: Mutex::new(Some(tx)),
             metrics,
+            engine,
             worker: Mutex::new(Some(worker)),
             stopping,
         })
+    }
+
+    /// The engine being served (for stats surfaces).
+    pub fn engine(&self) -> &Arc<dyn BatchForward> {
+        &self.engine
     }
 
     /// Blocking request: returns last-position logits.
@@ -156,6 +197,10 @@ impl Coordinator {
         rrx.recv().map_err(|_| "worker dropped request".to_string())
     }
 
+    /// Shut down: no new submissions are accepted, every request already
+    /// queued is still answered (the worker drains the channel without
+    /// holding the batch window open), then the worker exits and is
+    /// joined — deterministic, no sleeps.
     pub fn stop(&self) {
         self.stopping.store(true, Ordering::SeqCst);
         self.tx.lock().unwrap().take(); // close the channel
@@ -179,19 +224,29 @@ fn batch_loop(
             Err(_) => return, // channel closed
         };
         let mut batch = vec![first];
-        let deadline = Instant::now() + cfg.max_wait;
-        while batch.len() < cfg.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(p) => batch.push(p),
-                Err(_) => break,
-            }
-        }
         if stopping.load(Ordering::SeqCst) {
-            // still answer in-flight requests before exiting
+            // draining after stop(): the sender is closed, so everything
+            // still queued is final — take it all immediately instead of
+            // holding each batch open for max_wait. In-flight requests are
+            // answered deterministically, then recv() errors and we exit.
+            while batch.len() < cfg.max_batch {
+                match rx.try_recv() {
+                    Ok(p) => batch.push(p),
+                    Err(TryRecvError::Empty | TryRecvError::Disconnected) => break,
+                }
+            }
+        } else {
+            let deadline = Instant::now() + cfg.max_wait;
+            while batch.len() < cfg.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(p) => batch.push(p),
+                    Err(_) => break,
+                }
+            }
         }
         let inputs: Vec<Vec<u8>> = batch.iter().map(|p| p.tokens.clone()).collect();
         let outputs = engine.forward_batch(&inputs);
@@ -216,7 +271,8 @@ fn batch_loop(
 
 /// Protocol: one request per line.
 ///   `NEXT 3,17,42,…`  → `OK next=<argmax> logit=<v>`
-///   `STATS`           → `OK requests=… mean_batch=… mean_latency_ms=…`
+///   `STATS`           → `OK requests=… mean_batch=… mean_latency_ms=…
+///                        backend=… resident_bytes=…`
 ///   `QUIT`            → closes the connection.
 pub fn serve_tcp(coord: Arc<Coordinator>, listener: TcpListener) -> std::io::Result<()> {
     for stream in listener.incoming() {
@@ -246,10 +302,13 @@ fn handle_conn(coord: Arc<Coordinator>, stream: TcpStream) -> std::io::Result<()
         if line == "STATS" {
             writeln!(
                 out,
-                "OK requests={} mean_batch={:.2} mean_latency_ms={:.3}",
+                "OK requests={} mean_batch={:.2} mean_latency_ms={:.3} \
+                 backend={} resident_bytes={}",
                 coord.metrics.requests.load(Ordering::Relaxed),
                 coord.metrics.mean_batch(),
-                coord.metrics.mean_latency_ms()
+                coord.metrics.mean_latency_ms(),
+                coord.engine().backend_name(),
+                coord.engine().resident_weight_bytes(),
             )?;
             continue;
         }
@@ -285,9 +344,7 @@ mod tests {
 
     fn tiny_engine() -> Arc<dyn BatchForward> {
         let cfg = config_by_name("qwen3-4b-tiny").unwrap();
-        Arc::new(NativeEngine {
-            weights: Weights::random(&cfg, 9),
-        })
+        Arc::new(BackendEngine::dense(Weights::random(&cfg, 9)))
     }
 
     #[test]
@@ -326,6 +383,43 @@ mod tests {
     }
 
     #[test]
+    fn stop_answers_or_rejects_every_inflight_request() {
+        // stop() closes the door and drains: a concurrent submit either
+        // gets real logits (it was queued in time) or the "coordinator
+        // stopped" rejection — never a dropped reply channel.
+        let coord = Coordinator::start(
+            tiny_engine(),
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(50),
+            },
+        );
+        let answered = std::sync::atomic::AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for t in 0..16u8 {
+                let c = coord.clone();
+                let answered = &answered;
+                s.spawn(move || match c.submit(vec![1, 2, t % 64]) {
+                    Ok(logits) => {
+                        assert_eq!(logits.len(), 64);
+                        answered.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(e) => assert_eq!(e, "coordinator stopped"),
+                });
+            }
+            std::thread::sleep(Duration::from_millis(5));
+            coord.stop();
+        });
+        assert_eq!(
+            coord.metrics.requests.load(Ordering::Relaxed),
+            answered.load(Ordering::Relaxed),
+            "metrics must count exactly the answered requests"
+        );
+        // idempotent
+        coord.stop();
+    }
+
+    #[test]
     fn tcp_roundtrip() {
         let coord = Coordinator::start(tiny_engine(), BatcherConfig::default());
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
@@ -344,6 +438,8 @@ mod tests {
         line.clear();
         r.read_line(&mut line).unwrap();
         assert!(line.contains("requests=1"), "{line}");
+        assert!(line.contains("backend=dense"), "{line}");
+        assert!(line.contains("resident_bytes="), "{line}");
         writeln!(s, "QUIT").unwrap();
         coord.stop();
     }

@@ -39,10 +39,25 @@
 //!                             rotation-seed / fine-tune-scale metadata +
 //!                             dense fp32 embeddings/norms/head; unpack()
 //!                             dequantizes block-parallel and reproduces
-//!                             the driver's reconstruction bit-exactly
-//! main (llvq pack/unpack/     CLI: produce, expand, and serve packed
-//!       serve --packed)       artifacts; stats report on-disk bytes and
-//!                             effective bits/weight
+//!                             the driver's reconstruction bit-exactly;
+//!                             load_meta/PackedFile give header-only stats
+//!                             and random access to per-layer byte ranges
+//! model::backend              the execution layer: LinearOp (shape /
+//!                             matvec / resident_bytes) + ExecutionBackend
+//!                             with three op families — dense (oracle),
+//!                             cached (lazy per-layer decode on first
+//!                             touch), fused (matvec straight over the
+//!                             bit-packed code streams; the dense matrix
+//!                             never exists in memory)
+//! model::transformer          forward() is generic over ForwardOps, so
+//!                             Weights and every ExecutionBackend share
+//!                             one forward pass (and one eval path)
+//! coordinator                 BackendEngine: batched serving over any
+//!                             backend; STATS reports backend + resident
+//!                             weight bytes
+//! main (llvq pack/unpack/     CLI: produce, expand, inspect, and serve
+//!       stats/serve --packed  packed artifacts; serve --backend
+//!       --backend …)          dense|cached|fused selects the op family
 //! ```
 //!
 //! Entry points:
@@ -51,7 +66,10 @@
 //! * [`quant`] — the [`quant::VectorQuantizer`] trait and implementations.
 //! * [`pipeline`] — layer-wise PTQ with Hessian correction.
 //! * [`model::packed`] — the packed quantized-model artifact (`.llvqm`).
-//! * [`coordinator`] — batched inference service over the PJRT runtime.
+//! * [`model::backend`] — [`model::backend::LinearOp`] /
+//!   [`model::backend::ExecutionBackend`]: dense, lazily-decoded, and
+//!   fused execution over packed artifacts.
+//! * [`coordinator`] — batched inference service over any backend.
 //! * [`experiments`] — regenerators for every table/figure in the paper.
 
 pub mod util {
@@ -104,6 +122,7 @@ pub mod model {
     pub mod transformer;
     pub mod io;
     pub mod packed;
+    pub mod backend;
     pub mod eval;
     pub mod corpus;
 }

@@ -7,22 +7,27 @@
 //! * `quantize` — PTQ a model artifact with a chosen method (dense out).
 //! * `pack` — PTQ a model and write the packed `.llvqm` artifact.
 //! * `unpack` — expand a `.llvqm` back to a dense `.llvqw`.
+//! * `stats` — header-only stats of a `.llvqm` (no payload read).
 //! * `eval` — evaluate a model artifact (PPL + probes).
 //! * `serve` — start the batching inference server (TCP line protocol);
-//!   `--packed <file>` serves straight from a packed artifact.
+//!   `--packed <file>` serves a packed artifact, `--backend
+//!   dense|cached|fused` picks how its layers execute (dequantized at
+//!   load / lazily decoded on first touch / matvec over the bit-packed
+//!   code streams — no dense materialization at all).
 //! * `gen-model` — write a random-weight model (testing without python).
 //! * `info` — lattice summary (shell sizes, codebook bits, table VMEM).
 
 use std::sync::Arc;
 
-use llvq::coordinator::{BatcherConfig, Coordinator, NativeEngine};
+use llvq::coordinator::{BackendEngine, BatcherConfig, Coordinator};
 use llvq::experiments as exp;
 use llvq::leech::index::LeechIndexer;
 use llvq::leech::tables::KernelTables;
+use llvq::model::backend::{BackendKind, ExecutionBackend};
 use llvq::model::config::{config_by_name, model_zoo, ModelConfig};
 use llvq::model::eval::evaluate;
 use llvq::model::io as model_io;
-use llvq::model::packed::PackedModel;
+use llvq::model::packed::{PackedFile, PackedModel};
 use llvq::model::transformer::Weights;
 use llvq::pipeline::driver::{quantize_model, quantize_model_packed, PtqOptions};
 use llvq::pipeline::rotation::RotationMode;
@@ -40,13 +45,14 @@ fn main() {
         "quantize" => cmd_quantize(rest),
         "pack" => cmd_pack(rest),
         "unpack" => cmd_unpack(rest),
+        "stats" => cmd_stats(rest),
         "eval" => cmd_eval(rest),
         "serve" => cmd_serve(rest),
         "gen-model" => cmd_gen_model(rest),
         "info" => cmd_info(rest),
         _ => {
             eprintln!(
-                "usage: llvq <exp|tables|quantize|pack|unpack|eval|serve|gen-model|info> [flags]\n\
+                "usage: llvq <exp|tables|quantize|pack|unpack|stats|eval|serve|gen-model|info> [flags]\n\
                  try: llvq exp table1"
             );
             2
@@ -57,15 +63,15 @@ fn main() {
 
 /// The pack stats line: on-disk bytes and the effective rate of the file
 /// (codes + header + fp32 embeddings/norms) over the linear parameters.
-fn packed_stats_line(file_bytes: usize, packed: &PackedModel, cfg: &ModelConfig) -> String {
+/// Takes the exact code-bit count so callers can feed it from a full
+/// [`PackedModel`] or a header-only [`llvq::model::packed::PackedMeta`].
+fn packed_stats_line(file_bytes: usize, code_bits: u64, cfg: &ModelConfig) -> String {
     let linear = cfg.num_linear_params().max(1);
     format!(
-        "on-disk {} B | effective {:.4} bits/weight over {} linear params \
-         (codes alone: {:.4} bpw; fp32 dense parts included in the file)",
-        file_bytes,
+        "on-disk {file_bytes} B | effective {:.4} bits/weight over {linear} linear \
+         params (codes alone: {:.4} bpw; fp32 dense parts included in the file)",
         file_bytes as f64 * 8.0 / linear as f64,
-        linear,
-        packed.code_bits() as f64 / linear as f64,
+        code_bits as f64 / linear as f64,
     )
 }
 
@@ -344,7 +350,7 @@ fn cmd_pack(rest: Vec<String>) -> i32 {
     println!("wrote {}", out.display());
     println!(
         "pack stats: {} | dense .llvqw equivalent {} B ({:.1}x smaller)",
-        packed_stats_line(bytes.len(), &art.packed, &s.cfg),
+        packed_stats_line(bytes.len(), art.packed.code_bits(), &s.cfg),
         dense_len,
         dense_len as f64 / bytes.len() as f64
     );
@@ -415,7 +421,7 @@ fn cmd_unpack(rest: Vec<String>) -> i32 {
     );
     println!(
         "unpack stats: {} | dense {} B",
-        packed_stats_line(packed_len, &packed, &w.cfg),
+        packed_stats_line(packed_len, packed.code_bits(), &w.cfg),
         dense_len
     );
     let verify = a.get("verify").unwrap();
@@ -438,6 +444,46 @@ fn cmd_unpack(rest: Vec<String>) -> i32 {
         }
     }
     0
+}
+
+fn cmd_stats(rest: Vec<String>) -> i32 {
+    let a = Args::new("llvq stats — header-only stats of a packed .llvqm artifact")
+        .flag("path", "", "input .llvqm file")
+        .parse(rest.into_iter())
+        .unwrap();
+    let path = a.get("path").unwrap();
+    if path.is_empty() {
+        eprintln!("need --path <file.llvqm>");
+        return 2;
+    }
+    let path = std::path::PathBuf::from(path);
+    // load_meta reads magic + JSON header only — stats never touch the
+    // payload, so this stays O(header) even for big artifacts
+    match PackedModel::load_meta(&path) {
+        Ok(meta) => {
+            println!(
+                "{}: {}",
+                path.display(),
+                packed_stats_line(meta.file_len, meta.code_bits(), &meta.cfg)
+            );
+            println!(
+                "  config    : {} (d_model {}, {} layers, vocab {})",
+                meta.cfg.name, meta.cfg.d_model, meta.cfg.n_layers, meta.cfg.vocab
+            );
+            println!("  quantizer : {}", meta.quantizer.to_string_compact());
+            println!(
+                "  layers    : {} quantized ({} code B); dense fp32 tail {} B",
+                meta.layers.len(),
+                meta.code_bytes(),
+                meta.file_len - meta.dense_off
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    }
 }
 
 fn cmd_eval(rest: Vec<String>) -> i32 {
@@ -485,10 +531,35 @@ fn cmd_eval(rest: Vec<String>) -> i32 {
     }
 }
 
+/// Build the serving backend for `--packed <file>` under `--backend`:
+/// dense unpacks everything at load (oracle), cached defers each layer's
+/// decode to first touch, fused keeps only the bit-packed code streams.
+fn packed_backend(
+    path: &std::path::Path,
+    kind: BackendKind,
+    threads: usize,
+) -> Result<ExecutionBackend, String> {
+    match kind {
+        BackendKind::Dense => {
+            let packed = PackedModel::load(path)?;
+            let w = packed.unpack(threads).map_err(|e| format!("unpack failed: {e}"))?;
+            Ok(ExecutionBackend::dense(w))
+        }
+        BackendKind::Cached => ExecutionBackend::packed_cached(PackedFile::open(path)?, threads),
+        BackendKind::Fused => ExecutionBackend::packed_fused(PackedFile::open(path)?),
+    }
+}
+
 fn cmd_serve(rest: Vec<String>) -> i32 {
     let a = Args::new("llvq serve — batching inference server")
         .flag("path", "", "model .llvqw to serve")
-        .flag("packed", "", "packed .llvqm to serve (dequantized at load, block-parallel)")
+        .flag("packed", "", "packed .llvqm to serve")
+        .flag(
+            "backend",
+            "dense",
+            "execution over --packed: dense (unpack at load) | cached (lazy \
+             per-layer decode) | fused (matvec over bit-packed codes)",
+        )
         .flag("model", "llama2-tiny", "zoo name (artifacts/<name>.llvqw)")
         .flag("addr", "127.0.0.1:7199", "listen address")
         .flag("max-batch", "8", "dynamic batch limit")
@@ -496,53 +567,74 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
         .switch("allow-random", "serve random weights if artifact missing")
         .parse(rest.into_iter())
         .unwrap();
-    let w = {
+    let kind = match BackendKind::parse(&a.get("backend").unwrap()) {
+        Some(k) => k,
+        None => {
+            eprintln!(
+                "unknown backend '{}' (dense|cached|fused)",
+                a.get("backend").unwrap()
+            );
+            return 2;
+        }
+    };
+    let backend = {
         let packed_path = a.get("packed").unwrap();
         let p = a.get("path").unwrap();
         if !packed_path.is_empty() {
             let path = std::path::PathBuf::from(&packed_path);
-            let packed = match PackedModel::load(&path) {
-                Ok(p) => p,
+            // stats come from the header alone (parse-validated file_len /
+            // code bits) — read it up front so a bad artifact fails before
+            // any payload work, and nothing re-reads the file afterwards
+            let meta = match PackedModel::load_meta(&path) {
+                Ok(m) => m,
                 Err(e) => {
                     eprintln!("{e}");
                     return 1;
                 }
             };
             let t0 = std::time::Instant::now();
-            let w = match packed.unpack(threadpool::default_threads()) {
-                Ok(w) => w,
+            let backend = match packed_backend(&path, kind, threadpool::default_threads()) {
+                Ok(b) => b,
                 Err(e) => {
-                    eprintln!("unpack failed: {e}");
+                    eprintln!("{e}");
                     return 1;
                 }
             };
-            let file_len = std::fs::metadata(&path).map(|m| m.len() as usize).unwrap_or(0);
             println!(
-                "loaded packed model in {:.0} ms: {}",
+                "loaded packed model ({} backend, {} B resident weights) in {:.0} ms: {}",
+                backend.kind().label(),
+                backend.resident_weight_bytes(),
                 t0.elapsed().as_secs_f64() * 1e3,
-                packed_stats_line(file_len, &packed, &w.cfg)
+                packed_stats_line(meta.file_len, meta.code_bits(), &meta.cfg)
             );
-            w
-        } else if !p.is_empty() {
-            match model_io::load(std::path::Path::new(&p)) {
-                Ok(w) => w,
-                Err(e) => {
-                    eprintln!("{e}");
-                    return 1;
-                }
-            }
+            backend
         } else {
-            let cfg = config_by_name(&a.get("model").unwrap()).expect("unknown model");
-            match exp::load_model(&cfg, a.get_bool("allow-random")) {
-                Ok(w) => w,
-                Err(e) => {
-                    eprintln!("{e}");
-                    return 1;
-                }
+            if kind != BackendKind::Dense {
+                eprintln!("--backend {} requires --packed <file.llvqm>", kind.label());
+                return 2;
             }
+            let w = if !p.is_empty() {
+                match model_io::load(std::path::Path::new(&p)) {
+                    Ok(w) => w,
+                    Err(e) => {
+                        eprintln!("{e}");
+                        return 1;
+                    }
+                }
+            } else {
+                let cfg = config_by_name(&a.get("model").unwrap()).expect("unknown model");
+                match exp::load_model(&cfg, a.get_bool("allow-random")) {
+                    Ok(w) => w,
+                    Err(e) => {
+                        eprintln!("{e}");
+                        return 1;
+                    }
+                }
+            };
+            ExecutionBackend::dense(w)
         }
     };
-    let engine = Arc::new(NativeEngine { weights: w });
+    let engine = Arc::new(BackendEngine { backend });
     let coord = Coordinator::start(
         engine,
         BatcherConfig {

@@ -6,7 +6,7 @@
 //! aggregate exactly (token-weighted).
 
 use crate::model::corpus::Corpus;
-use crate::model::transformer::{forward, sequence_loss, ActivationCapture, Weights};
+use crate::model::transformer::{forward, sequence_loss, ActivationCapture, ForwardOps};
 use crate::util::threadpool;
 
 /// Evaluation metrics for one model.
@@ -24,8 +24,15 @@ pub struct EvalMetrics {
 
 /// Evaluate on `num_seqs` held-out sequences from `seed` (use a seed
 /// disjoint from training — the convention is train seed 1000, eval 2000).
-pub fn evaluate(w: &Weights, num_seqs: usize, seed: u64, threads: usize) -> EvalMetrics {
-    let seq_len = w.cfg.max_seq.min(64);
+/// Generic over [`ForwardOps`]: dense weights and every packed execution
+/// backend evaluate through the identical code path.
+pub fn evaluate<M: ForwardOps + ?Sized>(
+    w: &M,
+    num_seqs: usize,
+    seed: u64,
+    threads: usize,
+) -> EvalMetrics {
+    let seq_len = w.cfg().max_seq.min(64);
     let mut corpus = Corpus::new(seed);
     let seqs = corpus.sequences(num_seqs, seq_len);
 
@@ -45,7 +52,7 @@ pub fn evaluate(w: &Weights, num_seqs: usize, seed: u64, threads: usize) -> Eval
         let det_mask = &det[1..=seq_len];
         let mut cap = ActivationCapture::default();
         let logits = forward(w, inputs, &mut cap);
-        let (nll, acc, _cloze) = sequence_loss(&logits, targets, det_mask, w.cfg.vocab);
+        let (nll, acc, _cloze) = sequence_loss(&logits, targets, det_mask, w.cfg().vocab);
         // recompute cloze counts exactly (weighted)
         let det_n = det_mask.iter().filter(|&&d| d).count();
         Partial {

@@ -28,8 +28,9 @@
 //! decode independently (each row stream is byte-aligned), which is what
 //! lets the load path fan out over the thread pool.
 
-use std::io::{Read, Write};
-use std::path::Path;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
 
 use crate::math::linalg::Matrix;
 use crate::model::config::ModelConfig;
@@ -134,6 +135,359 @@ fn take_f64s(data: &[u8], off: &mut usize, n: usize) -> Result<Vec<f64>, String>
         .collect())
 }
 
+/// Header-level description of one quantized layer: everything a
+/// [`PackedLayer`] records except the payload itself, plus the absolute
+/// byte offsets of its code stream and optional column scales — the
+/// random-access handle the lazy/fused execution backends load from.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedLayerMeta {
+    pub layer: usize,
+    pub kind: LinearKind,
+    pub rows: usize,
+    pub cols: usize,
+    pub sigma: f64,
+    pub rot_mode: RotationMode,
+    pub rot_seed: u64,
+    pub code_bits: u32,
+    pub blocks_per_row: usize,
+    pub row_bytes: usize,
+    pub code_bytes: usize,
+    pub has_scales: bool,
+    /// Absolute file offset of this layer's bit-packed code stream.
+    pub code_off: usize,
+    /// Absolute file offset of the f64 column scales (valid iff
+    /// `has_scales`).
+    pub scales_off: usize,
+}
+
+impl PackedLayerMeta {
+    /// Display label, e.g. `L2.wo`.
+    pub fn label(&self) -> String {
+        format!("L{}.{}", self.layer, self.kind.label())
+    }
+}
+
+/// Everything the `.llvqm` JSON header describes, plus derived section
+/// offsets — obtainable via [`PackedModel::load_meta`] without reading a
+/// single payload byte. Stats paths and the packed execution backends
+/// start here; [`PackedModel::from_bytes`] is built on the same parse, so
+/// the two can never disagree about the layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedMeta {
+    pub cfg: ModelConfig,
+    /// Quantizer spec header ([`VectorQuantizer::spec`]).
+    pub quantizer: Json,
+    pub layers: Vec<PackedLayerMeta>,
+    /// Absolute offset of the dense fp32 tail (embeddings, norms, head).
+    pub dense_off: usize,
+    /// Total file length the header implies (== the real file length for
+    /// a well-formed artifact; enforced by [`PackedMeta::parse`]).
+    pub file_len: usize,
+}
+
+impl PackedMeta {
+    /// Total bytes of code payload across layers.
+    pub fn code_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.code_bytes).sum()
+    }
+
+    /// Exact code bits over the quantized linear parameters.
+    pub fn code_bits(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| l.rows as u64 * l.blocks_per_row as u64 * l.code_bits as u64)
+            .sum()
+    }
+
+    /// Linear parameters covered by codes.
+    pub fn linear_params(&self) -> usize {
+        self.layers.iter().map(|l| l.rows * l.cols).sum()
+    }
+
+    /// Validate that the layer table covers exactly the config's linear
+    /// layers, shapes and block geometry included — what the execution
+    /// backends require before trusting per-layer offsets.
+    pub fn check_layout(&self) -> Result<(), String> {
+        let slots = self.cfg.n_layers * LINEAR_KINDS.len();
+        if self.layers.len() != slots {
+            return Err(format!(
+                "packed model has {} layers, config implies {slots}",
+                self.layers.len()
+            ));
+        }
+        let mut seen = vec![false; slots];
+        for lm in &self.layers {
+            if lm.layer >= self.cfg.n_layers {
+                return Err(format!("layer index {} out of range", lm.layer));
+            }
+            let (rows, cols) = lm.kind.shape(&self.cfg);
+            if (rows, cols) != (lm.rows, lm.cols) {
+                return Err(format!(
+                    "layer {} {:?}: shape {}×{} does not match config {}×{}",
+                    lm.layer, lm.kind, lm.rows, lm.cols, rows, cols
+                ));
+            }
+            let kidx = LINEAR_KINDS.iter().position(|k| *k == lm.kind).unwrap();
+            let slot = lm.layer * LINEAR_KINDS.len() + kidx;
+            if seen[slot] {
+                return Err(format!("duplicate layer {} {:?}", lm.layer, lm.kind));
+            }
+            seen[slot] = true;
+        }
+        Ok(())
+    }
+
+    /// Parse the magic + JSON header (the first `12 + hlen` bytes of
+    /// `data`), lay out every section offset, and validate the implied
+    /// layout against `total_len` — so offsets handed out here are always
+    /// in bounds for a file of that length.
+    pub fn parse(data: &[u8], total_len: usize) -> Result<Self, String> {
+        if data.len() < 12 || &data[..8] != MAGIC {
+            return Err("bad .llvqm magic".into());
+        }
+        let hlen = u32::from_le_bytes(data[8..12].try_into().unwrap()) as usize;
+        if 12 + hlen > data.len() || 12 + hlen > total_len {
+            return Err("truncated .llvqm header".into());
+        }
+        let hdr_text =
+            std::str::from_utf8(&data[12..12 + hlen]).map_err(|e| e.to_string())?;
+        let hdr = json::parse(hdr_text)?;
+        let cfg = io::config_from_header(
+            hdr.get("config").ok_or("header missing 'config'")?,
+        )?;
+        cfg.check()?;
+        let quantizer = hdr
+            .get("quantizer")
+            .ok_or("header missing 'quantizer'")?
+            .clone();
+        let layer_rows = hdr
+            .get("layers")
+            .and_then(|v| v.as_arr())
+            .ok_or("header missing 'layers' array")?;
+
+        let mut off = 12 + hlen;
+        let mut layers = Vec::with_capacity(layer_rows.len());
+        for (i, row) in layer_rows.iter().enumerate() {
+            let geti = |k: &str| -> Result<i64, String> {
+                row.get(k)
+                    .and_then(|v| v.as_i64())
+                    .ok_or_else(|| format!("layer {i}: missing int '{k}'"))
+            };
+            // size fields must be non-negative and small enough that no
+            // product below can overflow (cfg dims are already ≤ 2^24)
+            let getsize = |k: &str| -> Result<usize, String> {
+                match geti(k)? {
+                    v if (0..=1 << 40).contains(&v) => Ok(v as usize),
+                    v => Err(format!("layer {i}: '{k}' = {v} out of range")),
+                }
+            };
+            let kind = row
+                .get("kind")
+                .and_then(|v| v.as_str())
+                .and_then(kind_from_str)
+                .ok_or_else(|| format!("layer {i}: missing or unknown kind"))?;
+            let rot_mode = row
+                .get("rot_mode")
+                .and_then(|v| v.as_str())
+                .and_then(rot_from_str)
+                .ok_or_else(|| format!("layer {i}: missing or unknown rot_mode"))?;
+            let sigma = row
+                .get("sigma")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| format!("layer {i}: missing sigma"))?;
+            let rows = getsize("rows")?;
+            let cols = getsize("cols")?;
+            let row_bytes = getsize("row_bytes")?;
+            let code_bytes = getsize("code_bytes")?;
+            if rows.checked_mul(row_bytes) != Some(code_bytes) {
+                return Err(format!(
+                    "layer {i}: code_bytes {code_bytes} != rows {rows} × row_bytes {row_bytes}"
+                ));
+            }
+            let code_bits = getsize("code_bits")?;
+            if code_bits > u32::MAX as usize {
+                return Err(format!("layer {i}: code_bits {code_bits} out of range"));
+            }
+            let has_scales = matches!(row.get("has_scales"), Some(Json::Bool(true)));
+            let code_off = off;
+            off = off
+                .checked_add(code_bytes)
+                .ok_or("section offset overflow")?;
+            let scales_off = off;
+            if has_scales {
+                let scale_bytes = cols.checked_mul(8).ok_or("tensor size overflow")?;
+                off = off
+                    .checked_add(scale_bytes)
+                    .ok_or("section offset overflow")?;
+            }
+            layers.push(PackedLayerMeta {
+                layer: getsize("layer")?,
+                kind,
+                rows,
+                cols,
+                sigma,
+                rot_mode,
+                rot_seed: geti("rot_seed")? as u64,
+                code_bits: code_bits as u32,
+                blocks_per_row: getsize("blocks_per_row")?,
+                row_bytes,
+                code_bytes,
+                has_scales,
+                code_off,
+                scales_off,
+            });
+        }
+
+        let dense_off = off;
+        let d = cfg.d_model;
+        let dense_elems = cfg.vocab * d      // tok_emb
+            + cfg.max_seq * d                // pos_emb
+            + cfg.n_layers * 2 * d           // norms
+            + d                              // final norm
+            + cfg.vocab * d; // lm head
+        let file_len = dense_off
+            .checked_add(dense_elems.checked_mul(4).ok_or("tensor size overflow")?)
+            .ok_or("section offset overflow")?;
+        if file_len != total_len {
+            return Err(format!(
+                "file length mismatch: header implies {file_len} B, file has {total_len}"
+            ));
+        }
+        Ok(Self {
+            cfg,
+            quantizer,
+            layers,
+            dense_off,
+            file_len,
+        })
+    }
+}
+
+/// The fp32 tail of a `.llvqm` file — everything the paper keeps dense.
+#[derive(Clone, Debug)]
+pub struct DenseTail {
+    pub tok_emb: Vec<f32>,
+    pub pos_emb: Vec<f32>,
+    pub norms1: Vec<Vec<f32>>,
+    pub norms2: Vec<Vec<f32>>,
+    pub norm_f: Vec<f32>,
+    pub lm_head: Vec<f32>,
+}
+
+/// Parse the dense fp32 tail starting at `off`; must consume `data`
+/// exactly (shared by [`PackedModel::from_bytes`] on the whole file and
+/// [`PackedFile::read_dense`] on just the tail).
+fn parse_dense_tail(data: &[u8], mut off: usize, cfg: &ModelConfig) -> Result<DenseTail, String> {
+    let d = cfg.d_model;
+    let tok_emb = take_f32s(data, &mut off, cfg.vocab * d)?;
+    let pos_emb = take_f32s(data, &mut off, cfg.max_seq * d)?;
+    let mut norms1 = Vec::with_capacity(cfg.n_layers);
+    let mut norms2 = Vec::with_capacity(cfg.n_layers);
+    for _ in 0..cfg.n_layers {
+        norms1.push(take_f32s(data, &mut off, d)?);
+        norms2.push(take_f32s(data, &mut off, d)?);
+    }
+    let norm_f = take_f32s(data, &mut off, d)?;
+    let lm_head = take_f32s(data, &mut off, cfg.vocab * d)?;
+    if off != data.len() {
+        return Err(format!(
+            "trailing bytes: consumed {off}, file has {}",
+            data.len()
+        ));
+    }
+    Ok(DenseTail {
+        tok_emb,
+        pos_emb,
+        norms1,
+        norms2,
+        norm_f,
+        lm_head,
+    })
+}
+
+/// Random access into a `.llvqm` file on disk: the parsed header plus a
+/// seekable handle, so layers can be read (and decoded) individually on
+/// first touch instead of loading the whole artifact up front. Shared
+/// behind an `Arc` by the packed execution backends; reads are serialized
+/// by a mutex (the seek+read pairs are tiny next to decode cost).
+pub struct PackedFile {
+    pub meta: PackedMeta,
+    path: PathBuf,
+    file: Mutex<std::fs::File>,
+}
+
+impl PackedFile {
+    pub fn open(path: &Path) -> Result<Self, String> {
+        let meta = PackedModel::load_meta(path)?;
+        let file = std::fs::File::open(path)
+            .map_err(|e| format!("open {}: {e}", path.display()))?;
+        Ok(Self {
+            meta,
+            path: path.to_path_buf(),
+            file: Mutex::new(file),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn read_at(&self, off: usize, buf: &mut [u8]) -> Result<(), String> {
+        let mut f = self.file.lock().unwrap();
+        f.seek(SeekFrom::Start(off as u64))
+            .map_err(|e| format!("seek {}: {e}", self.path.display()))?;
+        f.read_exact(buf)
+            .map_err(|e| format!("read {}: {e}", self.path.display()))
+    }
+
+    /// Load one layer's codes (and column scales) from their recorded
+    /// offsets — the only payload I/O a lazy backend pays per layer.
+    pub fn read_layer(&self, idx: usize) -> Result<PackedLayer, String> {
+        let lm = self
+            .meta
+            .layers
+            .get(idx)
+            .ok_or_else(|| format!("layer index {idx} out of range"))?;
+        let mut data = vec![0u8; lm.code_bytes];
+        self.read_at(lm.code_off, &mut data)?;
+        let col_scales = if lm.has_scales {
+            let mut raw = vec![0u8; lm.cols * 8];
+            self.read_at(lm.scales_off, &mut raw)?;
+            Some(
+                raw.chunks_exact(8)
+                    .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            )
+        } else {
+            None
+        };
+        Ok(PackedLayer {
+            layer: lm.layer,
+            kind: lm.kind,
+            rows: lm.rows,
+            cols: lm.cols,
+            sigma: lm.sigma,
+            rot_mode: lm.rot_mode,
+            rot_seed: lm.rot_seed,
+            col_scales,
+            codes: PackedCodes {
+                code_bits: lm.code_bits,
+                blocks_per_row: lm.blocks_per_row,
+                row_bytes: lm.row_bytes,
+                data,
+            },
+        })
+    }
+
+    /// Load the dense fp32 tail (embeddings, norms, LM head).
+    pub fn read_dense(&self) -> Result<DenseTail, String> {
+        let n = self.meta.file_len - self.meta.dense_off;
+        let mut buf = vec![0u8; n];
+        self.read_at(self.meta.dense_off, &mut buf)?;
+        parse_dense_tail(&buf, 0, &self.meta.cfg)
+    }
+}
+
 impl PackedModel {
     /// Total bytes of code payload (excluding header, scales, and the
     /// dense fp32 section).
@@ -209,126 +563,49 @@ impl PackedModel {
         buf
     }
 
-    /// Parse the `.llvqm` byte format, validating every section length.
+    /// Parse the `.llvqm` byte format, validating every section length
+    /// (layout via [`PackedMeta::parse`], payloads sliced at its offsets).
     pub fn from_bytes(data: &[u8]) -> Result<Self, String> {
-        if data.len() < 12 || &data[..8] != MAGIC {
-            return Err("bad .llvqm magic".into());
-        }
-        let hlen = u32::from_le_bytes(data[8..12].try_into().unwrap()) as usize;
-        if 12 + hlen > data.len() {
-            return Err("truncated .llvqm header".into());
-        }
-        let hdr_text =
-            std::str::from_utf8(&data[12..12 + hlen]).map_err(|e| e.to_string())?;
-        let hdr = json::parse(hdr_text)?;
-        let cfg = io::config_from_header(
-            hdr.get("config").ok_or("header missing 'config'")?,
-        )?;
-        cfg.check()?;
-        let quantizer = hdr
-            .get("quantizer")
-            .ok_or("header missing 'quantizer'")?
-            .clone();
-        let layer_rows = hdr
-            .get("layers")
-            .and_then(|v| v.as_arr())
-            .ok_or("header missing 'layers' array")?;
-
-        let mut off = 12 + hlen;
-        let mut layers = Vec::with_capacity(layer_rows.len());
-        for (i, row) in layer_rows.iter().enumerate() {
-            let geti = |k: &str| -> Result<i64, String> {
-                row.get(k)
-                    .and_then(|v| v.as_i64())
-                    .ok_or_else(|| format!("layer {i}: missing int '{k}'"))
-            };
-            // size fields must be non-negative and small enough that no
-            // product below can overflow (cfg dims are already ≤ 2^24)
-            let getsize = |k: &str| -> Result<usize, String> {
-                match geti(k)? {
-                    v if (0..=1 << 40).contains(&v) => Ok(v as usize),
-                    v => Err(format!("layer {i}: '{k}' = {v} out of range")),
-                }
-            };
-            let kind = row
-                .get("kind")
-                .and_then(|v| v.as_str())
-                .and_then(kind_from_str)
-                .ok_or_else(|| format!("layer {i}: missing or unknown kind"))?;
-            let rot_mode = row
-                .get("rot_mode")
-                .and_then(|v| v.as_str())
-                .and_then(rot_from_str)
-                .ok_or_else(|| format!("layer {i}: missing or unknown rot_mode"))?;
-            let sigma = row
-                .get("sigma")
-                .and_then(|v| v.as_f64())
-                .ok_or_else(|| format!("layer {i}: missing sigma"))?;
-            let rows = getsize("rows")?;
-            let cols = getsize("cols")?;
-            let row_bytes = getsize("row_bytes")?;
-            let code_bytes = getsize("code_bytes")?;
-            if rows.checked_mul(row_bytes) != Some(code_bytes) {
-                return Err(format!(
-                    "layer {i}: code_bytes {code_bytes} != rows {rows} × row_bytes {row_bytes}"
-                ));
-            }
-            let code_bits = getsize("code_bits")?;
-            if code_bits > u32::MAX as usize {
-                return Err(format!("layer {i}: code_bits {code_bits} out of range"));
-            }
+        let meta = PackedMeta::parse(data, data.len())?;
+        let mut layers = Vec::with_capacity(meta.layers.len());
+        for lm in &meta.layers {
+            // in bounds: parse() proved all offsets ≤ file_len == data.len()
+            let mut off = lm.code_off;
             let codes = PackedCodes {
-                code_bits: code_bits as u32,
-                blocks_per_row: getsize("blocks_per_row")?,
-                row_bytes,
-                data: take(data, &mut off, code_bytes)?.to_vec(),
+                code_bits: lm.code_bits,
+                blocks_per_row: lm.blocks_per_row,
+                row_bytes: lm.row_bytes,
+                data: take(data, &mut off, lm.code_bytes)?.to_vec(),
             };
-            let has_scales = matches!(row.get("has_scales"), Some(Json::Bool(true)));
-            let col_scales = if has_scales {
-                Some(take_f64s(data, &mut off, cols)?)
+            let col_scales = if lm.has_scales {
+                let mut soff = lm.scales_off;
+                Some(take_f64s(data, &mut soff, lm.cols)?)
             } else {
                 None
             };
             layers.push(PackedLayer {
-                layer: getsize("layer")?,
-                kind,
-                rows,
-                cols,
-                sigma,
-                rot_mode,
-                rot_seed: geti("rot_seed")? as u64,
+                layer: lm.layer,
+                kind: lm.kind,
+                rows: lm.rows,
+                cols: lm.cols,
+                sigma: lm.sigma,
+                rot_mode: lm.rot_mode,
+                rot_seed: lm.rot_seed,
                 col_scales,
                 codes,
             });
         }
-
-        let d = cfg.d_model;
-        let tok_emb = take_f32s(data, &mut off, cfg.vocab * d)?;
-        let pos_emb = take_f32s(data, &mut off, cfg.max_seq * d)?;
-        let mut norms1 = Vec::with_capacity(cfg.n_layers);
-        let mut norms2 = Vec::with_capacity(cfg.n_layers);
-        for _ in 0..cfg.n_layers {
-            norms1.push(take_f32s(data, &mut off, d)?);
-            norms2.push(take_f32s(data, &mut off, d)?);
-        }
-        let norm_f = take_f32s(data, &mut off, d)?;
-        let lm_head = take_f32s(data, &mut off, cfg.vocab * d)?;
-        if off != data.len() {
-            return Err(format!(
-                "trailing bytes: consumed {off}, file has {}",
-                data.len()
-            ));
-        }
+        let tail = parse_dense_tail(data, meta.dense_off, &meta.cfg)?;
         Ok(Self {
-            cfg,
-            quantizer,
+            cfg: meta.cfg,
+            quantizer: meta.quantizer,
             layers,
-            tok_emb,
-            pos_emb,
-            norms1,
-            norms2,
-            norm_f,
-            lm_head,
+            tok_emb: tail.tok_emb,
+            pos_emb: tail.pos_emb,
+            norms1: tail.norms1,
+            norms2: tail.norms2,
+            norm_f: tail.norm_f,
+            lm_head: tail.lm_head,
         })
     }
 
@@ -401,6 +678,34 @@ impl PackedModel {
             .read_to_end(&mut data)
             .map_err(|e| e.to_string())?;
         Self::from_bytes(&data)
+    }
+
+    /// Read only the magic + JSON header of a `.llvqm` file — enough for
+    /// stats, layout validation, and random-access layer loading — without
+    /// touching any payload byte. The CLI `stats` path and the packed
+    /// execution backends start here instead of [`PackedModel::load`].
+    pub fn load_meta(path: &Path) -> Result<PackedMeta, String> {
+        let mut f = std::fs::File::open(path)
+            .map_err(|e| format!("open {}: {e}", path.display()))?;
+        let total = f.metadata().map_err(|e| e.to_string())?.len();
+        if total > usize::MAX as u64 {
+            return Err("file too large".into());
+        }
+        let mut head = [0u8; 12];
+        f.read_exact(&mut head)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        if &head[..8] != MAGIC {
+            return Err("bad .llvqm magic".into());
+        }
+        let hlen = u32::from_le_bytes(head[8..12].try_into().unwrap()) as usize;
+        if 12 + hlen > total as usize {
+            return Err("truncated .llvqm header".into());
+        }
+        let mut buf = vec![0u8; 12 + hlen];
+        buf[..12].copy_from_slice(&head);
+        f.read_exact(&mut buf[12..])
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        PackedMeta::parse(&buf, total as usize)
     }
 }
 
@@ -528,6 +833,41 @@ mod tests {
             (packed_len as f64) < 0.5 * dense_len as f64,
             "packed {packed_len} vs dense {dense_len}"
         );
+    }
+
+    #[test]
+    fn load_meta_and_packed_file_match_full_load() {
+        let (art, cfg) = packed_fixture();
+        let path = std::env::temp_dir().join(format!(
+            "llvq-packedfile-test-{}.llvqm",
+            std::process::id()
+        ));
+        art.packed.save(&path).unwrap();
+        // header-only meta agrees with the in-memory artifact on every stat
+        let meta = PackedModel::load_meta(&path).unwrap();
+        assert_eq!(meta.cfg, cfg);
+        assert_eq!(meta.code_bytes(), art.packed.code_bytes());
+        assert_eq!(meta.code_bits(), art.packed.code_bits());
+        assert_eq!(meta.linear_params(), art.packed.linear_params());
+        assert_eq!(meta.layers.len(), art.packed.layers.len());
+        assert_eq!(
+            meta.file_len,
+            std::fs::metadata(&path).unwrap().len() as usize
+        );
+        meta.check_layout().unwrap();
+        // random-access layer reads reproduce the eagerly-loaded payloads
+        let f = PackedFile::open(&path).unwrap();
+        for (i, pl) in art.packed.layers.iter().enumerate() {
+            assert_eq!(&f.read_layer(i).unwrap(), pl, "layer {i}");
+        }
+        let tail = f.read_dense().unwrap();
+        assert_eq!(tail.tok_emb, art.packed.tok_emb);
+        assert_eq!(tail.pos_emb, art.packed.pos_emb);
+        assert_eq!(tail.norms1, art.packed.norms1);
+        assert_eq!(tail.norms2, art.packed.norms2);
+        assert_eq!(tail.norm_f, art.packed.norm_f);
+        assert_eq!(tail.lm_head, art.packed.lm_head);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

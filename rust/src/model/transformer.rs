@@ -168,21 +168,23 @@ fn rmsnorm(x: &mut [f32], gamma: &[f32]) {
     let d = x.len();
     let ms: f64 = x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / d as f64;
     let inv = 1.0 / (ms + 1e-6).sqrt();
-    for i in 0..d {
-        x[i] = ((x[i] as f64) * inv) as f32 * gamma[i];
+    for (xi, g) in x.iter_mut().zip(gamma) {
+        *xi = ((*xi as f64) * inv) as f32 * g;
     }
 }
 
-/// y = W·x for row-major W (d_out × d_in).
-fn linear(w: &[f32], d_out: usize, d_in: usize, x: &[f32], y: &mut [f32]) {
+/// y = W·x for row-major W (d_out × d_in) — the dense matvec kernel shared
+/// by the Weights fast path and `model::backend::DenseOp` (keeping the two
+/// bit-identical).
+pub(crate) fn linear(w: &[f32], d_out: usize, d_in: usize, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(w.len(), d_out * d_in);
-    for o in 0..d_out {
+    for (o, yo) in y.iter_mut().enumerate().take(d_out) {
         let row = &w[o * d_in..(o + 1) * d_in];
         let mut acc = 0f32;
-        for i in 0..d_in {
-            acc += row[i] * x[i];
+        for (ri, xi) in row.iter().zip(x) {
+            acc += ri * xi;
         }
-        y[o] = acc;
+        *yo = acc;
     }
 }
 
@@ -191,25 +193,86 @@ fn silu(v: f32) -> f32 {
     v / (1.0 + (-v).exp())
 }
 
+/// What [`forward`] needs from a model representation: the dense fp32
+/// parts (embeddings, norms) by reference, plus every linear layer as an
+/// *operation* `y = W·x` rather than a materialized matrix. [`Weights`]
+/// implements it directly (the f32 oracle); `model::backend::
+/// ExecutionBackend` implements it over [`model::backend::LinearOp`]s so
+/// the same forward pass runs on dense, lazily-decoded, or fused
+/// bit-packed representations.
+///
+/// `Sync` is a supertrait because evaluation fans sequences out over the
+/// thread pool.
+pub trait ForwardOps: Sync {
+    fn cfg(&self) -> &ModelConfig;
+    fn tok_emb(&self) -> &[f32];
+    fn pos_emb(&self) -> &[f32];
+    fn norm1(&self, layer: usize) -> &[f32];
+    fn norm2(&self, layer: usize) -> &[f32];
+    fn norm_f(&self) -> &[f32];
+    /// `y = W_{layer,kind} · x`.
+    fn linear(&self, layer: usize, kind: LinearKind, x: &[f32], y: &mut [f32]);
+    /// `y = W_head · x` (vocab × d_model).
+    fn lm_head(&self, x: &[f32], y: &mut [f32]);
+}
+
+impl ForwardOps for Weights {
+    fn cfg(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn tok_emb(&self) -> &[f32] {
+        &self.tok_emb
+    }
+
+    fn pos_emb(&self) -> &[f32] {
+        &self.pos_emb
+    }
+
+    fn norm1(&self, layer: usize) -> &[f32] {
+        &self.blocks[layer].norm1
+    }
+
+    fn norm2(&self, layer: usize) -> &[f32] {
+        &self.blocks[layer].norm2
+    }
+
+    fn norm_f(&self) -> &[f32] {
+        &self.norm_f
+    }
+
+    fn linear(&self, layer: usize, kind: LinearKind, x: &[f32], y: &mut [f32]) {
+        let (rows, cols) = kind.shape(&self.cfg);
+        linear(self.blocks[layer].linear(kind), rows, cols, x, y);
+    }
+
+    fn lm_head(&self, x: &[f32], y: &mut [f32]) {
+        linear(&self.lm_head, self.cfg.vocab, self.cfg.d_model, x, y);
+    }
+}
+
 /// Run the model on a token sequence, returning per-position logits
 /// (seq × vocab, row-major). Optionally captures linear-layer inputs.
-pub fn forward(
-    w: &Weights,
+/// Generic over [`ForwardOps`], so the same pass serves dense [`Weights`]
+/// and every packed execution backend.
+pub fn forward<M: ForwardOps + ?Sized>(
+    m: &M,
     tokens: &[u8],
     capture: &mut ActivationCapture,
 ) -> Vec<f32> {
-    let cfg = &w.cfg;
+    let cfg = m.cfg();
     let (s, d) = (tokens.len(), cfg.d_model);
     assert!(s <= cfg.max_seq);
     let hd = cfg.head_dim();
     let nh = cfg.n_heads;
 
     // embeddings
+    let (tok_emb, pos_emb) = (m.tok_emb(), m.pos_emb());
     let mut h = vec![0f32; s * d];
     for t in 0..s {
         let tok = tokens[t] as usize;
         for i in 0..d {
-            h[t * d + i] = w.tok_emb[tok * d + i] + w.pos_emb[t * d + i];
+            h[t * d + i] = tok_emb[tok * d + i] + pos_emb[t * d + i];
         }
     }
 
@@ -221,17 +284,17 @@ pub fn forward(
     let mut ff = vec![0f32; cfg.d_ff];
     let mut ff2 = vec![0f32; d];
 
-    for (li, blk) in w.blocks.iter().enumerate() {
+    for li in 0..cfg.n_layers {
         // --- attention ---
         for t in 0..s {
             normed.copy_from_slice(&h[t * d..(t + 1) * d]);
-            rmsnorm(&mut normed, &blk.norm1);
+            rmsnorm(&mut normed, m.norm1(li));
             capture.record(li, LinearKind::Wq, &normed);
             capture.record(li, LinearKind::Wk, &normed);
             capture.record(li, LinearKind::Wv, &normed);
-            linear(&blk.wq, d, d, &normed, &mut q[t * d..(t + 1) * d]);
-            linear(&blk.wk, d, d, &normed, &mut k[t * d..(t + 1) * d]);
-            linear(&blk.wv, d, d, &normed, &mut v[t * d..(t + 1) * d]);
+            m.linear(li, LinearKind::Wq, &normed, &mut q[t * d..(t + 1) * d]);
+            m.linear(li, LinearKind::Wk, &normed, &mut k[t * d..(t + 1) * d]);
+            m.linear(li, LinearKind::Wv, &normed, &mut v[t * d..(t + 1) * d]);
         }
         let scale = 1.0 / (hd as f32).sqrt();
         for t in 0..s {
@@ -246,16 +309,16 @@ pub fn forward(
                 for u in 0..=t {
                     let ku = &k[u * d + off..u * d + off + hd];
                     let mut sdot = 0f32;
-                    for i in 0..hd {
-                        sdot += qt[i] * ku[i];
+                    for (qi, ki) in qt.iter().zip(ku) {
+                        sdot += qi * ki;
                     }
                     scores[u] = sdot * scale;
                     maxs = maxs.max(scores[u]);
                 }
                 let mut z = 0f32;
-                for u in 0..=t {
-                    scores[u] = (scores[u] - maxs).exp();
-                    z += scores[u];
+                for sc in scores.iter_mut() {
+                    *sc = (*sc - maxs).exp();
+                    z += *sc;
                 }
                 let zi = 1.0 / z;
                 for u in 0..=t {
@@ -269,7 +332,7 @@ pub fn forward(
         }
         for t in 0..s {
             capture.record(li, LinearKind::Wo, &attn_out[t * d..(t + 1) * d]);
-            linear(&blk.wo, d, d, &attn_out[t * d..(t + 1) * d], &mut normed);
+            m.linear(li, LinearKind::Wo, &attn_out[t * d..(t + 1) * d], &mut normed);
             for i in 0..d {
                 h[t * d + i] += normed[i];
             }
@@ -277,14 +340,14 @@ pub fn forward(
         // --- MLP ---
         for t in 0..s {
             normed.copy_from_slice(&h[t * d..(t + 1) * d]);
-            rmsnorm(&mut normed, &blk.norm2);
+            rmsnorm(&mut normed, m.norm2(li));
             capture.record(li, LinearKind::W1, &normed);
-            linear(&blk.w1, cfg.d_ff, d, &normed, &mut ff);
+            m.linear(li, LinearKind::W1, &normed, &mut ff);
             for x in ff.iter_mut() {
                 *x = silu(*x);
             }
             capture.record(li, LinearKind::W2, &ff);
-            linear(&blk.w2, d, cfg.d_ff, &ff, &mut ff2);
+            m.linear(li, LinearKind::W2, &ff, &mut ff2);
             for i in 0..d {
                 h[t * d + i] += ff2[i];
             }
@@ -295,14 +358,8 @@ pub fn forward(
     let mut logits = vec![0f32; s * cfg.vocab];
     for t in 0..s {
         normed.copy_from_slice(&h[t * d..(t + 1) * d]);
-        rmsnorm(&mut normed, &w.norm_f);
-        linear(
-            &w.lm_head,
-            cfg.vocab,
-            d,
-            &normed,
-            &mut logits[t * cfg.vocab..(t + 1) * cfg.vocab],
-        );
+        rmsnorm(&mut normed, m.norm_f());
+        m.lm_head(&normed, &mut logits[t * cfg.vocab..(t + 1) * cfg.vocab]);
     }
     logits
 }

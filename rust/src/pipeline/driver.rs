@@ -12,7 +12,11 @@
 //! codes plus the per-layer reconstruction metadata (σ, rotation seed,
 //! fine-tuned scales) — the deployment artifact of the `.llvqm` format. The
 //! dense reconstruction is kept alongside for evaluation; `PackedModel::
-//! unpack` reproduces it bit-exactly.
+//! unpack` reproduces it bit-exactly, and the serving-side execution
+//! backends (`model::backend`) consume the same artifact either lazily
+//! (per-layer decode on first touch) or fused (matvec straight over the
+//! code streams), replaying exactly the reconstruction algebra recorded
+//! here.
 
 use std::collections::HashMap;
 

@@ -127,6 +127,16 @@ impl LayerRotation {
             r.forward(x);
         }
     }
+
+    /// Apply R_outᵀ to a single output vector — the other half of the
+    /// online (unfused) evaluation `y = R_outᵀ · W_rot · (R_in · x)`. The
+    /// fused packed backend uses this to serve rotated code streams without
+    /// ever materializing the un-rotated weight matrix.
+    pub fn unrotate_output(&self, y: &mut [f64]) {
+        if let Some(r) = &self.r_out {
+            r.inverse(y);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -170,10 +180,7 @@ mod tests {
         let mut xr = x.clone();
         rot.rotate_activation(&mut xr);
         let mut y = wr.matvec(&xr);
-        // undo output rotation
-        if let Some(r) = &rot.r_out {
-            r.inverse(&mut y);
-        }
+        rot.unrotate_output(&mut y);
         for (a, b) in y.iter().zip(&y_ref) {
             assert!((a - b).abs() < 1e-9);
         }

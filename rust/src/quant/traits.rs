@@ -127,6 +127,38 @@ pub trait VectorQuantizer: Send + Sync {
         self.dequantize(&code, out);
     }
 
+    /// Decode one product-coded row (`⌈x.len()/dim⌉` consecutive codes)
+    /// from the bitstream and return its dot product with `x`, **without
+    /// materializing the row**: each block lands in the caller's
+    /// `dim`-length `scratch` and is accumulated immediately (f64). This
+    /// is the fused serving backend's inner loop — `widths` must be
+    /// [`VectorQuantizer::code_widths`], `code`/`scratch` are reusable
+    /// hot-loop state; padding lanes beyond `x.len()` are discarded.
+    /// Implementations with table-driven kernels may override it.
+    fn decode_row_dot(
+        &self,
+        widths: &[u32],
+        r: &mut BitReader,
+        code: &mut Code,
+        scratch: &mut [f32],
+        x: &[f64],
+    ) -> f64 {
+        let d = self.dim();
+        debug_assert_eq!(scratch.len(), d);
+        let mut acc = 0f64;
+        let mut i = 0;
+        while i < x.len() {
+            read_code_with(widths, r, code);
+            self.dequantize(code, scratch);
+            let take = d.min(x.len() - i);
+            for (s, xi) in scratch[..take].iter().zip(&x[i..i + take]) {
+                acc += *s as f64 * xi;
+            }
+            i += take;
+        }
+        acc
+    }
+
     /// Self-describing spec: JSON with a `kind` tag plus every parameter
     /// needed to rebuild this exact quantizer via [`quantizer_from_spec`].
     /// The default is display-only (no `kind`), which the factory rejects —
@@ -357,6 +389,31 @@ mod tests {
         q.quantize_into(&[5.0, 6.0, 7.0, 8.0], &mut code);
         assert_eq!(code.words.len(), 4);
         assert_eq!(code.words[0], 5f32.to_bits() as u64);
+    }
+
+    #[test]
+    fn decode_row_dot_matches_dense_reconstruction() {
+        // fused-path contract: dotting the stream against x equals
+        // materializing the row first (Identity decodes exactly, so the
+        // two are equal up to f64 summation of identical terms)
+        let q = Identity(4);
+        let row: Vec<f32> = (0..10).map(|i| i as f32 * 0.5 - 2.0).collect();
+        let mut w = BitWriter::new();
+        crate::quant::product::encode_row_into(&q, &row, &mut w);
+        let bytes = w.finish();
+        let x: Vec<f64> = (0..10).map(|i| (i as f64) * 0.1 - 0.4).collect();
+        let widths = q.code_widths();
+        let mut code = Code::empty();
+        let mut scratch = vec![0f32; 4];
+        let dot = q.decode_row_dot(
+            &widths,
+            &mut BitReader::new(&bytes),
+            &mut code,
+            &mut scratch,
+            &x,
+        );
+        let want: f64 = row.iter().zip(&x).map(|(&r, &xi)| r as f64 * xi).sum();
+        assert!((dot - want).abs() < 1e-12, "{dot} vs {want}");
     }
 
     #[test]

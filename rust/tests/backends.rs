@@ -1,0 +1,222 @@
+//! Cross-backend equivalence: the same `.llvqm` artifact served through
+//! the dense, packed-cached, and packed-fused execution backends must
+//! produce the same model.
+//!
+//! Numerical contract (documented in `model::backend`): dense and cached
+//! backends are **bit-identical** to the PTQ driver's reconstruction —
+//! cached decodes each layer with the same `unpack_layer` float-op
+//! sequence and runs the same f32 matvec kernel. The fused backend
+//! accumulates each row dot product in f64 over the raw code stream
+//! (the dense path rounds every weight to f32 first and accumulates the
+//! matvec in f32), so its logits agree to ~1e-5 *relative* and must be
+//! argmax-identical — that difference in accumulation order is the only
+//! divergence allowed.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use llvq::coordinator::{serve_tcp, BackendEngine, BatcherConfig, Coordinator};
+use llvq::leech::index::LeechIndexer;
+use llvq::model::backend::ExecutionBackend;
+use llvq::model::config::config_by_name;
+use llvq::model::eval::evaluate;
+use llvq::model::packed::PackedFile;
+use llvq::model::transformer::{forward, ActivationCapture, Weights};
+use llvq::pipeline::driver::{quantize_model_packed, PtqArtifacts, PtqOptions};
+use llvq::pipeline::rotation::RotationMode;
+use llvq::quant::e8::{E8Codebook, E8Cut};
+use llvq::quant::llvq::{LlvqShapeGain, LlvqSpherical};
+use llvq::quant::scalar::{LloydMaxQuantizer, UniformQuantizer};
+use llvq::quant::VectorQuantizer;
+use llvq::util::proptest::check;
+
+/// The five quantizer specs of the `.llvqm` codec surface (scalar uniform,
+/// scalar Lloyd–Max, E8, LLVQ spherical, LLVQ shape–gain).
+fn five_quantizers() -> Vec<(&'static str, Box<dyn VectorQuantizer>)> {
+    let ix = Arc::new(LeechIndexer::new(3));
+    vec![
+        (
+            "uniform",
+            Box::new(UniformQuantizer::new_gaussian_optimal(4)) as Box<dyn VectorQuantizer>,
+        ),
+        (
+            "lloyd-max",
+            Box::new(LloydMaxQuantizer::train_gaussian(3, 40_000, 4)),
+        ),
+        ("e8", Box::new(E8Codebook::new(E8Cut::Ball))),
+        (
+            "llvq-spherical",
+            Box::new(LlvqSpherical::with_scale(ix.clone(), 0.9)),
+        ),
+        ("llvq-shape-gain", Box::new(LlvqShapeGain::new(ix, 1))),
+    ]
+}
+
+/// PTQ the padding-exercising tiny config into a packed artifact.
+fn pack_tiny(q: &dyn VectorQuantizer, seed: u64, finetune: bool) -> PtqArtifacts {
+    let cfg = config_by_name("qwen3-4b-tiny").unwrap();
+    let w = Weights::random(&cfg, seed);
+    let opts = PtqOptions {
+        calib_seqs: 2,
+        finetune_scales: finetune,
+        rotation: RotationMode::InputOutput,
+        ..Default::default()
+    };
+    quantize_model_packed(&w, q, &opts)
+}
+
+fn save_temp(art: &PtqArtifacts, tag: &str) -> std::path::PathBuf {
+    let path = std::env::temp_dir().join(format!(
+        "llvq-backends-{tag}-{}.llvqm",
+        std::process::id()
+    ));
+    art.packed.save(&path).unwrap();
+    path
+}
+
+fn argmax(row: &[f32]) -> usize {
+    let mut best = (0usize, f32::NEG_INFINITY);
+    for (i, &v) in row.iter().enumerate() {
+        if v > best.1 {
+            best = (i, v);
+        }
+    }
+    best.0
+}
+
+#[test]
+fn prop_three_backends_agree_across_all_quantizer_specs() {
+    for (i, (name, q)) in five_quantizers().into_iter().enumerate() {
+        // alternate fine-tuned column scales on/off so both reconstruction
+        // paths are exercised across the spec matrix
+        let art = pack_tiny(q.as_ref(), 100 + i as u64, i % 2 == 0);
+        let path = save_temp(&art, name);
+        let dense = ExecutionBackend::dense(art.weights.clone());
+        let cached =
+            ExecutionBackend::packed_cached(PackedFile::open(&path).unwrap(), 2).unwrap();
+        let fused = ExecutionBackend::packed_fused(PackedFile::open(&path).unwrap()).unwrap();
+        let vocab = art.weights.cfg.vocab;
+        check(&format!("backends-{name}"), 4, |rng| {
+            let len = 1 + rng.next_range(12) as usize;
+            let toks: Vec<u8> = (0..len).map(|_| rng.next_range(64) as u8).collect();
+            let mut cap = ActivationCapture::default();
+            let oracle = forward(&art.weights, &toks, &mut cap);
+            let d = forward(&dense, &toks, &mut cap);
+            if d != oracle {
+                return Err(format!("{name}: dense backend diverged bit-wise"));
+            }
+            let c = forward(&cached, &toks, &mut cap);
+            if c != oracle {
+                return Err(format!("{name}: cached backend diverged bit-wise"));
+            }
+            let f = forward(&fused, &toks, &mut cap);
+            let linf = oracle.iter().fold(0f32, |a, &b| a.max(b.abs()));
+            let tol = 1e-5 * linf.max(1.0);
+            for (a, b) in oracle.iter().zip(&f) {
+                if (a - b).abs() > tol {
+                    return Err(format!(
+                        "{name}: fused logit drift {} > {tol}",
+                        (a - b).abs()
+                    ));
+                }
+            }
+            let last = &oracle[(len - 1) * vocab..len * vocab];
+            let flast = &f[(len - 1) * vocab..len * vocab];
+            if argmax(last) != argmax(flast) {
+                return Err(format!("{name}: fused argmax diverged from dense oracle"));
+            }
+            Ok(())
+        });
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn cached_backend_evaluates_identically_under_threads() {
+    // evaluate() is generic over ForwardOps and fans sequences out over
+    // the pool — concurrent first touches race on the per-layer OnceLock
+    // and must still yield the dense oracle's metrics exactly.
+    let q = UniformQuantizer::new_gaussian_optimal(4);
+    let art = pack_tiny(&q, 11, true);
+    let path = save_temp(&art, "eval");
+    let cached = ExecutionBackend::packed_cached(PackedFile::open(&path).unwrap(), 2).unwrap();
+    let a = evaluate(&art.weights, 4, 2000, 4);
+    let b = evaluate(&cached, 4, 2000, 4);
+    assert_eq!(a.perplexity.to_bits(), b.perplexity.to_bits());
+    assert_eq!(a.accuracy_pct.to_bits(), b.accuracy_pct.to_bits());
+    assert_eq!(a.tokens, b.tokens);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn fused_tcp_serving_matches_dense_oracle_within_packed_resident_bytes() {
+    // the acceptance path end to end: `serve --backend fused` answers NEXT
+    // with logits matching the dense oracle (argmax-identical) while STATS
+    // reports resident weight bytes ≤ 1.1× the on-disk code bytes — dense
+    // f32 never materializes.
+    let q = LlvqShapeGain::new(Arc::new(LeechIndexer::new(3)), 1);
+    let art = pack_tiny(&q, 7, false);
+    let path = save_temp(&art, "tcp");
+    let fused = ExecutionBackend::packed_fused(PackedFile::open(&path).unwrap()).unwrap();
+    let code_bytes = art.packed.code_bytes();
+    assert!(
+        fused.resident_weight_bytes() as f64 <= 1.1 * code_bytes as f64,
+        "resident {} vs on-disk code bytes {code_bytes}",
+        fused.resident_weight_bytes()
+    );
+    // and nowhere near a dense f32 materialization
+    assert!(fused.resident_weight_bytes() < art.packed.linear_params());
+
+    // dense-oracle answer for the request below
+    let toks: Vec<u8> = vec![5, 6, 7, 8, 9];
+    let mut cap = ActivationCapture::default();
+    let oracle = forward(&art.weights, &toks, &mut cap);
+    let vocab = art.weights.cfg.vocab;
+    let expect = argmax(&oracle[(toks.len() - 1) * vocab..toks.len() * vocab]);
+
+    let engine = Arc::new(BackendEngine { backend: fused });
+    let coord = Coordinator::start(engine, BatcherConfig::default());
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let c2 = coord.clone();
+    std::thread::spawn(move || {
+        let _ = serve_tcp(c2, listener);
+    });
+
+    let mut s = TcpStream::connect(addr).unwrap();
+    writeln!(s, "NEXT 5,6,7,8,9").unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    assert!(line.starts_with("OK next="), "{line}");
+    let got: usize = line
+        .trim()
+        .strip_prefix("OK next=")
+        .unwrap()
+        .split_whitespace()
+        .next()
+        .unwrap()
+        .parse()
+        .unwrap();
+    assert_eq!(got, expect, "fused argmax != dense oracle ({line})");
+
+    writeln!(s, "STATS").unwrap();
+    line.clear();
+    r.read_line(&mut line).unwrap();
+    assert!(line.contains("backend=fused"), "{line}");
+    let resident: usize = line
+        .trim()
+        .rsplit('=')
+        .next()
+        .unwrap()
+        .parse()
+        .expect("resident_bytes field");
+    assert!(
+        resident as f64 <= 1.1 * code_bytes as f64,
+        "STATS resident {resident} vs code bytes {code_bytes}"
+    );
+    writeln!(s, "QUIT").unwrap();
+    coord.stop();
+    std::fs::remove_file(&path).ok();
+}

@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Repo verification gate: build, tests, and a warnings-as-errors clippy
+# pass. CI and pre-merge checks run exactly this.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo build --release
+cargo test -q
+cargo clippy -q -- -D warnings
