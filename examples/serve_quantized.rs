@@ -1,18 +1,47 @@
 //! Serving example: quantize a model to a packed `.llvqm`, pick an
-//! execution backend (dense / cached / fused), serve batched requests, and
-//! report latency/throughput plus resident weight bytes — the paper's "no
-//! expensive lookups on the inference path" claim as a serving demo: the
-//! fused backend answers every request straight from the bit-packed code
-//! streams, never materializing dense f32.
+//! execution backend (dense / cached / fused), serve batched requests plus
+//! a streamed generation session, and report latency/throughput plus
+//! resident weight bytes — the paper's "no expensive lookups on the
+//! inference path" claim as a serving demo: the fused backend answers
+//! every request straight from the bit-packed code streams, never
+//! materializing dense f32.
 //!
 //! ```bash
 //! cargo run --release --example serve_quantized -- --requests 200 --backend fused
+//! ```
+//!
+//! The same engine speaks the TCP line protocol via `llvq serve`:
+//!
+//! **v1 (stateless):** `NEXT t1,t2,…` → `OK next=<argmax> logit=<v>`;
+//! `STATS`; `QUIT`.
+//!
+//! **v2 (generation sessions, one per connection):** `OPEN` →
+//! `OK session=<id>`; `FEED t1,t2,…` prefills the session's KV cache →
+//! `OK fed len=<total>`; `GEN <n> [temp=…] [topk=…] [seed=…]` streams
+//! `TOK <id>` per sampled token then `OK generated=<n> len=<total>`;
+//! `CLOSE` → `OK closed len=<total>`. Greedy `GEN n` (the `temp=0`
+//! default) is bit-identical to `n` `NEXT` calls with the growing prefix.
+//! Example transcript:
+//!
+//! ```text
+//! > OPEN
+//! < OK session=1
+//! > FEED 5,6,7,8
+//! < OK fed len=4
+//! > GEN 3 temp=0.8 topk=8 seed=42
+//! < TOK 17
+//! < TOK 3
+//! < TOK 44
+//! < OK generated=3 len=7
+//! > CLOSE
+//! < OK closed len=7
 //! ```
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use llvq::coordinator::{BackendEngine, BatchForward, BatcherConfig, Coordinator};
+use llvq::coordinator::{BackendEngine, BatchForward, BatcherConfig, Coordinator, GenEvent};
+use llvq::model::sample::SampleParams;
 use llvq::experiments::load_model;
 use llvq::leech::index::LeechIndexer;
 use llvq::model::backend::{BackendKind, ExecutionBackend};
@@ -101,6 +130,7 @@ fn main() {
         BatcherConfig {
             max_batch: a.get_usize("max-batch"),
             max_wait: std::time::Duration::from_millis(a.get_u64("max-wait-ms")),
+            ..Default::default()
         },
     );
 
@@ -132,6 +162,48 @@ fn main() {
         coord.metrics.mean_latency_ms(),
         engine.resident_weight_bytes()
     );
+
+    // ---- generation session demo (the v2 OPEN/FEED/GEN/CLOSE path) ----
+    let gen_n = 12usize;
+    let sid = coord.open_session().expect("open session");
+    let fed = coord.feed(sid, vec![5, 6, 7, 8]).expect("feed prompt");
+    let events = coord
+        .generate(
+            sid,
+            gen_n,
+            SampleParams {
+                temperature: 0.8,
+                top_k: 8,
+                seed: 42,
+            },
+        )
+        .expect("start generation");
+    let tg = Instant::now();
+    let mut generated: Vec<u8> = Vec::new();
+    loop {
+        match events.recv().expect("generation stream") {
+            Ok(GenEvent::Token(t)) => generated.push(t),
+            Ok(GenEvent::Done { len }) => {
+                let secs = tg.elapsed().as_secs_f64();
+                let rendered: Vec<String> =
+                    generated.iter().map(|t| t.to_string()).collect();
+                println!(
+                    "session {sid}: fed {fed} prompt tokens, generated {} \
+                     (len {len}) in {:.1} ms → {:.1} tok/s: {}",
+                    generated.len(),
+                    secs * 1e3,
+                    generated.len() as f64 / secs.max(1e-9),
+                    rendered.join(",")
+                );
+                break;
+            }
+            Err(e) => {
+                eprintln!("generation failed: {e}");
+                break;
+            }
+        }
+    }
+    coord.close_session(sid).expect("close session");
     coord.stop();
     if let Some(p) = temp_artifact {
         std::fs::remove_file(p).ok();

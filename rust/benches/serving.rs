@@ -1,12 +1,15 @@
 //! Serving benchmarks: dense vs packed-cached vs packed-fused execution
 //! backends (load time, first-token latency, steady-state throughput,
-//! resident weight bytes), plus the coordinator's batched-vs-unbatched
-//! latency and the online-Hadamard overhead of §5.3.
+//! resident weight bytes), the generation path (KV-cached decode steps vs
+//! full-prefix resubmission, single lane and slate), plus the
+//! coordinator's batched-vs-unbatched latency and the online-Hadamard
+//! overhead of §5.3.
 //!
 //! Besides the human-readable report, every backend measurement lands as a
-//! JSON row in `BENCH_serving.json` (override with `LLVQ_BENCH_OUT`; the
-//! file is rewritten each run), in the flat row shape the `BENCH_*.json`
-//! trajectories use.
+//! JSON row in `BENCH_serving.json` and every generation measurement in
+//! `BENCH_generation.json` (override with `LLVQ_BENCH_OUT` /
+//! `LLVQ_BENCH_GEN_OUT`; both files are rewritten each run), in the flat
+//! row shape the `BENCH_*.json` trajectories use.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -17,16 +20,20 @@ use llvq::model::backend::{BackendKind, ExecutionBackend};
 use llvq::model::config::config_by_name;
 use llvq::model::corpus::Corpus;
 use llvq::model::packed::{PackedFile, PackedModel};
-use llvq::model::transformer::Weights;
+use llvq::model::sample::argmax;
+use llvq::model::transformer::{
+    forward, forward_step, forward_step_batch, prefill, ActivationCapture, KvCache, StepLane,
+    Weights,
+};
 use llvq::pipeline::driver::{quantize_model_packed, PtqOptions};
 use llvq::pipeline::rotation::RotationMode;
 use llvq::quant::llvq::LlvqShapeGain;
 use llvq::util::bench::{black_box, Bench, BenchResult};
 use llvq::util::json::Json;
 
-fn row(name: &str, r: &BenchResult, extra: Vec<(&str, Json)>) -> Json {
+fn suite_row(suite: &str, name: &str, r: &BenchResult, extra: Vec<(&str, Json)>) -> Json {
     let mut pairs = vec![
-        ("suite", Json::Str("serving".into())),
+        ("suite", Json::Str(suite.into())),
         ("name", Json::Str(name.into())),
         ("mean_s", Json::Num(r.mean)),
         ("median_s", Json::Num(r.median)),
@@ -35,6 +42,10 @@ fn row(name: &str, r: &BenchResult, extra: Vec<(&str, Json)>) -> Json {
     ];
     pairs.extend(extra);
     Json::obj(pairs)
+}
+
+fn row(name: &str, r: &BenchResult, extra: Vec<(&str, Json)>) -> Json {
+    suite_row("serving", name, r, extra)
 }
 
 fn build_backend(path: &std::path::Path, kind: BackendKind, threads: usize) -> ExecutionBackend {
@@ -142,6 +153,115 @@ fn main() {
         ));
     }
 
+    // ---- generation: KV-cached decode vs full-prefix resubmission ----
+    // the tokens/s acceptance numbers for the session API: a KV-cached
+    // GEN re-uses every prior position's K/V, while the pre-session
+    // protocol re-ran the whole growing prefix per token
+    let mut gen_rows: Vec<Json> = Vec::new();
+    let prompt: Vec<u8> = seqs[0][..16].to_vec();
+    let gen_n = 32usize;
+    for kind in [BackendKind::Dense, BackendKind::Cached, BackendKind::Fused] {
+        let label = kind.label();
+        println!("\n== generation: {label} ==");
+        let backend = build_backend(&path, kind, threads);
+        {
+            // warm every layer (cached decodes on first touch)
+            let mut cache = KvCache::new(backend.cfg());
+            black_box(prefill(&backend, &mut cache, &prompt));
+        }
+        let r = bq.run(&format!("{label}: kv-cached gen ({gen_n} tok)"), || {
+            let mut cache = KvCache::new(backend.cfg());
+            let mut logits = prefill(&backend, &mut cache, &prompt);
+            // gen_n tokens need gen_n-1 decode steps: prefill already
+            // produced the first logits, and the last token is terminal
+            for _ in 0..gen_n - 1 {
+                let t = argmax(&logits) as u8;
+                logits = forward_step(&backend, &mut cache, t);
+            }
+            black_box(argmax(&logits));
+        });
+        println!("{label}: kv-cached {:.1} tok/s", gen_n as f64 / r.mean);
+        gen_rows.push(suite_row(
+            "generation",
+            &format!("gen_kv_{label}"),
+            &r,
+            vec![
+                ("tok_per_s", Json::Num(gen_n as f64 / r.mean)),
+                ("ms_per_tok", Json::Num(r.mean * 1e3 / gen_n as f64)),
+                ("gen_tokens", Json::Int(gen_n as i64)),
+            ],
+        ));
+        let r = bq.run(&format!("{label}: full-prefix gen ({gen_n} tok)"), || {
+            let mut toks = prompt.clone();
+            let mut cap = ActivationCapture::default();
+            let v = backend.cfg().vocab;
+            for _ in 0..gen_n {
+                let logits = forward(&backend, &toks, &mut cap);
+                let last = &logits[(toks.len() - 1) * v..toks.len() * v];
+                toks.push(argmax(last) as u8);
+            }
+            black_box(&toks);
+        });
+        println!("{label}: full-prefix {:.1} tok/s", gen_n as f64 / r.mean);
+        gen_rows.push(suite_row(
+            "generation",
+            &format!("gen_prefix_{label}"),
+            &r,
+            vec![
+                ("tok_per_s", Json::Num(gen_n as f64 / r.mean)),
+                ("ms_per_tok", Json::Num(r.mean * 1e3 / gen_n as f64)),
+                ("gen_tokens", Json::Int(gen_n as i64)),
+            ],
+        ));
+    }
+    // slate amortization: the fused backend decodes each weight row once
+    // per decode step for all lanes — aggregate tok/s should beat 8 ×
+    // single-lane stepping
+    {
+        println!("\n== generation: fused 8-lane slate ==");
+        let backend = build_backend(&path, BackendKind::Fused, threads);
+        let lanes_n = 8usize;
+        let r = bq.run("fused: kv-cached gen, 8-lane slate", || {
+            let mut caches: Vec<KvCache> =
+                (0..lanes_n).map(|_| KvCache::new(backend.cfg())).collect();
+            let mut logits: Vec<Vec<f32>> = caches
+                .iter_mut()
+                .map(|c| prefill(&backend, c, &prompt))
+                .collect();
+            let v = backend.cfg().vocab;
+            for _ in 0..gen_n - 1 {
+                let toks: Vec<u8> = logits.iter().map(|l| argmax(l) as u8).collect();
+                let mut lanes: Vec<StepLane<'_>> = caches
+                    .iter_mut()
+                    .zip(&toks)
+                    .map(|(cache, &token)| StepLane { cache, token })
+                    .collect();
+                let flat = forward_step_batch(&backend, &mut lanes);
+                logits = flat.chunks_exact(v).map(|c| c.to_vec()).collect();
+            }
+            black_box(&logits);
+        });
+        let total = (gen_n * lanes_n) as f64;
+        println!("fused slate-8: {:.1} tok/s aggregate", total / r.mean);
+        gen_rows.push(suite_row(
+            "generation",
+            "gen_kv_fused_slate8",
+            &r,
+            vec![
+                ("tok_per_s", Json::Num(total / r.mean)),
+                ("ms_per_tok", Json::Num(r.mean * 1e3 / total)),
+                ("gen_tokens", Json::Int((gen_n * lanes_n) as i64)),
+                ("lanes", Json::Int(lanes_n as i64)),
+            ],
+        ));
+    }
+    let gen_out = std::env::var("LLVQ_BENCH_GEN_OUT")
+        .unwrap_or_else(|_| "BENCH_generation.json".into());
+    match std::fs::write(&gen_out, Json::Arr(gen_rows).to_string_pretty()) {
+        Ok(()) => println!("\nwrote {gen_out}"),
+        Err(e) => eprintln!("\n[warn] could not write {gen_out}: {e}"),
+    }
+
     // ---- dense engine + coordinator (the historical serving numbers) ----
     let engine = Arc::new(BackendEngine::dense(weights));
     println!("\n== engine forward (no coordinator) ==");
@@ -162,6 +282,7 @@ fn main() {
             BatcherConfig {
                 max_batch,
                 max_wait: Duration::from_millis(2),
+                ..Default::default()
             },
         );
         let t0 = std::time::Instant::now();

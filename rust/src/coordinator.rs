@@ -1,11 +1,20 @@
-//! Inference coordinator: dynamic batching over a forward engine.
+//! Inference coordinator: continuous batching over a session-aware engine.
 //!
 //! The serving-side L3 piece (vLLM-router-shaped, scaled to this paper):
-//! requests arrive asynchronously, a batcher thread coalesces them up to
-//! `max_batch` or `max_wait`, a worker executes the batch on the forward
-//! engine (PJRT artifact or the Rust-native oracle), and responses flow
-//! back through per-request channels. A line-protocol TCP front-end and
-//! latency/throughput metrics round out the service.
+//! requests arrive asynchronously and flow through one worker thread that
+//! interleaves two kinds of work:
+//!
+//! * **one-shot prefix requests** (the v1 `NEXT` path) — coalesced up to
+//!   `max_batch` or `max_wait` and answered with last-position logits from
+//!   a full forward pass, exactly as before;
+//! * **generation sessions** (the v2 path) — `OPEN` allocates a per-session
+//!   [`KvCache`], `FEED` prefills it, and `GEN` joins the session to the
+//!   *active slate*: every scheduler tick advances up to `max_batch`
+//!   sessions by one token through a single batched
+//!   [`BatchForward::decode_step`], so the fused backend decodes each
+//!   weight row once per tick for the whole slate. New requests are
+//!   absorbed between ticks (continuous batching), and sampled tokens
+//!   stream back to each client as they are produced.
 //!
 //! The quantized model's weights were produced by the PTQ pipeline and are
 //! deployed as a packed `.llvqm` artifact (`model::packed`). Serving runs
@@ -15,26 +24,57 @@
 //! touch, and `--backend fused` executes matvecs straight over the
 //! bit-packed code streams — the paper's "no expensive lookups on the
 //! inference path" claim served without ever materializing dense f32.
-//! `STATS` reports which backend is live and its resident weight bytes.
+//! `STATS` reports which backend is live, its resident weight bytes, and
+//! the session counters.
+//!
+//! Robustness: token ids are validated at `submit`/`feed` time (an id ≥
+//! vocab can never reach the embedding lookup), and every engine call runs
+//! under `catch_unwind` — a panicking forward pass answers `ERR` and
+//! destroys only the sessions it touched instead of killing the worker and
+//! hanging every later request.
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::model::backend::ExecutionBackend;
-use crate::model::transformer::{forward, ActivationCapture, Weights};
+use crate::model::sample::{argmax, SampleParams, Sampler};
+use crate::model::transformer::{
+    forward, forward_step_batch, ActivationCapture, KvCache, StepLane, Weights,
+};
 
-/// A forward engine maps a batch of token sequences to per-sequence
-/// last-position logits (vocab-sized each).
+/// A forward engine: one-shot batched prefix inference plus the stateful
+/// generation-session surface (`open_session` / `prefill` / `decode_step`
+/// over a slate of lanes / `close_session`).
 pub trait BatchForward: Send + Sync {
     fn vocab(&self) -> usize;
     fn max_seq(&self) -> usize;
-    /// `batch[i]` has uniform length ≤ max_seq; returns, per sequence, the
-    /// logits at the LAST position.
+    /// `batch[i]` has length ≤ max_seq; returns, per sequence, the logits
+    /// at the LAST position.
     fn forward_batch(&self, batch: &[Vec<u8>]) -> Vec<Vec<f32>>;
+
+    /// Open a generation session: a KV cache sized for this engine's
+    /// model. Sessions are pure state — any number may exist per engine.
+    fn open_session(&self) -> KvCache;
+
+    /// Append `tokens` to a session and return the logits at the last
+    /// appended position (bit-identical to `forward_batch` over the
+    /// session's full history).
+    fn prefill(&self, cache: &mut KvCache, tokens: &[u8]) -> Vec<f32>;
+
+    /// Advance a slate of sessions by one token each, returning per-lane
+    /// last-position logits. Backends amortize per-weight-row work across
+    /// the whole slate; per-lane results are bit-identical to a one-lane
+    /// step.
+    fn decode_step(&self, lanes: &mut [StepLane<'_>]) -> Vec<Vec<f32>>;
+
+    /// Recycle hook for a finished session (default: drop the cache).
+    fn close_session(&self, _cache: KvCache) {}
 
     /// Label of the executing representation (for `STATS`).
     fn backend_name(&self) -> String {
@@ -49,7 +89,8 @@ pub trait BatchForward: Send + Sync {
 }
 
 /// Rust-native engine over an [`ExecutionBackend`] — dense (the oracle),
-/// lazily-decoded packed, or fused packed, all behind one forward pass.
+/// lazily-decoded packed, or fused packed, all behind one forward pass and
+/// one decode-step path.
 pub struct BackendEngine {
     pub backend: ExecutionBackend,
 }
@@ -84,6 +125,22 @@ impl BatchForward for BackendEngine {
             .collect()
     }
 
+    fn open_session(&self) -> KvCache {
+        KvCache::new(self.backend.cfg())
+    }
+
+    fn prefill(&self, cache: &mut KvCache, tokens: &[u8]) -> Vec<f32> {
+        crate::model::transformer::prefill(&self.backend, cache, tokens)
+    }
+
+    fn decode_step(&self, lanes: &mut [StepLane<'_>]) -> Vec<Vec<f32>> {
+        let v = self.vocab();
+        forward_step_batch(&self.backend, lanes)
+            .chunks_exact(v)
+            .map(|row| row.to_vec())
+            .collect()
+    }
+
     fn backend_name(&self) -> String {
         self.backend.kind().label().into()
     }
@@ -93,11 +150,61 @@ impl BatchForward for BackendEngine {
     }
 }
 
-/// One queued request.
+/// One queued one-shot request.
 struct Pending {
     tokens: Vec<u8>,
-    reply: Sender<Vec<f32>>,
+    reply: Sender<Result<Vec<f32>, String>>,
     enqueued: Instant,
+}
+
+/// One streamed generation event.
+#[derive(Clone, Debug, PartialEq)]
+pub enum GenEvent {
+    /// The next sampled token (already appended to the session).
+    Token(u8),
+    /// Generation finished; the session now holds `len` tokens and can be
+    /// FED or GENerated again.
+    Done { len: usize },
+}
+
+/// Worker-side message set.
+enum Msg {
+    Prefix(Pending),
+    Open {
+        reply: Sender<Result<u64, String>>,
+    },
+    Feed {
+        sid: u64,
+        tokens: Vec<u8>,
+        reply: Sender<Result<usize, String>>,
+    },
+    Gen {
+        sid: u64,
+        n: usize,
+        params: SampleParams,
+        stream: Sender<Result<GenEvent, String>>,
+    },
+    Close {
+        sid: u64,
+        reply: Sender<Result<usize, String>>,
+    },
+}
+
+/// A parked session: its KV cache plus the logits at its last position
+/// (present once the first FEED has run).
+struct Session {
+    cache: KvCache,
+    last_logits: Option<Vec<f32>>,
+}
+
+/// A session currently on the active decode slate.
+struct GenJob {
+    sid: u64,
+    cache: KvCache,
+    last_logits: Vec<f32>,
+    sampler: Sampler,
+    remaining: usize,
+    stream: Sender<Result<GenEvent, String>>,
 }
 
 /// Service metrics (atomic, cheap to read while serving).
@@ -106,8 +213,17 @@ pub struct Metrics {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
     pub batched_items: AtomicU64,
-    /// Total queue+execute latency in microseconds.
+    /// Total queue+execute latency in microseconds (one-shot requests).
     pub total_latency_us: AtomicU64,
+    /// Sessions currently open.
+    pub open_sessions: AtomicU64,
+    /// Sessions opened over the service lifetime.
+    pub sessions_opened: AtomicU64,
+    /// Tokens produced by GEN streaming.
+    pub gen_tokens: AtomicU64,
+    /// Batched decode steps executed, and the lanes they carried.
+    pub decode_steps: AtomicU64,
+    pub decode_lanes: AtomicU64,
 }
 
 impl Metrics {
@@ -128,13 +244,29 @@ impl Metrics {
             self.total_latency_us.load(Ordering::Relaxed) as f64 / r as f64 / 1000.0
         }
     }
+
+    /// Mean lanes per decode step — the slate occupancy the fused backend
+    /// amortizes its row decode across.
+    pub fn mean_lanes(&self) -> f64 {
+        let s = self.decode_steps.load(Ordering::Relaxed);
+        if s == 0 {
+            0.0
+        } else {
+            self.decode_lanes.load(Ordering::Relaxed) as f64 / s as f64
+        }
+    }
 }
 
-/// Dynamic batcher configuration.
+/// Scheduler configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
+    /// One-shot batch limit AND the decode-slate width per tick.
     pub max_batch: usize,
+    /// Batch window for one-shot requests while the worker is idle.
     pub max_wait: Duration,
+    /// Concurrently open generation sessions the worker admits; OPEN
+    /// beyond this answers an error.
+    pub max_sessions: usize,
 }
 
 impl Default for BatcherConfig {
@@ -142,14 +274,15 @@ impl Default for BatcherConfig {
         Self {
             max_batch: 8,
             max_wait: Duration::from_millis(2),
+            max_sessions: 64,
         }
     }
 }
 
-/// The coordinator: submit() from any thread; a dedicated worker drains
-/// the queue in batches.
+/// The coordinator: `submit()` / session calls from any thread; a
+/// dedicated worker runs the continuous-batching scheduler.
 pub struct Coordinator {
-    tx: Mutex<Option<Sender<Pending>>>,
+    tx: Mutex<Option<Sender<Msg>>>,
     pub metrics: Arc<Metrics>,
     /// Kept for live introspection (`STATS` queries backend name and
     /// resident bytes while the worker owns its own clone).
@@ -160,13 +293,13 @@ pub struct Coordinator {
 
 impl Coordinator {
     pub fn start(engine: Arc<dyn BatchForward>, cfg: BatcherConfig) -> Arc<Self> {
-        let (tx, rx) = channel::<Pending>();
+        let (tx, rx) = channel::<Msg>();
         let metrics = Arc::new(Metrics::default());
         let stopping = Arc::new(AtomicBool::new(false));
         let m2 = metrics.clone();
         let s2 = stopping.clone();
         let e2 = engine.clone();
-        let worker = std::thread::spawn(move || batch_loop(e2, rx, cfg, m2, s2));
+        let worker = std::thread::spawn(move || worker_loop(e2, rx, cfg, m2, s2));
         Arc::new(Self {
             tx: Mutex::new(Some(tx)),
             metrics,
@@ -181,26 +314,110 @@ impl Coordinator {
         &self.engine
     }
 
-    /// Blocking request: returns last-position logits.
-    pub fn submit(&self, tokens: Vec<u8>) -> Result<Vec<f32>, String> {
-        let (rtx, rrx) = channel();
-        {
-            let guard = self.tx.lock().unwrap();
-            let tx = guard.as_ref().ok_or("coordinator stopped")?;
-            tx.send(Pending {
-                tokens,
-                reply: rtx,
-                enqueued: Instant::now(),
-            })
-            .map_err(|_| "worker gone".to_string())?;
+    fn send(&self, msg: Msg) -> Result<(), String> {
+        let guard = self.tx.lock().unwrap();
+        let tx = guard.as_ref().ok_or("coordinator stopped")?;
+        tx.send(msg).map_err(|_| "worker gone".to_string())
+    }
+
+    /// Reject malformed token runs before they reach the worker: an id ≥
+    /// vocab would index the embedding table out of bounds (the panic is
+    /// also contained by catch_unwind, but validation gives the caller a
+    /// precise error and keeps poison out of the batch).
+    fn validate_tokens(&self, tokens: &[u8]) -> Result<(), String> {
+        if tokens.is_empty() {
+            return Err("empty token list".into());
         }
-        rrx.recv().map_err(|_| "worker dropped request".to_string())
+        if tokens.len() > self.engine.max_seq() {
+            return Err(format!(
+                "sequence length {} exceeds max_seq {}",
+                tokens.len(),
+                self.engine.max_seq()
+            ));
+        }
+        let vocab = self.engine.vocab();
+        if let Some(&bad) = tokens.iter().find(|&&t| (t as usize) >= vocab) {
+            return Err(format!("token id {bad} out of range (vocab {vocab})"));
+        }
+        Ok(())
+    }
+
+    /// Blocking one-shot request: returns last-position logits.
+    pub fn submit(&self, tokens: Vec<u8>) -> Result<Vec<f32>, String> {
+        self.validate_tokens(&tokens)?;
+        let (rtx, rrx) = channel();
+        self.send(Msg::Prefix(Pending {
+            tokens,
+            reply: rtx,
+            enqueued: Instant::now(),
+        }))?;
+        match rrx.recv() {
+            Ok(r) => r,
+            Err(_) => Err("worker dropped request".into()),
+        }
+    }
+
+    /// Open a generation session; returns its id.
+    pub fn open_session(&self) -> Result<u64, String> {
+        let (rtx, rrx) = channel();
+        self.send(Msg::Open { reply: rtx })?;
+        match rrx.recv() {
+            Ok(r) => r,
+            Err(_) => Err("worker dropped request".into()),
+        }
+    }
+
+    /// Append prompt tokens to a session (prefill); returns the session's
+    /// new length.
+    pub fn feed(&self, sid: u64, tokens: Vec<u8>) -> Result<usize, String> {
+        self.validate_tokens(&tokens)?;
+        let (rtx, rrx) = channel();
+        self.send(Msg::Feed {
+            sid,
+            tokens,
+            reply: rtx,
+        })?;
+        match rrx.recv() {
+            Ok(r) => r,
+            Err(_) => Err("worker dropped request".into()),
+        }
+    }
+
+    /// Generate `n` tokens on a session; events stream back as they are
+    /// produced (admission errors arrive as the first event).
+    pub fn generate(
+        &self,
+        sid: u64,
+        n: usize,
+        params: SampleParams,
+    ) -> Result<Receiver<Result<GenEvent, String>>, String> {
+        if n == 0 {
+            return Err("GEN needs n >= 1".into());
+        }
+        let (stx, srx) = channel();
+        self.send(Msg::Gen {
+            sid,
+            n,
+            params,
+            stream: stx,
+        })?;
+        Ok(srx)
+    }
+
+    /// Close a session, freeing its KV cache; returns its final length.
+    pub fn close_session(&self, sid: u64) -> Result<usize, String> {
+        let (rtx, rrx) = channel();
+        self.send(Msg::Close { sid, reply: rtx })?;
+        match rrx.recv() {
+            Ok(r) => r,
+            Err(_) => Err("worker dropped request".into()),
+        }
     }
 
     /// Shut down: no new submissions are accepted, every request already
-    /// queued is still answered (the worker drains the channel without
-    /// holding the batch window open), then the worker exits and is
-    /// joined — deterministic, no sleeps.
+    /// queued is still answered and every active generation runs to
+    /// completion (GEN lengths are bounded by max_seq), then the worker
+    /// exits and is joined — deterministic, no sleeps.
     pub fn stop(&self) {
         self.stopping.store(true, Ordering::SeqCst);
         self.tx.lock().unwrap().take(); // close the channel
@@ -210,57 +427,353 @@ impl Coordinator {
     }
 }
 
-fn batch_loop(
+/// Worker-private scheduler state.
+struct WorkerState {
+    sessions: HashMap<u64, Session>,
+    active: Vec<GenJob>,
+    prefix: Vec<Pending>,
+    next_sid: u64,
+}
+
+fn worker_loop(
     engine: Arc<dyn BatchForward>,
-    rx: Receiver<Pending>,
+    rx: Receiver<Msg>,
     cfg: BatcherConfig,
     metrics: Arc<Metrics>,
     stopping: Arc<AtomicBool>,
 ) {
+    let mut st = WorkerState {
+        sessions: HashMap::new(),
+        active: Vec::new(),
+        prefix: Vec::new(),
+        next_sid: 1,
+    };
+    let mut closed = false;
     loop {
-        // block for the first item
-        let first = match rx.recv() {
-            Ok(p) => p,
-            Err(_) => return, // channel closed
-        };
-        let mut batch = vec![first];
-        if stopping.load(Ordering::SeqCst) {
-            // draining after stop(): the sender is closed, so everything
-            // still queued is final — take it all immediately instead of
-            // holding each batch open for max_wait. In-flight requests are
-            // answered deterministically, then recv() errors and we exit.
-            while batch.len() < cfg.max_batch {
-                match rx.try_recv() {
-                    Ok(p) => batch.push(p),
-                    Err(TryRecvError::Empty | TryRecvError::Disconnected) => break,
+        if st.active.is_empty() {
+            if closed {
+                return;
+            }
+            // idle: block for the next message
+            match rx.recv() {
+                Ok(m) => handle_msg(m, &mut st, engine.as_ref(), &cfg, &metrics),
+                Err(_) => {
+                    closed = true;
+                    continue;
+                }
+            }
+            if stopping.load(Ordering::SeqCst) {
+                // draining after stop(): the sender is closed, so
+                // everything still queued is final — take it all now
+                // instead of holding a batch window open
+                closed |= drain_all(&rx, &mut st, engine.as_ref(), &cfg, &metrics);
+            } else if !st.prefix.is_empty() && st.active.is_empty() {
+                // legacy dynamic batching: hold the window open for more
+                // one-shot requests, but only while no decode work waits
+                let deadline = Instant::now() + cfg.max_wait;
+                while st.prefix.len() < cfg.max_batch && st.active.is_empty() {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(m) => handle_msg(m, &mut st, engine.as_ref(), &cfg, &metrics),
+                        Err(_) => break, // timeout or disconnect
+                    }
                 }
             }
         } else {
-            let deadline = Instant::now() + cfg.max_wait;
-            while batch.len() < cfg.max_batch {
-                let now = Instant::now();
-                if now >= deadline {
-                    break;
-                }
-                match rx.recv_timeout(deadline - now) {
-                    Ok(p) => batch.push(p),
-                    Err(_) => break,
+            // continuous batching: absorb whatever arrived between ticks
+            closed |= drain_all(&rx, &mut st, engine.as_ref(), &cfg, &metrics);
+        }
+        run_prefix_batches(&mut st, engine.as_ref(), &cfg, &metrics);
+        run_decode_tick(&mut st, engine.as_ref(), &cfg, &metrics);
+    }
+}
+
+/// Drain every queued message without blocking; true if the channel is
+/// closed.
+fn drain_all(
+    rx: &Receiver<Msg>,
+    st: &mut WorkerState,
+    engine: &dyn BatchForward,
+    cfg: &BatcherConfig,
+    metrics: &Metrics,
+) -> bool {
+    loop {
+        match rx.try_recv() {
+            Ok(m) => handle_msg(m, st, engine, cfg, metrics),
+            Err(TryRecvError::Empty) => return false,
+            Err(TryRecvError::Disconnected) => return true,
+        }
+    }
+}
+
+/// Why a GEN request cannot join the slate (None = admissible).
+fn gen_admit_error(
+    st: &WorkerState,
+    engine: &dyn BatchForward,
+    sid: u64,
+    n: usize,
+) -> Option<String> {
+    if n == 0 {
+        return Some("GEN needs n >= 1".into());
+    }
+    if st.active.iter().any(|j| j.sid == sid) {
+        return Some(format!("session {sid} is busy generating"));
+    }
+    let Some(sess) = st.sessions.get(&sid) else {
+        return Some(format!("unknown session {sid}"));
+    };
+    if sess.last_logits.is_none() {
+        return Some("FEED tokens before GEN".into());
+    }
+    if engine.vocab() > 256 {
+        return Some("GEN requires vocab <= 256 (u8 token ids)".into());
+    }
+    if sess.cache.len() + n > engine.max_seq() {
+        return Some(format!(
+            "GEN {n} would exceed max_seq {} (session holds {} tokens)",
+            engine.max_seq(),
+            sess.cache.len()
+        ));
+    }
+    None
+}
+
+fn handle_msg(
+    msg: Msg,
+    st: &mut WorkerState,
+    engine: &dyn BatchForward,
+    cfg: &BatcherConfig,
+    metrics: &Metrics,
+) {
+    match msg {
+        Msg::Prefix(p) => st.prefix.push(p),
+        Msg::Open { reply } => {
+            let open = st.sessions.len() + st.active.len();
+            let r = if open >= cfg.max_sessions {
+                Err(format!("too many sessions (max {})", cfg.max_sessions))
+            } else {
+                let sid = st.next_sid;
+                st.next_sid += 1;
+                st.sessions.insert(
+                    sid,
+                    Session {
+                        cache: engine.open_session(),
+                        last_logits: None,
+                    },
+                );
+                metrics.sessions_opened.fetch_add(1, Ordering::Relaxed);
+                metrics.open_sessions.fetch_add(1, Ordering::Relaxed);
+                Ok(sid)
+            };
+            let _ = reply.send(r);
+        }
+        Msg::Feed { sid, tokens, reply } => {
+            let (result, destroy) = feed_session(st, engine, sid, &tokens);
+            if destroy {
+                if let Some(s) = st.sessions.remove(&sid) {
+                    engine.close_session(s.cache);
+                    metrics.open_sessions.fetch_sub(1, Ordering::Relaxed);
                 }
             }
+            let _ = reply.send(result);
         }
+        Msg::Gen {
+            sid,
+            n,
+            params,
+            stream,
+        } => match gen_admit_error(st, engine, sid, n) {
+            Some(e) => {
+                let _ = stream.send(Err(e));
+            }
+            None => {
+                let sess = st.sessions.remove(&sid).expect("admission checked");
+                st.active.push(GenJob {
+                    sid,
+                    cache: sess.cache,
+                    last_logits: sess.last_logits.expect("admission checked"),
+                    sampler: Sampler::new(params),
+                    remaining: n,
+                    stream,
+                });
+            }
+        },
+        Msg::Close { sid, reply } => {
+            let r = if let Some(sess) = st.sessions.remove(&sid) {
+                let len = sess.cache.len();
+                engine.close_session(sess.cache);
+                metrics.open_sessions.fetch_sub(1, Ordering::Relaxed);
+                Ok(len)
+            } else if let Some(i) = st.active.iter().position(|j| j.sid == sid) {
+                // closing mid-GEN aborts the stream
+                let job = st.active.remove(i);
+                let _ = job.stream.send(Err("session closed".into()));
+                let len = job.cache.len();
+                engine.close_session(job.cache);
+                metrics.open_sessions.fetch_sub(1, Ordering::Relaxed);
+                Ok(len)
+            } else {
+                Err(format!("unknown session {sid}"))
+            };
+            let _ = reply.send(r);
+        }
+    }
+}
+
+/// Prefill `tokens` into session `sid`. Returns (reply, destroy-session):
+/// a panicking engine leaves the cache indeterminate, so the session is
+/// destroyed rather than served corrupt.
+fn feed_session(
+    st: &mut WorkerState,
+    engine: &dyn BatchForward,
+    sid: u64,
+    tokens: &[u8],
+) -> (Result<usize, String>, bool) {
+    if st.active.iter().any(|j| j.sid == sid) {
+        return (Err(format!("session {sid} is busy generating")), false);
+    }
+    let Some(sess) = st.sessions.get_mut(&sid) else {
+        return (Err(format!("unknown session {sid}")), false);
+    };
+    if sess.cache.len() + tokens.len() > engine.max_seq() {
+        return (
+            Err(format!(
+                "FEED of {} tokens would exceed max_seq {} (session holds {})",
+                tokens.len(),
+                engine.max_seq(),
+                sess.cache.len()
+            )),
+            false,
+        );
+    }
+    match catch_unwind(AssertUnwindSafe(|| engine.prefill(&mut sess.cache, tokens))) {
+        Ok(logits) => {
+            sess.last_logits = Some(logits);
+            (Ok(sess.cache.len()), false)
+        }
+        Err(_) => (
+            Err(format!(
+                "engine panicked during FEED; session {sid} destroyed"
+            )),
+            true,
+        ),
+    }
+}
+
+/// Answer every queued one-shot request, `max_batch` at a time. A panic
+/// inside the engine answers `ERR` for that batch instead of killing the
+/// worker (the historical poison-hang).
+fn run_prefix_batches(
+    st: &mut WorkerState,
+    engine: &dyn BatchForward,
+    cfg: &BatcherConfig,
+    metrics: &Metrics,
+) {
+    while !st.prefix.is_empty() {
+        let take = st.prefix.len().min(cfg.max_batch.max(1));
+        let batch: Vec<Pending> = st.prefix.drain(..take).collect();
         let inputs: Vec<Vec<u8>> = batch.iter().map(|p| p.tokens.clone()).collect();
-        let outputs = engine.forward_batch(&inputs);
+        let outputs = catch_unwind(AssertUnwindSafe(|| engine.forward_batch(&inputs)));
         metrics.batches.fetch_add(1, Ordering::Relaxed);
         metrics
             .batched_items
             .fetch_add(batch.len() as u64, Ordering::Relaxed);
-        for (p, out) in batch.into_iter().zip(outputs) {
+        let outs: Vec<Result<Vec<f32>, String>> = match outputs {
+            Ok(outs) => outs.into_iter().map(Ok).collect(),
+            Err(_) => batch
+                .iter()
+                .map(|_| Err("forward pass panicked".to_string()))
+                .collect(),
+        };
+        for (p, out) in batch.into_iter().zip(outs) {
             metrics.requests.fetch_add(1, Ordering::Relaxed);
-            metrics.total_latency_us.fetch_add(
-                p.enqueued.elapsed().as_micros() as u64,
-                Ordering::Relaxed,
-            );
+            metrics
+                .total_latency_us
+                .fetch_add(p.enqueued.elapsed().as_micros() as u64, Ordering::Relaxed);
             let _ = p.reply.send(out);
+        }
+    }
+}
+
+/// One scheduler tick over the active slate: sample a token per lane from
+/// its current logits, stream it, and append it via a single batched
+/// decode step. Finished (or abandoned) jobs park their sessions again.
+fn run_decode_tick(
+    st: &mut WorkerState,
+    engine: &dyn BatchForward,
+    cfg: &BatcherConfig,
+    metrics: &Metrics,
+) {
+    if st.active.is_empty() {
+        return;
+    }
+    let take = st.active.len().min(cfg.max_batch.max(1));
+    let toks: Vec<u8> = st
+        .active
+        .iter_mut()
+        .take(take)
+        .map(|job| job.sampler.sample(&job.last_logits) as u8)
+        .collect();
+    let step = {
+        let mut lanes: Vec<StepLane<'_>> = st
+            .active
+            .iter_mut()
+            .take(take)
+            .zip(&toks)
+            .map(|(job, &token)| StepLane {
+                cache: &mut job.cache,
+                token,
+            })
+            .collect();
+        catch_unwind(AssertUnwindSafe(|| engine.decode_step(&mut lanes)))
+    };
+    match step {
+        Ok(logits) => {
+            debug_assert_eq!(logits.len(), take);
+            metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
+            metrics.decode_lanes.fetch_add(take as u64, Ordering::Relaxed);
+            metrics.gen_tokens.fetch_add(take as u64, Ordering::Relaxed);
+            let mut finished: Vec<usize> = Vec::new();
+            for (i, (job, out)) in st.active.iter_mut().take(take).zip(logits).enumerate() {
+                let alive = job.stream.send(Ok(GenEvent::Token(toks[i]))).is_ok();
+                job.last_logits = out;
+                job.remaining -= 1;
+                if job.remaining == 0 || !alive {
+                    finished.push(i);
+                }
+            }
+            for &i in finished.iter().rev() {
+                let job = st.active.remove(i);
+                let _ = job.stream.send(Ok(GenEvent::Done {
+                    len: job.cache.len(),
+                }));
+                st.sessions.insert(
+                    job.sid,
+                    Session {
+                        cache: job.cache,
+                        last_logits: Some(job.last_logits),
+                    },
+                );
+            }
+            // fairness: served lanes rotate behind any waiting ones
+            let served = take - finished.len();
+            if served > 0 && st.active.len() > served {
+                st.active.rotate_left(served);
+            }
+        }
+        Err(_) => {
+            // a panicking decode leaves the slate's caches indeterminate:
+            // fail and destroy exactly those sessions, keep the rest
+            for job in st.active.drain(..take) {
+                let _ = job
+                    .stream
+                    .send(Err("decode step panicked; session destroyed".into()));
+                metrics.open_sessions.fetch_sub(1, Ordering::Relaxed);
+                engine.close_session(job.cache);
+            }
         }
     }
 }
@@ -269,26 +782,143 @@ fn batch_loop(
 // TCP front-end (line protocol)
 // ---------------------------------------------------------------------------
 
-/// Protocol: one request per line.
-///   `NEXT 3,17,42,…`  → `OK next=<argmax> logit=<v>`
-///   `STATS`           → `OK requests=… mean_batch=… mean_latency_ms=…
-///                        backend=… resident_bytes=…`
-///   `QUIT`            → closes the connection.
+/// TCP front-end limits.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Concurrent connections; beyond this the listener answers
+    /// `ERR busy` and closes instead of spawning an unbounded thread.
+    pub max_conns: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self { max_conns: 64 }
+    }
+}
+
+/// Serve the line protocol with default [`ServeOptions`].
+///
+/// # Protocol reference
+///
+/// One command per line; every reply line starts with `OK`, `ERR`, or
+/// (during GEN streaming) `TOK`.
+///
+/// **v1 — stateless (back-compatible):**
+///
+/// | command            | reply                                              |
+/// |--------------------|----------------------------------------------------|
+/// | `NEXT t1,t2,…`     | `OK next=<argmax> logit=<v>` — full-prefix forward |
+/// | `STATS`            | `OK requests=… mean_batch=… mean_latency_ms=… sessions=… gen_tokens=… mean_lanes=… backend=… resident_bytes=…` |
+/// | `QUIT`             | closes the connection                              |
+///
+/// **v2 — generation sessions (one session per connection):**
+///
+/// | command                               | reply                         |
+/// |---------------------------------------|-------------------------------|
+/// | `OPEN`                                | `OK session=<id>`             |
+/// | `FEED t1,t2,…`                        | `OK fed len=<total>` (prefill)|
+/// | `GEN <n> [temp=…] [topk=…] [seed=…]`  | `n` × `TOK <id>` lines streamed as sampled, then `OK generated=<n> len=<total>` |
+/// | `CLOSE`                               | `OK closed len=<total>`       |
+///
+/// Greedy `GEN` (`temp=0`, the default) is bit-identical to issuing `NEXT`
+/// with the growing prefix `n` times — the KV-cache correctness oracle.
+/// Disconnecting closes the session.
+///
+/// Example transcript (`>` client, `<` server):
+///
+/// ```text
+/// > OPEN
+/// < OK session=1
+/// > FEED 5,6,7,8
+/// < OK fed len=4
+/// > GEN 3 temp=0.8 topk=8 seed=42
+/// < TOK 17
+/// < TOK 3
+/// < TOK 44
+/// < OK generated=3 len=7
+/// > STATS
+/// < OK requests=0 mean_batch=0.00 mean_latency_ms=0.000 sessions=1 gen_tokens=3 mean_lanes=1.00 backend=fused resident_bytes=48768
+/// > CLOSE
+/// < OK closed len=7
+/// > QUIT
+/// ```
 pub fn serve_tcp(coord: Arc<Coordinator>, listener: TcpListener) -> std::io::Result<()> {
+    serve_tcp_opts(coord, listener, ServeOptions::default())
+}
+
+/// [`serve_tcp`] with explicit limits: at most `max_conns` connection
+/// threads run at once; excess connections get one `ERR busy` line and
+/// are closed immediately.
+pub fn serve_tcp_opts(
+    coord: Arc<Coordinator>,
+    listener: TcpListener,
+    opts: ServeOptions,
+) -> std::io::Result<()> {
+    let live = Arc::new(AtomicUsize::new(0));
     for stream in listener.incoming() {
-        let stream = stream?;
+        let mut stream = stream?;
+        let claimed = live
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+                if n < opts.max_conns {
+                    Some(n + 1)
+                } else {
+                    None
+                }
+            })
+            .is_ok();
+        if !claimed {
+            let _ = writeln!(stream, "ERR busy (max {} connections)", opts.max_conns);
+            continue; // dropping the stream closes it
+        }
         let c = coord.clone();
+        let live2 = live.clone();
         std::thread::spawn(move || {
             let _ = handle_conn(c, stream);
+            live2.fetch_sub(1, Ordering::SeqCst);
         });
     }
     Ok(())
+}
+
+fn parse_token_list(s: &str) -> Result<Vec<u8>, String> {
+    let toks: Result<Vec<u8>, _> = s.split(',').map(|t| t.trim().parse::<u8>()).collect();
+    match toks {
+        Ok(v) if !v.is_empty() => Ok(v),
+        _ => Err("bad token list".into()),
+    }
+}
+
+/// `GEN <n> [temp=…] [topk=…] [seed=…]`
+fn parse_gen(s: &str) -> Result<(usize, SampleParams), String> {
+    let mut it = s.split_whitespace();
+    let n: usize = it
+        .next()
+        .ok_or("GEN needs a token count")?
+        .parse()
+        .map_err(|_| "bad GEN token count".to_string())?;
+    let params = SampleParams::from_kv_args(it)?;
+    Ok((n, params))
 }
 
 fn handle_conn(coord: Arc<Coordinator>, stream: TcpStream) -> std::io::Result<()> {
     let peer = stream.try_clone()?;
     let mut reader = BufReader::new(peer);
     let mut out = stream;
+    // one generation session per connection, closed with it
+    let mut sid: Option<u64> = None;
+    let r = serve_lines(&coord, &mut reader, &mut out, &mut sid);
+    if let Some(s) = sid {
+        let _ = coord.close_session(s);
+    }
+    r
+}
+
+fn serve_lines(
+    coord: &Arc<Coordinator>,
+    reader: &mut BufReader<TcpStream>,
+    out: &mut TcpStream,
+    sid: &mut Option<u64>,
+) -> std::io::Result<()> {
     let mut line = String::new();
     loop {
         line.clear();
@@ -303,33 +933,94 @@ fn handle_conn(coord: Arc<Coordinator>, stream: TcpStream) -> std::io::Result<()
             writeln!(
                 out,
                 "OK requests={} mean_batch={:.2} mean_latency_ms={:.3} \
+                 sessions={} gen_tokens={} mean_lanes={:.2} \
                  backend={} resident_bytes={}",
                 coord.metrics.requests.load(Ordering::Relaxed),
                 coord.metrics.mean_batch(),
                 coord.metrics.mean_latency_ms(),
+                coord.metrics.open_sessions.load(Ordering::Relaxed),
+                coord.metrics.gen_tokens.load(Ordering::Relaxed),
+                coord.metrics.mean_lanes(),
                 coord.engine().backend_name(),
                 coord.engine().resident_weight_bytes(),
             )?;
             continue;
         }
-        if let Some(rest) = line.strip_prefix("NEXT ") {
-            let tokens: Result<Vec<u8>, _> =
-                rest.split(',').map(|t| t.trim().parse::<u8>()).collect();
-            match tokens {
-                Ok(toks) if !toks.is_empty() => match coord.submit(toks) {
-                    Ok(logits) => {
-                        let (mut bi, mut bv) = (0usize, f32::NEG_INFINITY);
-                        for (i, &v) in logits.iter().enumerate() {
-                            if v > bv {
-                                bv = v;
-                                bi = i;
-                            }
-                        }
-                        writeln!(out, "OK next={bi} logit={bv:.4}")?;
-                    }
+        if line == "OPEN" {
+            if sid.is_some() {
+                writeln!(out, "ERR session already open on this connection")?;
+                continue;
+            }
+            match coord.open_session() {
+                Ok(s) => {
+                    *sid = Some(s);
+                    writeln!(out, "OK session={s}")?;
+                }
+                Err(e) => writeln!(out, "ERR {e}")?,
+            }
+            continue;
+        }
+        if line == "CLOSE" {
+            match sid.take() {
+                Some(s) => match coord.close_session(s) {
+                    Ok(len) => writeln!(out, "OK closed len={len}")?,
                     Err(e) => writeln!(out, "ERR {e}")?,
                 },
-                _ => writeln!(out, "ERR bad token list")?,
+                None => writeln!(out, "ERR no open session")?,
+            }
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("FEED ") {
+            let Some(s) = *sid else {
+                writeln!(out, "ERR no open session (send OPEN first)")?;
+                continue;
+            };
+            match parse_token_list(rest).and_then(|toks| coord.feed(s, toks)) {
+                Ok(len) => writeln!(out, "OK fed len={len}")?,
+                Err(e) => writeln!(out, "ERR {e}")?,
+            }
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("GEN ") {
+            let Some(s) = *sid else {
+                writeln!(out, "ERR no open session (send OPEN first)")?;
+                continue;
+            };
+            match parse_gen(rest).and_then(|(n, params)| coord.generate(s, n, params)) {
+                Ok(events) => {
+                    let mut generated = 0usize;
+                    loop {
+                        match events.recv() {
+                            Ok(Ok(GenEvent::Token(t))) => {
+                                writeln!(out, "TOK {t}")?;
+                                generated += 1;
+                            }
+                            Ok(Ok(GenEvent::Done { len })) => {
+                                writeln!(out, "OK generated={generated} len={len}")?;
+                                break;
+                            }
+                            Ok(Err(e)) => {
+                                writeln!(out, "ERR {e}")?;
+                                break;
+                            }
+                            Err(_) => {
+                                writeln!(out, "ERR generation aborted")?;
+                                break;
+                            }
+                        }
+                    }
+                }
+                Err(e) => writeln!(out, "ERR {e}")?,
+            }
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("NEXT ") {
+            match parse_token_list(rest).and_then(|toks| coord.submit(toks)) {
+                Ok(logits) => {
+                    let bi = argmax(&logits);
+                    writeln!(out, "OK next={bi} logit={:.4}", logits[bi])?;
+                }
+                Err(e) => writeln!(out, "ERR {e}")?,
             }
             continue;
         }
@@ -356,12 +1047,71 @@ mod tests {
     }
 
     #[test]
+    fn submit_rejects_bad_token_ids() {
+        // satellite fix: an id ≥ vocab used to panic the worker thread and
+        // hang every later submit — now it is rejected at submit() time
+        let coord = Coordinator::start(tiny_engine(), BatcherConfig::default());
+        let err = coord.submit(vec![1, 200, 3]).unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+        assert!(coord.submit(Vec::new()).is_err());
+        assert!(coord.submit(vec![0; 65]).is_err(), "max_seq is 64");
+        // the worker is still alive and serving
+        assert_eq!(coord.submit(vec![1, 2, 3]).unwrap().len(), 64);
+        coord.stop();
+    }
+
+    #[test]
+    fn panicking_engine_answers_err_instead_of_hanging() {
+        // an engine panic (anything validation misses) must turn into an
+        // ERR reply, not a dead worker
+        struct PanickyEngine;
+        impl BatchForward for PanickyEngine {
+            fn vocab(&self) -> usize {
+                64
+            }
+            fn max_seq(&self) -> usize {
+                64
+            }
+            fn forward_batch(&self, _batch: &[Vec<u8>]) -> Vec<Vec<f32>> {
+                panic!("simulated engine bug")
+            }
+            fn open_session(&self) -> KvCache {
+                KvCache::new(&config_by_name("qwen3-4b-tiny").unwrap())
+            }
+            fn prefill(&self, _cache: &mut KvCache, _tokens: &[u8]) -> Vec<f32> {
+                panic!("simulated engine bug")
+            }
+            fn decode_step(&self, _lanes: &mut [StepLane<'_>]) -> Vec<Vec<f32>> {
+                panic!("simulated engine bug")
+            }
+        }
+        // silence the expected panic backtraces for readable test output
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let coord = Coordinator::start(Arc::new(PanickyEngine), BatcherConfig::default());
+        let err = coord.submit(vec![1, 2, 3]).unwrap_err();
+        assert!(err.contains("panicked"), "{err}");
+        // worker survived: it answers again rather than blocking forever
+        let err2 = coord.submit(vec![4, 5]).unwrap_err();
+        assert!(err2.contains("panicked"), "{err2}");
+        // session path: FEED panics destroy the session but answer ERR
+        let sid = coord.open_session().unwrap();
+        let ferr = coord.feed(sid, vec![1, 2]).unwrap_err();
+        assert!(ferr.contains("panicked"), "{ferr}");
+        let ferr2 = coord.feed(sid, vec![1]).unwrap_err();
+        assert!(ferr2.contains("unknown session"), "{ferr2}");
+        coord.stop();
+        std::panic::set_hook(prev);
+    }
+
+    #[test]
     fn batching_accumulates_under_load() {
         let coord = Coordinator::start(
             tiny_engine(),
             BatcherConfig {
                 max_batch: 16,
                 max_wait: Duration::from_millis(20),
+                ..Default::default()
             },
         );
         std::thread::scope(|s| {
@@ -392,6 +1142,7 @@ mod tests {
             BatcherConfig {
                 max_batch: 4,
                 max_wait: Duration::from_millis(50),
+                ..Default::default()
             },
         );
         let answered = std::sync::atomic::AtomicU64::new(0);
@@ -420,6 +1171,123 @@ mod tests {
     }
 
     #[test]
+    fn greedy_session_generation_matches_repeated_next() {
+        // the KV-cache correctness oracle at the coordinator level:
+        // GEN n (greedy) ≡ n × NEXT with the growing prefix, bit for bit
+        let coord = Coordinator::start(tiny_engine(), BatcherConfig::default());
+        let prefix = vec![5u8, 6, 7];
+        let n = 6usize;
+
+        // oracle: repeated one-shot resubmission
+        let mut toks = prefix.clone();
+        let mut oracle = Vec::new();
+        for _ in 0..n {
+            let logits = coord.submit(toks.clone()).unwrap();
+            let t = argmax(&logits) as u8;
+            oracle.push(t);
+            toks.push(t);
+        }
+
+        // session path
+        let sid = coord.open_session().unwrap();
+        assert_eq!(coord.feed(sid, prefix.clone()).unwrap(), prefix.len());
+        let events = coord.generate(sid, n, SampleParams::default()).unwrap();
+        let mut got = Vec::new();
+        loop {
+            match events.recv().unwrap() {
+                Ok(GenEvent::Token(t)) => got.push(t),
+                Ok(GenEvent::Done { len }) => {
+                    assert_eq!(len, prefix.len() + n);
+                    break;
+                }
+                Err(e) => panic!("generation failed: {e}"),
+            }
+        }
+        assert_eq!(got, oracle, "cached GEN diverged from repeated NEXT");
+        assert_eq!(coord.close_session(sid).unwrap(), prefix.len() + n);
+        assert_eq!(coord.metrics.gen_tokens.load(Ordering::Relaxed), n as u64);
+        coord.stop();
+    }
+
+    #[test]
+    fn session_admission_and_limits() {
+        let coord = Coordinator::start(
+            tiny_engine(),
+            BatcherConfig {
+                max_sessions: 1,
+                ..Default::default()
+            },
+        );
+        let sid = coord.open_session().unwrap();
+        let err = coord.open_session().unwrap_err();
+        assert!(err.contains("too many sessions"), "{err}");
+        // GEN before FEED is rejected through the stream
+        let events = coord.generate(sid, 2, SampleParams::default()).unwrap();
+        let first = events.recv().unwrap();
+        assert!(first.unwrap_err().contains("FEED"), "GEN before FEED");
+        // FEED past max_seq is rejected
+        assert_eq!(coord.feed(sid, vec![1; 60]).unwrap(), 60);
+        let err = coord.feed(sid, vec![1; 10]).unwrap_err();
+        assert!(err.contains("max_seq"), "{err}");
+        // GEN past max_seq is rejected
+        let events = coord.generate(sid, 10, SampleParams::default()).unwrap();
+        assert!(events.recv().unwrap().is_err());
+        // closing frees the slot
+        coord.close_session(sid).unwrap();
+        assert!(coord.open_session().is_ok());
+        coord.stop();
+    }
+
+    #[test]
+    fn concurrent_sessions_interleave_on_the_slate() {
+        // several sessions generating at once share batched decode ticks
+        let coord = Coordinator::start(tiny_engine(), BatcherConfig::default());
+        let n = 5usize;
+        std::thread::scope(|s| {
+            for c in 0..4u8 {
+                let coord = coord.clone();
+                s.spawn(move || {
+                    let sid = coord.open_session().unwrap();
+                    coord.feed(sid, vec![c % 64, (c + 1) % 64]).unwrap();
+                    let events = coord
+                        .generate(
+                            sid,
+                            n,
+                            SampleParams {
+                                temperature: 0.9,
+                                top_k: 8,
+                                seed: c as u64,
+                            },
+                        )
+                        .unwrap();
+                    let mut got = 0;
+                    loop {
+                        match events.recv().unwrap() {
+                            Ok(GenEvent::Token(t)) => {
+                                assert!((t as usize) < 64);
+                                got += 1;
+                            }
+                            Ok(GenEvent::Done { len }) => {
+                                assert_eq!(len, 2 + n);
+                                break;
+                            }
+                            Err(e) => panic!("{e}"),
+                        }
+                    }
+                    assert_eq!(got, n);
+                    coord.close_session(sid).unwrap();
+                });
+            }
+        });
+        assert_eq!(
+            coord.metrics.gen_tokens.load(Ordering::Relaxed),
+            4 * n as u64
+        );
+        assert_eq!(coord.metrics.open_sessions.load(Ordering::Relaxed), 0);
+        coord.stop();
+    }
+
+    #[test]
     fn tcp_roundtrip() {
         let coord = Coordinator::start(tiny_engine(), BatcherConfig::default());
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
@@ -439,6 +1307,7 @@ mod tests {
         r.read_line(&mut line).unwrap();
         assert!(line.contains("requests=1"), "{line}");
         assert!(line.contains("backend=dense"), "{line}");
+        assert!(line.contains("sessions=0"), "{line}");
         assert!(line.contains("resident_bytes="), "{line}");
         writeln!(s, "QUIT").unwrap();
         coord.stop();

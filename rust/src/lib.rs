@@ -51,13 +51,22 @@
 //!                             never exists in memory)
 //! model::transformer          forward() is generic over ForwardOps, so
 //!                             Weights and every ExecutionBackend share
-//!                             one forward pass (and one eval path)
+//!                             one forward pass (and one eval path);
+//!                             KvCache + prefill/forward_step[_batch] add
+//!                             the incremental decode path, bit-identical
+//!                             to full forward per position
+//! model::sample               seeded Sampler (greedy / temperature /
+//!                             top-k) + the GEN argument parser
 //! coordinator                 BackendEngine: batched serving over any
-//!                             backend; STATS reports backend + resident
-//!                             weight bytes
-//! main (llvq pack/unpack/     CLI: produce, expand, inspect, and serve
-//!       stats/serve --packed  packed artifacts; serve --backend
-//!       --backend …)          dense|cached|fused selects the op family
+//!                             backend, now session-aware (open_session /
+//!                             prefill / decode_step over a slate of
+//!                             lanes / close_session) with a continuous-
+//!                             batching worker; STATS reports backend +
+//!                             resident weight bytes + session counters
+//! main (llvq pack/unpack/     CLI: produce, expand, inspect, serve, and
+//!       stats/serve/generate) generate from packed artifacts; serve
+//!                             --backend dense|cached|fused selects the
+//!                             op family, v2 protocol streams GEN tokens
 //! ```
 //!
 //! Entry points:
@@ -69,7 +78,10 @@
 //! * [`model::backend`] — [`model::backend::LinearOp`] /
 //!   [`model::backend::ExecutionBackend`]: dense, lazily-decoded, and
 //!   fused execution over packed artifacts.
-//! * [`coordinator`] — batched inference service over any backend.
+//! * [`model::sample`] — seeded greedy / temperature / top-k sampling.
+//! * [`coordinator`] — batched + sessioned inference service over any
+//!   backend (v1 `NEXT` and the streaming v2 `OPEN`/`FEED`/`GEN` wire
+//!   protocol).
 //! * [`experiments`] — regenerators for every table/figure in the paper.
 
 pub mod util {
@@ -123,6 +135,7 @@ pub mod model {
     pub mod io;
     pub mod packed;
     pub mod backend;
+    pub mod sample;
     pub mod eval;
     pub mod corpus;
 }

@@ -9,17 +9,21 @@
 //! * `unpack` — expand a `.llvqm` back to a dense `.llvqw`.
 //! * `stats` — header-only stats of a `.llvqm` (no payload read).
 //! * `eval` — evaluate a model artifact (PPL + probes).
-//! * `serve` — start the batching inference server (TCP line protocol);
+//! * `serve` — start the batching + generation inference server (TCP line
+//!   protocol, v1 `NEXT` and v2 `OPEN`/`FEED`/`GEN`/`CLOSE` sessions);
 //!   `--packed <file>` serves a packed artifact, `--backend
 //!   dense|cached|fused` picks how its layers execute (dequantized at
 //!   load / lazily decoded on first touch / matvec over the bit-packed
-//!   code streams — no dense materialization at all).
+//!   code streams — no dense materialization at all), `--max-sessions` /
+//!   `--max-conns` bound the session and connection pools.
+//! * `generate` — KV-cached local generation from a prompt (greedy /
+//!   temperature / top-k, seeded), over any backend.
 //! * `gen-model` — write a random-weight model (testing without python).
 //! * `info` — lattice summary (shell sizes, codebook bits, table VMEM).
 
 use std::sync::Arc;
 
-use llvq::coordinator::{BackendEngine, BatcherConfig, Coordinator};
+use llvq::coordinator::{BackendEngine, BatcherConfig, Coordinator, ServeOptions};
 use llvq::experiments as exp;
 use llvq::leech::index::LeechIndexer;
 use llvq::leech::tables::KernelTables;
@@ -28,7 +32,8 @@ use llvq::model::config::{config_by_name, model_zoo, ModelConfig};
 use llvq::model::eval::evaluate;
 use llvq::model::io as model_io;
 use llvq::model::packed::{PackedFile, PackedModel};
-use llvq::model::transformer::Weights;
+use llvq::model::sample::{SampleParams, Sampler};
+use llvq::model::transformer::{forward_step, prefill, KvCache, Weights};
 use llvq::pipeline::driver::{quantize_model, quantize_model_packed, PtqOptions};
 use llvq::pipeline::rotation::RotationMode;
 use llvq::quant::VectorQuantizer;
@@ -48,11 +53,12 @@ fn main() {
         "stats" => cmd_stats(rest),
         "eval" => cmd_eval(rest),
         "serve" => cmd_serve(rest),
+        "generate" => cmd_generate(rest),
         "gen-model" => cmd_gen_model(rest),
         "info" => cmd_info(rest),
         _ => {
             eprintln!(
-                "usage: llvq <exp|tables|quantize|pack|unpack|stats|eval|serve|gen-model|info> [flags]\n\
+                "usage: llvq <exp|tables|quantize|pack|unpack|stats|eval|serve|generate|gen-model|info> [flags]\n\
                  try: llvq exp table1"
             );
             2
@@ -550,8 +556,79 @@ fn packed_backend(
     }
 }
 
+/// Resolve the shared `--packed/--path/--model/--backend/--allow-random`
+/// flags of `serve` and `generate` into a ready [`ExecutionBackend`]
+/// (printing load stats); `Err` carries the process exit code.
+fn serving_backend(a: &Args) -> Result<ExecutionBackend, i32> {
+    let kind = match BackendKind::parse(&a.get("backend").unwrap()) {
+        Some(k) => k,
+        None => {
+            eprintln!(
+                "unknown backend '{}' (dense|cached|fused)",
+                a.get("backend").unwrap()
+            );
+            return Err(2);
+        }
+    };
+    let packed_path = a.get("packed").unwrap();
+    let p = a.get("path").unwrap();
+    if !packed_path.is_empty() {
+        let path = std::path::PathBuf::from(&packed_path);
+        // stats come from the header alone (parse-validated file_len /
+        // code bits) — read it up front so a bad artifact fails before
+        // any payload work, and nothing re-reads the file afterwards
+        let meta = match PackedModel::load_meta(&path) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("{e}");
+                return Err(1);
+            }
+        };
+        let t0 = std::time::Instant::now();
+        let backend = match packed_backend(&path, kind, threadpool::default_threads()) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("{e}");
+                return Err(1);
+            }
+        };
+        println!(
+            "loaded packed model ({} backend, {} B resident weights) in {:.0} ms: {}",
+            backend.kind().label(),
+            backend.resident_weight_bytes(),
+            t0.elapsed().as_secs_f64() * 1e3,
+            packed_stats_line(meta.file_len, meta.code_bits(), &meta.cfg)
+        );
+        Ok(backend)
+    } else {
+        if kind != BackendKind::Dense {
+            eprintln!("--backend {} requires --packed <file.llvqm>", kind.label());
+            return Err(2);
+        }
+        let w = if !p.is_empty() {
+            match model_io::load(std::path::Path::new(&p)) {
+                Ok(w) => w,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return Err(1);
+                }
+            }
+        } else {
+            let cfg = config_by_name(&a.get("model").unwrap()).expect("unknown model");
+            match exp::load_model(&cfg, a.get_bool("allow-random")) {
+                Ok(w) => w,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return Err(1);
+                }
+            }
+        };
+        Ok(ExecutionBackend::dense(w))
+    }
+}
+
 fn cmd_serve(rest: Vec<String>) -> i32 {
-    let a = Args::new("llvq serve — batching inference server")
+    let a = Args::new("llvq serve — batching + generation inference server")
         .flag("path", "", "model .llvqw to serve")
         .flag("packed", "", "packed .llvqm to serve")
         .flag(
@@ -562,77 +639,16 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
         )
         .flag("model", "llama2-tiny", "zoo name (artifacts/<name>.llvqw)")
         .flag("addr", "127.0.0.1:7199", "listen address")
-        .flag("max-batch", "8", "dynamic batch limit")
+        .flag("max-batch", "8", "dynamic batch limit / decode-slate width")
         .flag("max-wait-ms", "2", "batch window")
+        .flag("max-sessions", "64", "concurrently open generation sessions")
+        .flag("max-conns", "64", "concurrent TCP connections (ERR busy beyond)")
         .switch("allow-random", "serve random weights if artifact missing")
         .parse(rest.into_iter())
         .unwrap();
-    let kind = match BackendKind::parse(&a.get("backend").unwrap()) {
-        Some(k) => k,
-        None => {
-            eprintln!(
-                "unknown backend '{}' (dense|cached|fused)",
-                a.get("backend").unwrap()
-            );
-            return 2;
-        }
-    };
-    let backend = {
-        let packed_path = a.get("packed").unwrap();
-        let p = a.get("path").unwrap();
-        if !packed_path.is_empty() {
-            let path = std::path::PathBuf::from(&packed_path);
-            // stats come from the header alone (parse-validated file_len /
-            // code bits) — read it up front so a bad artifact fails before
-            // any payload work, and nothing re-reads the file afterwards
-            let meta = match PackedModel::load_meta(&path) {
-                Ok(m) => m,
-                Err(e) => {
-                    eprintln!("{e}");
-                    return 1;
-                }
-            };
-            let t0 = std::time::Instant::now();
-            let backend = match packed_backend(&path, kind, threadpool::default_threads()) {
-                Ok(b) => b,
-                Err(e) => {
-                    eprintln!("{e}");
-                    return 1;
-                }
-            };
-            println!(
-                "loaded packed model ({} backend, {} B resident weights) in {:.0} ms: {}",
-                backend.kind().label(),
-                backend.resident_weight_bytes(),
-                t0.elapsed().as_secs_f64() * 1e3,
-                packed_stats_line(meta.file_len, meta.code_bits(), &meta.cfg)
-            );
-            backend
-        } else {
-            if kind != BackendKind::Dense {
-                eprintln!("--backend {} requires --packed <file.llvqm>", kind.label());
-                return 2;
-            }
-            let w = if !p.is_empty() {
-                match model_io::load(std::path::Path::new(&p)) {
-                    Ok(w) => w,
-                    Err(e) => {
-                        eprintln!("{e}");
-                        return 1;
-                    }
-                }
-            } else {
-                let cfg = config_by_name(&a.get("model").unwrap()).expect("unknown model");
-                match exp::load_model(&cfg, a.get_bool("allow-random")) {
-                    Ok(w) => w,
-                    Err(e) => {
-                        eprintln!("{e}");
-                        return 1;
-                    }
-                }
-            };
-            ExecutionBackend::dense(w)
-        }
+    let backend = match serving_backend(&a) {
+        Ok(b) => b,
+        Err(code) => return code,
     };
     let engine = Arc::new(BackendEngine { backend });
     let coord = Coordinator::start(
@@ -640,6 +656,7 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
         BatcherConfig {
             max_batch: a.get_usize("max-batch"),
             max_wait: std::time::Duration::from_millis(a.get_u64("max-wait-ms")),
+            max_sessions: a.get_usize("max-sessions"),
         },
     );
     let addr = a.get("addr").unwrap();
@@ -650,11 +667,111 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
             return 1;
         }
     };
-    println!("serving on {addr} (line protocol: NEXT t1,t2,… | STATS | QUIT)");
-    if let Err(e) = llvq::coordinator::serve_tcp(coord, listener) {
+    println!(
+        "serving on {addr} (v1: NEXT t1,t2,… | STATS | QUIT — v2 sessions: \
+         OPEN | FEED t1,t2,… | GEN n [temp=…] [topk=…] [seed=…] | CLOSE)"
+    );
+    if let Err(e) = llvq::coordinator::serve_tcp_opts(
+        coord,
+        listener,
+        ServeOptions {
+            max_conns: a.get_usize("max-conns"),
+        },
+    ) {
         eprintln!("server error: {e}");
         return 1;
     }
+    0
+}
+
+fn cmd_generate(rest: Vec<String>) -> i32 {
+    let a = Args::new("llvq generate — KV-cached token generation from a prompt")
+        .flag("path", "", "model .llvqw to load")
+        .flag("packed", "", "packed .llvqm to load")
+        .flag(
+            "backend",
+            "dense",
+            "execution over --packed: dense | cached | fused",
+        )
+        .flag("model", "llama2-tiny", "zoo name (artifacts/<name>.llvqw)")
+        .flag("prompt", "1,2,3", "comma-separated prompt token ids")
+        .flag("n", "16", "tokens to generate")
+        .flag("temp", "0", "sampling temperature (0 = greedy)")
+        .flag("topk", "0", "top-k truncation (0 = off)")
+        .flag("seed", "7", "sampler seed")
+        .switch("allow-random", "use random weights if artifact missing")
+        .parse(rest.into_iter())
+        .unwrap();
+    let backend = match serving_backend(&a) {
+        Ok(b) => b,
+        Err(code) => return code,
+    };
+    let cfg = backend.cfg().clone();
+    if cfg.vocab > 256 {
+        // the token path is u8 end to end; sampled ids above 255 would
+        // silently wrap (the serving GEN path enforces the same bound)
+        eprintln!("generate requires vocab <= 256 (u8 token ids); model has {}", cfg.vocab);
+        return 2;
+    }
+    let prompt: Vec<u8> = {
+        let parsed: Result<Vec<u8>, _> = a
+            .get("prompt")
+            .unwrap()
+            .split(',')
+            .map(|t| t.trim().parse::<u8>())
+            .collect();
+        match parsed {
+            Ok(p) if !p.is_empty() && p.iter().all(|&t| (t as usize) < cfg.vocab) => p,
+            _ => {
+                eprintln!("--prompt must be non-empty token ids < vocab {}", cfg.vocab);
+                return 2;
+            }
+        }
+    };
+    let n = a.get_usize("n");
+    if prompt.len() + n > cfg.max_seq {
+        eprintln!(
+            "prompt ({}) + n ({n}) exceeds max_seq {}",
+            prompt.len(),
+            cfg.max_seq
+        );
+        return 2;
+    }
+    let params = SampleParams {
+        temperature: a.get_f64("temp") as f32,
+        top_k: a.get_usize("topk"),
+        seed: a.get_u64("seed"),
+    };
+    let mut cache = KvCache::new(&cfg);
+    let t0 = std::time::Instant::now();
+    let mut logits = prefill(&backend, &mut cache, &prompt);
+    let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let mut sampler = Sampler::new(params);
+    let mut toks: Vec<u8> = Vec::with_capacity(n);
+    let t1 = std::time::Instant::now();
+    for i in 0..n {
+        let t = sampler.sample(&logits) as u8;
+        toks.push(t);
+        // the last sampled token needs no decode step — nothing is
+        // sampled after it
+        if i + 1 < n {
+            logits = forward_step(&backend, &mut cache, t);
+        }
+    }
+    let gen_s = t1.elapsed().as_secs_f64();
+    let rendered: Vec<String> = toks.iter().map(|t| t.to_string()).collect();
+    println!("prompt : {}", a.get("prompt").unwrap());
+    println!("tokens : {}", rendered.join(","));
+    println!(
+        "prefill {prefill_ms:.1} ms | {n} tokens in {:.1} ms → {:.1} tok/s \
+         ({} backend, temp={} topk={} seed={})",
+        gen_s * 1e3,
+        n as f64 / gen_s.max(1e-9),
+        backend.kind().label(),
+        params.temperature,
+        params.top_k,
+        params.seed
+    );
     0
 }
 

@@ -21,7 +21,10 @@
 //!   24-float scratch and accumulated against the (rotated, scale-folded)
 //!   activation, so the dense matrix never exists in memory. Resident
 //!   weight bytes equal the on-disk code bytes (+ f64 column scales when
-//!   fine-tuning was enabled).
+//!   fine-tuning was enabled). Its `matmul_into` decodes each row **once
+//!   per call** and dots it against every activation lane — the decode
+//!   cost of a batched decode step (or a long prefill) is amortized across
+//!   the whole slate, bit-identically to per-lane matvecs.
 //!
 //! ### Numerical contract
 //!
@@ -167,13 +170,15 @@ impl LinearOp for CachedLayerOp {
 }
 
 thread_local! {
-    /// Reusable fused-matvec scratch (rotated activation, row accumulator,
-    /// block decode buffer, code words) — per thread, so ops stay `Sync`
-    /// for the thread-pooled eval path while the serving hot loop is
-    /// allocation-free after warm-up (the same hoisting discipline as the
-    /// gptq encode loop and `unpack_layer`).
-    static FUSED_SCRATCH: std::cell::RefCell<(Vec<f64>, Vec<f64>, Vec<f32>, Code)> =
-        std::cell::RefCell::new((Vec::new(), Vec::new(), Vec::new(), Code::empty()));
+    /// Reusable fused-matmul scratch (rotated activations, per-lane output
+    /// accumulators, per-row lane dots, block decode buffer, code words) —
+    /// per thread, so ops stay `Sync` for the thread-pooled eval path
+    /// while the serving hot loop is allocation-free after warm-up (the
+    /// same hoisting discipline as the gptq encode loop and
+    /// `unpack_layer`).
+    #[allow(clippy::type_complexity)]
+    static FUSED_SCRATCH: std::cell::RefCell<(Vec<f64>, Vec<f64>, Vec<f64>, Vec<f32>, Code)> =
+        std::cell::RefCell::new((Vec::new(), Vec::new(), Vec::new(), Vec::new(), Code::empty()));
 }
 
 /// Fused dequant-matvec over the bit-packed code stream. The layer's dense
@@ -220,36 +225,73 @@ impl LinearOp for FusedLayerOp {
     }
 
     fn matvec(&self, x: &[f32], y: &mut [f32]) {
-        debug_assert_eq!(x.len(), self.cols);
-        debug_assert_eq!(y.len(), self.rows);
+        self.matmul_into(x, y, 1);
+    }
+
+    /// The slate kernel: every weight row's code stream is decoded ONCE
+    /// per call and dotted against all `n` lanes — this is what amortizes
+    /// dequantization across batch lanes / prefill positions. Per lane,
+    /// the float-op sequence (rotate, β, block-major f64 accumulation, σ,
+    /// R_outᵀ) is identical to a single-lane `matvec`, so batching never
+    /// changes a logit bit.
+    fn matmul_into(&self, xs: &[f32], ys: &mut [f32], n: usize) {
+        debug_assert_eq!(xs.len(), n * self.cols);
+        debug_assert_eq!(ys.len(), n * self.rows);
+        if n == 0 {
+            return;
+        }
         let d = self.q.dim();
         FUSED_SCRATCH.with(|cell| {
             let mut tls = cell.borrow_mut();
-            let (xr, acc_out, scratch, code) = &mut *tls;
-            // x' = diag(β) · R_in · x  (σ is scalar; folded in per row)
+            let (xr, acc_out, lane_accs, scratch, code) = &mut *tls;
+            // per lane: x' = diag(β) · R_in · x  (σ is scalar; folded in
+            // per row)
             xr.clear();
-            xr.extend(x.iter().map(|&v| v as f64));
-            self.rot.rotate_activation(xr);
-            if let Some(beta) = &self.col_scales {
-                for (xi, &b) in xr.iter_mut().zip(beta) {
-                    *xi *= b;
+            xr.resize(n * self.cols, 0f64);
+            for (xl, x) in xr
+                .chunks_exact_mut(self.cols)
+                .zip(xs.chunks_exact(self.cols))
+            {
+                for (xi, &v) in xl.iter_mut().zip(x) {
+                    *xi = v as f64;
+                }
+                self.rot.rotate_activation(xl);
+                if let Some(beta) = &self.col_scales {
+                    for (xi, &b) in xl.iter_mut().zip(beta) {
+                        *xi *= b;
+                    }
                 }
             }
             let rb = self.codes.row_bytes;
             scratch.resize(d, 0f32);
+            lane_accs.clear();
+            lane_accs.resize(n, 0f64);
             acc_out.clear();
-            acc_out.resize(self.rows, 0f64);
-            for (r, acc_slot) in acc_out.iter_mut().enumerate() {
+            acc_out.resize(n * self.rows, 0f64);
+            for r in 0..self.rows {
                 let mut br = BitReader::new(&self.codes.data[r * rb..(r + 1) * rb]);
-                let acc = self
-                    .q
-                    .decode_row_dot(&self.widths, &mut br, code, scratch, xr);
-                *acc_slot = acc * self.sigma;
+                self.q.decode_row_dot_multi(
+                    &self.widths,
+                    &mut br,
+                    code,
+                    scratch,
+                    xr,
+                    self.cols,
+                    lane_accs,
+                );
+                for (lane, &acc) in lane_accs.iter().enumerate() {
+                    acc_out[lane * self.rows + r] = acc * self.sigma;
+                }
             }
-            // y = R_outᵀ · acc
-            self.rot.unrotate_output(acc_out);
-            for (yo, &v) in y.iter_mut().zip(acc_out.iter()) {
-                *yo = v as f32;
+            // per lane: y = R_outᵀ · acc
+            for (ao, y) in acc_out
+                .chunks_exact_mut(self.rows)
+                .zip(ys.chunks_exact_mut(self.rows))
+            {
+                self.rot.unrotate_output(ao);
+                for (yo, &v) in y.iter_mut().zip(ao.iter()) {
+                    *yo = v as f32;
+                }
             }
         });
     }
@@ -503,6 +545,14 @@ impl ForwardOps for ExecutionBackend {
         self.ops[layer][kind_index(kind)].matvec(x, y);
     }
 
+    /// Route batched activations through the op's `matmul_into`, so the
+    /// fused backend decodes each weight row once per call for the whole
+    /// slate (dense/cached ops loop the same matvec — bit-identical either
+    /// way).
+    fn linear_batch(&self, layer: usize, kind: LinearKind, xs: &[f32], ys: &mut [f32], n: usize) {
+        self.ops[layer][kind_index(kind)].matmul_into(xs, ys, n);
+    }
+
     fn lm_head(&self, x: &[f32], y: &mut [f32]) {
         self.lm_head.matvec(x, y);
     }
@@ -602,6 +652,33 @@ mod tests {
                 (a - b).abs()
             );
         }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn fused_matmul_into_is_bitwise_per_lane() {
+        // the slate amortization must not change a single output bit vs
+        // looping matvec lane by lane
+        let (art, path) = artifact_on_disk();
+        let backend = ExecutionBackend::packed_fused(PackedFile::open(&path).unwrap()).unwrap();
+        let cfg = backend.cfg().clone();
+        let op = backend.op(0, LinearKind::W1);
+        let (d_out, d_in) = op.shape();
+        assert_eq!((d_out, d_in), (cfg.d_ff, cfg.d_model));
+        let n = 5usize;
+        let xs: Vec<f32> = (0..n * d_in).map(|i| ((i * 37 % 101) as f32) * 0.02 - 1.0).collect();
+        let mut batched = vec![0f32; n * d_out];
+        op.matmul_into(&xs, &mut batched, n);
+        let mut solo = vec![0f32; d_out];
+        for lane in 0..n {
+            op.matvec(&xs[lane * d_in..(lane + 1) * d_in], &mut solo);
+            let row = &batched[lane * d_out..(lane + 1) * d_out];
+            assert!(
+                solo.iter().zip(row).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "fused slate lane {lane} diverged from matvec"
+            );
+        }
+        drop(art);
         std::fs::remove_file(&path).ok();
     }
 

@@ -1,0 +1,231 @@
+//! Token sampling for generation sessions.
+//!
+//! A [`Sampler`] turns a logit row into the next token id: greedy argmax
+//! when `temperature == 0` (the serving default, and the mode the
+//! KV-cache correctness oracle pins against repeated `NEXT` calls), or a
+//! seeded softmax draw with optional temperature scaling and top-k
+//! truncation. The RNG is the crate's own deterministic
+//! [`Xoshiro256pp`](crate::util::rng::Xoshiro256pp), so a `(params, seed)`
+//! pair replays the same token stream on any backend — the TCP `GEN`
+//! command and `llvq generate` both parse their `temp=`/`topk=`/`seed=`
+//! arguments through [`SampleParams::from_kv_args`].
+
+use crate::util::rng::Xoshiro256pp;
+
+/// Index of the largest logit, ties broken toward the lowest id — the
+/// same rule the v1 `NEXT` reply uses, shared so greedy generation and
+/// one-shot serving can never disagree.
+pub fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Sampling configuration for one `GEN` run. The all-zero default is
+/// greedy decoding.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SampleParams {
+    /// `0` = greedy argmax (deterministic); otherwise the softmax
+    /// temperature (higher = flatter).
+    pub temperature: f32,
+    /// `0` = no truncation; otherwise sample only among the `k` largest
+    /// logits.
+    pub top_k: usize,
+    /// Seed of the sampler's private RNG stream.
+    pub seed: u64,
+}
+
+impl SampleParams {
+    /// Parse `temp=… topk=… seed=…` key/value arguments (any subset, any
+    /// order) — the wire format of `GEN <n> [args…]` and the flag format
+    /// of `llvq generate`.
+    pub fn from_kv_args<'a, I: Iterator<Item = &'a str>>(args: I) -> Result<Self, String> {
+        let mut p = SampleParams::default();
+        for a in args {
+            let (key, val) = a
+                .split_once('=')
+                .ok_or_else(|| format!("bad sampling arg '{a}' (want key=value)"))?;
+            match key {
+                "temp" | "temperature" => {
+                    p.temperature = val
+                        .parse()
+                        .map_err(|_| format!("bad temperature '{val}'"))?;
+                }
+                "topk" | "top_k" => {
+                    p.top_k = val.parse().map_err(|_| format!("bad topk '{val}'"))?;
+                }
+                "seed" => {
+                    p.seed = val.parse().map_err(|_| format!("bad seed '{val}'"))?;
+                }
+                other => return Err(format!("unknown sampling arg '{other}'")),
+            }
+        }
+        if !p.temperature.is_finite() || p.temperature < 0.0 {
+            return Err("temperature must be finite and >= 0".into());
+        }
+        Ok(p)
+    }
+}
+
+/// Seeded token sampler (greedy / temperature / top-k).
+pub struct Sampler {
+    params: SampleParams,
+    rng: Xoshiro256pp,
+}
+
+impl Sampler {
+    pub fn new(params: SampleParams) -> Self {
+        Self {
+            rng: Xoshiro256pp::new(params.seed),
+            params,
+        }
+    }
+
+    /// The deterministic argmax sampler.
+    pub fn greedy() -> Self {
+        Self::new(SampleParams::default())
+    }
+
+    pub fn params(&self) -> SampleParams {
+        self.params
+    }
+
+    /// Pick a token id from one logit row.
+    pub fn sample(&mut self, logits: &[f32]) -> usize {
+        assert!(!logits.is_empty(), "empty logit row");
+        if self.params.temperature <= 0.0 {
+            return argmax(logits);
+        }
+        // rank candidates by logit (descending, ties toward lower id)
+        let mut idx: Vec<usize> = (0..logits.len()).collect();
+        idx.sort_by(|&a, &b| {
+            logits[b]
+                .partial_cmp(&logits[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let k = match self.params.top_k {
+            0 => logits.len(),
+            k => k.min(logits.len()),
+        };
+        let cand = &idx[..k];
+        // max-subtracted softmax over the candidate set, in f64
+        let t = self.params.temperature as f64;
+        let maxv = logits[cand[0]] as f64;
+        let weights: Vec<f64> = cand
+            .iter()
+            .map(|&i| ((logits[i] as f64 - maxv) / t).exp())
+            .collect();
+        let total: f64 = weights.iter().sum();
+        let mut u = self.rng.next_f64() * total;
+        for (w, &i) in weights.iter().zip(cand) {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        cand[k - 1]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row() -> Vec<f32> {
+        vec![0.1, 2.5, -1.0, 2.5, 0.0, 1.9]
+    }
+
+    #[test]
+    fn greedy_is_argmax_with_low_tie() {
+        let mut s = Sampler::greedy();
+        // ids 1 and 3 tie at 2.5 → lowest wins, matching the NEXT reply
+        assert_eq!(s.sample(&row()), 1);
+        assert_eq!(argmax(&row()), 1);
+    }
+
+    #[test]
+    fn seeded_sampling_is_deterministic() {
+        let p = SampleParams {
+            temperature: 0.8,
+            top_k: 4,
+            seed: 42,
+        };
+        let mut a = Sampler::new(p);
+        let mut b = Sampler::new(p);
+        let r = row();
+        for _ in 0..50 {
+            assert_eq!(a.sample(&r), b.sample(&r));
+        }
+        let mut c = Sampler::new(SampleParams { seed: 43, ..p });
+        let mut d = Sampler::new(p);
+        let stream_c: Vec<usize> = (0..50).map(|_| c.sample(&r)).collect();
+        let stream_d: Vec<usize> = (0..50).map(|_| d.sample(&r)).collect();
+        assert_ne!(
+            stream_c, stream_d,
+            "different seeds produced identical 50-draw streams"
+        );
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let p = SampleParams {
+            temperature: 1.5,
+            top_k: 2,
+            seed: 7,
+        };
+        let mut s = Sampler::new(p);
+        let r = row();
+        for _ in 0..200 {
+            let t = s.sample(&r);
+            assert!(t == 1 || t == 3, "sampled {t} outside top-2 {{1, 3}}");
+        }
+    }
+
+    #[test]
+    fn high_temperature_spreads_mass() {
+        let mut s = Sampler::new(SampleParams {
+            temperature: 10.0,
+            top_k: 0,
+            seed: 3,
+        });
+        let r = row();
+        let mut seen = [false; 6];
+        for _ in 0..2000 {
+            seen[s.sample(&r)] = true;
+        }
+        assert!(seen.iter().all(|&x| x), "10x temperature should reach every id");
+    }
+
+    #[test]
+    fn kv_args_parse_and_validate() {
+        let p = SampleParams::from_kv_args(
+            "temp=0.7 topk=8 seed=99".split_whitespace(),
+        )
+        .unwrap();
+        assert_eq!(
+            p,
+            SampleParams {
+                temperature: 0.7,
+                top_k: 8,
+                seed: 99
+            }
+        );
+        assert_eq!(
+            SampleParams::from_kv_args("".split_whitespace()).unwrap(),
+            SampleParams::default()
+        );
+        for bad in ["temp=-1", "temp=nan", "warp=9", "topk", "seed=x"] {
+            assert!(
+                SampleParams::from_kv_args(bad.split_whitespace()).is_err(),
+                "accepted '{bad}'"
+            );
+        }
+    }
+}

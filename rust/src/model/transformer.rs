@@ -11,6 +11,20 @@
 //! token embedding + learned positional embedding → N × [RMSNorm →
 //! causal MHA (head dim 24) → residual → RMSNorm → MLP (SiLU) → residual]
 //! → final RMSNorm → LM head.
+//!
+//! ## Incremental decoding
+//!
+//! Generation sessions run through a [`KvCache`]: [`prefill`] appends a
+//! token run and returns last-position logits, [`forward_step`] /
+//! [`forward_step_batch`] append one token (per lane) and return its
+//! logits. Both paths execute the exact float-op sequence of the full
+//! [`forward`] pass — `forward` itself is implemented over a scratch
+//! cache — so N cached decode steps are **bit-identical** to re-running
+//! the growing prefix through `forward`, on dense weights and on every
+//! execution backend. Linear layers go through [`ForwardOps::linear_batch`]
+//! so backends may amortize per-row work across positions / batch lanes
+//! (the fused code-stream backend decodes each weight row once per step
+//! for the whole slate).
 
 use crate::model::config::ModelConfig;
 
@@ -212,6 +226,19 @@ pub trait ForwardOps: Sync {
     fn norm_f(&self) -> &[f32];
     /// `y = W_{layer,kind} · x`.
     fn linear(&self, layer: usize, kind: LinearKind, x: &[f32], y: &mut [f32]);
+    /// Apply `W_{layer,kind}` to `n` row-major activation vectors at once.
+    /// The default loops [`ForwardOps::linear`], so results are
+    /// bit-identical to the per-vector path; backends whose ops amortize
+    /// per-row work across vectors (the fused code-stream matvec) override
+    /// this with an equally bit-stable batched kernel.
+    fn linear_batch(&self, layer: usize, kind: LinearKind, xs: &[f32], ys: &mut [f32], n: usize) {
+        let (d_out, d_in) = kind.shape(self.cfg());
+        debug_assert_eq!(xs.len(), n * d_in);
+        debug_assert_eq!(ys.len(), n * d_out);
+        for (x, y) in xs.chunks_exact(d_in).zip(ys.chunks_exact_mut(d_out)) {
+            self.linear(layer, kind, x, y);
+        }
+    }
     /// `y = W_head · x` (vocab × d_model).
     fn lm_head(&self, x: &[f32], y: &mut [f32]);
 }
@@ -251,115 +278,409 @@ impl ForwardOps for Weights {
     }
 }
 
+/// Per-layer K/V buffers backing a generation session: `n_layers ×
+/// max_seq × d_model` each, with `len` tokens appended so far. The cache
+/// is pure storage — it carries no weights, so one engine serves any
+/// number of concurrent sessions, each with its own cache.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    n_layers: usize,
+    d_model: usize,
+    max_seq: usize,
+    len: usize,
+    /// `[layer][pos][d]`, row-major.
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl KvCache {
+    /// A full-capacity session cache (up to the model's `max_seq`).
+    pub fn new(cfg: &ModelConfig) -> Self {
+        Self::with_capacity(cfg, cfg.max_seq)
+    }
+
+    /// A cache bounded to `capacity` tokens — [`forward`] uses this for
+    /// its scratch cache so a short one-shot request allocates `s × d`
+    /// K/V per layer, not `max_seq × d`.
+    pub fn with_capacity(cfg: &ModelConfig, capacity: usize) -> Self {
+        assert!(
+            capacity >= 1 && capacity <= cfg.max_seq,
+            "KvCache capacity {capacity} outside [1, max_seq {}]",
+            cfg.max_seq
+        );
+        let sz = cfg.n_layers * capacity * cfg.d_model;
+        Self {
+            n_layers: cfg.n_layers,
+            d_model: cfg.d_model,
+            max_seq: capacity,
+            len: 0,
+            k: vec![0f32; sz],
+            v: vec![0f32; sz],
+        }
+    }
+
+    /// Tokens appended so far (the next token lands at this position).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Maximum tokens this cache can hold (`max_seq` for session caches).
+    pub fn capacity(&self) -> usize {
+        self.max_seq
+    }
+
+    /// Positions still free.
+    pub fn remaining(&self) -> usize {
+        self.max_seq - self.len
+    }
+
+    /// Reset to an empty session without reallocating.
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    fn layer_offset(&self, li: usize) -> usize {
+        li * self.max_seq * self.d_model
+    }
+
+    fn check_model(&self, cfg: &ModelConfig) {
+        assert!(
+            self.n_layers == cfg.n_layers
+                && self.d_model == cfg.d_model
+                && self.max_seq <= cfg.max_seq,
+            "KvCache shape does not match model config"
+        );
+    }
+}
+
+/// Causal attention for one query position over cached K/V (`kc`/`vc` hold
+/// positions `0..=pos` of one layer, row-major `pos × d`). `out` receives
+/// the concatenated head outputs; `scores` is reusable scratch. The float
+/// ops replay the historical full-forward attention loop exactly.
+#[allow(clippy::too_many_arguments)]
+fn attend(
+    kc: &[f32],
+    vc: &[f32],
+    pos: usize,
+    d: usize,
+    hd: usize,
+    nh: usize,
+    qt_row: &[f32],
+    out: &mut [f32],
+    scores: &mut Vec<f32>,
+) {
+    let scale = 1.0 / (hd as f32).sqrt();
+    out.iter_mut().for_each(|x| *x = 0.0);
+    for head in 0..nh {
+        let off = head * hd;
+        scores.clear();
+        scores.resize(pos + 1, 0f32);
+        let qt = &qt_row[off..off + hd];
+        let mut maxs = f32::NEG_INFINITY;
+        for u in 0..=pos {
+            let ku = &kc[u * d + off..u * d + off + hd];
+            let mut sdot = 0f32;
+            for (qi, ki) in qt.iter().zip(ku) {
+                sdot += qi * ki;
+            }
+            scores[u] = sdot * scale;
+            maxs = maxs.max(scores[u]);
+        }
+        let mut z = 0f32;
+        for sc in scores.iter_mut() {
+            *sc = (*sc - maxs).exp();
+            z += *sc;
+        }
+        let zi = 1.0 / z;
+        for u in 0..=pos {
+            let p = scores[u] * zi;
+            let vu = &vc[u * d + off..u * d + off + hd];
+            for i in 0..hd {
+                out[off + i] += p * vu[i];
+            }
+        }
+    }
+}
+
+/// Run `tokens` through every transformer block, appending their K/V to
+/// `cache` and returning the new positions' final hidden states (`s × d`,
+/// pre-final-norm). Shared by [`forward`] (fresh cache, all logits) and
+/// [`prefill`] (session cache, last logits) so the two can never diverge.
+fn run_blocks<M: ForwardOps + ?Sized>(
+    m: &M,
+    cache: &mut KvCache,
+    tokens: &[u8],
+    capture: &mut ActivationCapture,
+) -> Vec<f32> {
+    let cfg = m.cfg();
+    let (s, d) = (tokens.len(), cfg.d_model);
+    let base = cache.len;
+    assert!(s > 0, "empty token sequence");
+    assert!(
+        base + s <= cache.max_seq,
+        "sequence of {} tokens at position {base} exceeds cache capacity {}",
+        s,
+        cache.max_seq
+    );
+    cache.check_model(cfg);
+    let hd = cfg.head_dim();
+    let nh = cfg.n_heads;
+
+    // embeddings (token ids are validated here so a bad id is a clean
+    // panic with a message, not an out-of-bounds index in tok_emb)
+    let (tok_emb, pos_emb) = (m.tok_emb(), m.pos_emb());
+    let mut h = vec![0f32; s * d];
+    for (t, &tk) in tokens.iter().enumerate() {
+        let tok = tk as usize;
+        assert!(tok < cfg.vocab, "token id {tok} >= vocab {}", cfg.vocab);
+        let p = base + t;
+        for i in 0..d {
+            h[t * d + i] = tok_emb[tok * d + i] + pos_emb[p * d + i];
+        }
+    }
+
+    let mut xs = vec![0f32; s * d];
+    let mut q = vec![0f32; s * d];
+    let mut k = vec![0f32; s * d];
+    let mut v = vec![0f32; s * d];
+    let mut attn_out = vec![0f32; s * d];
+    let mut ff = vec![0f32; s * cfg.d_ff];
+    let mut out = vec![0f32; s * d];
+    let mut scores: Vec<f32> = Vec::new();
+
+    for li in 0..cfg.n_layers {
+        // --- attention ---
+        for t in 0..s {
+            let normed = &mut xs[t * d..(t + 1) * d];
+            normed.copy_from_slice(&h[t * d..(t + 1) * d]);
+            rmsnorm(normed, m.norm1(li));
+            capture.record(li, LinearKind::Wq, normed);
+            capture.record(li, LinearKind::Wk, normed);
+            capture.record(li, LinearKind::Wv, normed);
+        }
+        m.linear_batch(li, LinearKind::Wq, &xs, &mut q, s);
+        m.linear_batch(li, LinearKind::Wk, &xs, &mut k, s);
+        m.linear_batch(li, LinearKind::Wv, &xs, &mut v, s);
+        // append this run's K/V, then attend over the whole prefix
+        let lo = cache.layer_offset(li);
+        cache.k[lo + base * d..lo + (base + s) * d].copy_from_slice(&k);
+        cache.v[lo + base * d..lo + (base + s) * d].copy_from_slice(&v);
+        let kc = &cache.k[lo..lo + (base + s) * d];
+        let vc = &cache.v[lo..lo + (base + s) * d];
+        for t in 0..s {
+            attend(
+                kc,
+                vc,
+                base + t,
+                d,
+                hd,
+                nh,
+                &q[t * d..(t + 1) * d],
+                &mut attn_out[t * d..(t + 1) * d],
+                &mut scores,
+            );
+        }
+        for t in 0..s {
+            capture.record(li, LinearKind::Wo, &attn_out[t * d..(t + 1) * d]);
+        }
+        m.linear_batch(li, LinearKind::Wo, &attn_out, &mut out, s);
+        for (hi, &o) in h.iter_mut().zip(out.iter()) {
+            *hi += o;
+        }
+        // --- MLP ---
+        for t in 0..s {
+            let normed = &mut xs[t * d..(t + 1) * d];
+            normed.copy_from_slice(&h[t * d..(t + 1) * d]);
+            rmsnorm(normed, m.norm2(li));
+            capture.record(li, LinearKind::W1, normed);
+        }
+        m.linear_batch(li, LinearKind::W1, &xs, &mut ff, s);
+        for x in ff.iter_mut() {
+            *x = silu(*x);
+        }
+        for t in 0..s {
+            capture.record(li, LinearKind::W2, &ff[t * cfg.d_ff..(t + 1) * cfg.d_ff]);
+        }
+        m.linear_batch(li, LinearKind::W2, &ff, &mut out, s);
+        for (hi, &o) in h.iter_mut().zip(out.iter()) {
+            *hi += o;
+        }
+    }
+    cache.len = base + s;
+    h
+}
+
 /// Run the model on a token sequence, returning per-position logits
 /// (seq × vocab, row-major). Optionally captures linear-layer inputs.
 /// Generic over [`ForwardOps`], so the same pass serves dense [`Weights`]
-/// and every packed execution backend.
+/// and every packed execution backend. Implemented over a scratch
+/// [`KvCache`], so it is the bit-exact oracle for the incremental
+/// [`prefill`] / [`forward_step`] path by construction.
 pub fn forward<M: ForwardOps + ?Sized>(
     m: &M,
     tokens: &[u8],
     capture: &mut ActivationCapture,
 ) -> Vec<f32> {
     let cfg = m.cfg();
+    assert!(tokens.len() <= cfg.max_seq);
+    // scratch cache sized to the request, not to max_seq — a short NEXT
+    // allocates (and zeroes) only s×d K/V per layer
+    let mut cache = KvCache::with_capacity(cfg, tokens.len().max(1));
+    let h = run_blocks(m, &mut cache, tokens, capture);
     let (s, d) = (tokens.len(), cfg.d_model);
-    assert!(s <= cfg.max_seq);
-    let hd = cfg.head_dim();
-    let nh = cfg.n_heads;
-
-    // embeddings
-    let (tok_emb, pos_emb) = (m.tok_emb(), m.pos_emb());
-    let mut h = vec![0f32; s * d];
-    for t in 0..s {
-        let tok = tokens[t] as usize;
-        for i in 0..d {
-            h[t * d + i] = tok_emb[tok * d + i] + pos_emb[t * d + i];
-        }
-    }
-
-    let mut q = vec![0f32; s * d];
-    let mut k = vec![0f32; s * d];
-    let mut v = vec![0f32; s * d];
-    let mut attn_out = vec![0f32; s * d];
     let mut normed = vec![0f32; d];
-    let mut ff = vec![0f32; cfg.d_ff];
-    let mut ff2 = vec![0f32; d];
-
-    for li in 0..cfg.n_layers {
-        // --- attention ---
-        for t in 0..s {
-            normed.copy_from_slice(&h[t * d..(t + 1) * d]);
-            rmsnorm(&mut normed, m.norm1(li));
-            capture.record(li, LinearKind::Wq, &normed);
-            capture.record(li, LinearKind::Wk, &normed);
-            capture.record(li, LinearKind::Wv, &normed);
-            m.linear(li, LinearKind::Wq, &normed, &mut q[t * d..(t + 1) * d]);
-            m.linear(li, LinearKind::Wk, &normed, &mut k[t * d..(t + 1) * d]);
-            m.linear(li, LinearKind::Wv, &normed, &mut v[t * d..(t + 1) * d]);
-        }
-        let scale = 1.0 / (hd as f32).sqrt();
-        for t in 0..s {
-            let ao = &mut attn_out[t * d..(t + 1) * d];
-            ao.iter_mut().for_each(|x| *x = 0.0);
-            for head in 0..nh {
-                let off = head * hd;
-                // scores over 0..=t
-                let mut scores = vec![0f32; t + 1];
-                let qt = &q[t * d + off..t * d + off + hd];
-                let mut maxs = f32::NEG_INFINITY;
-                for u in 0..=t {
-                    let ku = &k[u * d + off..u * d + off + hd];
-                    let mut sdot = 0f32;
-                    for (qi, ki) in qt.iter().zip(ku) {
-                        sdot += qi * ki;
-                    }
-                    scores[u] = sdot * scale;
-                    maxs = maxs.max(scores[u]);
-                }
-                let mut z = 0f32;
-                for sc in scores.iter_mut() {
-                    *sc = (*sc - maxs).exp();
-                    z += *sc;
-                }
-                let zi = 1.0 / z;
-                for u in 0..=t {
-                    let p = scores[u] * zi;
-                    let vu = &v[u * d + off..u * d + off + hd];
-                    for i in 0..hd {
-                        ao[off + i] += p * vu[i];
-                    }
-                }
-            }
-        }
-        for t in 0..s {
-            capture.record(li, LinearKind::Wo, &attn_out[t * d..(t + 1) * d]);
-            m.linear(li, LinearKind::Wo, &attn_out[t * d..(t + 1) * d], &mut normed);
-            for i in 0..d {
-                h[t * d + i] += normed[i];
-            }
-        }
-        // --- MLP ---
-        for t in 0..s {
-            normed.copy_from_slice(&h[t * d..(t + 1) * d]);
-            rmsnorm(&mut normed, m.norm2(li));
-            capture.record(li, LinearKind::W1, &normed);
-            m.linear(li, LinearKind::W1, &normed, &mut ff);
-            for x in ff.iter_mut() {
-                *x = silu(*x);
-            }
-            capture.record(li, LinearKind::W2, &ff);
-            m.linear(li, LinearKind::W2, &ff, &mut ff2);
-            for i in 0..d {
-                h[t * d + i] += ff2[i];
-            }
-        }
-    }
-
-    // final norm + head
     let mut logits = vec![0f32; s * cfg.vocab];
     for t in 0..s {
         normed.copy_from_slice(&h[t * d..(t + 1) * d]);
         rmsnorm(&mut normed, m.norm_f());
         m.lm_head(&normed, &mut logits[t * cfg.vocab..(t + 1) * cfg.vocab]);
+    }
+    logits
+}
+
+/// Append `tokens` to a generation session, returning the logits at the
+/// last appended position (vocab-sized) — bit-identical to the last row
+/// of [`forward`] over the session's whole token history.
+pub fn prefill<M: ForwardOps + ?Sized>(
+    m: &M,
+    cache: &mut KvCache,
+    tokens: &[u8],
+) -> Vec<f32> {
+    let cfg = m.cfg();
+    let mut cap = ActivationCapture::default();
+    let h = run_blocks(m, cache, tokens, &mut cap);
+    let (s, d) = (tokens.len(), cfg.d_model);
+    let mut normed = vec![0f32; d];
+    normed.copy_from_slice(&h[(s - 1) * d..s * d]);
+    rmsnorm(&mut normed, m.norm_f());
+    let mut logits = vec![0f32; cfg.vocab];
+    m.lm_head(&normed, &mut logits);
+    logits
+}
+
+/// Append one token to a session and return its logits — the single-lane
+/// decode step (see [`forward_step_batch`] for the slate version).
+pub fn forward_step<M: ForwardOps + ?Sized>(
+    m: &M,
+    cache: &mut KvCache,
+    token: u8,
+) -> Vec<f32> {
+    prefill(m, cache, &[token])
+}
+
+/// One batch lane of a decode step: a session cache plus the token to
+/// append to it. Lanes may sit at different positions.
+pub struct StepLane<'a> {
+    pub cache: &'a mut KvCache,
+    pub token: u8,
+}
+
+/// Advance `n` independent sessions by one token each, returning their
+/// last-position logits (`n × vocab`, row-major). Linear layers run
+/// through [`ForwardOps::linear_batch`] with the whole slate at once, so
+/// backends amortize per-row work (code-stream decode) across lanes;
+/// per-lane results are bit-identical to looping [`forward_step`].
+pub fn forward_step_batch<M: ForwardOps + ?Sized>(
+    m: &M,
+    lanes: &mut [StepLane<'_>],
+) -> Vec<f32> {
+    let cfg = m.cfg();
+    let n = lanes.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let d = cfg.d_model;
+    let hd = cfg.head_dim();
+    let nh = cfg.n_heads;
+
+    let (tok_emb, pos_emb) = (m.tok_emb(), m.pos_emb());
+    let mut h = vec![0f32; n * d];
+    for (l, lane) in lanes.iter().enumerate() {
+        let tok = lane.token as usize;
+        assert!(tok < cfg.vocab, "token id {tok} >= vocab {}", cfg.vocab);
+        lane.cache.check_model(cfg);
+        let p = lane.cache.len;
+        assert!(
+            p < lane.cache.max_seq,
+            "session full (capacity {})",
+            lane.cache.max_seq
+        );
+        for i in 0..d {
+            h[l * d + i] = tok_emb[tok * d + i] + pos_emb[p * d + i];
+        }
+    }
+
+    let mut xs = vec![0f32; n * d];
+    let mut q = vec![0f32; n * d];
+    let mut k = vec![0f32; n * d];
+    let mut v = vec![0f32; n * d];
+    let mut attn_out = vec![0f32; n * d];
+    let mut ff = vec![0f32; n * cfg.d_ff];
+    let mut out = vec![0f32; n * d];
+    let mut scores: Vec<f32> = Vec::new();
+
+    for li in 0..cfg.n_layers {
+        // --- attention ---
+        for l in 0..n {
+            let normed = &mut xs[l * d..(l + 1) * d];
+            normed.copy_from_slice(&h[l * d..(l + 1) * d]);
+            rmsnorm(normed, m.norm1(li));
+        }
+        m.linear_batch(li, LinearKind::Wq, &xs, &mut q, n);
+        m.linear_batch(li, LinearKind::Wk, &xs, &mut k, n);
+        m.linear_batch(li, LinearKind::Wv, &xs, &mut v, n);
+        for (l, lane) in lanes.iter_mut().enumerate() {
+            let t = lane.cache.len;
+            let lo = lane.cache.layer_offset(li);
+            lane.cache.k[lo + t * d..lo + (t + 1) * d]
+                .copy_from_slice(&k[l * d..(l + 1) * d]);
+            lane.cache.v[lo + t * d..lo + (t + 1) * d]
+                .copy_from_slice(&v[l * d..(l + 1) * d]);
+            attend(
+                &lane.cache.k[lo..lo + (t + 1) * d],
+                &lane.cache.v[lo..lo + (t + 1) * d],
+                t,
+                d,
+                hd,
+                nh,
+                &q[l * d..(l + 1) * d],
+                &mut attn_out[l * d..(l + 1) * d],
+                &mut scores,
+            );
+        }
+        m.linear_batch(li, LinearKind::Wo, &attn_out, &mut out, n);
+        for (hi, &o) in h.iter_mut().zip(out.iter()) {
+            *hi += o;
+        }
+        // --- MLP ---
+        for l in 0..n {
+            let normed = &mut xs[l * d..(l + 1) * d];
+            normed.copy_from_slice(&h[l * d..(l + 1) * d]);
+            rmsnorm(normed, m.norm2(li));
+        }
+        m.linear_batch(li, LinearKind::W1, &xs, &mut ff, n);
+        for x in ff.iter_mut() {
+            *x = silu(*x);
+        }
+        m.linear_batch(li, LinearKind::W2, &ff, &mut out, n);
+        for (hi, &o) in h.iter_mut().zip(out.iter()) {
+            *hi += o;
+        }
+    }
+    for lane in lanes.iter_mut() {
+        lane.cache.len += 1;
+    }
+
+    let mut normed = vec![0f32; d];
+    let mut logits = vec![0f32; n * cfg.vocab];
+    for l in 0..n {
+        normed.copy_from_slice(&h[l * d..(l + 1) * d]);
+        rmsnorm(&mut normed, m.norm_f());
+        m.lm_head(&normed, &mut logits[l * cfg.vocab..(l + 1) * cfg.vocab]);
     }
     logits
 }
@@ -465,6 +786,90 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn forward_step_matches_full_forward_bitwise() {
+        // the KV-cache correctness oracle: prefill + N decode steps must
+        // reproduce full-forward last-position logits bit-for-bit
+        let cfg = config_by_name("qwen3-4b-tiny").unwrap();
+        let w = Weights::random(&cfg, 11);
+        let mut cap = ActivationCapture::default();
+        let prefix: Vec<u8> = vec![3, 1, 4, 1, 5];
+        let mut cache = KvCache::new(&cfg);
+        let mut step_logits = prefill(&w, &mut cache, &prefix);
+        let mut toks = prefix.clone();
+        for step in 0..6 {
+            let full = forward(&w, &toks, &mut cap);
+            let last = &full[(toks.len() - 1) * cfg.vocab..toks.len() * cfg.vocab];
+            assert!(
+                step_logits.iter().zip(last).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "step {step}: cached logits diverged from full forward"
+            );
+            let next = (step * 7 % cfg.vocab) as u8;
+            toks.push(next);
+            step_logits = forward_step(&w, &mut cache, next);
+        }
+        assert_eq!(cache.len(), prefix.len() + 6);
+    }
+
+    #[test]
+    fn prefill_is_incremental() {
+        // feeding a prefix in two runs equals feeding it in one
+        let cfg = config_by_name("qwen3-4b-tiny").unwrap();
+        let w = Weights::random(&cfg, 13);
+        let toks: Vec<u8> = (0..12).map(|i| (i * 5 % 64) as u8).collect();
+        let mut one = KvCache::new(&cfg);
+        let a = prefill(&w, &mut one, &toks);
+        let mut two = KvCache::new(&cfg);
+        prefill(&w, &mut two, &toks[..7]);
+        let b = prefill(&w, &mut two, &toks[7..]);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert_eq!(one.len(), two.len());
+    }
+
+    #[test]
+    fn step_batch_matches_single_lane_bitwise() {
+        // slate decode must equal per-lane stepping even with lanes at
+        // different positions
+        let cfg = config_by_name("qwen3-4b-tiny").unwrap();
+        let w = Weights::random(&cfg, 17);
+        let prefixes: [&[u8]; 3] = [&[1, 2, 3], &[9, 8, 7, 6, 5], &[4]];
+        let mut batch_caches: Vec<KvCache> =
+            prefixes.iter().map(|_| KvCache::new(&cfg)).collect();
+        let mut solo_caches: Vec<KvCache> =
+            prefixes.iter().map(|_| KvCache::new(&cfg)).collect();
+        for (i, p) in prefixes.iter().enumerate() {
+            prefill(&w, &mut batch_caches[i], p);
+            prefill(&w, &mut solo_caches[i], p);
+        }
+        let toks = [10u8, 20, 30];
+        let mut lanes: Vec<StepLane<'_>> = batch_caches
+            .iter_mut()
+            .zip(toks)
+            .map(|(cache, token)| StepLane { cache, token })
+            .collect();
+        let batched = forward_step_batch(&w, &mut lanes);
+        for (l, (cache, token)) in solo_caches.iter_mut().zip(toks).enumerate() {
+            let solo = forward_step(&w, cache, token);
+            let row = &batched[l * cfg.vocab..(l + 1) * cfg.vocab];
+            assert!(
+                solo.iter().zip(row).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "lane {l} diverged from single-lane step"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds cache capacity")]
+    fn step_past_capacity_panics() {
+        let cfg = config_by_name("qwen3-4b-tiny").unwrap();
+        let w = Weights::random(&cfg, 3);
+        let mut cache = KvCache::new(&cfg);
+        let toks: Vec<u8> = (0..cfg.max_seq).map(|i| (i % 64) as u8).collect();
+        prefill(&w, &mut cache, &toks);
+        assert_eq!(cache.remaining(), 0);
+        let _ = forward_step(&w, &mut cache, 1);
     }
 
     #[test]

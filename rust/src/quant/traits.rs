@@ -159,6 +159,47 @@ pub trait VectorQuantizer: Send + Sync {
         acc
     }
 
+    /// Decode one product-coded row **once** and dot it against `n`
+    /// activation lanes at a time: `xs` holds `n` row-major `cols`-length
+    /// lanes and `accs` (length `n`) receives each lane's dot product.
+    /// Per lane, the accumulation order (block-major, f64, same zip order
+    /// inside each block) is identical to [`VectorQuantizer::
+    /// decode_row_dot`], so every lane's result is bit-identical to a
+    /// single-lane pass — the batched fused backend relies on this to
+    /// amortize the code-stream decode across batch lanes without leaving
+    /// the single-vector numerical contract.
+    #[allow(clippy::too_many_arguments)]
+    fn decode_row_dot_multi(
+        &self,
+        widths: &[u32],
+        r: &mut BitReader,
+        code: &mut Code,
+        scratch: &mut [f32],
+        xs: &[f64],
+        cols: usize,
+        accs: &mut [f64],
+    ) {
+        let d = self.dim();
+        debug_assert_eq!(scratch.len(), d);
+        debug_assert_eq!(xs.len(), accs.len() * cols);
+        for a in accs.iter_mut() {
+            *a = 0.0;
+        }
+        let mut i = 0;
+        while i < cols {
+            read_code_with(widths, r, code);
+            self.dequantize(code, scratch);
+            let take = d.min(cols - i);
+            for (lane, acc) in accs.iter_mut().enumerate() {
+                let x = &xs[lane * cols + i..lane * cols + i + take];
+                for (s, xi) in scratch[..take].iter().zip(x) {
+                    *acc += *s as f64 * xi;
+                }
+            }
+            i += take;
+        }
+    }
+
     /// Self-describing spec: JSON with a `kind` tag plus every parameter
     /// needed to rebuild this exact quantizer via [`quantizer_from_spec`].
     /// The default is display-only (no `kind`), which the factory rejects —
@@ -414,6 +455,43 @@ mod tests {
         );
         let want: f64 = row.iter().zip(&x).map(|(&r, &xi)| r as f64 * xi).sum();
         assert!((dot - want).abs() < 1e-12, "{dot} vs {want}");
+    }
+
+    #[test]
+    fn decode_row_dot_multi_is_bitwise_per_lane() {
+        // the slate contract: lane i of a multi-lane pass must equal a
+        // fresh single-lane decode_row_dot of the same stream, bit for bit
+        let q = Identity(4);
+        let row: Vec<f32> = (0..10).map(|i| i as f32 * 0.3 - 1.1).collect();
+        let mut w = BitWriter::new();
+        crate::quant::product::encode_row_into(&q, &row, &mut w);
+        let bytes = w.finish();
+        let widths = q.code_widths();
+        let cols = row.len();
+        let n = 3usize;
+        let xs: Vec<f64> = (0..n * cols).map(|i| (i as f64) * 0.07 - 0.9).collect();
+        let mut code = Code::empty();
+        let mut scratch = vec![0f32; 4];
+        let mut accs = vec![0f64; n];
+        q.decode_row_dot_multi(
+            &widths,
+            &mut BitReader::new(&bytes),
+            &mut code,
+            &mut scratch,
+            &xs,
+            cols,
+            &mut accs,
+        );
+        for lane in 0..n {
+            let solo = q.decode_row_dot(
+                &widths,
+                &mut BitReader::new(&bytes),
+                &mut code,
+                &mut scratch,
+                &xs[lane * cols..(lane + 1) * cols],
+            );
+            assert_eq!(solo.to_bits(), accs[lane].to_bits(), "lane {lane}");
+        }
     }
 
     #[test]

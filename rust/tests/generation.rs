@@ -1,0 +1,346 @@
+//! Generation-session acceptance: KV-cached decoding must be bit-identical
+//! to full-prefix recomputation on every backend and every quantizer spec,
+//! and the v2 wire protocol (`OPEN`/`FEED`/`GEN`/`CLOSE`) must stream the
+//! same tokens a client would get by resubmitting the growing prefix
+//! through v1 `NEXT`.
+//!
+//! The oracle logic: `prefill(P)` then N × `forward_step` replays the
+//! exact float-op sequence of `forward(P + generated…)` at each new
+//! position (the full pass is itself implemented over a scratch KV cache),
+//! so logits — not just argmaxes — are compared with `to_bits`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use llvq::coordinator::{
+    serve_tcp_opts, BackendEngine, BatcherConfig, Coordinator, ServeOptions,
+};
+use llvq::leech::index::LeechIndexer;
+use llvq::model::backend::ExecutionBackend;
+use llvq::model::config::config_by_name;
+use llvq::model::packed::PackedFile;
+use llvq::model::sample::argmax;
+use llvq::model::transformer::{
+    forward, forward_step, forward_step_batch, prefill, ActivationCapture, ForwardOps, KvCache,
+    StepLane, Weights,
+};
+use llvq::pipeline::driver::{quantize_model_packed, PtqArtifacts, PtqOptions};
+use llvq::pipeline::rotation::RotationMode;
+use llvq::quant::e8::{E8Codebook, E8Cut};
+use llvq::quant::llvq::{LlvqShapeGain, LlvqSpherical};
+use llvq::quant::scalar::{LloydMaxQuantizer, UniformQuantizer};
+use llvq::quant::VectorQuantizer;
+use llvq::util::proptest::check;
+
+/// The five quantizer specs of the `.llvqm` codec surface.
+fn five_quantizers() -> Vec<(&'static str, Box<dyn VectorQuantizer>)> {
+    let ix = Arc::new(LeechIndexer::new(3));
+    vec![
+        (
+            "uniform",
+            Box::new(UniformQuantizer::new_gaussian_optimal(4)) as Box<dyn VectorQuantizer>,
+        ),
+        (
+            "lloyd-max",
+            Box::new(LloydMaxQuantizer::train_gaussian(3, 40_000, 4)),
+        ),
+        ("e8", Box::new(E8Codebook::new(E8Cut::Ball))),
+        (
+            "llvq-spherical",
+            Box::new(LlvqSpherical::with_scale(ix.clone(), 0.9)),
+        ),
+        ("llvq-shape-gain", Box::new(LlvqShapeGain::new(ix, 1))),
+    ]
+}
+
+fn pack_tiny(q: &dyn VectorQuantizer, seed: u64, finetune: bool) -> PtqArtifacts {
+    let cfg = config_by_name("qwen3-4b-tiny").unwrap();
+    let w = Weights::random(&cfg, seed);
+    let opts = PtqOptions {
+        calib_seqs: 2,
+        finetune_scales: finetune,
+        rotation: RotationMode::InputOutput,
+        ..Default::default()
+    };
+    quantize_model_packed(&w, q, &opts)
+}
+
+fn save_temp(art: &PtqArtifacts, tag: &str) -> std::path::PathBuf {
+    let path = std::env::temp_dir().join(format!(
+        "llvq-generation-{tag}-{}.llvqm",
+        std::process::id()
+    ));
+    art.packed.save(&path).unwrap();
+    path
+}
+
+/// Assert: on backend `m`, prefill + greedy steps reproduce full-forward
+/// last-position logits bit-for-bit at every position.
+fn assert_session_matches_full<M: ForwardOps + ?Sized>(
+    m: &M,
+    prefix: &[u8],
+    steps: usize,
+    label: &str,
+) -> Result<(), String> {
+    let vocab = m.cfg().vocab;
+    let mut cap = ActivationCapture::default();
+    let mut cache = KvCache::new(m.cfg());
+    // feed the prefix in two chunks to also exercise incremental prefill
+    let split = (prefix.len() / 2).max(1).min(prefix.len());
+    prefill(m, &mut cache, &prefix[..split]);
+    let mut step_logits = if split < prefix.len() {
+        prefill(m, &mut cache, &prefix[split..])
+    } else {
+        // re-derive last logits from a fresh cache for the 1-token case
+        let mut c2 = KvCache::new(m.cfg());
+        let l = prefill(m, &mut c2, prefix);
+        cache = c2;
+        l
+    };
+    let mut toks = prefix.to_vec();
+    for s in 0..steps {
+        let full = forward(m, &toks, &mut cap);
+        let last = &full[(toks.len() - 1) * vocab..toks.len() * vocab];
+        if !step_logits
+            .iter()
+            .zip(last)
+            .all(|(a, b)| a.to_bits() == b.to_bits())
+        {
+            return Err(format!(
+                "{label}: cached logits diverged from full forward at step {s}"
+            ));
+        }
+        let next = argmax(last) as u8;
+        toks.push(next);
+        step_logits = forward_step(m, &mut cache, next);
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_kv_cached_generation_is_bit_identical_across_specs_and_backends() {
+    for (i, (name, q)) in five_quantizers().into_iter().enumerate() {
+        let art = pack_tiny(q.as_ref(), 300 + i as u64, i % 2 == 0);
+        let path = save_temp(&art, name);
+        let dense = ExecutionBackend::dense(art.weights.clone());
+        let cached =
+            ExecutionBackend::packed_cached(PackedFile::open(&path).unwrap(), 2).unwrap();
+        let fused = ExecutionBackend::packed_fused(PackedFile::open(&path).unwrap()).unwrap();
+        check(&format!("generation-{name}"), 3, |rng| {
+            let plen = 1 + rng.next_range(10) as usize;
+            let prefix: Vec<u8> = (0..plen).map(|_| rng.next_range(64) as u8).collect();
+            let steps = 2 + rng.next_range(3) as usize;
+            assert_session_matches_full(&dense, &prefix, steps, &format!("{name}/dense"))?;
+            assert_session_matches_full(&cached, &prefix, steps, &format!("{name}/cached"))?;
+            assert_session_matches_full(&fused, &prefix, steps, &format!("{name}/fused"))?;
+            Ok(())
+        });
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn slate_decode_matches_single_lane_on_fused() {
+    // the amortized multi-lane decode step (one row decode per step for
+    // the whole slate) must not change any lane's logits
+    let q = LlvqShapeGain::new(Arc::new(LeechIndexer::new(3)), 1);
+    let art = pack_tiny(&q, 21, true);
+    let path = save_temp(&art, "slate");
+    let fused = ExecutionBackend::packed_fused(PackedFile::open(&path).unwrap()).unwrap();
+    let cfg = fused.cfg().clone();
+    let prefixes: [&[u8]; 4] = [&[1, 2, 3], &[60, 2], &[9, 8, 7, 6, 5, 4], &[33]];
+    let mut slate: Vec<KvCache> = prefixes.iter().map(|_| KvCache::new(&cfg)).collect();
+    let mut solo: Vec<KvCache> = prefixes.iter().map(|_| KvCache::new(&cfg)).collect();
+    for (i, p) in prefixes.iter().enumerate() {
+        prefill(&fused, &mut slate[i], p);
+        prefill(&fused, &mut solo[i], p);
+    }
+    let toks = [7u8, 11, 13, 17];
+    let mut lanes: Vec<StepLane<'_>> = slate
+        .iter_mut()
+        .zip(toks)
+        .map(|(cache, token)| StepLane { cache, token })
+        .collect();
+    let batched = forward_step_batch(&fused, &mut lanes);
+    for (l, (cache, token)) in solo.iter_mut().zip(toks).enumerate() {
+        let single = forward_step(&fused, cache, token);
+        let row = &batched[l * cfg.vocab..(l + 1) * cfg.vocab];
+        assert!(
+            single.iter().zip(row).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "fused slate lane {l} diverged from single-lane decode"
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+fn read_line(r: &mut BufReader<TcpStream>) -> String {
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    line.trim().to_string()
+}
+
+/// Drive one OPEN/FEED/GEN/CLOSE session over TCP; returns the streamed
+/// token ids.
+fn run_tcp_session(
+    addr: std::net::SocketAddr,
+    prefix: &str,
+    n: usize,
+    gen_args: &str,
+) -> Vec<u8> {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    writeln!(s, "OPEN").unwrap();
+    let l = read_line(&mut r);
+    assert!(l.starts_with("OK session="), "{l}");
+    writeln!(s, "FEED {prefix}").unwrap();
+    let l = read_line(&mut r);
+    assert!(l.starts_with("OK fed len="), "{l}");
+    writeln!(s, "GEN {n}{gen_args}").unwrap();
+    let mut toks = Vec::new();
+    loop {
+        let l = read_line(&mut r);
+        if let Some(t) = l.strip_prefix("TOK ") {
+            toks.push(t.parse::<u8>().unwrap());
+        } else {
+            assert!(
+                l.starts_with(&format!("OK generated={n}")),
+                "unexpected GEN terminator: {l}"
+            );
+            break;
+        }
+    }
+    writeln!(s, "CLOSE").unwrap();
+    let l = read_line(&mut r);
+    assert!(l.starts_with("OK closed len="), "{l}");
+    writeln!(s, "QUIT").unwrap();
+    toks
+}
+
+#[test]
+fn tcp_v2_protocol_generates_streams_and_replays_deterministically() {
+    // end-to-end over the wire on the fused backend: OPEN → FEED → GEN
+    // with a seeded sampler → CLOSE, exercised twice (same seed ⇒ same
+    // stream), plus greedy GEN ≡ repeated NEXT with the growing prefix
+    let q = LlvqShapeGain::new(Arc::new(LeechIndexer::new(3)), 1);
+    let art = pack_tiny(&q, 77, false);
+    let path = save_temp(&art, "tcp");
+    let fused = ExecutionBackend::packed_fused(PackedFile::open(&path).unwrap()).unwrap();
+    let coord = Coordinator::start(
+        Arc::new(BackendEngine { backend: fused }),
+        BatcherConfig::default(),
+    );
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let c2 = coord.clone();
+    std::thread::spawn(move || {
+        let _ = serve_tcp_opts(c2, listener, ServeOptions { max_conns: 8 });
+    });
+
+    // seeded sampling replays exactly
+    let a = run_tcp_session(addr, "5,6,7,8", 6, " temp=0.9 topk=8 seed=42");
+    let b = run_tcp_session(addr, "5,6,7,8", 6, " temp=0.9 topk=8 seed=42");
+    assert_eq!(a.len(), 6);
+    assert!(a.iter().all(|&t| (t as usize) < 64));
+    assert_eq!(a, b, "same seed must replay the same stream");
+    let c = run_tcp_session(addr, "5,6,7,8", 6, " temp=0.9 topk=8 seed=43");
+    assert!(c.len() == 6 && c.iter().all(|&t| (t as usize) < 64));
+
+    // greedy GEN over a session ≡ repeated NEXT with the growing prefix
+    let greedy = run_tcp_session(addr, "5,6,7,8", 5, "");
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    let mut prefix: Vec<String> = vec!["5".into(), "6".into(), "7".into(), "8".into()];
+    for (i, &want) in greedy.iter().enumerate() {
+        writeln!(s, "NEXT {}", prefix.join(",")).unwrap();
+        let l = read_line(&mut r);
+        let got: u8 = l
+            .strip_prefix("OK next=")
+            .unwrap_or_else(|| panic!("bad NEXT reply: {l}"))
+            .split_whitespace()
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert_eq!(got, want, "greedy GEN token {i} != NEXT oracle");
+        prefix.push(want.to_string());
+    }
+    // STATS reflects the session traffic; resident_bytes stays last
+    writeln!(s, "STATS").unwrap();
+    let l = read_line(&mut r);
+    assert!(l.contains("backend=fused"), "{l}");
+    assert!(l.contains("gen_tokens="), "{l}");
+    let resident: usize = l.rsplit('=').next().unwrap().parse().unwrap();
+    assert!(
+        resident as f64 <= 1.1 * art.packed.code_bytes() as f64,
+        "fused serving must stay at code-byte residency: {l}"
+    );
+    writeln!(s, "QUIT").unwrap();
+    coord.stop();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn tcp_error_paths_and_connection_cap() {
+    let cfg = config_by_name("qwen3-4b-tiny").unwrap();
+    let coord = Coordinator::start(
+        Arc::new(BackendEngine::dense(Weights::random(&cfg, 4))),
+        BatcherConfig::default(),
+    );
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let c2 = coord.clone();
+    std::thread::spawn(move || {
+        let _ = serve_tcp_opts(c2, listener, ServeOptions { max_conns: 1 });
+    });
+
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    // v2 misuse answers ERR lines, never silence
+    writeln!(s, "FEED 1,2").unwrap();
+    assert!(read_line(&mut r).starts_with("ERR no open session"));
+    writeln!(s, "GEN 3").unwrap();
+    assert!(read_line(&mut r).starts_with("ERR no open session"));
+    writeln!(s, "CLOSE").unwrap();
+    assert!(read_line(&mut r).starts_with("ERR no open session"));
+    writeln!(s, "OPEN").unwrap();
+    assert!(read_line(&mut r).starts_with("OK session="));
+    writeln!(s, "OPEN").unwrap();
+    assert!(read_line(&mut r).starts_with("ERR session already open"));
+    writeln!(s, "GEN 2").unwrap();
+    assert!(read_line(&mut r).starts_with("ERR FEED"), "GEN before FEED");
+    // bad token ids are rejected at parse/validate time (poison fix)
+    writeln!(s, "FEED 1,999").unwrap();
+    assert!(read_line(&mut r).starts_with("ERR bad token list"));
+    writeln!(s, "NEXT 1,200").unwrap();
+    assert!(read_line(&mut r).contains("out of range"));
+    writeln!(s, "GEN x").unwrap();
+    assert!(read_line(&mut r).starts_with("ERR bad GEN"));
+    writeln!(s, "GEN 3 warp=9").unwrap();
+    assert!(read_line(&mut r).contains("unknown sampling arg"));
+
+    // the second concurrent connection is refused with ERR busy
+    let s2 = TcpStream::connect(addr).unwrap();
+    let mut r2 = BufReader::new(s2);
+    assert!(
+        read_line(&mut r2).starts_with("ERR busy"),
+        "connection cap must answer ERR busy"
+    );
+
+    // the capped slot frees after QUIT: a later connection gets served
+    writeln!(s, "QUIT").unwrap();
+    drop(r);
+    drop(s);
+    let served = (0..100).any(|_| {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        let mut s3 = match TcpStream::connect(addr) {
+            Ok(s3) => s3,
+            Err(_) => return false,
+        };
+        writeln!(s3, "STATS").unwrap();
+        let mut r3 = BufReader::new(s3);
+        read_line(&mut r3).starts_with("OK requests=")
+    });
+    assert!(served, "slot never freed after QUIT");
+    coord.stop();
+}
