@@ -88,6 +88,7 @@ pub fn evaluate<M: ForwardOps + ?Sized>(
 mod tests {
     use super::*;
     use crate::model::config::config_by_name;
+    use crate::model::transformer::Weights;
 
     #[test]
     fn random_model_is_near_chance() {
