@@ -99,12 +99,10 @@ fn main() {
                 ));
                 art.packed.save(&path).expect("write artifact");
                 let f = PackedFile::open(&path).expect("open artifact");
+                let threads = llvq::util::threadpool::default_threads();
                 let be = match kind {
-                    BackendKind::Cached => ExecutionBackend::packed_cached(
-                        f,
-                        llvq::util::threadpool::default_threads(),
-                    ),
-                    _ => ExecutionBackend::packed_fused(f),
+                    BackendKind::Cached => ExecutionBackend::packed_cached(f, threads),
+                    _ => ExecutionBackend::packed_fused(f, threads),
                 }
                 .expect("build backend");
                 if kind == BackendKind::Fused {

@@ -6,10 +6,12 @@
 //! overhead of §5.3.
 //!
 //! Besides the human-readable report, every backend measurement lands as a
-//! JSON row in `BENCH_serving.json` and every generation measurement in
-//! `BENCH_generation.json` (override with `LLVQ_BENCH_OUT` /
-//! `LLVQ_BENCH_GEN_OUT`; both files are rewritten each run), in the flat
-//! row shape the `BENCH_*.json` trajectories use.
+//! JSON row in `BENCH_serving.json`, every generation measurement in
+//! `BENCH_generation.json`, and the kernel thread-scaling sweep (fused and
+//! cached × 1/2/4/8 pool threads × single-lane and 8-lane slate) in
+//! `BENCH_kernel.json` (override with `LLVQ_BENCH_OUT` /
+//! `LLVQ_BENCH_GEN_OUT` / `LLVQ_BENCH_KERNEL_OUT`; all files are rewritten
+//! each run), in the flat row shape the `BENCH_*.json` trajectories use.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -57,9 +59,43 @@ fn build_backend(path: &std::path::Path, kind: BackendKind, threads: usize) -> E
             ExecutionBackend::packed_cached(PackedFile::open(path).unwrap(), threads).unwrap()
         }
         BackendKind::Fused => {
-            ExecutionBackend::packed_fused(PackedFile::open(path).unwrap()).unwrap()
+            ExecutionBackend::packed_fused(PackedFile::open(path).unwrap(), threads).unwrap()
         }
     }
+}
+
+/// One greedy KV-cached generation pass: prefill + `gen_n - 1` decode
+/// steps (the first logits come from prefill, the last token is terminal).
+fn gen_kv(backend: &ExecutionBackend, prompt: &[u8], gen_n: usize) {
+    let mut cache = KvCache::new(backend.cfg());
+    let mut logits = prefill(backend, &mut cache, prompt);
+    for _ in 0..gen_n - 1 {
+        let t = argmax(&logits) as u8;
+        logits = forward_step(backend, &mut cache, t);
+    }
+    black_box(argmax(&logits));
+}
+
+/// One greedy slate generation pass over `lanes_n` parallel sessions.
+fn gen_slate(backend: &ExecutionBackend, prompt: &[u8], gen_n: usize, lanes_n: usize) {
+    let mut caches: Vec<KvCache> =
+        (0..lanes_n).map(|_| KvCache::new(backend.cfg())).collect();
+    let mut logits: Vec<Vec<f32>> = caches
+        .iter_mut()
+        .map(|c| prefill(backend, c, prompt))
+        .collect();
+    let v = backend.cfg().vocab;
+    for _ in 0..gen_n - 1 {
+        let toks: Vec<u8> = logits.iter().map(|l| argmax(l) as u8).collect();
+        let mut lanes: Vec<StepLane<'_>> = caches
+            .iter_mut()
+            .zip(&toks)
+            .map(|(cache, &token)| StepLane { cache, token })
+            .collect();
+        let flat = forward_step_batch(backend, &mut lanes);
+        logits = flat.chunks_exact(v).map(|c| c.to_vec()).collect();
+    }
+    black_box(&logits);
 }
 
 fn main() {
@@ -170,15 +206,7 @@ fn main() {
             black_box(prefill(&backend, &mut cache, &prompt));
         }
         let r = bq.run(&format!("{label}: kv-cached gen ({gen_n} tok)"), || {
-            let mut cache = KvCache::new(backend.cfg());
-            let mut logits = prefill(&backend, &mut cache, &prompt);
-            // gen_n tokens need gen_n-1 decode steps: prefill already
-            // produced the first logits, and the last token is terminal
-            for _ in 0..gen_n - 1 {
-                let t = argmax(&logits) as u8;
-                logits = forward_step(&backend, &mut cache, t);
-            }
-            black_box(argmax(&logits));
+            gen_kv(&backend, &prompt, gen_n);
         });
         println!("{label}: kv-cached {:.1} tok/s", gen_n as f64 / r.mean);
         gen_rows.push(suite_row(
@@ -222,24 +250,7 @@ fn main() {
         let backend = build_backend(&path, BackendKind::Fused, threads);
         let lanes_n = 8usize;
         let r = bq.run("fused: kv-cached gen, 8-lane slate", || {
-            let mut caches: Vec<KvCache> =
-                (0..lanes_n).map(|_| KvCache::new(backend.cfg())).collect();
-            let mut logits: Vec<Vec<f32>> = caches
-                .iter_mut()
-                .map(|c| prefill(&backend, c, &prompt))
-                .collect();
-            let v = backend.cfg().vocab;
-            for _ in 0..gen_n - 1 {
-                let toks: Vec<u8> = logits.iter().map(|l| argmax(l) as u8).collect();
-                let mut lanes: Vec<StepLane<'_>> = caches
-                    .iter_mut()
-                    .zip(&toks)
-                    .map(|(cache, &token)| StepLane { cache, token })
-                    .collect();
-                let flat = forward_step_batch(&backend, &mut lanes);
-                logits = flat.chunks_exact(v).map(|c| c.to_vec()).collect();
-            }
-            black_box(&logits);
+            gen_slate(&backend, &prompt, gen_n, lanes_n);
         });
         let total = (gen_n * lanes_n) as f64;
         println!("fused slate-8: {:.1} tok/s aggregate", total / r.mean);
@@ -260,6 +271,124 @@ fn main() {
     match std::fs::write(&gen_out, Json::Arr(gen_rows).to_string_pretty()) {
         Ok(()) => println!("\nwrote {gen_out}"),
         Err(e) => eprintln!("\n[warn] could not write {gen_out}: {e}"),
+    }
+
+    // ---- kernel scaling: threads × backend × slate → BENCH_kernel.json ----
+    // the tentpole acceptance numbers at 1/2/4/8 pool threads, single lane
+    // and 8-lane slate. The pool-parallel phase differs per backend, so
+    // each is timed where its kernel actually runs:
+    //   * fused — warm steady-state generation (the row-sharded
+    //     dequant-matmul runs on every decode step; tok/s should improve
+    //     monotonically 1 → 4 threads on this config, bit-identically);
+    //   * cached — COLD start (build + generate, so the timed region
+    //     contains the row-sharded first-touch decode of every layer —
+    //     warm cached generation is plain dense matvecs and never touches
+    //     the pool).
+    let mut kernel_rows: Vec<Json> = Vec::new();
+    let lanes_n = 8usize;
+    println!("\n== kernel scaling: fused (warm steady-state) ==");
+    for &t in &[1usize, 2, 4, 8] {
+        let backend = build_backend(&path, BackendKind::Fused, t);
+        {
+            // warm the pool workers and scratch slots
+            let mut cache = KvCache::new(backend.cfg());
+            black_box(prefill(&backend, &mut cache, &prompt));
+        }
+        let r = bq.run(&format!("fused t={t}: kv gen ({gen_n} tok, 1 lane)"), || {
+            gen_kv(&backend, &prompt, gen_n);
+        });
+        println!("fused t={t}: single-lane {:.1} tok/s", gen_n as f64 / r.mean);
+        kernel_rows.push(suite_row(
+            "kernel",
+            &format!("fused_t{t}_lane1"),
+            &r,
+            vec![
+                ("threads", Json::Int(t as i64)),
+                ("lanes", Json::Int(1)),
+                ("cold", Json::Bool(false)),
+                ("tok_per_s", Json::Num(gen_n as f64 / r.mean)),
+                ("ms_per_tok", Json::Num(r.mean * 1e3 / gen_n as f64)),
+            ],
+        ));
+        let r = bq.run(
+            &format!("fused t={t}: kv gen ({gen_n} tok, {lanes_n}-lane slate)"),
+            || {
+                gen_slate(&backend, &prompt, gen_n, lanes_n);
+            },
+        );
+        let total = (gen_n * lanes_n) as f64;
+        println!(
+            "fused t={t}: slate-{lanes_n} {:.1} tok/s aggregate",
+            total / r.mean
+        );
+        kernel_rows.push(suite_row(
+            "kernel",
+            &format!("fused_t{t}_slate{lanes_n}"),
+            &r,
+            vec![
+                ("threads", Json::Int(t as i64)),
+                ("lanes", Json::Int(lanes_n as i64)),
+                ("cold", Json::Bool(false)),
+                ("tok_per_s", Json::Num(total / r.mean)),
+                ("ms_per_tok", Json::Num(r.mean * 1e3 / total)),
+            ],
+        ));
+    }
+    println!("\n== kernel scaling: cached (cold incl. first-touch decode) ==");
+    for &t in &[1usize, 2, 4, 8] {
+        let r = bq.run(
+            &format!("cached t={t}: cold build + kv gen ({gen_n} tok, 1 lane)"),
+            || {
+                let backend = build_backend(&path, BackendKind::Cached, t);
+                gen_kv(&backend, &prompt, gen_n);
+            },
+        );
+        println!(
+            "cached t={t}: cold single-lane {:.1} tok/s",
+            gen_n as f64 / r.mean
+        );
+        kernel_rows.push(suite_row(
+            "kernel",
+            &format!("cached_t{t}_lane1_cold"),
+            &r,
+            vec![
+                ("threads", Json::Int(t as i64)),
+                ("lanes", Json::Int(1)),
+                ("cold", Json::Bool(true)),
+                ("tok_per_s", Json::Num(gen_n as f64 / r.mean)),
+                ("ms_per_tok", Json::Num(r.mean * 1e3 / gen_n as f64)),
+            ],
+        ));
+        let r = bq.run(
+            &format!("cached t={t}: cold build + kv gen ({gen_n} tok, {lanes_n}-lane slate)"),
+            || {
+                let backend = build_backend(&path, BackendKind::Cached, t);
+                gen_slate(&backend, &prompt, gen_n, lanes_n);
+            },
+        );
+        let total = (gen_n * lanes_n) as f64;
+        println!(
+            "cached t={t}: cold slate-{lanes_n} {:.1} tok/s aggregate",
+            total / r.mean
+        );
+        kernel_rows.push(suite_row(
+            "kernel",
+            &format!("cached_t{t}_slate{lanes_n}_cold"),
+            &r,
+            vec![
+                ("threads", Json::Int(t as i64)),
+                ("lanes", Json::Int(lanes_n as i64)),
+                ("cold", Json::Bool(true)),
+                ("tok_per_s", Json::Num(total / r.mean)),
+                ("ms_per_tok", Json::Num(r.mean * 1e3 / total)),
+            ],
+        ));
+    }
+    let kernel_out = std::env::var("LLVQ_BENCH_KERNEL_OUT")
+        .unwrap_or_else(|_| "BENCH_kernel.json".into());
+    match std::fs::write(&kernel_out, Json::Arr(kernel_rows).to_string_pretty()) {
+        Ok(()) => println!("\nwrote {kernel_out}"),
+        Err(e) => eprintln!("\n[warn] could not write {kernel_out}: {e}"),
     }
 
     // ---- dense engine + coordinator (the historical serving numbers) ----

@@ -86,6 +86,12 @@ pub trait BatchForward: Send + Sync {
     fn resident_weight_bytes(&self) -> usize {
         0
     }
+
+    /// Kernel worker threads the engine's backend runs with (for `STATS`;
+    /// 1 when the engine has no parallel kernel).
+    fn threads(&self) -> usize {
+        1
+    }
 }
 
 /// Rust-native engine over an [`ExecutionBackend`] — dense (the oracle),
@@ -147,6 +153,10 @@ impl BatchForward for BackendEngine {
 
     fn resident_weight_bytes(&self) -> usize {
         self.backend.resident_weight_bytes()
+    }
+
+    fn threads(&self) -> usize {
+        self.backend.threads()
     }
 }
 
@@ -315,7 +325,12 @@ impl Coordinator {
     }
 
     fn send(&self, msg: Msg) -> Result<(), String> {
-        let guard = self.tx.lock().unwrap();
+        // a client thread that panics while holding this lock (anywhere up
+        // its stack) poisons it; the sender inside is still perfectly
+        // consistent — Option<Sender> has no invariants a panic can tear —
+        // so recover the guard instead of turning every later request into
+        // a panic
+        let guard = self.tx.lock().unwrap_or_else(|e| e.into_inner());
         let tx = guard.as_ref().ok_or("coordinator stopped")?;
         tx.send(msg).map_err(|_| "worker gone".to_string())
     }
@@ -420,8 +435,15 @@ impl Coordinator {
     /// exits and is joined — deterministic, no sleeps.
     pub fn stop(&self) {
         self.stopping.store(true, Ordering::SeqCst);
-        self.tx.lock().unwrap().take(); // close the channel
-        if let Some(h) = self.worker.lock().unwrap().take() {
+        // recover from poison (see send()): stop must always close the
+        // channel and join, even after some client thread panicked
+        self.tx.lock().unwrap_or_else(|e| e.into_inner()).take(); // close the channel
+        if let Some(h) = self
+            .worker
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take()
+        {
             let _ = h.join();
         }
     }
@@ -798,6 +820,11 @@ impl Default for ServeOptions {
 
 /// Serve the line protocol with default [`ServeOptions`].
 ///
+/// Forward work runs on the engine's backend, whose fused/cached kernels
+/// row-shard over a persistent worker pool sized by `llvq serve
+/// --threads` (default: `threadpool::default_threads()`); `STATS` reports
+/// the live thread count as `threads=`.
+///
 /// # Protocol reference
 ///
 /// One command per line; every reply line starts with `OK`, `ERR`, or
@@ -808,7 +835,7 @@ impl Default for ServeOptions {
 /// | command            | reply                                              |
 /// |--------------------|----------------------------------------------------|
 /// | `NEXT t1,t2,…`     | `OK next=<argmax> logit=<v>` — full-prefix forward |
-/// | `STATS`            | `OK requests=… mean_batch=… mean_latency_ms=… sessions=… gen_tokens=… mean_lanes=… backend=… resident_bytes=…` |
+/// | `STATS`            | `OK requests=… mean_batch=… mean_latency_ms=… sessions=… gen_tokens=… mean_lanes=… threads=… backend=… resident_bytes=…` |
 /// | `QUIT`             | closes the connection                              |
 ///
 /// **v2 — generation sessions (one session per connection):**
@@ -837,7 +864,7 @@ impl Default for ServeOptions {
 /// < TOK 44
 /// < OK generated=3 len=7
 /// > STATS
-/// < OK requests=0 mean_batch=0.00 mean_latency_ms=0.000 sessions=1 gen_tokens=3 mean_lanes=1.00 backend=fused resident_bytes=48768
+/// < OK requests=0 mean_batch=0.00 mean_latency_ms=0.000 sessions=1 gen_tokens=3 mean_lanes=1.00 threads=4 backend=fused resident_bytes=48768
 /// > CLOSE
 /// < OK closed len=7
 /// > QUIT
@@ -934,13 +961,14 @@ fn serve_lines(
                 out,
                 "OK requests={} mean_batch={:.2} mean_latency_ms={:.3} \
                  sessions={} gen_tokens={} mean_lanes={:.2} \
-                 backend={} resident_bytes={}",
+                 threads={} backend={} resident_bytes={}",
                 coord.metrics.requests.load(Ordering::Relaxed),
                 coord.metrics.mean_batch(),
                 coord.metrics.mean_latency_ms(),
                 coord.metrics.open_sessions.load(Ordering::Relaxed),
                 coord.metrics.gen_tokens.load(Ordering::Relaxed),
                 coord.metrics.mean_lanes(),
+                coord.engine().threads(),
                 coord.engine().backend_name(),
                 coord.engine().resident_weight_bytes(),
             )?;
@@ -1086,22 +1114,46 @@ mod tests {
             }
         }
         // silence the expected panic backtraces for readable test output
-        let prev = std::panic::take_hook();
-        std::panic::set_hook(Box::new(|_| {}));
-        let coord = Coordinator::start(Arc::new(PanickyEngine), BatcherConfig::default());
-        let err = coord.submit(vec![1, 2, 3]).unwrap_err();
-        assert!(err.contains("panicked"), "{err}");
-        // worker survived: it answers again rather than blocking forever
-        let err2 = coord.submit(vec![4, 5]).unwrap_err();
-        assert!(err2.contains("panicked"), "{err2}");
-        // session path: FEED panics destroy the session but answer ERR
+        crate::util::proptest::with_silenced_panics(|| {
+            let coord = Coordinator::start(Arc::new(PanickyEngine), BatcherConfig::default());
+            let err = coord.submit(vec![1, 2, 3]).unwrap_err();
+            assert!(err.contains("panicked"), "{err}");
+            // worker survived: it answers again rather than blocking forever
+            let err2 = coord.submit(vec![4, 5]).unwrap_err();
+            assert!(err2.contains("panicked"), "{err2}");
+            // session path: FEED panics destroy the session but answer ERR
+            let sid = coord.open_session().unwrap();
+            let ferr = coord.feed(sid, vec![1, 2]).unwrap_err();
+            assert!(ferr.contains("panicked"), "{ferr}");
+            let ferr2 = coord.feed(sid, vec![1]).unwrap_err();
+            assert!(ferr2.contains("unknown session"), "{ferr2}");
+            coord.stop();
+        });
+    }
+
+    #[test]
+    fn poisoned_send_lock_recovers_instead_of_panicking() {
+        // regression: a client thread panicking while holding the tx lock
+        // used to poison it, turning every later submit()/stop() into a
+        // panic despite the engine-side catch_unwind hardening
+        let coord = Coordinator::start(tiny_engine(), BatcherConfig::default());
+        let c2 = coord.clone();
+        crate::util::proptest::with_silenced_panics(|| {
+            let poisoner = std::thread::spawn(move || {
+                let _guard = c2.tx.lock().unwrap();
+                panic!("simulated client panic while holding the send lock");
+            });
+            assert!(poisoner.join().is_err(), "poisoner must panic");
+        });
+        assert!(coord.tx.lock().is_err(), "lock must actually be poisoned");
+        // the coordinator still serves…
+        assert_eq!(coord.submit(vec![1, 2, 3]).unwrap().len(), 64);
         let sid = coord.open_session().unwrap();
-        let ferr = coord.feed(sid, vec![1, 2]).unwrap_err();
-        assert!(ferr.contains("panicked"), "{ferr}");
-        let ferr2 = coord.feed(sid, vec![1]).unwrap_err();
-        assert!(ferr2.contains("unknown session"), "{ferr2}");
+        assert_eq!(coord.feed(sid, vec![4, 5]).unwrap(), 2);
+        coord.close_session(sid).unwrap();
+        // …and still stops cleanly
         coord.stop();
-        std::panic::set_hook(prev);
+        assert!(coord.submit(vec![1]).is_err(), "stopped coordinator rejects");
     }
 
     #[test]

@@ -30,6 +30,10 @@
 //!                             spec  — per-block codec + self-describing
 //!                             quantizer header (all five quantizers)
 //! util::bits                  MSB-first BitWriter/BitReader substrate
+//! util::threadpool            scoped one-shots (parallel_map/chunks) for
+//!                             cold paths + the persistent Pool (long-lived
+//!                             workers, per-executor Scratch, ShardedSlice)
+//!                             the serving kernels row-shard over
 //! pipeline::gptq              emits per-row bit-packed code streams while
 //!                             quantizing (one scratch Code per row worker)
 //! pipeline::driver            quantize_model_packed → PtqArtifacts
@@ -48,7 +52,10 @@
 //!                             cached (lazy per-layer decode on first
 //!                             touch), fused (matvec straight over the
 //!                             bit-packed code streams; the dense matrix
-//!                             never exists in memory)
+//!                             never exists in memory); the fused matmul
+//!                             and cached first-touch decode row-shard
+//!                             over the backend's persistent worker pool
+//!                             (--threads), bit-identically to threads=1
 //! model::transformer          forward() is generic over ForwardOps, so
 //!                             Weights and every ExecutionBackend share
 //!                             one forward pass (and one eval path);

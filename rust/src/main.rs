@@ -14,10 +14,13 @@
 //!   `--packed <file>` serves a packed artifact, `--backend
 //!   dense|cached|fused` picks how its layers execute (dequantized at
 //!   load / lazily decoded on first touch / matvec over the bit-packed
-//!   code streams — no dense materialization at all), `--max-sessions` /
-//!   `--max-conns` bound the session and connection pools.
+//!   code streams — no dense materialization at all), `--threads` sizes
+//!   the persistent kernel pool the fused matmul and cached first-touch
+//!   decode row-shard over, `--max-sessions` / `--max-conns` bound the
+//!   session and connection pools.
 //! * `generate` — KV-cached local generation from a prompt (greedy /
-//!   temperature / top-k, seeded), over any backend.
+//!   temperature / top-k, seeded), over any backend (`--threads` as in
+//!   `serve`).
 //! * `gen-model` — write a random-weight model (testing without python).
 //! * `info` — lattice summary (shell sizes, codebook bits, table VMEM).
 
@@ -393,10 +396,7 @@ fn cmd_unpack(rest: Vec<String>) -> i32 {
             return 1;
         }
     };
-    let threads = match a.get_usize("threads") {
-        0 => threadpool::default_threads(),
-        n => n,
-    };
+    let threads = threads_from(&a);
     let t0 = std::time::Instant::now();
     let w = match packed.unpack(threads) {
         Ok(w) => w,
@@ -455,6 +455,7 @@ fn cmd_unpack(rest: Vec<String>) -> i32 {
 fn cmd_stats(rest: Vec<String>) -> i32 {
     let a = Args::new("llvq stats — header-only stats of a packed .llvqm artifact")
         .flag("path", "", "input .llvqm file")
+        .flag("threads", "0", "kernel worker threads serve/generate would use (0 = auto)")
         .parse(rest.into_iter())
         .unwrap();
     let path = a.get("path").unwrap();
@@ -482,6 +483,10 @@ fn cmd_stats(rest: Vec<String>) -> i32 {
                 meta.layers.len(),
                 meta.code_bytes(),
                 meta.file_len - meta.dense_off
+            );
+            println!(
+                "  threads   : {} (kernel pool serve/generate would run here)",
+                threads_from(&a)
             );
             0
         }
@@ -552,7 +557,16 @@ fn packed_backend(
             Ok(ExecutionBackend::dense(w))
         }
         BackendKind::Cached => ExecutionBackend::packed_cached(PackedFile::open(path)?, threads),
-        BackendKind::Fused => ExecutionBackend::packed_fused(PackedFile::open(path)?),
+        BackendKind::Fused => ExecutionBackend::packed_fused(PackedFile::open(path)?, threads),
+    }
+}
+
+/// Resolve a `--threads` flag value (0 = auto-detect; a non-numeric value
+/// is a usage error, not a silent fallback).
+fn threads_from(a: &Args) -> usize {
+    match a.get_usize("threads") {
+        0 => threadpool::default_threads(),
+        n => n,
     }
 }
 
@@ -585,7 +599,8 @@ fn serving_backend(a: &Args) -> Result<ExecutionBackend, i32> {
             }
         };
         let t0 = std::time::Instant::now();
-        let backend = match packed_backend(&path, kind, threadpool::default_threads()) {
+        let threads = threads_from(a);
+        let backend = match packed_backend(&path, kind, threads) {
             Ok(b) => b,
             Err(e) => {
                 eprintln!("{e}");
@@ -593,8 +608,10 @@ fn serving_backend(a: &Args) -> Result<ExecutionBackend, i32> {
             }
         };
         println!(
-            "loaded packed model ({} backend, {} B resident weights) in {:.0} ms: {}",
+            "loaded packed model ({} backend, {} kernel threads, {} B resident weights) \
+             in {:.0} ms: {}",
             backend.kind().label(),
+            threads,
             backend.resident_weight_bytes(),
             t0.elapsed().as_secs_f64() * 1e3,
             packed_stats_line(meta.file_len, meta.code_bits(), &meta.cfg)
@@ -639,6 +656,7 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
         )
         .flag("model", "llama2-tiny", "zoo name (artifacts/<name>.llvqw)")
         .flag("addr", "127.0.0.1:7199", "listen address")
+        .flag("threads", "0", "kernel worker threads for the packed backends (0 = auto)")
         .flag("max-batch", "8", "dynamic batch limit / decode-slate width")
         .flag("max-wait-ms", "2", "batch window")
         .flag("max-sessions", "64", "concurrently open generation sessions")
@@ -694,6 +712,7 @@ fn cmd_generate(rest: Vec<String>) -> i32 {
             "execution over --packed: dense | cached | fused",
         )
         .flag("model", "llama2-tiny", "zoo name (artifacts/<name>.llvqw)")
+        .flag("threads", "0", "kernel worker threads for the packed backends (0 = auto)")
         .flag("prompt", "1,2,3", "comma-separated prompt token ids")
         .flag("n", "16", "tokens to generate")
         .flag("temp", "0", "sampling temperature (0 = greedy)")

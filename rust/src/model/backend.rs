@@ -13,9 +13,10 @@
 //! * **cached** ([`CachedLayerOp`]) — holds only the `.llvqm` header until
 //!   a layer is first touched, then reads that layer's code stream from
 //!   its recorded byte offset ([`PackedFile::read_layer`]) and decodes it
-//!   once ([`unpack_layer`], bit-exact vs the PTQ driver). Load time and
-//!   peak RSS track what is actually touched, and a fully-warm cache
-//!   reproduces dense logits bit-for-bit.
+//!   once ([`unpack_layer_pool`], row-sharded over the backend's persistent
+//!   worker pool, bit-exact vs the PTQ driver). Load time and peak RSS
+//!   track what is actually touched, and a fully-warm cache reproduces
+//!   dense logits bit-for-bit.
 //! * **fused** ([`FusedLayerOp`]) — matvec *directly over the bit-packed
 //!   code stream*: each row's codes are decoded block-by-block into a
 //!   24-float scratch and accumulated against the (rotated, scale-folded)
@@ -24,7 +25,10 @@
 //!   fine-tuning was enabled). Its `matmul_into` decodes each row **once
 //!   per call** and dots it against every activation lane — the decode
 //!   cost of a batched decode step (or a long prefill) is amortized across
-//!   the whole slate, bit-identically to per-lane matvecs.
+//!   the whole slate, bit-identically to per-lane matvecs — and the row
+//!   loop is **sharded across a persistent worker pool** (the backend's
+//!   `--threads` knob): rows accumulate independently, so any thread count
+//!   is bit-identical to the sequential kernel by construction.
 //!
 //! ### Numerical contract
 //!
@@ -39,11 +43,12 @@
 use std::sync::{Arc, OnceLock};
 
 use crate::model::config::ModelConfig;
-use crate::model::packed::{unpack_layer, PackedFile, PackedLayer};
+use crate::model::packed::{unpack_layer_pool, PackedFile, PackedLayer};
 use crate::model::transformer::{linear, ForwardOps, LinearKind, Weights, LINEAR_KINDS};
 use crate::pipeline::rotation::LayerRotation;
 use crate::quant::{Code, PackedCodes, VectorQuantizer};
 use crate::util::bits::BitReader;
+use crate::util::threadpool::{Pool, ShardedSlice};
 
 /// One linear layer as an *operation* — the unit the serving stack
 /// composes, independent of how (or whether) the weight matrix exists in
@@ -124,7 +129,9 @@ pub struct CachedLayerOp {
     idx: usize,
     rows: usize,
     cols: usize,
-    threads: usize,
+    /// Backend-wide persistent worker pool: first-touch decode row-shards
+    /// over it instead of spawning scoped threads per layer.
+    pool: Arc<Pool>,
     label: String,
     dense: OnceLock<Vec<f32>>,
 }
@@ -136,7 +143,7 @@ impl CachedLayerOp {
                 .file
                 .read_layer(self.idx)
                 .unwrap_or_else(|e| panic!("lazy layer read ({}): {e}", self.label));
-            unpack_layer(self.q.as_ref(), &pl, self.threads)
+            unpack_layer_pool(self.q.as_ref(), &pl, &self.pool)
                 .unwrap_or_else(|e| panic!("lazy layer decode ({}): {e}", self.label))
         })
     }
@@ -169,16 +176,36 @@ impl LinearOp for CachedLayerOp {
     }
 }
 
+/// Call-level fused-matmul scratch (prepared once per `matmul_into`, on
+/// the calling thread, before the row shards fan out).
+#[derive(Default)]
+struct FusedCall {
+    /// `n × cols` rotated, β-scaled activation lanes (read-only for shards).
+    xr: Vec<f64>,
+    /// `rows × n` row-major accumulators (each shard writes its own rows).
+    acc: Vec<f64>,
+    /// `rows`-length per-lane gather buffer for the output unrotation.
+    ao: Vec<f64>,
+}
+
+/// Per-worker fused-matmul scratch (block decode buffer, code words,
+/// per-lane dots) — owned by the pool, one slot per executor, warm across
+/// calls and layers (the quantizer is fixed per model).
+#[derive(Default)]
+struct FusedWorker {
+    code: Code,
+    block: Vec<f32>,
+    lane_accs: Vec<f64>,
+}
+
 thread_local! {
-    /// Reusable fused-matmul scratch (rotated activations, per-lane output
-    /// accumulators, per-row lane dots, block decode buffer, code words) —
-    /// per thread, so ops stay `Sync` for the thread-pooled eval path
-    /// while the serving hot loop is allocation-free after warm-up (the
-    /// same hoisting discipline as the gptq encode loop and
-    /// `unpack_layer`).
-    #[allow(clippy::type_complexity)]
-    static FUSED_SCRATCH: std::cell::RefCell<(Vec<f64>, Vec<f64>, Vec<f64>, Vec<f32>, Code)> =
-        std::cell::RefCell::new((Vec::new(), Vec::new(), Vec::new(), Vec::new(), Code::empty()));
+    /// [`FusedCall`] per *calling* thread (not pool-owned): concurrent
+    /// forward passes over one backend (the eval path fans sequences
+    /// across threads) prepare their activations in parallel, and the
+    /// serving hot loop stays allocation-free after warm-up — the same
+    /// hoisting discipline as the gptq encode loop and `unpack_layer`.
+    static FUSED_CALL: std::cell::RefCell<FusedCall> =
+        std::cell::RefCell::new(FusedCall::default());
 }
 
 /// Fused dequant-matvec over the bit-packed code stream. The layer's dense
@@ -196,13 +223,21 @@ pub struct FusedLayerOp {
     col_scales: Option<Vec<f64>>,
     codes: PackedCodes,
     rot: LayerRotation,
+    /// Backend-wide persistent worker pool the matmul row-shards over.
+    pool: Arc<Pool>,
     label: String,
 }
 
 impl FusedLayerOp {
     /// Build from a loaded packed layer (codes stay packed; this is the
-    /// only copy the op keeps).
-    pub fn new(q: Arc<dyn VectorQuantizer>, pl: PackedLayer, label: impl Into<String>) -> Self {
+    /// only copy the op keeps). `pool` is the backend's shared worker
+    /// pool; `Pool::new(1)` gives the sequential kernel.
+    pub fn new(
+        q: Arc<dyn VectorQuantizer>,
+        pl: PackedLayer,
+        label: impl Into<String>,
+        pool: Arc<Pool>,
+    ) -> Self {
         let widths = q.code_widths();
         let rot = LayerRotation::new(pl.rot_mode, pl.cols, pl.rows, pl.rot_seed);
         Self {
@@ -214,6 +249,7 @@ impl FusedLayerOp {
             col_scales: pl.col_scales,
             codes: pl.codes,
             rot,
+            pool,
             label: label.into(),
         }
     }
@@ -230,10 +266,13 @@ impl LinearOp for FusedLayerOp {
 
     /// The slate kernel: every weight row's code stream is decoded ONCE
     /// per call and dotted against all `n` lanes — this is what amortizes
-    /// dequantization across batch lanes / prefill positions. Per lane,
-    /// the float-op sequence (rotate, β, block-major f64 accumulation, σ,
-    /// R_outᵀ) is identical to a single-lane `matvec`, so batching never
-    /// changes a logit bit.
+    /// dequantization across batch lanes / prefill positions — and the
+    /// row loop is sharded across the backend's persistent worker pool
+    /// (rows are independent: each shard reads its own byte ranges and
+    /// writes its own accumulator rows). Per lane and per row, the
+    /// float-op sequence (rotate, β, block-major f64 accumulation, σ,
+    /// R_outᵀ) is identical to the single-threaded single-lane `matvec`,
+    /// so neither batching nor the thread count ever changes a logit bit.
     fn matmul_into(&self, xs: &[f32], ys: &mut [f32], n: usize) {
         debug_assert_eq!(xs.len(), n * self.cols);
         debug_assert_eq!(ys.len(), n * self.rows);
@@ -241,9 +280,10 @@ impl LinearOp for FusedLayerOp {
             return;
         }
         let d = self.q.dim();
-        FUSED_SCRATCH.with(|cell| {
-            let mut tls = cell.borrow_mut();
-            let (xr, acc_out, lane_accs, scratch, code) = &mut *tls;
+        let rb = self.codes.row_bytes;
+        FUSED_CALL.with(|cell| {
+            let mut call = cell.borrow_mut();
+            let FusedCall { xr, acc, ao } = &mut *call;
             // per lane: x' = diag(β) · R_in · x  (σ is scalar; folded in
             // per row)
             xr.clear();
@@ -262,32 +302,46 @@ impl LinearOp for FusedLayerOp {
                     }
                 }
             }
-            let rb = self.codes.row_bytes;
-            scratch.resize(d, 0f32);
-            lane_accs.clear();
-            lane_accs.resize(n, 0f64);
-            acc_out.clear();
-            acc_out.resize(n * self.rows, 0f64);
-            for r in 0..self.rows {
-                let mut br = BitReader::new(&self.codes.data[r * rb..(r + 1) * rb]);
-                self.q.decode_row_dot_multi(
-                    &self.widths,
-                    &mut br,
-                    code,
-                    scratch,
-                    xr,
-                    self.cols,
-                    lane_accs,
-                );
-                for (lane, &acc) in lane_accs.iter().enumerate() {
-                    acc_out[lane * self.rows + r] = acc * self.sigma;
-                }
-            }
-            // per lane: y = R_outᵀ · acc
-            for (ao, y) in acc_out
-                .chunks_exact_mut(self.rows)
-                .zip(ys.chunks_exact_mut(self.rows))
+            acc.clear();
+            acc.resize(self.rows * n, 0f64);
             {
+                let lanes: &[f64] = xr;
+                let shard = ShardedSlice::new(&mut acc[..]);
+                self.pool.run_partitioned(self.rows, |range, scratch| {
+                    let w = scratch.get_or(FusedWorker::default);
+                    w.block.clear();
+                    w.block.resize(d, 0f32);
+                    w.lane_accs.clear();
+                    w.lane_accs.resize(n, 0f64);
+                    for r in range {
+                        let mut br =
+                            BitReader::new(&self.codes.data[r * rb..(r + 1) * rb]);
+                        self.q.decode_row_dot_multi(
+                            &self.widths,
+                            &mut br,
+                            &mut w.code,
+                            &mut w.block,
+                            lanes,
+                            self.cols,
+                            &mut w.lane_accs,
+                        );
+                        // safety: row ranges are disjoint across shards
+                        let out = unsafe { shard.range_mut(r * n..(r + 1) * n) };
+                        for (o, &a) in out.iter_mut().zip(w.lane_accs.iter()) {
+                            *o = a * self.sigma;
+                        }
+                    }
+                });
+            }
+            // per lane: y = R_outᵀ · acc  (gather the lane's column out of
+            // the row-major accumulators — same values, same unrotation
+            // input, as the historical lane-major layout)
+            ao.clear();
+            ao.resize(self.rows, 0f64);
+            for (lane, y) in ys.chunks_exact_mut(self.rows).enumerate() {
+                for (r, a) in ao.iter_mut().enumerate() {
+                    *a = acc[r * n + lane];
+                }
                 self.rot.unrotate_output(ao);
                 for (yo, &v) in y.iter_mut().zip(ao.iter()) {
                     *yo = v as f32;
@@ -351,6 +405,9 @@ fn kind_index(kind: LinearKind) -> usize {
 pub struct ExecutionBackend {
     cfg: ModelConfig,
     kind: BackendKind,
+    /// Kernel worker threads (executors of the shared [`Pool`]); 1 = the
+    /// sequential kernels.
+    threads: usize,
     tok_emb: Vec<f32>,
     pos_emb: Vec<f32>,
     norms1: Vec<Vec<f32>>,
@@ -391,6 +448,7 @@ impl ExecutionBackend {
         Self {
             cfg,
             kind: BackendKind::Dense,
+            threads: 1,
             tok_emb: w.tok_emb,
             pos_emb: w.pos_emb,
             norms1,
@@ -403,16 +461,19 @@ impl ExecutionBackend {
 
     /// Lazy per-layer decode: only the header and the dense fp32 tail are
     /// read at construction; each linear layer is fetched from its byte
-    /// offset and dequantized on first touch.
+    /// offset and dequantized on first touch, row-sharded over `threads`
+    /// persistent pool workers.
     pub fn packed_cached(file: PackedFile, threads: usize) -> Result<Self, String> {
         Self::from_packed(file, threads, BackendKind::Cached)
     }
 
     /// Fused dequant-matvec: reads every layer's *code stream* (not its
     /// dense expansion) at construction; matvecs run directly over the
-    /// packed bits forever after.
-    pub fn packed_fused(file: PackedFile) -> Result<Self, String> {
-        Self::from_packed(file, 1, BackendKind::Fused)
+    /// packed bits forever after, row-sharded over `threads` persistent
+    /// pool workers (`threads = 1` is the sequential kernel; any thread
+    /// count is bit-identical to it).
+    pub fn packed_fused(file: PackedFile, threads: usize) -> Result<Self, String> {
+        Self::from_packed(file, threads, BackendKind::Fused)
     }
 
     fn from_packed(file: PackedFile, threads: usize, kind: BackendKind) -> Result<Self, String> {
@@ -450,6 +511,10 @@ impl ExecutionBackend {
             .map(|_| (0..slots).map(|_| None).collect())
             .collect();
         let file = Arc::new(file);
+        // one persistent pool per backend, shared by every op: workers are
+        // spawned once at load, not per matmul / per first-touch decode
+        let threads = threads.max(1);
+        let pool = Arc::new(Pool::new(threads));
         for (idx, lm) in file.meta.layers.iter().enumerate() {
             let (li, ki) = (lm.layer, kind_index(lm.kind));
             let label = lm.label();
@@ -460,13 +525,13 @@ impl ExecutionBackend {
                     idx,
                     rows: lm.rows,
                     cols: lm.cols,
-                    threads,
+                    pool: pool.clone(),
                     label,
                     dense: OnceLock::new(),
                 }),
                 BackendKind::Fused => {
                     let pl = file.read_layer(idx)?;
-                    Box::new(FusedLayerOp::new(q.clone(), pl, label))
+                    Box::new(FusedLayerOp::new(q.clone(), pl, label, pool.clone()))
                 }
                 BackendKind::Dense => unreachable!("dense backends wrap Weights"),
             };
@@ -480,6 +545,7 @@ impl ExecutionBackend {
         Ok(Self {
             cfg,
             kind,
+            threads,
             tok_emb: tail.tok_emb,
             pos_emb: tail.pos_emb,
             norms1: tail.norms1,
@@ -492,6 +558,11 @@ impl ExecutionBackend {
 
     pub fn kind(&self) -> BackendKind {
         self.kind
+    }
+
+    /// Kernel worker threads this backend's pool runs with.
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     pub fn cfg(&self) -> &ModelConfig {
@@ -566,8 +637,9 @@ mod tests {
     use crate::model::transformer::{forward, ActivationCapture};
     use crate::pipeline::driver::{quantize_model_packed, PtqOptions};
     use crate::quant::scalar::UniformQuantizer;
+    use crate::util::proptest::TempArtifact;
 
-    fn artifact_on_disk() -> (crate::pipeline::driver::PtqArtifacts, std::path::PathBuf) {
+    fn artifact_on_disk() -> (crate::pipeline::driver::PtqArtifacts, TempArtifact) {
         let cfg = config_by_name("qwen3-4b-tiny").unwrap();
         let w = Weights::random(&cfg, 33);
         let q = UniformQuantizer::new_gaussian_optimal(4);
@@ -577,13 +649,9 @@ mod tests {
             ..Default::default()
         };
         let art = quantize_model_packed(&w, &q, &opts);
-        let path = std::env::temp_dir().join(format!(
-            "llvq-backend-test-{}-{}.llvqm",
-            std::process::id(),
-            std::thread::current().name().unwrap_or("t").replace("::", "-"),
-        ));
-        art.packed.save(&path).unwrap();
-        (art, path)
+        let tmp = TempArtifact::new("backend-test", "llvqm");
+        art.packed.save(tmp.path()).unwrap();
+        (art, tmp)
     }
 
     #[test]
@@ -605,9 +673,10 @@ mod tests {
 
     #[test]
     fn cached_backend_is_lazy_then_bit_exact() {
-        let (art, path) = artifact_on_disk();
+        let (art, tmp) = artifact_on_disk();
         let backend =
-            ExecutionBackend::packed_cached(PackedFile::open(&path).unwrap(), 2).unwrap();
+            ExecutionBackend::packed_cached(PackedFile::open(tmp.path()).unwrap(), 2).unwrap();
+        assert_eq!(backend.threads(), 2);
         // cold: nothing decoded yet
         assert_eq!(backend.resident_weight_bytes(), 0);
         let toks: Vec<u8> = (0..16).map(|i| (i * 3 % 64) as u8).collect();
@@ -620,13 +689,13 @@ mod tests {
             backend.resident_weight_bytes(),
             art.packed.linear_params() * 4
         );
-        std::fs::remove_file(&path).ok();
     }
 
     #[test]
     fn fused_backend_close_and_code_resident() {
-        let (art, path) = artifact_on_disk();
-        let backend = ExecutionBackend::packed_fused(PackedFile::open(&path).unwrap()).unwrap();
+        let (art, tmp) = artifact_on_disk();
+        let backend =
+            ExecutionBackend::packed_fused(PackedFile::open(tmp.path()).unwrap(), 1).unwrap();
         // resident = packed code bytes + f64 scales, never the dense f32
         let scale_bytes: usize = art
             .packed
@@ -652,15 +721,15 @@ mod tests {
                 (a - b).abs()
             );
         }
-        std::fs::remove_file(&path).ok();
     }
 
     #[test]
     fn fused_matmul_into_is_bitwise_per_lane() {
         // the slate amortization must not change a single output bit vs
         // looping matvec lane by lane
-        let (art, path) = artifact_on_disk();
-        let backend = ExecutionBackend::packed_fused(PackedFile::open(&path).unwrap()).unwrap();
+        let (art, tmp) = artifact_on_disk();
+        let backend =
+            ExecutionBackend::packed_fused(PackedFile::open(tmp.path()).unwrap(), 2).unwrap();
         let cfg = backend.cfg().clone();
         let op = backend.op(0, LinearKind::W1);
         let (d_out, d_in) = op.shape();
@@ -679,39 +748,60 @@ mod tests {
             );
         }
         drop(art);
-        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn fused_matmul_into_is_thread_count_invariant() {
+        // the row-sharded pool kernel must reproduce the sequential kernel
+        // bit for bit at every thread count, single lane and slate
+        let (_art, tmp) = artifact_on_disk();
+        let base =
+            ExecutionBackend::packed_fused(PackedFile::open(tmp.path()).unwrap(), 1).unwrap();
+        let (d_out, d_in) = base.op(0, LinearKind::W1).shape();
+        for n in [1usize, 8] {
+            let xs: Vec<f32> = (0..n * d_in)
+                .map(|i| ((i * 29 % 97) as f32) * 0.03 - 1.4)
+                .collect();
+            let mut want = vec![0f32; n * d_out];
+            base.op(0, LinearKind::W1).matmul_into(&xs, &mut want, n);
+            for threads in [2usize, 4, 8] {
+                let par = ExecutionBackend::packed_fused(
+                    PackedFile::open(tmp.path()).unwrap(),
+                    threads,
+                )
+                .unwrap();
+                assert_eq!(par.threads(), threads);
+                let mut got = vec![0f32; n * d_out];
+                par.op(0, LinearKind::W1).matmul_into(&xs, &mut got, n);
+                assert!(
+                    want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "threads={threads} n={n} diverged from the sequential kernel"
+                );
+            }
+        }
     }
 
     #[test]
     fn packed_backends_reject_malformed_layouts() {
-        let (art, path) = artifact_on_disk();
+        let (art, _tmp) = artifact_on_disk();
         // drop one layer from the header → layout check must fail
         let mut packed = art.packed.clone();
         packed.layers.pop();
-        let bad = std::env::temp_dir().join(format!(
-            "llvq-backend-bad-{}.llvqm",
-            std::process::id()
-        ));
-        packed.save(&bad).unwrap();
+        let bad = TempArtifact::new("backend-bad", "llvqm");
+        packed.save(bad.path()).unwrap();
         // file_len bookkeeping: removing a layer changes section sizes, so
         // parse may fail at meta or at layout — either way it must Err
-        let r = PackedFile::open(&bad)
+        let r = PackedFile::open(bad.path())
             .and_then(|f| ExecutionBackend::packed_cached(f, 1));
         assert!(r.is_err());
-        std::fs::remove_file(&bad).ok();
-        std::fs::remove_file(&path).ok();
         // sanity: the untampered artifact still opens
-        let p2 = std::env::temp_dir().join(format!(
-            "llvq-backend-ok-{}.llvqm",
-            std::process::id()
-        ));
+        let ok = TempArtifact::new("backend-ok", "llvqm");
         PackedModel::from_bytes(&art.packed.to_bytes())
             .unwrap()
-            .save(&p2)
+            .save(ok.path())
             .unwrap();
-        assert!(PackedFile::open(&p2)
-            .and_then(ExecutionBackend::packed_fused)
+        assert!(PackedFile::open(ok.path())
+            .and_then(|f| ExecutionBackend::packed_fused(f, 2))
             .is_ok());
-        std::fs::remove_file(&p2).ok();
     }
 }

@@ -433,7 +433,9 @@ impl PackedFile {
     }
 
     fn read_at(&self, off: usize, buf: &mut [u8]) -> Result<(), String> {
-        let mut f = self.file.lock().unwrap();
+        // recover from poison: a panicking decode elsewhere can't corrupt
+        // a File handle (seek position is re-set on every read)
+        let mut f = self.file.lock().unwrap_or_else(|e| e.into_inner());
         f.seek(SeekFrom::Start(off as u64))
             .map_err(|e| format!("seek {}: {e}", self.path.display()))?;
         f.read_exact(buf)
@@ -709,15 +711,12 @@ impl PackedModel {
     }
 }
 
-/// Dequantize one packed layer to its row-major reconstruction — the same
-/// float-op sequence as the PTQ driver, hence bit-exact agreement with the
-/// weights it kept for evaluation. Row streams decode block-parallel over
-/// the thread pool.
-pub fn unpack_layer(
+/// Validate a packed layer's code geometry against `q`; returns the field
+/// widths and row stride the decode loops need.
+fn check_layer_geometry(
     q: &dyn VectorQuantizer,
     pl: &PackedLayer,
-    threads: usize,
-) -> Result<Vec<f32>, String> {
+) -> Result<(Vec<u32>, usize), String> {
     let d = q.dim();
     let nblocks = pl.cols.div_ceil(d);
     if nblocks != pl.codes.blocks_per_row {
@@ -740,33 +739,40 @@ pub fn unpack_layer(
     {
         return Err("packed payload size mismatch".into());
     }
+    Ok((widths, rb))
+}
 
-    // 1) decode rows in parallel: codes → blocks → ×σ (exactly as gptq)
-    let rows_out: Vec<Vec<f32>> = threadpool::parallel_map(pl.rows, threads, |r| {
-        let mut br = BitReader::new(&pl.codes.data[r * rb..(r + 1) * rb]);
-        let mut code = Code::empty();
-        let mut scratch = vec![0f32; d];
-        let mut out = vec![0f32; pl.cols];
-        product::decode_row_with(q, &widths, &mut br, &mut code, &mut scratch, &mut out);
-        for v in out.iter_mut() {
-            *v = (*v as f64 * pl.sigma) as f32;
-        }
-        out
-    });
-    let mut flat = vec![0f32; pl.rows * pl.cols];
-    for (r, row) in rows_out.iter().enumerate() {
-        flat[r * pl.cols..(r + 1) * pl.cols].copy_from_slice(row);
+/// Decode one row stream into `out` and apply σ — the per-row float-op
+/// sequence shared by every unpack path (scoped threads, worker pool),
+/// which is what keeps them bit-identical to each other and to the PTQ
+/// driver's reconstruction.
+fn decode_row_scaled(
+    q: &dyn VectorQuantizer,
+    widths: &[u32],
+    row_bytes: &[u8],
+    sigma: f64,
+    code: &mut Code,
+    scratch: &mut [f32],
+    out: &mut [f32],
+) {
+    let mut br = BitReader::new(row_bytes);
+    product::decode_row_with(q, widths, &mut br, code, scratch, out);
+    for v in out.iter_mut() {
+        *v = (*v as f64 * sigma) as f32;
     }
+}
 
-    // 2) fine-tuned column scales (if the driver applied them)
+/// Apply the post-decode reconstruction steps (fine-tuned column scales,
+/// inverse incoherence rotation) to a fully-decoded layer.
+fn finish_layer(pl: &PackedLayer, flat: &mut [f32]) -> Result<(), String> {
+    // fine-tuned column scales (if the driver applied them)
     if let Some(beta) = &pl.col_scales {
         if beta.len() != pl.cols {
             return Err("column scale count mismatch".into());
         }
-        finetune::apply_column_scales(&mut flat, pl.cols, beta);
+        finetune::apply_column_scales(flat, pl.cols, beta);
     }
-
-    // 3) undo the incoherence rotation in f64, as the driver did
+    // undo the incoherence rotation in f64, as the driver did
     let rot = LayerRotation::new(pl.rot_mode, pl.cols, pl.rows, pl.rot_seed);
     let mut rec = Matrix::zeros(pl.rows, pl.cols);
     for (dst, &s) in rec.data.iter_mut().zip(flat.iter()) {
@@ -776,6 +782,84 @@ pub fn unpack_layer(
     for (dst, &s) in flat.iter_mut().zip(rec.data.iter()) {
         *dst = s as f32;
     }
+    Ok(())
+}
+
+/// Dequantize one packed layer to its row-major reconstruction — the same
+/// float-op sequence as the PTQ driver, hence bit-exact agreement with the
+/// weights it kept for evaluation. Row streams decode block-parallel over
+/// scoped threads (for the persistent-pool flavour the serving backends
+/// use, see [`unpack_layer_pool`] — the two are bit-identical).
+pub fn unpack_layer(
+    q: &dyn VectorQuantizer,
+    pl: &PackedLayer,
+    threads: usize,
+) -> Result<Vec<f32>, String> {
+    let d = q.dim();
+    let (widths, rb) = check_layer_geometry(q, pl)?;
+    let rows_out: Vec<Vec<f32>> = threadpool::parallel_map(pl.rows, threads, |r| {
+        let mut code = Code::empty();
+        let mut scratch = vec![0f32; d];
+        let mut out = vec![0f32; pl.cols];
+        decode_row_scaled(
+            q,
+            &widths,
+            &pl.codes.data[r * rb..(r + 1) * rb],
+            pl.sigma,
+            &mut code,
+            &mut scratch,
+            &mut out,
+        );
+        out
+    });
+    let mut flat = vec![0f32; pl.rows * pl.cols];
+    for (r, row) in rows_out.iter().enumerate() {
+        flat[r * pl.cols..(r + 1) * pl.cols].copy_from_slice(row);
+    }
+    finish_layer(pl, &mut flat)?;
+    Ok(flat)
+}
+
+/// Per-worker scratch of the pool decode path (persists across layers on
+/// the same pool — the quantizer, and hence `dim`, is fixed per model).
+#[derive(Default)]
+struct RowDecodeScratch {
+    code: Code,
+    block: Vec<f32>,
+}
+
+/// [`unpack_layer`] over a persistent [`threadpool::Pool`]: rows decode
+/// into disjoint shards of the output with no per-call thread spawns —
+/// the first-touch path of the cached execution backend. Bit-identical to
+/// [`unpack_layer`] (same per-row float ops, any thread count).
+pub fn unpack_layer_pool(
+    q: &dyn VectorQuantizer,
+    pl: &PackedLayer,
+    pool: &threadpool::Pool,
+) -> Result<Vec<f32>, String> {
+    let d = q.dim();
+    let (widths, rb) = check_layer_geometry(q, pl)?;
+    let mut flat = vec![0f32; pl.rows * pl.cols];
+    let shard = threadpool::ShardedSlice::new(&mut flat);
+    pool.run_partitioned(pl.rows, |range, scratch| {
+        let s = scratch.get_or(RowDecodeScratch::default);
+        s.block.clear();
+        s.block.resize(d, 0f32);
+        for r in range {
+            // safety: row ranges are disjoint across shards
+            let out = unsafe { shard.range_mut(r * pl.cols..(r + 1) * pl.cols) };
+            decode_row_scaled(
+                q,
+                &widths,
+                &pl.codes.data[r * rb..(r + 1) * rb],
+                pl.sigma,
+                &mut s.code,
+                &mut s.block,
+                out,
+            );
+        }
+    });
+    finish_layer(pl, &mut flat)?;
     Ok(flat)
 }
 
@@ -838,13 +922,11 @@ mod tests {
     #[test]
     fn load_meta_and_packed_file_match_full_load() {
         let (art, cfg) = packed_fixture();
-        let path = std::env::temp_dir().join(format!(
-            "llvq-packedfile-test-{}.llvqm",
-            std::process::id()
-        ));
-        art.packed.save(&path).unwrap();
+        let tmp = crate::util::proptest::TempArtifact::new("packedfile-test", "llvqm");
+        let path = tmp.path();
+        art.packed.save(path).unwrap();
         // header-only meta agrees with the in-memory artifact on every stat
-        let meta = PackedModel::load_meta(&path).unwrap();
+        let meta = PackedModel::load_meta(path).unwrap();
         assert_eq!(meta.cfg, cfg);
         assert_eq!(meta.code_bytes(), art.packed.code_bytes());
         assert_eq!(meta.code_bits(), art.packed.code_bits());
@@ -852,11 +934,11 @@ mod tests {
         assert_eq!(meta.layers.len(), art.packed.layers.len());
         assert_eq!(
             meta.file_len,
-            std::fs::metadata(&path).unwrap().len() as usize
+            std::fs::metadata(path).unwrap().len() as usize
         );
         meta.check_layout().unwrap();
         // random-access layer reads reproduce the eagerly-loaded payloads
-        let f = PackedFile::open(&path).unwrap();
+        let f = PackedFile::open(path).unwrap();
         for (i, pl) in art.packed.layers.iter().enumerate() {
             assert_eq!(&f.read_layer(i).unwrap(), pl, "layer {i}");
         }
@@ -867,7 +949,24 @@ mod tests {
         assert_eq!(tail.norms2, art.packed.norms2);
         assert_eq!(tail.norm_f, art.packed.norm_f);
         assert_eq!(tail.lm_head, art.packed.lm_head);
-        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn unpack_layer_pool_matches_scoped_unpack_bitwise() {
+        // the persistent-pool first-touch decode is the same per-row float
+        // ops as the scoped-thread unpack — pin bit-identity across thread
+        // counts
+        let (art, _) = packed_fixture();
+        let q = quantizer_from_spec(&art.packed.quantizer).unwrap();
+        let pool1 = threadpool::Pool::new(1);
+        let pool4 = threadpool::Pool::new(4);
+        for pl in &art.packed.layers {
+            let want = unpack_layer(q.as_ref(), pl, 2).unwrap();
+            let got1 = unpack_layer_pool(q.as_ref(), pl, &pool1).unwrap();
+            let got4 = unpack_layer_pool(q.as_ref(), pl, &pool4).unwrap();
+            assert!(want.iter().zip(&got1).all(|(a, b)| a.to_bits() == b.to_bits()));
+            assert!(want.iter().zip(&got4).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
     }
 
     #[test]

@@ -102,14 +102,14 @@ impl Sampler {
         if self.params.temperature <= 0.0 {
             return argmax(logits);
         }
-        // rank candidates by logit (descending, ties toward lower id)
+        // rank candidates by logit (descending, ties toward lower id).
+        // total_cmp, not partial_cmp: a NaN logit from a corrupt artifact
+        // gives partial_cmp an incomparable pair, and sort_by panics on a
+        // non-total comparator — total_cmp keeps the draw panic-free (NaN
+        // candidates rank first but collapse the softmax weights to NaN,
+        // so the `u <= 0` walk falls through to the last candidate).
         let mut idx: Vec<usize> = (0..logits.len()).collect();
-        idx.sort_by(|&a, &b| {
-            logits[b]
-                .partial_cmp(&logits[a])
-                .unwrap_or(std::cmp::Ordering::Equal)
-                .then(a.cmp(&b))
-        });
+        idx.sort_by(|&a, &b| logits[b].total_cmp(&logits[a]).then(a.cmp(&b)));
         let k = match self.params.top_k {
             0 => logits.len(),
             k => k.min(logits.len()),
@@ -201,6 +201,32 @@ mod tests {
             seen[s.sample(&r)] = true;
         }
         assert!(seen.iter().all(|&x| x), "10x temperature should reach every id");
+    }
+
+    #[test]
+    fn nan_logits_never_panic_the_sampler() {
+        // corrupt artifacts can produce NaN logits; sampling must stay
+        // panic-free and in range on every mode
+        let r = vec![0.5, f32::NAN, 0.25, f32::NAN, 1.0, f32::NEG_INFINITY];
+        let mut s = Sampler::new(SampleParams {
+            temperature: 0.8,
+            top_k: 3,
+            seed: 11,
+        });
+        for _ in 0..200 {
+            assert!(s.sample(&r) < r.len());
+        }
+        let mut unbounded = Sampler::new(SampleParams {
+            temperature: 1.2,
+            top_k: 0,
+            seed: 5,
+        });
+        assert!(unbounded.sample(&r) < r.len());
+        // greedy ignores NaN entirely (argmax keeps the documented
+        // lowest-id tie-break over comparable values)
+        let mut g = Sampler::greedy();
+        assert_eq!(g.sample(&r), 4);
+        assert_eq!(argmax(&r), 4);
     }
 
     #[test]

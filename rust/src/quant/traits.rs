@@ -21,7 +21,7 @@ use crate::util::bits::{BitReader, BitWriter};
 use crate::util::json::Json;
 
 /// A quantized block: the stored code plus its bit cost.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Code {
     /// Opaque integer payload(s). For product codes, one entry per sub-block.
     pub words: Vec<u64>,

@@ -48,6 +48,52 @@ fn base_seed() -> u64 {
         .unwrap_or(0xC0FFEE_5EED)
 }
 
+/// Run `f` with the global panic hook silenced (for tests that provoke
+/// expected panics), serialized process-wide: parallel tests swapping the
+/// hook race each other otherwise — one test can capture another's no-op
+/// hook as "previous" and leave panics silenced for the rest of the run.
+pub fn with_silenced_panics<R>(f: impl FnOnce() -> R) -> R {
+    use std::sync::Mutex;
+    static HOOK_LOCK: Mutex<()> = Mutex::new(());
+    let _guard = HOOK_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let r = f();
+    std::panic::set_hook(prev);
+    r
+}
+
+/// RAII temp file for artifact round-trip tests: a unique path under the
+/// system temp dir, removed on drop — so a failing assertion between
+/// `save` and the old success-path `remove_file` no longer leaks `.llvqm`
+/// files into `/tmp`.
+pub struct TempArtifact(std::path::PathBuf);
+
+impl TempArtifact {
+    /// `llvq-<tag>-<pid>-<seq>.<ext>` — pid separates test binaries,
+    /// the sequence number separates threaded tests within one binary.
+    pub fn new(tag: &str, ext: &str) -> Self {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let path = std::env::temp_dir().join(format!(
+            "llvq-{tag}-{}-{}.{ext}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed),
+        ));
+        Self(path)
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.0
+    }
+}
+
+impl Drop for TempArtifact {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.0);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -63,6 +109,22 @@ mod tests {
                 Err("addition not commutative?!".into())
             }
         });
+    }
+
+    #[test]
+    fn temp_artifact_removes_file_on_drop() {
+        let kept;
+        {
+            let t = TempArtifact::new("proptest-guard", "llvqm");
+            std::fs::write(t.path(), b"x").unwrap();
+            assert!(t.path().exists());
+            kept = t.path().to_path_buf();
+        }
+        assert!(!kept.exists(), "drop guard must remove the artifact");
+        // distinct instances never collide
+        let a = TempArtifact::new("proptest-guard", "llvqm");
+        let b = TempArtifact::new("proptest-guard", "llvqm");
+        assert_ne!(a.path(), b.path());
     }
 
     #[test]

@@ -1,11 +1,25 @@
-//! Scoped data-parallel helpers over `std::thread` (no rayon offline).
+//! Data-parallel helpers over `std::thread` (no rayon offline).
 //!
-//! The PTQ pipeline quantizes thousands of independent 24-dim blocks per
-//! layer; [`parallel_chunks`] splits an index range across worker threads
-//! with static partitioning (blocks are uniform cost), and
-//! [`parallel_map`] collects per-item results in order.
+//! Two tiers:
+//!
+//! * **Scoped one-shots** — [`parallel_chunks`] / [`parallel_dynamic`] /
+//!   [`parallel_map`] spawn scoped threads per call. Right for cold paths
+//!   (PTQ quantizes thousands of independent 24-dim blocks per layer;
+//!   whole-model unpack) where the spawn cost amortizes over a lot of work.
+//! * **The persistent [`Pool`]** — long-lived workers that park on a
+//!   condvar between jobs, so a serving hot loop (the fused per-token
+//!   dequant-matmul, which runs once per linear layer per decode step) pays
+//!   a wakeup instead of `threads × thread::spawn` per call.
+//!   [`Pool::run_partitioned`] statically shards `0..n` across the calling
+//!   thread plus the workers; each executor gets its own reusable
+//!   [`Scratch`] slot, and [`ShardedSlice`] lets shards write disjoint
+//!   ranges of one output buffer without locks.
 
+use std::any::Any;
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Number of worker threads to use (env `LLVQ_THREADS` overrides).
 pub fn default_threads() -> usize {
@@ -96,6 +110,303 @@ where
     out
 }
 
+// ---------------------------------------------------------------------------
+// Persistent worker pool
+// ---------------------------------------------------------------------------
+
+/// Per-executor scratch: a type-erased box that persists across
+/// [`Pool::run_partitioned`] calls on the same executor, so hot kernels
+/// keep their decode buffers warm instead of reallocating per call.
+pub struct Scratch(Option<Box<dyn Any + Send>>);
+
+impl Scratch {
+    fn new() -> Self {
+        Self(None)
+    }
+
+    /// The scratch value, lazily initialized with `init` (also re-created
+    /// if a previous job parked a different type here).
+    pub fn get_or<T: Any + Send>(&mut self, init: impl FnOnce() -> T) -> &mut T {
+        let reusable = self.0.as_ref().is_some_and(|b| b.is::<T>());
+        if !reusable {
+            self.0 = Some(Box::new(init()));
+        }
+        self.0
+            .as_mut()
+            .and_then(|b| b.downcast_mut::<T>())
+            .expect("scratch was just set to T")
+    }
+}
+
+/// A `&mut [T]` that pool shards may write through concurrently, PROVIDED
+/// every concurrently-outstanding [`ShardedSlice::range_mut`] range is
+/// disjoint. [`Pool::run_partitioned`] hands each executor a disjoint
+/// index range, so "my range ↦ my output rows" uses are safe by
+/// construction.
+pub struct ShardedSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _life: std::marker::PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Send for ShardedSlice<'_, T> {}
+unsafe impl<T: Send> Sync for ShardedSlice<'_, T> {}
+
+impl<'a, T> ShardedSlice<'a, T> {
+    pub fn new(s: &'a mut [T]) -> Self {
+        Self {
+            ptr: s.as_mut_ptr(),
+            len: s.len(),
+            _life: std::marker::PhantomData,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Mutable view of `range`.
+    ///
+    /// # Safety
+    ///
+    /// `range` must be in bounds, and ranges handed out to code that runs
+    /// concurrently (distinct pool shards) must never overlap.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn range_mut(&self, range: Range<usize>) -> &mut [T] {
+        debug_assert!(range.start <= range.end && range.end <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(range.start), range.end - range.start)
+    }
+}
+
+/// One type-erased `run_partitioned` job. `data` borrows the caller's
+/// closure; it is only dereferenced while the caller blocks inside
+/// `run_partitioned`, which is what makes the erased lifetime sound.
+#[derive(Clone, Copy)]
+struct Job {
+    data: *const (),
+    call: unsafe fn(*const (), Range<usize>, &mut Scratch),
+    n: usize,
+    chunk: usize,
+}
+
+// Safety: the raw closure pointer is only dereferenced during the epoch,
+// while the owning `run_partitioned` frame is alive and blocked.
+unsafe impl Send for Job {}
+
+struct PoolState {
+    epoch: u64,
+    job: Option<Job>,
+    /// Workers that have not finished the current epoch yet.
+    active: usize,
+    /// Worker shards that panicked during the current epoch.
+    panicked: usize,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    /// One reusable scratch slot per executor (0 = the calling thread,
+    /// 1.. = pool workers). Each executor locks only its own slot.
+    scratch: Vec<Mutex<Scratch>>,
+}
+
+/// Recover a guard from a possibly-poisoned lock: pool state stays
+/// consistent across a panicking shard (panics are caught, counted, and
+/// re-raised on the caller), so poison carries no information here.
+fn relock<T>(r: Result<T, std::sync::PoisonError<T>>) -> T {
+    r.unwrap_or_else(|e| e.into_inner())
+}
+
+/// A persistent worker pool for repeated data-parallel kernels.
+///
+/// `Pool::new(t)` spawns `t - 1` long-lived workers; the calling thread is
+/// executor 0 of every job, so `t = 1` runs everything inline with zero
+/// threads spawned. Dropping the pool shuts the workers down and joins
+/// them.
+pub struct Pool {
+    shared: Arc<PoolShared>,
+    /// Serializes whole jobs: concurrent callers queue here, keeping the
+    /// epoch protocol single-writer.
+    run_lock: Mutex<()>,
+    threads: usize,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+thread_local! {
+    /// Scratch for inline execution (`threads = 1` pools and single-chunk
+    /// jobs): per *calling* thread, so concurrent callers of a sequential
+    /// pool never contend — they bypass the run lock entirely and touch
+    /// no shared state.
+    static INLINE_SCRATCH: std::cell::RefCell<Scratch> =
+        std::cell::RefCell::new(Scratch::new());
+}
+
+impl Pool {
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                job: None,
+                active: 0,
+                panicked: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            scratch: (0..threads).map(|_| Mutex::new(Scratch::new())).collect(),
+        });
+        let handles = (1..threads)
+            .map(|t| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("llvq-pool-{t}"))
+                    .spawn(move || worker_loop(sh, t))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self {
+            shared,
+            run_lock: Mutex::new(()),
+            threads,
+            handles,
+        }
+    }
+
+    /// Executors per job (workers + the calling thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(range, scratch)` over `threads` contiguous chunks of `0..n`,
+    /// one per executor (static partitioning — row costs are uniform).
+    /// The calling thread executes chunk 0; the call returns only after
+    /// every shard finished, so `f` may borrow from the caller's frame.
+    /// A panic inside any shard is caught, the job still completes on the
+    /// other shards, and the panic resumes on the calling thread — the
+    /// pool stays usable. Concurrent callers of one pool serialize on the
+    /// worker set (they queue for whole jobs); a `threads = 1` pool runs
+    /// inline on the calling thread with thread-local scratch, so
+    /// concurrent sequential callers never contend at all.
+    pub fn run_partitioned<F>(&self, n: usize, f: F)
+    where
+        F: Fn(Range<usize>, &mut Scratch) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        if self.handles.is_empty() || n == 1 {
+            INLINE_SCRATCH.with(|cell| f(0..n, &mut cell.borrow_mut()));
+            return;
+        }
+        let _serial = relock(self.run_lock.lock());
+        let chunk = n.div_ceil(self.threads);
+
+        unsafe fn shim<F: Fn(Range<usize>, &mut Scratch) + Sync>(
+            data: *const (),
+            range: Range<usize>,
+            scratch: &mut Scratch,
+        ) {
+            let f = &*(data as *const F);
+            f(range, scratch)
+        }
+
+        {
+            let mut st = relock(self.shared.state.lock());
+            st.job = Some(Job {
+                data: &f as *const F as *const (),
+                call: shim::<F>,
+                n,
+                chunk,
+            });
+            st.epoch += 1;
+            st.active = self.handles.len();
+            st.panicked = 0;
+            self.shared.work_cv.notify_all();
+        }
+        // the caller is executor 0
+        let caller = {
+            let mut s = relock(self.shared.scratch[0].lock());
+            catch_unwind(AssertUnwindSafe(|| f(0..chunk.min(n), &mut s)))
+        };
+        // wait for every worker before returning (or unwinding): `f` and
+        // its captures must outlive all shards
+        let worker_panics = {
+            let mut st = relock(self.shared.state.lock());
+            while st.active > 0 {
+                st = relock(self.shared.done_cv.wait(st));
+            }
+            st.job = None;
+            st.panicked
+        };
+        if let Err(p) = caller {
+            std::panic::resume_unwind(p);
+        }
+        assert!(
+            worker_panics == 0,
+            "{worker_panics} pool shard(s) panicked in run_partitioned"
+        );
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut st = relock(self.shared.state.lock());
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>, t: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = relock(shared.state.lock());
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    if let Some(j) = st.job {
+                        seen = st.epoch;
+                        break j;
+                    }
+                }
+                st = relock(shared.work_cv.wait(st));
+            }
+        };
+        let lo = (t * job.chunk).min(job.n);
+        let hi = ((t + 1) * job.chunk).min(job.n);
+        let mut bad = false;
+        if lo < hi {
+            let mut scratch = relock(shared.scratch[t].lock());
+            bad = catch_unwind(AssertUnwindSafe(|| unsafe {
+                (job.call)(job.data, lo..hi, &mut scratch)
+            }))
+            .is_err();
+        }
+        let mut st = relock(shared.state.lock());
+        if bad {
+            st.panicked += 1;
+        }
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -134,5 +445,131 @@ mod tests {
         // empty range degenerates to a single (0, 0) call
         parallel_chunks(0, 4, |lo, hi| assert_eq!((lo, hi), (0, 0)));
         parallel_dynamic(0, 4, 2, |_| panic!("no items to visit"));
+    }
+
+    #[test]
+    fn pool_covers_range_exactly_once_across_repeated_jobs() {
+        let pool = Pool::new(5);
+        for n in [1usize, 4, 5, 37, 1000] {
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            pool.run_partitioned(n, |range, _s| {
+                for i in range {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "n = {n}"
+            );
+        }
+        pool.run_partitioned(0, |_r, _s| panic!("no items"));
+    }
+
+    #[test]
+    fn pool_of_one_runs_inline_without_workers() {
+        let pool = Pool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let mut seen = vec![false; 9];
+        {
+            let shard = ShardedSlice::new(&mut seen);
+            pool.run_partitioned(9, |range, _s| {
+                let out = unsafe { shard.range_mut(range) };
+                out.iter_mut().for_each(|v| *v = true);
+            });
+        }
+        assert!(seen.iter().all(|&v| v));
+    }
+
+    #[test]
+    fn pool_scratch_persists_per_executor() {
+        // each executor initializes its scratch at most once across many
+        // jobs — the alloc-free-after-warm-up property the fused kernel
+        // relies on
+        let pool = Pool::new(3);
+        let inits = AtomicU64::new(0);
+        for _ in 0..20 {
+            pool.run_partitioned(64, |range, s| {
+                let buf: &mut Vec<u64> = s.get_or(|| {
+                    inits.fetch_add(1, Ordering::Relaxed);
+                    Vec::with_capacity(64)
+                });
+                buf.clear();
+                buf.extend(range.map(|i| i as u64));
+            });
+        }
+        assert!(
+            inits.load(Ordering::Relaxed) <= 3,
+            "scratch re-initialized: {} inits over 20 jobs on 3 executors",
+            inits.load(Ordering::Relaxed)
+        );
+    }
+
+    #[test]
+    fn pool_sharded_writes_match_sequential() {
+        let n = 501usize;
+        let pool = Pool::new(4);
+        let mut par = vec![0u64; n];
+        {
+            let shard = ShardedSlice::new(&mut par);
+            pool.run_partitioned(n, |range, _s| {
+                let lo = range.start;
+                let out = unsafe { shard.range_mut(range) };
+                for (k, v) in out.iter_mut().enumerate() {
+                    *v = ((lo + k) as u64).wrapping_mul(0x9E3779B9);
+                }
+            });
+        }
+        let seq: Vec<u64> = (0..n as u64).map(|i| i.wrapping_mul(0x9E3779B9)).collect();
+        assert_eq!(par, seq);
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_shard() {
+        let pool = Pool::new(3);
+        let r = crate::util::proptest::with_silenced_panics(|| {
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                pool.run_partitioned(30, |range, _s| {
+                    if range.contains(&0) {
+                        panic!("shard bug");
+                    }
+                });
+            }))
+        });
+        assert!(r.is_err(), "shard panic must surface to the caller");
+        // the pool remains fully usable for the next job
+        let hits: Vec<AtomicU64> = (0..30).map(|_| AtomicU64::new(0)).collect();
+        pool.run_partitioned(30, |range, _s| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn sequential_pool_serves_concurrent_callers_inline() {
+        // a threads=1 pool runs jobs inline with thread-local scratch:
+        // many caller threads may share it concurrently (the eval path
+        // fans forward passes over one backend) without contention
+        let pool = Pool::new(1);
+        let total = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = &pool;
+                let total = &total;
+                s.spawn(move || {
+                    for _ in 0..50 {
+                        pool.run_partitioned(10, |range, scratch| {
+                            let buf: &mut Vec<u64> = scratch.get_or(Vec::new);
+                            buf.clear();
+                            buf.extend(range.map(|i| i as u64));
+                            total.fetch_add(buf.iter().sum(), Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        // 4 threads × 50 jobs × Σ(0..10)
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 50 * 45);
     }
 }

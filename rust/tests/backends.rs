@@ -18,18 +18,18 @@ use std::sync::Arc;
 
 use llvq::coordinator::{serve_tcp, BackendEngine, BatcherConfig, Coordinator};
 use llvq::leech::index::LeechIndexer;
-use llvq::model::backend::ExecutionBackend;
+use llvq::model::backend::{ExecutionBackend, LinearOp};
 use llvq::model::config::config_by_name;
 use llvq::model::eval::evaluate;
 use llvq::model::packed::PackedFile;
-use llvq::model::transformer::{forward, ActivationCapture, Weights};
+use llvq::model::transformer::{forward, ActivationCapture, LinearKind, Weights};
 use llvq::pipeline::driver::{quantize_model_packed, PtqArtifacts, PtqOptions};
 use llvq::pipeline::rotation::RotationMode;
 use llvq::quant::e8::{E8Codebook, E8Cut};
 use llvq::quant::llvq::{LlvqShapeGain, LlvqSpherical};
 use llvq::quant::scalar::{LloydMaxQuantizer, UniformQuantizer};
 use llvq::quant::VectorQuantizer;
-use llvq::util::proptest::check;
+use llvq::util::proptest::{check, TempArtifact};
 
 /// The five quantizer specs of the `.llvqm` codec surface (scalar uniform,
 /// scalar Lloyd–Max, E8, LLVQ spherical, LLVQ shape–gain).
@@ -66,13 +66,12 @@ fn pack_tiny(q: &dyn VectorQuantizer, seed: u64, finetune: bool) -> PtqArtifacts
     quantize_model_packed(&w, q, &opts)
 }
 
-fn save_temp(art: &PtqArtifacts, tag: &str) -> std::path::PathBuf {
-    let path = std::env::temp_dir().join(format!(
-        "llvq-backends-{tag}-{}.llvqm",
-        std::process::id()
-    ));
-    art.packed.save(&path).unwrap();
-    path
+/// Save the artifact under a drop-guarded temp path: an assert failure
+/// anywhere in the test no longer leaks the `.llvqm` into /tmp.
+fn save_temp(art: &PtqArtifacts, tag: &str) -> TempArtifact {
+    let tmp = TempArtifact::new(&format!("backends-{tag}"), "llvqm");
+    art.packed.save(tmp.path()).unwrap();
+    tmp
 }
 
 fn argmax(row: &[f32]) -> usize {
@@ -91,11 +90,12 @@ fn prop_three_backends_agree_across_all_quantizer_specs() {
         // alternate fine-tuned column scales on/off so both reconstruction
         // paths are exercised across the spec matrix
         let art = pack_tiny(q.as_ref(), 100 + i as u64, i % 2 == 0);
-        let path = save_temp(&art, name);
+        let tmp = save_temp(&art, name);
         let dense = ExecutionBackend::dense(art.weights.clone());
         let cached =
-            ExecutionBackend::packed_cached(PackedFile::open(&path).unwrap(), 2).unwrap();
-        let fused = ExecutionBackend::packed_fused(PackedFile::open(&path).unwrap()).unwrap();
+            ExecutionBackend::packed_cached(PackedFile::open(tmp.path()).unwrap(), 2).unwrap();
+        let fused =
+            ExecutionBackend::packed_fused(PackedFile::open(tmp.path()).unwrap(), 2).unwrap();
         let vocab = art.weights.cfg.vocab;
         check(&format!("backends-{name}"), 4, |rng| {
             let len = 1 + rng.next_range(12) as usize;
@@ -128,7 +128,66 @@ fn prop_three_backends_agree_across_all_quantizer_specs() {
             }
             Ok(())
         });
-        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn prop_pooled_kernels_are_bit_identical_to_one_thread_across_specs() {
+    // the tentpole contract: the row-sharded worker-pool kernels (fused
+    // matmul, cached first-touch decode) reproduce the threads=1 kernels
+    // bit for bit — per quantizer spec, per thread count, single lane and
+    // slate. Rows accumulate independently, so this holds by construction;
+    // pin it anyway.
+    for (i, (name, q)) in five_quantizers().into_iter().enumerate() {
+        let art = pack_tiny(q.as_ref(), 500 + i as u64, i % 2 == 1);
+        let tmp = save_temp(&art, &format!("pool-{name}"));
+        let fused1 =
+            ExecutionBackend::packed_fused(PackedFile::open(tmp.path()).unwrap(), 1).unwrap();
+        let cached1 =
+            ExecutionBackend::packed_cached(PackedFile::open(tmp.path()).unwrap(), 1).unwrap();
+        for threads in [2usize, 4, 8] {
+            let fused_t =
+                ExecutionBackend::packed_fused(PackedFile::open(tmp.path()).unwrap(), threads)
+                    .unwrap();
+            let cached_t =
+                ExecutionBackend::packed_cached(PackedFile::open(tmp.path()).unwrap(), threads)
+                    .unwrap();
+            check(&format!("pool-parity-{name}-t{threads}"), 2, |rng| {
+                // whole forward passes: single sequence (lane) and a full
+                // 8-lane slate through matmul_into via linear_batch
+                let len = 1 + rng.next_range(10) as usize;
+                let toks: Vec<u8> = (0..len).map(|_| rng.next_range(64) as u8).collect();
+                let mut cap = ActivationCapture::default();
+                let f1 = forward(&fused1, &toks, &mut cap);
+                let ft = forward(&fused_t, &toks, &mut cap);
+                if f1.iter().zip(&ft).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                    return Err(format!("{name}: fused threads={threads} != threads=1"));
+                }
+                let c1 = forward(&cached1, &toks, &mut cap);
+                let ct = forward(&cached_t, &toks, &mut cap);
+                if c1.iter().zip(&ct).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                    return Err(format!("{name}: cached threads={threads} != threads=1"));
+                }
+                // op-level slate: 8 lanes through the fused matmul_into
+                let op1 = fused1.op(0, LinearKind::W1);
+                let opt = fused_t.op(0, LinearKind::W1);
+                let (d_out, d_in) = op1.shape();
+                let n = 8usize;
+                let xs: Vec<f32> = (0..n * d_in)
+                    .map(|_| (rng.next_f64() * 2.0 - 1.0) as f32)
+                    .collect();
+                let mut want = vec![0f32; n * d_out];
+                let mut got = vec![0f32; n * d_out];
+                op1.matmul_into(&xs, &mut want, n);
+                opt.matmul_into(&xs, &mut got, n);
+                if want.iter().zip(&got).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                    return Err(format!(
+                        "{name}: fused slate matmul threads={threads} != threads=1"
+                    ));
+                }
+                Ok(())
+            });
+        }
     }
 }
 
@@ -139,14 +198,14 @@ fn cached_backend_evaluates_identically_under_threads() {
     // and must still yield the dense oracle's metrics exactly.
     let q = UniformQuantizer::new_gaussian_optimal(4);
     let art = pack_tiny(&q, 11, true);
-    let path = save_temp(&art, "eval");
-    let cached = ExecutionBackend::packed_cached(PackedFile::open(&path).unwrap(), 2).unwrap();
+    let tmp = save_temp(&art, "eval");
+    let cached =
+        ExecutionBackend::packed_cached(PackedFile::open(tmp.path()).unwrap(), 2).unwrap();
     let a = evaluate(&art.weights, 4, 2000, 4);
     let b = evaluate(&cached, 4, 2000, 4);
     assert_eq!(a.perplexity.to_bits(), b.perplexity.to_bits());
     assert_eq!(a.accuracy_pct.to_bits(), b.accuracy_pct.to_bits());
     assert_eq!(a.tokens, b.tokens);
-    std::fs::remove_file(&path).ok();
 }
 
 #[test]
@@ -157,8 +216,9 @@ fn fused_tcp_serving_matches_dense_oracle_within_packed_resident_bytes() {
     // f32 never materializes.
     let q = LlvqShapeGain::new(Arc::new(LeechIndexer::new(3)), 1);
     let art = pack_tiny(&q, 7, false);
-    let path = save_temp(&art, "tcp");
-    let fused = ExecutionBackend::packed_fused(PackedFile::open(&path).unwrap()).unwrap();
+    let tmp = save_temp(&art, "tcp");
+    let fused =
+        ExecutionBackend::packed_fused(PackedFile::open(tmp.path()).unwrap(), 2).unwrap();
     let code_bytes = art.packed.code_bytes();
     assert!(
         fused.resident_weight_bytes() as f64 <= 1.1 * code_bytes as f64,
@@ -216,7 +276,7 @@ fn fused_tcp_serving_matches_dense_oracle_within_packed_resident_bytes() {
         resident as f64 <= 1.1 * code_bytes as f64,
         "STATS resident {resident} vs code bytes {code_bytes}"
     );
+    assert!(line.contains("threads=2"), "STATS must report the pool size: {line}");
     writeln!(s, "QUIT").unwrap();
     coord.stop();
-    std::fs::remove_file(&path).ok();
 }

@@ -31,7 +31,7 @@ use llvq::quant::e8::{E8Codebook, E8Cut};
 use llvq::quant::llvq::{LlvqShapeGain, LlvqSpherical};
 use llvq::quant::scalar::{LloydMaxQuantizer, UniformQuantizer};
 use llvq::quant::VectorQuantizer;
-use llvq::util::proptest::check;
+use llvq::util::proptest::{check, TempArtifact};
 
 /// The five quantizer specs of the `.llvqm` codec surface.
 fn five_quantizers() -> Vec<(&'static str, Box<dyn VectorQuantizer>)> {
@@ -66,13 +66,12 @@ fn pack_tiny(q: &dyn VectorQuantizer, seed: u64, finetune: bool) -> PtqArtifacts
     quantize_model_packed(&w, q, &opts)
 }
 
-fn save_temp(art: &PtqArtifacts, tag: &str) -> std::path::PathBuf {
-    let path = std::env::temp_dir().join(format!(
-        "llvq-generation-{tag}-{}.llvqm",
-        std::process::id()
-    ));
-    art.packed.save(&path).unwrap();
-    path
+/// Save the artifact under a drop-guarded temp path: an assert failure
+/// anywhere in the test no longer leaks the `.llvqm` into /tmp.
+fn save_temp(art: &PtqArtifacts, tag: &str) -> TempArtifact {
+    let tmp = TempArtifact::new(&format!("generation-{tag}"), "llvqm");
+    art.packed.save(tmp.path()).unwrap();
+    tmp
 }
 
 /// Assert: on backend `m`, prefill + greedy steps reproduce full-forward
@@ -122,11 +121,12 @@ fn assert_session_matches_full<M: ForwardOps + ?Sized>(
 fn prop_kv_cached_generation_is_bit_identical_across_specs_and_backends() {
     for (i, (name, q)) in five_quantizers().into_iter().enumerate() {
         let art = pack_tiny(q.as_ref(), 300 + i as u64, i % 2 == 0);
-        let path = save_temp(&art, name);
+        let tmp = save_temp(&art, name);
         let dense = ExecutionBackend::dense(art.weights.clone());
         let cached =
-            ExecutionBackend::packed_cached(PackedFile::open(&path).unwrap(), 2).unwrap();
-        let fused = ExecutionBackend::packed_fused(PackedFile::open(&path).unwrap()).unwrap();
+            ExecutionBackend::packed_cached(PackedFile::open(tmp.path()).unwrap(), 2).unwrap();
+        let fused =
+            ExecutionBackend::packed_fused(PackedFile::open(tmp.path()).unwrap(), 2).unwrap();
         check(&format!("generation-{name}"), 3, |rng| {
             let plen = 1 + rng.next_range(10) as usize;
             let prefix: Vec<u8> = (0..plen).map(|_| rng.next_range(64) as u8).collect();
@@ -136,7 +136,6 @@ fn prop_kv_cached_generation_is_bit_identical_across_specs_and_backends() {
             assert_session_matches_full(&fused, &prefix, steps, &format!("{name}/fused"))?;
             Ok(())
         });
-        std::fs::remove_file(&path).ok();
     }
 }
 
@@ -146,8 +145,9 @@ fn slate_decode_matches_single_lane_on_fused() {
     // the whole slate) must not change any lane's logits
     let q = LlvqShapeGain::new(Arc::new(LeechIndexer::new(3)), 1);
     let art = pack_tiny(&q, 21, true);
-    let path = save_temp(&art, "slate");
-    let fused = ExecutionBackend::packed_fused(PackedFile::open(&path).unwrap()).unwrap();
+    let tmp = save_temp(&art, "slate");
+    let fused =
+        ExecutionBackend::packed_fused(PackedFile::open(tmp.path()).unwrap(), 2).unwrap();
     let cfg = fused.cfg().clone();
     let prefixes: [&[u8]; 4] = [&[1, 2, 3], &[60, 2], &[9, 8, 7, 6, 5, 4], &[33]];
     let mut slate: Vec<KvCache> = prefixes.iter().map(|_| KvCache::new(&cfg)).collect();
@@ -171,7 +171,51 @@ fn slate_decode_matches_single_lane_on_fused() {
             "fused slate lane {l} diverged from single-lane decode"
         );
     }
-    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn slate_decode_is_thread_count_invariant_on_fused() {
+    // the pooled fused kernel must stream the exact token-by-token logits
+    // of the sequential kernel through the whole session path: prefill,
+    // then batched decode steps over an 8-lane slate, at 1/2/4/8 threads
+    let q = LlvqShapeGain::new(Arc::new(LeechIndexer::new(3)), 1);
+    let art = pack_tiny(&q, 31, true);
+    let tmp = save_temp(&art, "slate-threads");
+    let lanes_n = 8usize;
+    let steps = 3usize;
+    let run = |threads: usize| -> Vec<Vec<f32>> {
+        let fused =
+            ExecutionBackend::packed_fused(PackedFile::open(tmp.path()).unwrap(), threads)
+                .unwrap();
+        let cfg = fused.cfg().clone();
+        let mut caches: Vec<KvCache> = (0..lanes_n).map(|_| KvCache::new(&cfg)).collect();
+        let mut out: Vec<Vec<f32>> = Vec::new();
+        for (i, cache) in caches.iter_mut().enumerate() {
+            out.push(prefill(&fused, cache, &[(i as u8) + 1, 2, 3]));
+        }
+        for step in 0..steps {
+            let toks: Vec<u8> = (0..lanes_n).map(|l| ((step * 7 + l) % 64) as u8).collect();
+            let mut lanes: Vec<StepLane<'_>> = caches
+                .iter_mut()
+                .zip(&toks)
+                .map(|(cache, &token)| StepLane { cache, token })
+                .collect();
+            let flat = forward_step_batch(&fused, &mut lanes);
+            out.extend(flat.chunks_exact(cfg.vocab).map(|c| c.to_vec()));
+        }
+        out
+    };
+    let want = run(1);
+    for threads in [2usize, 4, 8] {
+        let got = run(threads);
+        assert_eq!(want.len(), got.len());
+        for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+            assert!(
+                a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "threads={threads}: logit row {i} diverged from the sequential kernel"
+            );
+        }
+    }
 }
 
 fn read_line(r: &mut BufReader<TcpStream>) -> String {
@@ -224,8 +268,9 @@ fn tcp_v2_protocol_generates_streams_and_replays_deterministically() {
     // stream), plus greedy GEN ≡ repeated NEXT with the growing prefix
     let q = LlvqShapeGain::new(Arc::new(LeechIndexer::new(3)), 1);
     let art = pack_tiny(&q, 77, false);
-    let path = save_temp(&art, "tcp");
-    let fused = ExecutionBackend::packed_fused(PackedFile::open(&path).unwrap()).unwrap();
+    let tmp = save_temp(&art, "tcp");
+    let fused =
+        ExecutionBackend::packed_fused(PackedFile::open(tmp.path()).unwrap(), 2).unwrap();
     let coord = Coordinator::start(
         Arc::new(BackendEngine { backend: fused }),
         BatcherConfig::default(),
@@ -277,7 +322,6 @@ fn tcp_v2_protocol_generates_streams_and_replays_deterministically() {
     );
     writeln!(s, "QUIT").unwrap();
     coord.stop();
-    std::fs::remove_file(&path).ok();
 }
 
 #[test]
