@@ -16,18 +16,22 @@
 //! `STATS`; `QUIT`.
 //!
 //! **v2 (generation sessions, one per connection):** `OPEN` →
-//! `OK session=<id>`; `FEED t1,t2,…` prefills the session's KV cache →
-//! `OK fed len=<total>`; `GEN <n> [temp=…] [topk=…] [seed=…]` streams
-//! `TOK <id>` per sampled token then `OK generated=<n> len=<total>`;
-//! `CLOSE` → `OK closed len=<total>`. Greedy `GEN n` (the `temp=0`
-//! default) is bit-identical to `n` `NEXT` calls with the growing prefix.
-//! Example transcript:
+//! `OK session=<id>`; `FEED t1,t2,…` queues the prompt for chunked
+//! prefill and returns immediately → `QUEUED <n>` (the tokens drain at
+//! `--prefill-chunk` per scheduler tick, interleaved with other sessions'
+//! decode steps, so a long prompt never stalls active generations);
+//! `GEN <n> [temp=…] [topk=…] [seed=…]` waits for the session's prefill
+//! to drain, then streams `TOK <id>` per sampled token and finishes with
+//! `OK generated=<n> len=<total>`; `CLOSE` → `OK closed len=<total>`.
+//! Greedy `GEN n` (the `temp=0` default) is bit-identical to `n` `NEXT`
+//! calls with the growing prefix — chunked prefill itself is bit-identical
+//! to one-shot prefill. Example transcript:
 //!
 //! ```text
 //! > OPEN
 //! < OK session=1
 //! > FEED 5,6,7,8
-//! < OK fed len=4
+//! < QUEUED 4
 //! > GEN 3 temp=0.8 topk=8 seed=42
 //! < TOK 17
 //! < TOK 3
@@ -164,7 +168,9 @@ fn main() {
     // ---- generation session demo (the v2 OPEN/FEED/GEN/CLOSE path) ----
     let gen_n = 12usize;
     let sid = coord.open_session().expect("open session");
-    let fed = coord.feed(sid, vec![5, 6, 7, 8]).expect("feed prompt");
+    // FEED queues the prompt and returns at once; the GEN below implicitly
+    // waits for the chunked prefill to drain
+    let fed = coord.feed(sid, vec![5, 6, 7, 8]).expect("queue prompt");
     let events = coord
         .generate(
             sid,
@@ -186,7 +192,7 @@ fn main() {
                 let rendered: Vec<String> =
                     generated.iter().map(|t| t.to_string()).collect();
                 println!(
-                    "session {sid}: fed {fed} prompt tokens, generated {} \
+                    "session {sid}: queued {fed} prompt tokens, generated {} \
                      (len {len}) in {:.1} ms → {:.1} tok/s: {}",
                     generated.len(),
                     secs * 1e3,

@@ -35,26 +35,33 @@ fn row(name: &str, r: &BenchResult, extra: Vec<(&str, Json)>) -> Json {
         ("p10_s", Json::Num(r.p10)),
         ("p90_s", Json::Num(r.p90)),
     ];
+    if llvq::util::bench::smoke() {
+        pairs.push(("smoke", Json::Bool(true)));
+    }
     pairs.extend(extra);
     Json::obj(pairs)
 }
 
 fn main() {
+    // LLVQ_BENCH_SMOKE=1 (CI's bench-smoke tier): Bench::default() shrinks
+    // its sample counts, and the codebook/block dims shrink below, so the
+    // BENCH_packed.json artifact is produced in seconds per PR
+    let smoke = llvq::util::bench::smoke();
     let b = Bench::default();
     let mut rows: Vec<Json> = Vec::new();
 
     // ---- block codec: LLVQ shape–gain M=12 + 1 gain bit (2 bpw) ----
     println!("== block codec (llvq shape-gain, 2 bpw) ==");
-    let q = LlvqShapeGain::new(Arc::new(LeechIndexer::new(12)), 1);
+    let q = LlvqShapeGain::new(Arc::new(LeechIndexer::new(if smoke { 6 } else { 12 })), 1);
     let widths = q.code_widths();
     let mut rng = Xoshiro256pp::new(7);
-    let nblk = 512usize;
+    let nblk = if smoke { 128usize } else { 512usize };
     let blocks: Vec<[f32; 24]> = (0..nblk)
         .map(|_| std::array::from_fn(|_| rng.next_gaussian() as f32))
         .collect();
     let codes: Vec<Code> = blocks.iter().map(|x| q.quantize(x)).collect();
 
-    let r = b.run_throughput("encode stream (512 codes)", nblk as f64, || {
+    let r = b.run_throughput(&format!("encode stream ({nblk} codes)"), nblk as f64, || {
         let mut w = BitWriter::with_capacity(nblk * 8);
         for c in &codes {
             write_code_with(&widths, c, &mut w);
@@ -72,7 +79,7 @@ fn main() {
         write_code_with(&widths, c, &mut w);
     }
     let stream = w.finish();
-    let r = b.run_throughput("decode stream (512 blocks)", nblk as f64, || {
+    let r = b.run_throughput(&format!("decode stream ({nblk} blocks)"), nblk as f64, || {
         let mut br = BitReader::new(&stream);
         let mut code = Code::empty();
         let mut out = [0f32; 24];

@@ -7,22 +7,27 @@
 //!
 //! Besides the human-readable report, every backend measurement lands as a
 //! JSON row in `BENCH_serving.json`, every generation measurement in
-//! `BENCH_generation.json`, and the kernel thread-scaling sweep (fused and
+//! `BENCH_generation.json`, the kernel thread-scaling sweep (fused and
 //! cached × 1/2/4/8 pool threads × single-lane and 8-lane slate) in
-//! `BENCH_kernel.json` (override with `LLVQ_BENCH_OUT` /
-//! `LLVQ_BENCH_GEN_OUT` / `LLVQ_BENCH_KERNEL_OUT`; all files are rewritten
-//! each run), in the flat row shape the `BENCH_*.json` trajectories use.
+//! `BENCH_kernel.json`, and the pipelined-prefill scheduler comparison
+//! (time-to-first-token + active-lane throughput while a long prompt
+//! prefills, chunked vs monolithic) in `BENCH_prefill.json` (override with
+//! `LLVQ_BENCH_OUT` / `LLVQ_BENCH_GEN_OUT` / `LLVQ_BENCH_KERNEL_OUT` /
+//! `LLVQ_BENCH_PREFILL_OUT`; all files are rewritten each run), in the
+//! flat row shape the `BENCH_*.json` trajectories use. `LLVQ_BENCH_SMOKE=1`
+//! shrinks iteration counts and codebook dims so CI produces every file in
+//! seconds (rows then carry `"smoke": true`).
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use llvq::coordinator::{BackendEngine, BatchForward, BatcherConfig, Coordinator};
+use llvq::coordinator::{BackendEngine, BatchForward, BatcherConfig, Coordinator, GenEvent};
 use llvq::math::hadamard::RandomizedHadamard;
 use llvq::model::backend::{BackendKind, ExecutionBackend};
 use llvq::model::config::config_by_name;
 use llvq::model::corpus::Corpus;
 use llvq::model::packed::{PackedFile, PackedModel};
-use llvq::model::sample::argmax;
+use llvq::model::sample::{argmax, SampleParams};
 use llvq::model::transformer::{
     forward, forward_step, forward_step_batch, prefill, ActivationCapture, KvCache, StepLane,
     Weights,
@@ -42,6 +47,9 @@ fn suite_row(suite: &str, name: &str, r: &BenchResult, extra: Vec<(&str, Json)>)
         ("p10_s", Json::Num(r.p10)),
         ("p90_s", Json::Num(r.p90)),
     ];
+    if llvq::util::bench::smoke() {
+        pairs.push(("smoke", Json::Bool(true)));
+    }
     pairs.extend(extra);
     Json::obj(pairs)
 }
@@ -98,11 +106,110 @@ fn gen_slate(backend: &ExecutionBackend, prompt: &[u8], gen_n: usize, lanes_n: u
     black_box(&logits);
 }
 
+fn median(v: &mut [f64]) -> f64 {
+    v.sort_by(f64::total_cmp);
+    v[v.len() / 2]
+}
+
+/// One chunked-vs-monolithic scheduler measurement (see the prefill
+/// section in `main`).
+struct PrefillRun {
+    /// FEED of the long prompt → its GEN's first token.
+    ttft_s: f64,
+    /// Active-lane tokens streamed during that window, per second.
+    active_tok_per_s: f64,
+    /// Worst inter-token gap seen on the active lane over its whole run.
+    max_gap_s: f64,
+}
+
+/// Start a coordinator over `backend`, put one generation lane on the
+/// slate, then FEED a long prompt on a second session and GEN one token:
+/// returns the long prompt's time-to-first-token and how the active lane
+/// fared while the prefill drained.
+fn prefill_pipeline_run(
+    backend: ExecutionBackend,
+    prefill_chunk: usize,
+    long_prompt: &[u8],
+) -> PrefillRun {
+    let coord = Coordinator::start(
+        Arc::new(BackendEngine { backend }),
+        BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            max_sessions: 8,
+            prefill_chunk,
+        },
+    );
+    let active_n = 48usize; // 4 prompt + 48 generated ≤ max_seq 64
+    let sid = coord.open_session().unwrap();
+    coord.feed(sid, vec![1, 2, 3, 4]).unwrap();
+    let events = coord
+        .generate(
+            sid,
+            active_n,
+            SampleParams {
+                temperature: 0.8,
+                top_k: 8,
+                seed: 11,
+            },
+        )
+        .unwrap();
+    let collector = std::thread::spawn(move || {
+        let mut arrivals = Vec::with_capacity(active_n);
+        loop {
+            match events.recv().expect("active lane stream") {
+                Ok(GenEvent::Token(_)) => arrivals.push(std::time::Instant::now()),
+                Ok(GenEvent::Done { .. }) => return arrivals,
+                Err(e) => panic!("active lane failed: {e}"),
+            }
+        }
+    });
+    // let the decode lane roll before the long FEED lands
+    while coord
+        .metrics
+        .gen_tokens
+        .load(std::sync::atomic::Ordering::Relaxed)
+        < 4
+    {
+        std::thread::yield_now();
+    }
+    let bsid = coord.open_session().unwrap();
+    let t_feed = std::time::Instant::now();
+    coord.feed(bsid, long_prompt.to_vec()).unwrap();
+    let ev = coord.generate(bsid, 1, SampleParams::default()).unwrap();
+    let ttft = match ev.recv().expect("long-prompt stream") {
+        Ok(GenEvent::Token(_)) => t_feed.elapsed(),
+        Ok(GenEvent::Done { .. }) => t_feed.elapsed(),
+        Err(e) => panic!("long-prompt generation failed: {e}"),
+    };
+    for _ in ev.iter() {} // drain the Done event
+    let arrivals = collector.join().unwrap();
+    coord.close_session(bsid).unwrap();
+    coord.close_session(sid).unwrap();
+    coord.stop();
+    let window = t_feed..=t_feed + ttft;
+    let in_window = arrivals.iter().filter(|&t| window.contains(t)).count();
+    let max_gap_s = arrivals
+        .windows(2)
+        .map(|w| (w[1] - w[0]).as_secs_f64())
+        .fold(0f64, f64::max);
+    PrefillRun {
+        ttft_s: ttft.as_secs_f64(),
+        active_tok_per_s: in_window as f64 / ttft.as_secs_f64().max(1e-9),
+        max_gap_s,
+    }
+}
+
 fn main() {
-    let b = Bench {
-        warmup: Duration::from_millis(200),
-        min_batch_time: Duration::from_millis(200),
-        num_samples: 6,
+    let smoke = llvq::util::bench::smoke();
+    let b = if smoke {
+        Bench::default() // smoke-sized by the harness
+    } else {
+        Bench {
+            warmup: Duration::from_millis(200),
+            min_batch_time: Duration::from_millis(200),
+            num_samples: 6,
+        }
     };
     let mut rows: Vec<Json> = Vec::new();
     let cfg = config_by_name("llama2-tiny").unwrap();
@@ -112,8 +219,11 @@ fn main() {
     let seqs: Vec<Vec<u8>> = (0..64).map(|_| corpus.generate(32).0).collect();
 
     // ---- one-time PTQ: the paper's 2 bpw shape–gain configuration ----
+    // (smoke mode shrinks the Leech ball cut: same codec surface, much
+    // cheaper indexer/PTQ, numbers flagged "smoke" in the rows)
     println!("== one-time PTQ (llama2-tiny, 2 bpw shape-gain) ==");
-    let q = LlvqShapeGain::new(Arc::new(llvq::leech::index::LeechIndexer::new(12)), 1);
+    let max_m = if smoke { 6 } else { 12 };
+    let q = LlvqShapeGain::new(Arc::new(llvq::leech::index::LeechIndexer::new(max_m)), 1);
     let opts = PtqOptions {
         rotation: RotationMode::Input,
         calib_seqs: 4,
@@ -136,10 +246,14 @@ fn main() {
     let threads = llvq::util::threadpool::default_threads();
 
     // ---- backend comparison: load / first token / steady state ----
-    let bq = Bench {
-        warmup: Duration::from_millis(100),
-        min_batch_time: Duration::from_millis(100),
-        num_samples: 5,
+    let bq = if smoke {
+        Bench::default()
+    } else {
+        Bench {
+            warmup: Duration::from_millis(100),
+            min_batch_time: Duration::from_millis(100),
+            num_samples: 5,
+        }
     };
     let short: Vec<Vec<u8>> = (0..4).map(|i| seqs[i][..16].to_vec()).collect();
     for kind in [BackendKind::Dense, BackendKind::Cached, BackendKind::Fused] {
@@ -195,7 +309,7 @@ fn main() {
     // protocol re-ran the whole growing prefix per token
     let mut gen_rows: Vec<Json> = Vec::new();
     let prompt: Vec<u8> = seqs[0][..16].to_vec();
-    let gen_n = 32usize;
+    let gen_n = if smoke { 8 } else { 32 };
     for kind in [BackendKind::Dense, BackendKind::Cached, BackendKind::Fused] {
         let label = kind.label();
         println!("\n== generation: {label} ==");
@@ -391,6 +505,70 @@ fn main() {
         Err(e) => eprintln!("\n[warn] could not write {kernel_out}: {e}"),
     }
 
+    // ---- pipelined prefill: TTFT + active-lane impact → BENCH_prefill.json ----
+    // the scheduler-tier acceptance numbers: while a long FEED drains, an
+    // already-active generation lane must keep producing tokens. Chunked
+    // scheduling (prefill_chunk < prompt) bounds the active lane's worst
+    // inter-token gap and keeps its tok/s up during the prefill window,
+    // at a bounded time-to-first-token cost for the long prompt vs the
+    // monolithic scheduler (prefill_chunk ≥ prompt: the whole prefill in
+    // one worker tick — the pre-scheduler behavior).
+    {
+        println!("\n== pipelined prefill: chunked vs monolithic scheduler ==");
+        let mut prefill_rows: Vec<Json> = Vec::new();
+        let long_prompt: Vec<u8> = (0..48).map(|i| (i * 5 % 64) as u8).collect();
+        let reps = if smoke { 1 } else { 3 };
+        let mut summary: Vec<(&str, f64, f64)> = Vec::new();
+        for (name, chunk) in [("chunked8", 8usize), ("monolithic", 64)] {
+            let (mut ttfts, mut rates, mut gaps) = (Vec::new(), Vec::new(), Vec::new());
+            for _ in 0..reps {
+                let r = prefill_pipeline_run(
+                    build_backend(&path, BackendKind::Fused, threads),
+                    chunk,
+                    &long_prompt,
+                );
+                ttfts.push(r.ttft_s);
+                rates.push(r.active_tok_per_s);
+                gaps.push(r.max_gap_s);
+            }
+            let (ttft, rate, gap) = (median(&mut ttfts), median(&mut rates), median(&mut gaps));
+            println!(
+                "{name:<11} (prefill_chunk={chunk:<2}): ttft {:.1} ms | active lane \
+                 {rate:.1} tok/s during prefill | worst gap {:.1} ms",
+                ttft * 1e3,
+                gap * 1e3
+            );
+            let mut pairs = vec![
+                ("suite", Json::Str("prefill".into())),
+                ("name", Json::Str(name.into())),
+                ("prefill_chunk", Json::Int(chunk as i64)),
+                ("prompt_tokens", Json::Int(long_prompt.len() as i64)),
+                ("ttft_ms", Json::Num(ttft * 1e3)),
+                ("active_tok_per_s", Json::Num(rate)),
+                ("active_max_gap_ms", Json::Num(gap * 1e3)),
+            ];
+            if smoke {
+                pairs.push(("smoke", Json::Bool(true)));
+            }
+            prefill_rows.push(Json::obj(pairs));
+            summary.push((name, rate, ttft));
+        }
+        if let [(_, rate_c, ttft_c), (_, rate_m, ttft_m)] = &summary[..] {
+            println!(
+                "chunked vs monolithic: active-lane {:.1}x tok/s during prefill, \
+                 ttft {:.2}x",
+                rate_c / rate_m.max(1e-9),
+                ttft_c / ttft_m.max(1e-9)
+            );
+        }
+        let prefill_out = std::env::var("LLVQ_BENCH_PREFILL_OUT")
+            .unwrap_or_else(|_| "BENCH_prefill.json".into());
+        match std::fs::write(&prefill_out, Json::Arr(prefill_rows).to_string_pretty()) {
+            Ok(()) => println!("wrote {prefill_out}"),
+            Err(e) => eprintln!("[warn] could not write {prefill_out}: {e}"),
+        }
+    }
+
     // ---- dense engine + coordinator (the historical serving numbers) ----
     let engine = Arc::new(BackendEngine::dense(weights));
     println!("\n== engine forward (no coordinator) ==");
@@ -415,7 +593,7 @@ fn main() {
             },
         );
         let t0 = std::time::Instant::now();
-        let per = 24;
+        let per = if llvq::util::bench::smoke() { 6 } else { 24 };
         std::thread::scope(|s| {
             for c in 0..clients {
                 let coord = coord.clone();

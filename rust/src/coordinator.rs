@@ -8,13 +8,22 @@
 //!   `max_batch` or `max_wait` and answered with last-position logits from
 //!   a full forward pass, exactly as before;
 //! * **generation sessions** (the v2 path) — `OPEN` allocates a per-session
-//!   [`KvCache`], `FEED` prefills it, and `GEN` joins the session to the
-//!   *active slate*: every scheduler tick advances up to `max_batch`
-//!   sessions by one token through a single batched
-//!   [`BatchForward::decode_step`], so the fused backend decodes each
-//!   weight row once per tick for the whole slate. New requests are
-//!   absorbed between ticks (continuous batching), and sampled tokens
-//!   stream back to each client as they are produced.
+//!   [`KvCache`], `FEED` *queues* its tokens as a prefill job and
+//!   returns immediately (`QUEUED n`), and `GEN` joins the session to the
+//!   *active slate* once its prefill has drained: every scheduler tick
+//!   advances up to `max_batch` sessions by one token through a single
+//!   batched [`BatchForward::decode_step`] **and** grants up to
+//!   `prefill_chunk` prompt tokens to queued prefill jobs, so the fused
+//!   backend decodes each weight row once per tick for the whole slate and
+//!   a 10k-token FEED no longer freezes active generations — prompt
+//!   latency hides under the decode slate (pipelined chunked prefill, the
+//!   Orca/vLLM scheduling shape). Chunked prefill is bit-identical to
+//!   one-shot prefill by construction (`prefill` is incremental — see
+//!   `model::transformer::prefill_chunked`). Half-done jobs rotate behind
+//!   other waiting jobs for fairness; mid-prefill sessions park out of the
+//!   session map and rejoin when their job drains (or is closed). New
+//!   requests are absorbed between ticks (continuous batching), and
+//!   sampled tokens stream back to each client as they are produced.
 //!
 //! The quantized model's weights were produced by the PTQ pipeline and are
 //! deployed as a packed `.llvqm` artifact (`model::packed`). Serving runs
@@ -28,12 +37,13 @@
 //! the session counters.
 //!
 //! Robustness: token ids are validated at `submit`/`feed` time (an id ≥
-//! vocab can never reach the embedding lookup), and every engine call runs
-//! under `catch_unwind` — a panicking forward pass answers `ERR` and
-//! destroys only the sessions it touched instead of killing the worker and
-//! hanging every later request.
+//! vocab can never reach the embedding lookup), and every engine call —
+//! including each individual prefill chunk — runs under `catch_unwind`: a
+//! panicking forward pass answers `ERR` (or fails the waiting `GEN`
+//! stream) and destroys only the sessions it touched instead of killing
+//! the worker and hanging every later request.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -201,10 +211,43 @@ enum Msg {
 }
 
 /// A parked session: its KV cache plus the logits at its last position
-/// (present once the first FEED has run).
+/// (present once the first FEED has drained).
 struct Session {
     cache: KvCache,
     last_logits: Option<Vec<f32>>,
+}
+
+/// A generation request that arrived while its session's prefill was
+/// still draining; it runs (through normal admission) the moment the job
+/// completes.
+struct WaitingGen {
+    n: usize,
+    params: SampleParams,
+    stream: Sender<Result<GenEvent, String>>,
+}
+
+/// A queued chunked-prefill unit: the session's cache (parked out of the
+/// session map) plus its prompt tokens, of which `tokens[..cursor]` have
+/// already been appended. The scheduler grants each job at most
+/// `prefill_chunk` tokens per tick via `BatchForward::prefill` (prefill is
+/// incremental, so N chunks are bit-identical to one shot) and rotates
+/// half-done jobs behind other waiting ones.
+struct PrefillJob {
+    sid: u64,
+    cache: KvCache,
+    tokens: Vec<u8>,
+    cursor: usize,
+    /// Logits of the most recently completed chunk (the session's
+    /// `last_logits` once the job drains).
+    last_logits: Option<Vec<f32>>,
+    waiting_gen: Option<WaitingGen>,
+}
+
+impl PrefillJob {
+    /// Tokens still waiting to be appended.
+    fn queued(&self) -> usize {
+        self.tokens.len() - self.cursor
+    }
 }
 
 /// A session currently on the active decode slate.
@@ -234,6 +277,10 @@ pub struct Metrics {
     /// Batched decode steps executed, and the lanes they carried.
     pub decode_steps: AtomicU64,
     pub decode_lanes: AtomicU64,
+    /// Prefill jobs enqueued by FEED over the service lifetime.
+    pub prefill_jobs: AtomicU64,
+    /// Prompt tokens appended through chunked prefill ticks.
+    pub prefill_toks: AtomicU64,
 }
 
 impl Metrics {
@@ -277,6 +324,11 @@ pub struct BatcherConfig {
     /// Concurrently open generation sessions the worker admits; OPEN
     /// beyond this answers an error.
     pub max_sessions: usize,
+    /// Prompt tokens granted to queued prefill jobs per scheduler tick.
+    /// Bounds how long a decode slate can stall behind FEED work: a long
+    /// prompt prefills in `ceil(len / prefill_chunk)` ticks, interleaved
+    /// with decode steps, instead of one monolithic call.
+    pub prefill_chunk: usize,
 }
 
 impl Default for BatcherConfig {
@@ -285,6 +337,7 @@ impl Default for BatcherConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(2),
             max_sessions: 64,
+            prefill_chunk: 64,
         }
     }
 }
@@ -382,8 +435,12 @@ impl Coordinator {
         }
     }
 
-    /// Append prompt tokens to a session (prefill); returns the session's
-    /// new length.
+    /// Queue prompt tokens for chunked prefill; returns the number of
+    /// tokens queued (immediately — the prefill itself drains at
+    /// `prefill_chunk` tokens per scheduler tick, interleaved with decode
+    /// work, so a long FEED never stalls active generations). A FEED on a
+    /// session whose previous job is still draining extends that job; a
+    /// subsequent [`Coordinator::generate`] blocks until the queue drains.
     pub fn feed(&self, sid: u64, tokens: Vec<u8>) -> Result<usize, String> {
         self.validate_tokens(&tokens)?;
         let (rtx, rrx) = channel();
@@ -430,9 +487,10 @@ impl Coordinator {
     }
 
     /// Shut down: no new submissions are accepted, every request already
-    /// queued is still answered and every active generation runs to
-    /// completion (GEN lengths are bounded by max_seq), then the worker
-    /// exits and is joined — deterministic, no sleeps.
+    /// queued is still answered, every queued prefill job drains, and
+    /// every active generation runs to completion (FEED and GEN lengths
+    /// are bounded by max_seq), then the worker exits and is joined —
+    /// deterministic, no sleeps.
     pub fn stop(&self) {
         self.stopping.store(true, Ordering::SeqCst);
         // recover from poison (see send()): stop must always close the
@@ -453,8 +511,18 @@ impl Coordinator {
 struct WorkerState {
     sessions: HashMap<u64, Session>,
     active: Vec<GenJob>,
+    /// Queued chunked-prefill jobs, front = next to be granted tokens.
+    prefilling: VecDeque<PrefillJob>,
     prefix: Vec<Pending>,
     next_sid: u64,
+}
+
+impl WorkerState {
+    /// Decode lanes or prefill jobs waiting — the tick loop must keep
+    /// spinning (never block on the channel) while any exist.
+    fn has_scheduled_work(&self) -> bool {
+        !self.active.is_empty() || !self.prefilling.is_empty()
+    }
 }
 
 fn worker_loop(
@@ -467,12 +535,13 @@ fn worker_loop(
     let mut st = WorkerState {
         sessions: HashMap::new(),
         active: Vec::new(),
+        prefilling: VecDeque::new(),
         prefix: Vec::new(),
         next_sid: 1,
     };
     let mut closed = false;
     loop {
-        if st.active.is_empty() {
+        if !st.has_scheduled_work() {
             if closed {
                 return;
             }
@@ -489,11 +558,12 @@ fn worker_loop(
                 // everything still queued is final — take it all now
                 // instead of holding a batch window open
                 closed |= drain_all(&rx, &mut st, engine.as_ref(), &cfg, &metrics);
-            } else if !st.prefix.is_empty() && st.active.is_empty() {
+            } else if !st.prefix.is_empty() && !st.has_scheduled_work() {
                 // legacy dynamic batching: hold the window open for more
-                // one-shot requests, but only while no decode work waits
+                // one-shot requests, but only while no decode or prefill
+                // work waits
                 let deadline = Instant::now() + cfg.max_wait;
-                while st.prefix.len() < cfg.max_batch && st.active.is_empty() {
+                while st.prefix.len() < cfg.max_batch && !st.has_scheduled_work() {
                     let now = Instant::now();
                     if now >= deadline {
                         break;
@@ -510,6 +580,7 @@ fn worker_loop(
         }
         run_prefix_batches(&mut st, engine.as_ref(), &cfg, &metrics);
         run_decode_tick(&mut st, engine.as_ref(), &cfg, &metrics);
+        run_prefill_tick(&mut st, engine.as_ref(), &cfg, &metrics);
     }
 }
 
@@ -573,7 +644,7 @@ fn handle_msg(
     match msg {
         Msg::Prefix(p) => st.prefix.push(p),
         Msg::Open { reply } => {
-            let open = st.sessions.len() + st.active.len();
+            let open = st.sessions.len() + st.active.len() + st.prefilling.len();
             let r = if open >= cfg.max_sessions {
                 Err(format!("too many sessions (max {})", cfg.max_sessions))
             } else {
@@ -593,36 +664,44 @@ fn handle_msg(
             let _ = reply.send(r);
         }
         Msg::Feed { sid, tokens, reply } => {
-            let (result, destroy) = feed_session(st, engine, sid, &tokens);
-            if destroy {
-                if let Some(s) = st.sessions.remove(&sid) {
-                    engine.close_session(s.cache);
-                    metrics.open_sessions.fetch_sub(1, Ordering::Relaxed);
-                }
-            }
-            let _ = reply.send(result);
+            let _ = reply.send(queue_feed(st, engine, metrics, sid, tokens));
         }
         Msg::Gen {
             sid,
             n,
             params,
             stream,
-        } => match gen_admit_error(st, engine, sid, n) {
-            Some(e) => {
-                let _ = stream.send(Err(e));
+        } => {
+            if let Some(job) = st.prefilling.iter_mut().find(|j| j.sid == sid) {
+                // GEN on a still-prefilling session parks behind the job
+                // and runs through normal admission when it drains; the
+                // bounds that can be checked now are checked now
+                let err = if job.waiting_gen.is_some() {
+                    Some(format!("session {sid} is busy generating"))
+                } else if n == 0 {
+                    Some("GEN needs n >= 1".into())
+                } else if engine.vocab() > 256 {
+                    Some("GEN requires vocab <= 256 (u8 token ids)".into())
+                } else if job.cache.len() + job.queued() + n > engine.max_seq() {
+                    Some(format!(
+                        "GEN {n} would exceed max_seq {} (session holds {} tokens, {} queued)",
+                        engine.max_seq(),
+                        job.cache.len(),
+                        job.queued()
+                    ))
+                } else {
+                    None
+                };
+                match err {
+                    Some(e) => {
+                        let _ = stream.send(Err(e));
+                    }
+                    None => job.waiting_gen = Some(WaitingGen { n, params, stream }),
+                }
+            } else {
+                admit_gen(st, engine, sid, n, params, stream);
             }
-            None => {
-                let sess = st.sessions.remove(&sid).expect("admission checked");
-                st.active.push(GenJob {
-                    sid,
-                    cache: sess.cache,
-                    last_logits: sess.last_logits.expect("admission checked"),
-                    sampler: Sampler::new(params),
-                    remaining: n,
-                    stream,
-                });
-            }
-        },
+        }
         Msg::Close { sid, reply } => {
             let r = if let Some(sess) = st.sessions.remove(&sid) {
                 let len = sess.cache.len();
@@ -637,6 +716,18 @@ fn handle_msg(
                 engine.close_session(job.cache);
                 metrics.open_sessions.fetch_sub(1, Ordering::Relaxed);
                 Ok(len)
+            } else if let Some(i) = st.prefilling.iter().position(|j| j.sid == sid) {
+                // closing mid-prefill (e.g. the client disconnected with
+                // its FEED still queued) frees the cache, drops the queued
+                // tokens, and fails any GEN waiting on the job
+                let mut job = st.prefilling.remove(i).expect("index from position");
+                if let Some(wg) = job.waiting_gen.take() {
+                    let _ = wg.stream.send(Err("session closed".into()));
+                }
+                let len = job.cache.len();
+                engine.close_session(job.cache);
+                metrics.open_sessions.fetch_sub(1, Ordering::Relaxed);
+                Ok(len)
             } else {
                 Err(format!("unknown session {sid}"))
             };
@@ -645,43 +736,166 @@ fn handle_msg(
     }
 }
 
-/// Prefill `tokens` into session `sid`. Returns (reply, destroy-session):
-/// a panicking engine leaves the cache indeterminate, so the session is
-/// destroyed rather than served corrupt.
-fn feed_session(
+/// Queue `tokens` as chunked-prefill work for session `sid`, replying with
+/// the number of tokens queued. The engine never runs here — the prompt
+/// drains at `prefill_chunk` tokens per scheduler tick, so a long FEED
+/// cannot stall the decode slate. A FEED on a session whose job is still
+/// draining extends that job (chunked FEED); once a GEN is waiting on the
+/// job, further FEEDs are rejected (the GEN pinned the token run).
+fn queue_feed(
+    st: &mut WorkerState,
+    engine: &dyn BatchForward,
+    metrics: &Metrics,
+    sid: u64,
+    tokens: Vec<u8>,
+) -> Result<usize, String> {
+    let n = tokens.len();
+    if n == 0 {
+        return Err("empty token list".into());
+    }
+    if st.active.iter().any(|j| j.sid == sid) {
+        return Err(format!("session {sid} is busy generating"));
+    }
+    if let Some(job) = st.prefilling.iter_mut().find(|j| j.sid == sid) {
+        if job.waiting_gen.is_some() {
+            return Err(format!("session {sid} is busy generating"));
+        }
+        if job.cache.len() + job.queued() + n > engine.max_seq() {
+            return Err(format!(
+                "FEED of {n} tokens would exceed max_seq {} (session holds {}, {} queued)",
+                engine.max_seq(),
+                job.cache.len(),
+                job.queued()
+            ));
+        }
+        job.tokens.extend_from_slice(&tokens);
+        return Ok(n);
+    }
+    let Some(sess) = st.sessions.get(&sid) else {
+        return Err(format!("unknown session {sid}"));
+    };
+    if sess.cache.len() + n > engine.max_seq() {
+        return Err(format!(
+            "FEED of {n} tokens would exceed max_seq {} (session holds {})",
+            engine.max_seq(),
+            sess.cache.len()
+        ));
+    }
+    let sess = st.sessions.remove(&sid).expect("looked up above");
+    st.prefilling.push_back(PrefillJob {
+        sid,
+        cache: sess.cache,
+        tokens,
+        cursor: 0,
+        last_logits: sess.last_logits,
+        waiting_gen: None,
+    });
+    metrics.prefill_jobs.fetch_add(1, Ordering::Relaxed);
+    Ok(n)
+}
+
+/// Run GEN admission on a parked session: on success the session moves to
+/// the active decode slate; on failure the error arrives as the stream's
+/// first event and the session stays parked.
+fn admit_gen(
     st: &mut WorkerState,
     engine: &dyn BatchForward,
     sid: u64,
-    tokens: &[u8],
-) -> (Result<usize, String>, bool) {
-    if st.active.iter().any(|j| j.sid == sid) {
-        return (Err(format!("session {sid} is busy generating")), false);
-    }
-    let Some(sess) = st.sessions.get_mut(&sid) else {
-        return (Err(format!("unknown session {sid}")), false);
-    };
-    if sess.cache.len() + tokens.len() > engine.max_seq() {
-        return (
-            Err(format!(
-                "FEED of {} tokens would exceed max_seq {} (session holds {})",
-                tokens.len(),
-                engine.max_seq(),
-                sess.cache.len()
-            )),
-            false,
-        );
-    }
-    match catch_unwind(AssertUnwindSafe(|| engine.prefill(&mut sess.cache, tokens))) {
-        Ok(logits) => {
-            sess.last_logits = Some(logits);
-            (Ok(sess.cache.len()), false)
+    n: usize,
+    params: SampleParams,
+    stream: Sender<Result<GenEvent, String>>,
+) {
+    match gen_admit_error(st, engine, sid, n) {
+        Some(e) => {
+            let _ = stream.send(Err(e));
         }
-        Err(_) => (
-            Err(format!(
-                "engine panicked during FEED; session {sid} destroyed"
-            )),
-            true,
-        ),
+        None => {
+            let sess = st.sessions.remove(&sid).expect("admission checked");
+            st.active.push(GenJob {
+                sid,
+                cache: sess.cache,
+                last_logits: sess.last_logits.expect("admission checked"),
+                sampler: Sampler::new(params),
+                remaining: n,
+                stream,
+            });
+        }
+    }
+}
+
+/// One prefill tick: grant up to `prefill_chunk` prompt tokens to queued
+/// prefill jobs, front of the queue first. A job with tokens left after
+/// the tick's budget is spent rotates to the back (fairness between
+/// concurrent long FEEDs); a drained job parks its session again and
+/// launches any GEN that was waiting on it. Every chunk runs under
+/// `catch_unwind`: a panicking engine destroys exactly that job's session,
+/// never the worker.
+fn run_prefill_tick(
+    st: &mut WorkerState,
+    engine: &dyn BatchForward,
+    cfg: &BatcherConfig,
+    metrics: &Metrics,
+) {
+    let mut budget = cfg.prefill_chunk.max(1);
+    while budget > 0 {
+        let Some(mut job) = st.prefilling.pop_front() else {
+            return;
+        };
+        // jobs always hold ≥ 1 queued token (drained jobs leave the queue
+        // immediately below), so take ≥ 1 and the loop terminates
+        let take = budget.min(job.queued());
+        let res = {
+            let chunk = &job.tokens[job.cursor..job.cursor + take];
+            let cache = &mut job.cache;
+            catch_unwind(AssertUnwindSafe(|| engine.prefill(cache, chunk)))
+        };
+        match res {
+            Ok(logits) => {
+                job.cursor += take;
+                budget -= take;
+                job.last_logits = Some(logits);
+                metrics.prefill_toks.fetch_add(take as u64, Ordering::Relaxed);
+                if job.queued() == 0 {
+                    finish_prefill_job(st, engine, job);
+                } else {
+                    st.prefilling.push_back(job);
+                }
+            }
+            Err(_) => {
+                // the cache is indeterminate after a panic: destroy the
+                // session; a waiting GEN learns through its stream (the
+                // FEED itself was already answered at queue time)
+                if let Some(wg) = job.waiting_gen.take() {
+                    let _ = wg.stream.send(Err(
+                        "engine panicked during prefill; session destroyed".into(),
+                    ));
+                }
+                metrics.open_sessions.fetch_sub(1, Ordering::Relaxed);
+                engine.close_session(job.cache);
+            }
+        }
+    }
+}
+
+/// A drained prefill job parks its session (with the final chunk's logits)
+/// and, if a GEN was waiting on it, runs that GEN's admission now.
+fn finish_prefill_job(st: &mut WorkerState, engine: &dyn BatchForward, job: PrefillJob) {
+    let PrefillJob {
+        sid,
+        cache,
+        last_logits,
+        waiting_gen,
+        ..
+    } = job;
+    st.sessions.insert(
+        sid,
+        Session {
+            cache,
+            last_logits: Some(last_logits.expect("a drained job ran at least one chunk")),
+        },
+    );
+    if let Some(wg) = waiting_gen {
+        admit_gen(st, engine, sid, wg.n, wg.params, wg.stream);
     }
 }
 
@@ -827,15 +1041,15 @@ impl Default for ServeOptions {
 ///
 /// # Protocol reference
 ///
-/// One command per line; every reply line starts with `OK`, `ERR`, or
-/// (during GEN streaming) `TOK`.
+/// One command per line; every reply line starts with `OK`, `ERR`,
+/// `QUEUED` (the FEED acknowledgement), or (during GEN streaming) `TOK`.
 ///
 /// **v1 — stateless (back-compatible):**
 ///
 /// | command            | reply                                              |
 /// |--------------------|----------------------------------------------------|
 /// | `NEXT t1,t2,…`     | `OK next=<argmax> logit=<v>` — full-prefix forward |
-/// | `STATS`            | `OK requests=… mean_batch=… mean_latency_ms=… sessions=… gen_tokens=… mean_lanes=… threads=… backend=… resident_bytes=…` |
+/// | `STATS`            | `OK requests=… mean_batch=… mean_latency_ms=… sessions=… gen_tokens=… mean_lanes=… prefill_jobs=… prefill_toks=… threads=… backend=… resident_bytes=…` |
 /// | `QUIT`             | closes the connection                              |
 ///
 /// **v2 — generation sessions (one session per connection):**
@@ -843,13 +1057,16 @@ impl Default for ServeOptions {
 /// | command                               | reply                         |
 /// |---------------------------------------|-------------------------------|
 /// | `OPEN`                                | `OK session=<id>`             |
-/// | `FEED t1,t2,…`                        | `OK fed len=<total>` (prefill)|
-/// | `GEN <n> [temp=…] [topk=…] [seed=…]`  | `n` × `TOK <id>` lines streamed as sampled, then `OK generated=<n> len=<total>` |
+/// | `FEED t1,t2,…`                        | `QUEUED <n>` — returns immediately; the prompt prefills in `--prefill-chunk`-token slices interleaved with decode ticks |
+/// | `GEN <n> [temp=…] [topk=…] [seed=…]`  | blocks until the session's queued prefill drains, then `n` × `TOK <id>` lines streamed as sampled, then `OK generated=<n> len=<total>` |
 /// | `CLOSE`                               | `OK closed len=<total>`       |
 ///
 /// Greedy `GEN` (`temp=0`, the default) is bit-identical to issuing `NEXT`
-/// with the growing prefix `n` times — the KV-cache correctness oracle.
-/// Disconnecting closes the session.
+/// with the growing prefix `n` times — the KV-cache correctness oracle
+/// (chunked prefill is itself bit-identical to one-shot prefill, so the
+/// oracle is independent of `--prefill-chunk`). Disconnecting closes the
+/// session, including mid-prefill: a queued or half-done FEED's cache is
+/// freed and its session slot reclaimed.
 ///
 /// Example transcript (`>` client, `<` server):
 ///
@@ -857,14 +1074,14 @@ impl Default for ServeOptions {
 /// > OPEN
 /// < OK session=1
 /// > FEED 5,6,7,8
-/// < OK fed len=4
+/// < QUEUED 4
 /// > GEN 3 temp=0.8 topk=8 seed=42
 /// < TOK 17
 /// < TOK 3
 /// < TOK 44
 /// < OK generated=3 len=7
 /// > STATS
-/// < OK requests=0 mean_batch=0.00 mean_latency_ms=0.000 sessions=1 gen_tokens=3 mean_lanes=1.00 threads=4 backend=fused resident_bytes=48768
+/// < OK requests=0 mean_batch=0.00 mean_latency_ms=0.000 sessions=1 gen_tokens=3 mean_lanes=1.00 prefill_jobs=1 prefill_toks=4 threads=4 backend=fused resident_bytes=48768
 /// > CLOSE
 /// < OK closed len=7
 /// > QUIT
@@ -961,6 +1178,7 @@ fn serve_lines(
                 out,
                 "OK requests={} mean_batch={:.2} mean_latency_ms={:.3} \
                  sessions={} gen_tokens={} mean_lanes={:.2} \
+                 prefill_jobs={} prefill_toks={} \
                  threads={} backend={} resident_bytes={}",
                 coord.metrics.requests.load(Ordering::Relaxed),
                 coord.metrics.mean_batch(),
@@ -968,6 +1186,8 @@ fn serve_lines(
                 coord.metrics.open_sessions.load(Ordering::Relaxed),
                 coord.metrics.gen_tokens.load(Ordering::Relaxed),
                 coord.metrics.mean_lanes(),
+                coord.metrics.prefill_jobs.load(Ordering::Relaxed),
+                coord.metrics.prefill_toks.load(Ordering::Relaxed),
                 coord.engine().threads(),
                 coord.engine().backend_name(),
                 coord.engine().resident_weight_bytes(),
@@ -1004,7 +1224,7 @@ fn serve_lines(
                 continue;
             };
             match parse_token_list(rest).and_then(|toks| coord.feed(s, toks)) {
-                Ok(len) => writeln!(out, "OK fed len={len}")?,
+                Ok(n) => writeln!(out, "QUEUED {n}")?,
                 Err(e) => writeln!(out, "ERR {e}")?,
             }
             continue;
@@ -1121,10 +1341,18 @@ mod tests {
             // worker survived: it answers again rather than blocking forever
             let err2 = coord.submit(vec![4, 5]).unwrap_err();
             assert!(err2.contains("panicked"), "{err2}");
-            // session path: FEED panics destroy the session but answer ERR
+            // session path: FEED queues fine (the engine has not run yet);
+            // the panic surfaces when its chunk executes, destroying the
+            // session — the GEN waiting on it gets a clean stream error
             let sid = coord.open_session().unwrap();
-            let ferr = coord.feed(sid, vec![1, 2]).unwrap_err();
-            assert!(ferr.contains("panicked"), "{ferr}");
+            assert_eq!(coord.feed(sid, vec![1, 2]).unwrap(), 2);
+            let events = coord.generate(sid, 2, SampleParams::default()).unwrap();
+            let gerr = events.recv().unwrap().unwrap_err();
+            assert!(
+                gerr.contains("panicked") || gerr.contains("unknown session"),
+                "{gerr}"
+            );
+            // the destroyed session is gone; the worker is still serving
             let ferr2 = coord.feed(sid, vec![1]).unwrap_err();
             assert!(ferr2.contains("unknown session"), "{ferr2}");
             coord.stop();
@@ -1154,6 +1382,144 @@ mod tests {
         // …and still stops cleanly
         coord.stop();
         assert!(coord.submit(vec![1]).is_err(), "stopped coordinator rejects");
+    }
+
+    /// Delegating engine whose prefill sleeps per call — pins "job still
+    /// draining" scheduler states deterministically in tests.
+    struct SlowPrefill {
+        inner: Arc<dyn BatchForward>,
+        delay: Duration,
+    }
+
+    impl BatchForward for SlowPrefill {
+        fn vocab(&self) -> usize {
+            self.inner.vocab()
+        }
+        fn max_seq(&self) -> usize {
+            self.inner.max_seq()
+        }
+        fn forward_batch(&self, batch: &[Vec<u8>]) -> Vec<Vec<f32>> {
+            self.inner.forward_batch(batch)
+        }
+        fn open_session(&self) -> KvCache {
+            self.inner.open_session()
+        }
+        fn prefill(&self, cache: &mut KvCache, tokens: &[u8]) -> Vec<f32> {
+            std::thread::sleep(self.delay);
+            self.inner.prefill(cache, tokens)
+        }
+        fn decode_step(&self, lanes: &mut [StepLane<'_>]) -> Vec<Vec<f32>> {
+            self.inner.decode_step(lanes)
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_scheduler_matches_monolithic_greedy() {
+        // the same prompt fed through a 3-token-per-tick scheduler and a
+        // monolithic one must stream identical greedy tokens (chunked
+        // prefill is bit-identical to one-shot prefill by construction)
+        let engine = tiny_engine();
+        let prompt: Vec<u8> = (0..17).map(|i| (i * 7 % 64) as u8).collect();
+        let run = |prefill_chunk: usize| -> Vec<u8> {
+            let coord = Coordinator::start(
+                engine.clone(),
+                BatcherConfig {
+                    prefill_chunk,
+                    ..Default::default()
+                },
+            );
+            let sid = coord.open_session().unwrap();
+            assert_eq!(coord.feed(sid, prompt.clone()).unwrap(), prompt.len());
+            let events = coord.generate(sid, 5, SampleParams::default()).unwrap();
+            let mut toks = Vec::new();
+            loop {
+                match events.recv().unwrap() {
+                    Ok(GenEvent::Token(t)) => toks.push(t),
+                    Ok(GenEvent::Done { len }) => {
+                        assert_eq!(len, prompt.len() + 5);
+                        break;
+                    }
+                    Err(e) => panic!("{e}"),
+                }
+            }
+            coord.close_session(sid).unwrap();
+            assert_eq!(coord.metrics.prefill_jobs.load(Ordering::Relaxed), 1);
+            assert_eq!(
+                coord.metrics.prefill_toks.load(Ordering::Relaxed),
+                prompt.len() as u64
+            );
+            coord.stop();
+            toks
+        };
+        assert_eq!(run(3), run(64), "chunked scheduler diverged from monolithic");
+    }
+
+    #[test]
+    fn feed_or_gen_on_a_still_prefilling_session_answers_clean_errors() {
+        let coord = Coordinator::start(
+            Arc::new(SlowPrefill {
+                inner: tiny_engine(),
+                delay: Duration::from_millis(5),
+            }),
+            BatcherConfig {
+                prefill_chunk: 1,
+                ..Default::default()
+            },
+        );
+        let sid = coord.open_session().unwrap();
+        assert_eq!(coord.feed(sid, vec![1; 30]).unwrap(), 30);
+        // ~150 ms of chunked prefill ahead; park a GEN behind it…
+        let events = coord.generate(sid, 3, SampleParams::default()).unwrap();
+        // …then a FEED and a second GEN race the still-draining job: both
+        // must answer clean errors (the waiting GEN pinned the token run)
+        let ferr = coord.feed(sid, vec![2]).unwrap_err();
+        assert!(ferr.contains("busy generating"), "{ferr}");
+        let e2 = coord.generate(sid, 1, SampleParams::default()).unwrap();
+        let gerr = e2.recv().unwrap().unwrap_err();
+        assert!(gerr.contains("busy generating"), "{gerr}");
+        // the parked GEN still runs to completion once the prefill drains
+        let mut got = 0;
+        loop {
+            match events.recv().unwrap() {
+                Ok(GenEvent::Token(_)) => got += 1,
+                Ok(GenEvent::Done { len }) => {
+                    assert_eq!(len, 33);
+                    break;
+                }
+                Err(e) => panic!("{e}"),
+            }
+        }
+        assert_eq!(got, 3);
+        assert_eq!(coord.metrics.prefill_toks.load(Ordering::Relaxed), 30);
+        coord.stop();
+    }
+
+    #[test]
+    fn close_mid_prefill_reclaims_the_session_slot() {
+        // a disconnecting client closes its session while its FEED is
+        // still queued/half-done: the cache is freed, queued tokens are
+        // dropped, and the session slot is reclaimed
+        let coord = Coordinator::start(
+            Arc::new(SlowPrefill {
+                inner: tiny_engine(),
+                delay: Duration::from_millis(5),
+            }),
+            BatcherConfig {
+                prefill_chunk: 1,
+                max_sessions: 1,
+                ..Default::default()
+            },
+        );
+        let sid = coord.open_session().unwrap();
+        assert_eq!(coord.feed(sid, vec![3; 40]).unwrap(), 40);
+        let closed_len = coord.close_session(sid).unwrap();
+        assert!(closed_len < 40, "close mid-prefill reported len {closed_len}");
+        assert_eq!(coord.metrics.open_sessions.load(Ordering::Relaxed), 0);
+        // the single session slot is free again and fully usable
+        let sid2 = coord.open_session().unwrap();
+        assert_eq!(coord.feed(sid2, vec![1, 2]).unwrap(), 2);
+        coord.close_session(sid2).unwrap();
+        coord.stop();
     }
 
     #[test]

@@ -467,7 +467,7 @@ mod tests {
         let sizes3: Vec<u128> = s3.classes.iter().map(|c| c.size).collect();
         let mut sorted3 = sizes3.clone();
         sorted3.sort();
-        assert_eq!(sorted3, vec![98304, 3108864, 5275648, 8290304]);
+        assert_eq!(sorted3, [98304, 3108864, 5275648, 8290304]);
         assert_eq!(s3.size, 16_773_120);
 
         let s4 = enumerate_shell(&g, 4);

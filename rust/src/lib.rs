@@ -68,8 +68,14 @@
 //!                             backend, now session-aware (open_session /
 //!                             prefill / decode_step over a slate of
 //!                             lanes / close_session) with a continuous-
-//!                             batching worker; STATS reports backend +
-//!                             resident weight bytes + session counters
+//!                             batching worker running a two-queue tick:
+//!                             one decode slate plus up to --prefill-chunk
+//!                             prompt tokens of queued FEED jobs per tick
+//!                             (pipelined chunked prefill — long prompts
+//!                             no longer stall active generations; FEED
+//!                             answers QUEUED immediately); STATS reports
+//!                             backend + resident weight bytes + session
+//!                             and prefill counters
 //! main (llvq pack/unpack/     CLI: produce, expand, inspect, serve, and
 //!       stats/serve/generate) generate from packed artifacts; serve
 //!                             --backend dense|cached|fused selects the

@@ -16,8 +16,11 @@
 //!   load / lazily decoded on first touch / matvec over the bit-packed
 //!   code streams — no dense materialization at all), `--threads` sizes
 //!   the persistent kernel pool the fused matmul and cached first-touch
-//!   decode row-shard over, `--max-sessions` / `--max-conns` bound the
-//!   session and connection pools.
+//!   decode row-shard over, `--prefill-chunk` bounds the prompt tokens a
+//!   queued FEED may prefill per scheduler tick (pipelined
+//!   prefill-while-decoding: a long prompt no longer stalls active
+//!   generations), `--max-sessions` / `--max-conns` bound the session and
+//!   connection pools.
 //! * `generate` — KV-cached local generation from a prompt (greedy /
 //!   temperature / top-k, seeded), over any backend (`--threads` as in
 //!   `serve`).
@@ -659,6 +662,11 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
         .flag("threads", "0", "kernel worker threads for the packed backends (0 = auto)")
         .flag("max-batch", "8", "dynamic batch limit / decode-slate width")
         .flag("max-wait-ms", "2", "batch window")
+        .flag(
+            "prefill-chunk",
+            "64",
+            "prompt tokens a queued FEED prefills per scheduler tick",
+        )
         .flag("max-sessions", "64", "concurrently open generation sessions")
         .flag("max-conns", "64", "concurrent TCP connections (ERR busy beyond)")
         .switch("allow-random", "serve random weights if artifact missing")
@@ -675,6 +683,7 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
             max_batch: a.get_usize("max-batch"),
             max_wait: std::time::Duration::from_millis(a.get_u64("max-wait-ms")),
             max_sessions: a.get_usize("max-sessions"),
+            prefill_chunk: a.get_usize("prefill-chunk").max(1),
         },
     );
     let addr = a.get("addr").unwrap();

@@ -120,13 +120,13 @@ mod tests {
     #[test]
     fn fwht_matches_definition_small() {
         // H2 = [[1,1],[1,-1]]
-        let mut v = vec![3.0, 5.0];
+        let mut v = [3.0, 5.0];
         fwht(&mut v);
-        assert_eq!(v, vec![8.0, -2.0]);
+        assert_eq!(v, [8.0, -2.0]);
         // H4 on a unit vector gives a ±1 column
-        let mut e = vec![0.0, 1.0, 0.0, 0.0];
+        let mut e = [0.0, 1.0, 0.0, 0.0];
         fwht(&mut e);
-        assert_eq!(e, vec![1.0, -1.0, 1.0, -1.0]);
+        assert_eq!(e, [1.0, -1.0, 1.0, -1.0]);
     }
 
     #[test]

@@ -24,7 +24,10 @@
 //!   weight bytes equal the on-disk code bytes (+ f64 column scales when
 //!   fine-tuning was enabled). Its `matmul_into` decodes each row **once
 //!   per call** and dots it against every activation lane — the decode
-//!   cost of a batched decode step (or a long prefill) is amortized across
+//!   cost of a batched decode step (or a prefill run: the scheduler's
+//!   chunk-sized prefills arrive here as `linear_batch` calls with
+//!   `n = chunk_len`, so each chunk amortizes its row decodes across all
+//!   its positions exactly like a slate does) is amortized across
 //!   the whole slate, bit-identically to per-lane matvecs — and the row
 //!   loop is **sharded across a persistent worker pool** (the backend's
 //!   `--threads` knob): rows accumulate independently, so any thread count

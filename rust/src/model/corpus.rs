@@ -132,7 +132,7 @@ mod tests {
         // pinned in python/tests/test_corpus.py as GOLDEN_1234
         let mut c = Corpus::new(1234);
         let (t, _) = c.generate(12);
-        assert_eq!(t, vec![58, 7, 5, 18, 19, 22, 32, 43, 37, 28, 52, 21]);
+        assert_eq!(t, [58, 7, 5, 18, 19, 22, 32, 43, 37, 28, 52, 21]);
     }
 
     #[test]

@@ -15,7 +15,9 @@
 //! ## Incremental decoding
 //!
 //! Generation sessions run through a [`KvCache`]: [`prefill`] appends a
-//! token run and returns last-position logits, [`forward_step`] /
+//! token run and returns last-position logits ([`prefill_chunked`] does
+//! the same in bounded resumable chunks — the serving scheduler's
+//! pipelined-prefill unit), [`forward_step`] /
 //! [`forward_step_batch`] append one token (per lane) and return its
 //! logits. Both paths execute the exact float-op sequence of the full
 //! [`forward`] pass — `forward` itself is implemented over a scratch
@@ -343,6 +345,21 @@ impl KvCache {
         self.len = 0;
     }
 
+    /// Err when appending `n` more tokens would overflow this cache — the
+    /// capacity check every append path shares ([`run_blocks`] panics on
+    /// it; the serving scheduler calls it up front so an oversized FEED is
+    /// a clean protocol error instead of a worker panic).
+    pub fn check_append(&self, n: usize) -> Result<(), String> {
+        if self.len + n <= self.max_seq {
+            Ok(())
+        } else {
+            Err(format!(
+                "sequence of {n} tokens at position {} exceeds cache capacity {}",
+                self.len, self.max_seq
+            ))
+        }
+    }
+
     fn layer_offset(&self, li: usize) -> usize {
         li * self.max_seq * self.d_model
     }
@@ -420,12 +437,9 @@ fn run_blocks<M: ForwardOps + ?Sized>(
     let (s, d) = (tokens.len(), cfg.d_model);
     let base = cache.len;
     assert!(s > 0, "empty token sequence");
-    assert!(
-        base + s <= cache.max_seq,
-        "sequence of {} tokens at position {base} exceeds cache capacity {}",
-        s,
-        cache.max_seq
-    );
+    if let Err(e) = cache.check_append(s) {
+        panic!("{e}");
+    }
     cache.check_model(cfg);
     let hd = cfg.head_dim();
     let nh = cfg.n_heads;
@@ -562,6 +576,29 @@ pub fn prefill<M: ForwardOps + ?Sized>(
     logits
 }
 
+/// Resumable chunked prefill: append `tokens` through repeated [`prefill`]
+/// calls of at most `chunk` tokens each, returning the logits at the last
+/// position. Because `prefill` is incremental by construction (every chunk
+/// replays the same [`run_blocks`] float-op sequence at the same
+/// positions), this is **bit-identical** to one-shot `prefill` for every
+/// chunk size — the property the coordinator's pipelined prefill scheduler
+/// rests on, pinned across quantizer specs and thread counts by proptests
+/// in `rust/tests/generation.rs`.
+pub fn prefill_chunked<M: ForwardOps + ?Sized>(
+    m: &M,
+    cache: &mut KvCache,
+    tokens: &[u8],
+    chunk: usize,
+) -> Vec<f32> {
+    assert!(!tokens.is_empty(), "empty token sequence");
+    let chunk = chunk.max(1);
+    let mut logits = Vec::new();
+    for c in tokens.chunks(chunk) {
+        logits = prefill(m, cache, c);
+    }
+    logits
+}
+
 /// Append one token to a session and return its logits — the single-lane
 /// decode step (see [`forward_step_batch`] for the slate version).
 pub fn forward_step<M: ForwardOps + ?Sized>(
@@ -604,11 +641,9 @@ pub fn forward_step_batch<M: ForwardOps + ?Sized>(
         assert!(tok < cfg.vocab, "token id {tok} >= vocab {}", cfg.vocab);
         lane.cache.check_model(cfg);
         let p = lane.cache.len;
-        assert!(
-            p < lane.cache.max_seq,
-            "session full (capacity {})",
-            lane.cache.max_seq
-        );
+        if let Err(e) = lane.cache.check_append(1) {
+            panic!("{e}");
+        }
         for i in 0..d {
             h[l * d + i] = tok_emb[tok * d + i] + pos_emb[p * d + i];
         }
@@ -861,6 +896,38 @@ mod tests {
     }
 
     #[test]
+    fn chunked_prefill_matches_one_shot_bitwise() {
+        // the scheduler's pipelined prefill slices a prompt into chunks;
+        // every chunk size must reproduce the one-shot logits bit for bit
+        let cfg = config_by_name("qwen3-4b-tiny").unwrap();
+        let w = Weights::random(&cfg, 23);
+        let toks: Vec<u8> = (0..33).map(|i| (i * 11 % 64) as u8).collect();
+        let mut one = KvCache::new(&cfg);
+        let want = prefill(&w, &mut one, &toks);
+        for chunk in [1usize, 3, 8, 64] {
+            let mut c = KvCache::new(&cfg);
+            let got = prefill_chunked(&w, &mut c, &toks, chunk);
+            assert_eq!(c.len(), toks.len());
+            assert!(
+                want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "chunk={chunk} diverged from one-shot prefill"
+            );
+        }
+    }
+
+    #[test]
+    fn check_append_guards_capacity() {
+        let cfg = config_by_name("qwen3-4b-tiny").unwrap();
+        let mut cache = KvCache::with_capacity(&cfg, 4);
+        assert!(cache.check_append(4).is_ok());
+        assert!(cache.check_append(5).is_err());
+        let w = Weights::random(&cfg, 3);
+        prefill(&w, &mut cache, &[1, 2, 3]);
+        assert!(cache.check_append(1).is_ok());
+        assert!(cache.check_append(2).is_err());
+    }
+
+    #[test]
     #[should_panic(expected = "exceeds cache capacity")]
     fn step_past_capacity_panics() {
         let cfg = config_by_name("qwen3-4b-tiny").unwrap();
@@ -876,8 +943,8 @@ mod tests {
     fn loss_of_uniform_logits_is_log_vocab() {
         let vocab = 64;
         let logits = vec![0f32; 10 * vocab];
-        let targets = vec![5u8; 10];
-        let mask = vec![false; 10];
+        let targets = [5u8; 10];
+        let mask = [false; 10];
         let (nll, _, _) = sequence_loss(&logits, &targets, &mask, vocab);
         assert!((nll - (vocab as f64).ln()).abs() < 1e-9);
     }

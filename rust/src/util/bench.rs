@@ -53,9 +53,25 @@ pub struct Bench {
     pub num_samples: usize,
 }
 
+/// True when `LLVQ_BENCH_SMOKE` is set (to anything but `0`): CI's
+/// bench-smoke tier runs every harness with shrunken sample counts and
+/// model/codebook dims so every `BENCH_*.json` artifact is produced on
+/// each PR in seconds. Harnesses tag their JSON rows with `"smoke": true`
+/// in this mode, so trajectory readers can tell the tiers apart.
+pub fn smoke() -> bool {
+    std::env::var("LLVQ_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
 impl Default for Bench {
     fn default() -> Self {
         // Keep whole-suite runtime reasonable; override via env for deep runs.
+        if smoke() {
+            return Self {
+                warmup: Duration::from_millis(10),
+                min_batch_time: Duration::from_millis(5),
+                num_samples: 2,
+            };
+        }
         let quick = std::env::var("LLVQ_BENCH_QUICK").is_ok();
         Self {
             warmup: Duration::from_millis(if quick { 50 } else { 300 }),

@@ -5,18 +5,43 @@
 //! `check_with_seed`. Used by `rust/tests/proptests.rs` to pin the crate's
 //! core invariants (index bijectivity, decoder optimality, pipeline
 //! conservation laws).
+//!
+//! ## Persisted regression seeds
+//!
+//! Mirroring the `proptest` crate's `proptest-regressions/` convention,
+//! [`check`] replays recorded seeds **before** generating fresh random
+//! cases. When a property fails, the panic message prints the failing
+//! seed; to pin it forever, append that seed to
+//! `proptest-regressions/<stem>.seeds` at the repo root and commit the
+//! file — CI then replays every recorded failure on every run, so a
+//! once-found bug cannot silently regress. `<stem>` is the property name
+//! passed to `check` with every character outside `[A-Za-z0-9._-]`
+//! replaced by `-` (so `check("codec roundtrip", …)` reads
+//! `codec-roundtrip.seeds`). One seed per line, decimal or `0x`-prefixed
+//! hex; `#` starts a comment. See `proptest-regressions/README.md`.
 
 use crate::util::rng::Xoshiro256pp;
 
 /// Outcome of a property over one generated case.
 pub type CaseResult = Result<(), String>;
 
-/// Run `prop` over `cases` generated cases. Panics with the failing case
-/// seed and message on the first violation.
+/// Run `prop` over any recorded regression seeds (see the module docs)
+/// and then `cases` generated cases. Panics with the failing case seed
+/// and message on the first violation.
 pub fn check<F>(name: &str, cases: u64, mut prop: F)
 where
     F: FnMut(&mut Xoshiro256pp) -> CaseResult,
 {
+    for seed in regression_seeds(name) {
+        let mut rng = Xoshiro256pp::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on RECORDED regression seed {seed:#x} \
+                 (proptest-regressions/{}.seeds): {msg}",
+                seeds_file_stem(name)
+            );
+        }
+    }
     let base = base_seed();
     for case in 0..cases {
         let seed = base ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
@@ -46,6 +71,46 @@ fn base_seed() -> u64 {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(0xC0FFEE_5EED)
+}
+
+/// Parse a `proptest-regressions` seeds file: one u64 per line, decimal
+/// or `0x`-prefixed hex; blank lines and `#` comments are skipped, as are
+/// unparseable lines (a malformed seed must not mask the real property).
+fn parse_seeds(text: &str) -> Vec<u64> {
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .filter_map(|l| match l.strip_prefix("0x") {
+            Some(h) => u64::from_str_radix(h, 16).ok(),
+            None => l.parse().ok(),
+        })
+        .collect()
+}
+
+/// File stem for a property name: every character outside `[A-Za-z0-9._-]`
+/// becomes `-`.
+fn seeds_file_stem(name: &str) -> String {
+    name.chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-') {
+                c
+            } else {
+                '-'
+            }
+        })
+        .collect()
+}
+
+/// Seeds recorded for `name` under the committed `proptest-regressions/`
+/// directory at the crate root (empty when no file exists).
+fn regression_seeds(name: &str) -> Vec<u64> {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("proptest-regressions")
+        .join(format!("{}.seeds", seeds_file_stem(name)));
+    match std::fs::read_to_string(path) {
+        Ok(text) => parse_seeds(&text),
+        Err(_) => Vec::new(),
+    }
 }
 
 /// Run `f` with the global panic hook silenced (for tests that provoke
@@ -125,6 +190,16 @@ mod tests {
         let a = TempArtifact::new("proptest-guard", "llvqm");
         let b = TempArtifact::new("proptest-guard", "llvqm");
         assert_ne!(a.path(), b.path());
+    }
+
+    #[test]
+    fn seeds_files_parse_and_stems_sanitize() {
+        let text = "# shrunk failures\n12345\n0xC0FFEE5EED\n\n  0x10  \nnot-a-seed\n";
+        assert_eq!(parse_seeds(text), vec![12345, 0xC0FF_EE5E_ED, 0x10]);
+        assert_eq!(seeds_file_stem("codec roundtrip (v2)"), "codec-roundtrip--v2-");
+        assert_eq!(seeds_file_stem("pool-parity-t4"), "pool-parity-t4");
+        // no file recorded → no replays
+        assert!(regression_seeds("no-such-property-ever").is_empty());
     }
 
     #[test]

@@ -190,7 +190,7 @@ mod tests {
     fn permutation_is_permutation() {
         let mut r = Xoshiro256pp::new(3);
         let p = r.permutation(100);
-        let mut seen = vec![false; 100];
+        let mut seen = [false; 100];
         for &i in &p {
             assert!(!seen[i]);
             seen[i] = true;

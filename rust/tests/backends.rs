@@ -229,7 +229,7 @@ fn fused_tcp_serving_matches_dense_oracle_within_packed_resident_bytes() {
     assert!(fused.resident_weight_bytes() < art.packed.linear_params());
 
     // dense-oracle answer for the request below
-    let toks: Vec<u8> = vec![5, 6, 7, 8, 9];
+    let toks = [5u8, 6, 7, 8, 9];
     let mut cap = ActivationCapture::default();
     let oracle = forward(&art.weights, &toks, &mut cap);
     let vocab = art.weights.cfg.vocab;

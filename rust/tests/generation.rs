@@ -14,7 +14,7 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 
 use llvq::coordinator::{
-    serve_tcp_opts, BackendEngine, BatcherConfig, Coordinator, ServeOptions,
+    serve_tcp_opts, BackendEngine, BatchForward, BatcherConfig, Coordinator, ServeOptions,
 };
 use llvq::leech::index::LeechIndexer;
 use llvq::model::backend::ExecutionBackend;
@@ -22,8 +22,8 @@ use llvq::model::config::config_by_name;
 use llvq::model::packed::PackedFile;
 use llvq::model::sample::argmax;
 use llvq::model::transformer::{
-    forward, forward_step, forward_step_batch, prefill, ActivationCapture, ForwardOps, KvCache,
-    StepLane, Weights,
+    forward, forward_step, forward_step_batch, prefill, prefill_chunked, ActivationCapture,
+    ForwardOps, KvCache, StepLane, Weights,
 };
 use llvq::pipeline::driver::{quantize_model_packed, PtqArtifacts, PtqOptions};
 use llvq::pipeline::rotation::RotationMode;
@@ -218,6 +218,129 @@ fn slate_decode_is_thread_count_invariant_on_fused() {
     }
 }
 
+#[test]
+fn prop_chunked_prefill_is_bit_identical_across_specs_and_threads() {
+    // the pipelined-prefill scheduler's foundation: slicing a prompt into
+    // resumable chunks must reproduce one-shot prefill logits bit for bit
+    // on every quantizer spec, on the fused backend at 1 and 4 kernel
+    // threads (and on the dense oracle), for every chunk size
+    for (i, (name, q)) in five_quantizers().into_iter().enumerate() {
+        let art = pack_tiny(q.as_ref(), 700 + i as u64, i % 2 == 1);
+        let tmp = save_temp(&art, &format!("chunked-{name}"));
+        let dense = ExecutionBackend::dense(art.weights.clone());
+        let fused1 =
+            ExecutionBackend::packed_fused(PackedFile::open(tmp.path()).unwrap(), 1).unwrap();
+        let fused4 =
+            ExecutionBackend::packed_fused(PackedFile::open(tmp.path()).unwrap(), 4).unwrap();
+        let backends: [(&str, &dyn ForwardOps); 3] =
+            [("dense", &dense), ("fused-t1", &fused1), ("fused-t4", &fused4)];
+        check(&format!("chunked-prefill-{name}"), 3, |rng| {
+            let plen = 2 + rng.next_range(40) as usize;
+            let prompt: Vec<u8> = (0..plen).map(|_| rng.next_range(64) as u8).collect();
+            let chunk = 1 + rng.next_range(9) as usize;
+            for &(label, m) in &backends {
+                let mut one = KvCache::new(m.cfg());
+                let want = prefill(m, &mut one, &prompt);
+                let mut chunked = KvCache::new(m.cfg());
+                let got = prefill_chunked(m, &mut chunked, &prompt, chunk);
+                if chunked.len() != prompt.len() {
+                    return Err(format!("{name}/{label}: chunked cache length drifted"));
+                }
+                if want.iter().zip(&got).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                    return Err(format!(
+                        "{name}/{label}: chunk={chunk} diverged from one-shot prefill"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
+/// Engine wrapper whose prefill sleeps per call, so mid-prefill states
+/// stay observable over TCP.
+struct SlowPrefill {
+    inner: BackendEngine,
+    delay: std::time::Duration,
+}
+
+impl BatchForward for SlowPrefill {
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+    fn max_seq(&self) -> usize {
+        self.inner.max_seq()
+    }
+    fn forward_batch(&self, batch: &[Vec<u8>]) -> Vec<Vec<f32>> {
+        self.inner.forward_batch(batch)
+    }
+    fn open_session(&self) -> KvCache {
+        self.inner.open_session()
+    }
+    fn prefill(&self, cache: &mut KvCache, tokens: &[u8]) -> Vec<f32> {
+        std::thread::sleep(self.delay);
+        self.inner.prefill(cache, tokens)
+    }
+    fn decode_step(&self, lanes: &mut [StepLane<'_>]) -> Vec<Vec<f32>> {
+        self.inner.decode_step(lanes)
+    }
+}
+
+#[test]
+fn disconnect_mid_prefill_frees_the_session_slot_over_tcp() {
+    // a client that drops its connection while its FEED is still
+    // queued/half-done must not leak the session: the cache is freed and
+    // the (single) session slot becomes claimable again
+    let cfg = config_by_name("qwen3-4b-tiny").unwrap();
+    let engine = SlowPrefill {
+        inner: BackendEngine::dense(Weights::random(&cfg, 8)),
+        delay: std::time::Duration::from_millis(5),
+    };
+    let coord = Coordinator::start(
+        Arc::new(engine),
+        BatcherConfig {
+            prefill_chunk: 1,
+            max_sessions: 1,
+            ..Default::default()
+        },
+    );
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let c2 = coord.clone();
+    std::thread::spawn(move || {
+        let _ = serve_tcp_opts(c2, listener, ServeOptions { max_conns: 4 });
+    });
+
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        writeln!(s, "OPEN").unwrap();
+        assert!(read_line(&mut r).starts_with("OK session="));
+        let toks: Vec<String> = (0..40).map(|i| (i % 64).to_string()).collect();
+        writeln!(s, "FEED {}", toks.join(",")).unwrap();
+        assert_eq!(read_line(&mut r), "QUEUED 40");
+        // drop the connection with ~200 ms of prefill still queued
+    }
+    // the server-side cleanup closes the session; the slot must free
+    let mut reclaimed = false;
+    for _ in 0..200 {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        let mut s = match TcpStream::connect(addr) {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        writeln!(s, "OPEN").unwrap();
+        if read_line(&mut r).starts_with("OK session=") {
+            reclaimed = true;
+            writeln!(s, "QUIT").unwrap();
+            break;
+        }
+    }
+    assert!(reclaimed, "session slot never reclaimed after mid-prefill disconnect");
+    coord.stop();
+}
+
 fn read_line(r: &mut BufReader<TcpStream>) -> String {
     let mut line = String::new();
     r.read_line(&mut line).unwrap();
@@ -239,7 +362,7 @@ fn run_tcp_session(
     assert!(l.starts_with("OK session="), "{l}");
     writeln!(s, "FEED {prefix}").unwrap();
     let l = read_line(&mut r);
-    assert!(l.starts_with("OK fed len="), "{l}");
+    assert!(l.starts_with("QUEUED "), "{l}");
     writeln!(s, "GEN {n}{gen_args}").unwrap();
     let mut toks = Vec::new();
     loop {

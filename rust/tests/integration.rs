@@ -74,10 +74,7 @@ fn angular_decoder_exact_on_shell2_bruteforce() {
             let dot: f64 = p.iter().zip(u.iter()).map(|(&a, &b)| a as f64 * b).sum();
             dot // all shell-2 points share a norm → dot ranking == cosine
         };
-        let best = all
-            .iter()
-            .map(|p| cos_of(p))
-            .fold(f64::NEG_INFINITY, f64::max);
+        let best = all.iter().map(cos_of).fold(f64::NEG_INFINITY, f64::max);
         if (cos_of(&got.point) - best).abs() < 1e-9 {
             exact += 1;
         }

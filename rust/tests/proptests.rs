@@ -187,7 +187,7 @@ fn prop_spd_solve_residual() {
             return Err("damped Gram matrix not SPD".into());
         }
         let b: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
-        let x = solve_spd(&a, &b).map_err(|e| e)?;
+        let x = solve_spd(&a, &b)?;
         let r = a.matvec(&x);
         for (ri, bi) in r.iter().zip(&b) {
             if (ri - bi).abs() > 1e-6 {

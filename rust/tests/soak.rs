@@ -1,0 +1,194 @@
+//! Scheduler soak/stress tier: many concurrent v2 sessions with mixed
+//! long FEEDs and GENs over TCP, including mid-prefill and mid-GEN
+//! disconnects, against the fused backend with a small `prefill_chunk`
+//! (so every long prompt crosses many scheduler ticks).
+//!
+//! Assertions: no `ERR` on any well-formed command, no generation stall
+//! longer than `STALL_LIMIT` (the "no stall > N ticks" bound, expressed
+//! in wall time because ticks are not observable over the wire), every
+//! session's slot is reclaimed (STATS drains to `sessions=0`), and
+//! `Coordinator::stop` returns — a clean drain, not a hang.
+//!
+//! The test is `#[ignore]`d: it runs in CI's dedicated soak job via
+//! `cargo test --release --test soak -- --ignored` under an
+//! `LLVQ_THREADS ∈ {1, 4}` matrix (the kernel pool reads that env var
+//! through `threadpool::default_threads`), not in the tier-1 suite.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use llvq::coordinator::{serve_tcp_opts, BackendEngine, BatcherConfig, Coordinator, ServeOptions};
+use llvq::model::backend::ExecutionBackend;
+use llvq::model::config::config_by_name;
+use llvq::model::packed::PackedFile;
+use llvq::model::transformer::Weights;
+use llvq::pipeline::driver::{quantize_model_packed, PtqOptions};
+use llvq::pipeline::rotation::RotationMode;
+use llvq::quant::scalar::UniformQuantizer;
+use llvq::util::proptest::TempArtifact;
+
+/// Worst tolerable gap between two TOK lines of one GEN (generous for
+/// loaded CI runners; a monolithic-prefill stall of a whole long prompt
+/// slate-wide would still sit far below this on the tiny model, so the
+/// bound guards against scheduler hangs, not micro-latency).
+const STALL_LIMIT: Duration = Duration::from_secs(20);
+
+fn read_line(r: &mut BufReader<TcpStream>) -> String {
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    line.trim().to_string()
+}
+
+/// One full client round; panics on any ERR or stall. Returns streamed
+/// token count.
+fn client_round(addr: std::net::SocketAddr, seed: u64, feed_len: usize, gen_n: usize) -> usize {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    writeln!(s, "OPEN").unwrap();
+    let l = read_line(&mut r);
+    assert!(l.starts_with("OK session="), "OPEN: {l}");
+    // mixed chunked FEED: half the prompt, then the rest while the first
+    // half's job may still be draining
+    let toks: Vec<String> = (0..feed_len).map(|i| ((seed as usize + i) % 64).to_string()).collect();
+    let split = feed_len / 2;
+    for part in [&toks[..split], &toks[split..]] {
+        if part.is_empty() {
+            continue;
+        }
+        writeln!(s, "FEED {}", part.join(",")).unwrap();
+        let l = read_line(&mut r);
+        assert!(l.starts_with("QUEUED "), "FEED: {l}");
+    }
+    writeln!(s, "GEN {gen_n} temp=0.8 topk=8 seed={seed}").unwrap();
+    let mut got = 0usize;
+    let mut last = Instant::now();
+    loop {
+        let l = read_line(&mut r);
+        if l.starts_with("TOK ") {
+            assert!(
+                last.elapsed() < STALL_LIMIT,
+                "stall of {:?} between tokens",
+                last.elapsed()
+            );
+            last = Instant::now();
+            got += 1;
+        } else {
+            assert!(l.starts_with(&format!("OK generated={gen_n}")), "GEN end: {l}");
+            break;
+        }
+    }
+    writeln!(s, "CLOSE").unwrap();
+    let l = read_line(&mut r);
+    assert!(l.starts_with("OK closed len="), "CLOSE: {l}");
+    writeln!(s, "QUIT").unwrap();
+    got
+}
+
+/// A client that walks away mid-flight: after FEED (mid-prefill) on even
+/// seeds, after issuing GEN but before reading the stream on odd seeds.
+fn rude_client(addr: std::net::SocketAddr, seed: u64) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    writeln!(s, "OPEN").unwrap();
+    let l = read_line(&mut r);
+    assert!(l.starts_with("OK session="), "OPEN: {l}");
+    let toks: Vec<String> = (0..40).map(|i| ((seed as usize + i) % 64).to_string()).collect();
+    writeln!(s, "FEED {}", toks.join(",")).unwrap();
+    let l = read_line(&mut r);
+    assert!(l.starts_with("QUEUED "), "FEED: {l}");
+    if seed % 2 == 1 {
+        writeln!(s, "GEN 8 temp=0.9 seed={seed}").unwrap();
+    }
+    // drop without CLOSE/QUIT: the server must reclaim the session
+}
+
+#[test]
+#[ignore = "soak tier: run via CI's soak job (cargo test --test soak -- --ignored)"]
+fn soak_mixed_long_feeds_and_gens_over_tcp() {
+    // fused backend so the LLVQ_THREADS matrix exercises the kernel pool
+    // under the scheduler; UniformQuantizer keeps the one-time PTQ cheap
+    let cfg = config_by_name("qwen3-4b-tiny").unwrap();
+    let w = Weights::random(&cfg, 4242);
+    let q = UniformQuantizer::new_gaussian_optimal(4);
+    let opts = PtqOptions {
+        calib_seqs: 2,
+        rotation: RotationMode::Input,
+        ..Default::default()
+    };
+    let art = quantize_model_packed(&w, &q, &opts);
+    let tmp = TempArtifact::new("soak", "llvqm");
+    art.packed.save(tmp.path()).unwrap();
+    let threads = llvq::util::threadpool::default_threads();
+    let fused =
+        ExecutionBackend::packed_fused(PackedFile::open(tmp.path()).unwrap(), threads).unwrap();
+    println!("soak: fused backend, {threads} kernel threads (LLVQ_THREADS matrix)");
+
+    let coord = Coordinator::start(
+        Arc::new(BackendEngine { backend: fused }),
+        BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            max_sessions: 48,
+            prefill_chunk: 4, // long FEEDs cross many ticks
+        },
+    );
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let c2 = coord.clone();
+    std::thread::spawn(move || {
+        let _ = serve_tcp_opts(c2, listener, ServeOptions { max_conns: 48 });
+    });
+
+    let clients = 8usize;
+    let rounds = 3usize;
+    std::thread::scope(|sc| {
+        for c in 0..clients {
+            sc.spawn(move || {
+                for round in 0..rounds {
+                    let seed = (c * 100 + round) as u64;
+                    // prompt length 16..=44, generation 4..=8 (≤ max_seq 64)
+                    let feed_len = 16 + (seed as usize * 7) % 29;
+                    let gen_n = 4 + (seed as usize) % 5;
+                    let got = client_round(addr, seed, feed_len, gen_n);
+                    assert_eq!(got, gen_n, "client {c} round {round} lost tokens");
+                }
+            });
+        }
+        // a rude cohort disconnecting mid-prefill / mid-GEN, concurrently
+        for c in 0..4u64 {
+            sc.spawn(move || rude_client(addr, c));
+        }
+    });
+
+    // every slot must come back: disconnect cleanup is asynchronous, so
+    // poll STATS until sessions=0 (bounded)
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut drained = false;
+    while Instant::now() < deadline {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        writeln!(s, "STATS").unwrap();
+        let l = read_line(&mut r);
+        assert!(l.starts_with("OK "), "STATS: {l}");
+        writeln!(s, "QUIT").unwrap();
+        if l.split_whitespace().any(|kv| kv == "sessions=0") {
+            drained = true;
+            // the scheduler really ran chunked prefill work
+            let toks: u64 = l
+                .split_whitespace()
+                .find_map(|kv| kv.strip_prefix("prefill_toks="))
+                .expect("prefill_toks in STATS")
+                .parse()
+                .unwrap();
+            assert!(toks > 0, "no prefill work recorded: {l}");
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert!(drained, "sessions never drained to 0 after the storm");
+    // clean drain on stop: returns instead of hanging, then rejects
+    coord.stop();
+    assert!(coord.submit(vec![1, 2]).is_err(), "stopped coordinator must reject");
+}

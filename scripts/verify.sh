@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
 # Repo verification gate: build, tests, and a warnings-as-errors clippy
-# pass. CI and pre-merge checks run exactly this.
+# pass over EVERY target (lib, bins, examples, integration tests, and the
+# bench harnesses — which tier-1 `cargo test` never compiles). CI and
+# pre-merge checks run exactly this.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 cargo build --release
 cargo test -q
-cargo clippy -q -- -D warnings
+cargo clippy -q --all-targets -- -D warnings
