@@ -8,8 +8,10 @@
 //! Besides the human-readable report, every backend measurement lands as a
 //! JSON row in `BENCH_serving.json`, every generation measurement in
 //! `BENCH_generation.json`, the kernel thread-scaling sweep (fused and
-//! cached × 1/2/4/8 pool threads × single-lane and 8-lane slate) in
-//! `BENCH_kernel.json`, and the pipelined-prefill scheduler comparison
+//! cached × 1/2/4/8 pool threads × single-lane and 8-lane slate, every
+//! row tagged with the `simd` kernel it dispatched) plus the
+//! forced-scalar-vs-auto-detected SIMD comparison in `BENCH_kernel.json`,
+//! and the pipelined-prefill scheduler comparison
 //! (time-to-first-token + active-lane throughput while a long prompt
 //! prefills, chunked vs monolithic) in `BENCH_prefill.json` (override with
 //! `LLVQ_BENCH_OUT` / `LLVQ_BENCH_GEN_OUT` / `LLVQ_BENCH_KERNEL_OUT` /
@@ -34,6 +36,7 @@ use llvq::model::transformer::{
 };
 use llvq::pipeline::driver::{quantize_model_packed, PtqOptions};
 use llvq::pipeline::rotation::RotationMode;
+use llvq::quant::kernel::Kernel;
 use llvq::quant::llvq::LlvqShapeGain;
 use llvq::util::bench::{black_box, Bench, BenchResult};
 use llvq::util::json::Json;
@@ -420,6 +423,7 @@ fn main() {
                 ("threads", Json::Int(t as i64)),
                 ("lanes", Json::Int(1)),
                 ("cold", Json::Bool(false)),
+                ("simd", Json::Str(backend.simd().label().into())),
                 ("tok_per_s", Json::Num(gen_n as f64 / r.mean)),
                 ("ms_per_tok", Json::Num(r.mean * 1e3 / gen_n as f64)),
             ],
@@ -443,6 +447,7 @@ fn main() {
                 ("threads", Json::Int(t as i64)),
                 ("lanes", Json::Int(lanes_n as i64)),
                 ("cold", Json::Bool(false)),
+                ("simd", Json::Str(backend.simd().label().into())),
                 ("tok_per_s", Json::Num(total / r.mean)),
                 ("ms_per_tok", Json::Num(r.mean * 1e3 / total)),
             ],
@@ -469,6 +474,7 @@ fn main() {
                 ("threads", Json::Int(t as i64)),
                 ("lanes", Json::Int(1)),
                 ("cold", Json::Bool(true)),
+                ("simd", Json::Str("scalar".into())),
                 ("tok_per_s", Json::Num(gen_n as f64 / r.mean)),
                 ("ms_per_tok", Json::Num(r.mean * 1e3 / gen_n as f64)),
             ],
@@ -493,10 +499,63 @@ fn main() {
                 ("threads", Json::Int(t as i64)),
                 ("lanes", Json::Int(lanes_n as i64)),
                 ("cold", Json::Bool(true)),
+                ("simd", Json::Str("scalar".into())),
                 ("tok_per_s", Json::Num(total / r.mean)),
                 ("ms_per_tok", Json::Num(r.mean * 1e3 / total)),
             ],
         ));
+    }
+
+    // ---- simd: forced-scalar vs auto-detected fused kernel at t=1 ----
+    // the tentpole acceptance comparison: same artifact, one pool thread,
+    // only the dispatched kernel differs. When runtime detection lands on
+    // the scalar oracle anyway (no AVX2/NEON and portable_simd off) there
+    // is nothing to compare against, so only the forced-scalar row lands.
+    {
+        println!("\n== simd: forced-scalar vs auto-detected kernel (fused, t=1) ==");
+        let auto = Kernel::detect();
+        let mut kinds = vec![Kernel::Scalar];
+        if auto != Kernel::Scalar {
+            kinds.push(auto);
+        }
+        let mut tok_s: Vec<(Kernel, f64)> = Vec::new();
+        for kind in kinds {
+            let backend =
+                ExecutionBackend::packed_fused_kernel(PackedFile::open(&path).unwrap(), 1, kind)
+                    .unwrap();
+            {
+                // warm the worker and its scratch slot
+                let mut cache = KvCache::new(backend.cfg());
+                black_box(prefill(&backend, &mut cache, &prompt));
+            }
+            let label = kind.label();
+            let r = bq.run(&format!("fused {label} t=1: kv gen ({gen_n} tok, 1 lane)"), || {
+                gen_kv(&backend, &prompt, gen_n);
+            });
+            let tps = gen_n as f64 / r.mean;
+            println!("fused {label} t=1: {tps:.1} tok/s");
+            tok_s.push((kind, tps));
+            kernel_rows.push(suite_row(
+                "kernel",
+                &format!("fused_{label}_t1_lane1"),
+                &r,
+                vec![
+                    ("threads", Json::Int(1)),
+                    ("lanes", Json::Int(1)),
+                    ("cold", Json::Bool(false)),
+                    ("simd", Json::Str(label.into())),
+                    ("tok_per_s", Json::Num(tps)),
+                    ("ms_per_tok", Json::Num(r.mean * 1e3 / gen_n as f64)),
+                ],
+            ));
+        }
+        if let [(_, scalar_tps), (auto_kind, auto_tps)] = tok_s[..] {
+            println!(
+                "simd speedup ({} vs scalar, fused t=1): {:.2}x",
+                auto_kind.label(),
+                auto_tps / scalar_tps
+            );
+        }
     }
     let kernel_out = std::env::var("LLVQ_BENCH_KERNEL_OUT")
         .unwrap_or_else(|_| "BENCH_kernel.json".into());

@@ -102,6 +102,12 @@ pub trait BatchForward: Send + Sync {
     fn threads(&self) -> usize {
         1
     }
+
+    /// SIMD kernel label of the engine's fused dispatch (for `STATS`;
+    /// "scalar" when the engine has no vector kernel).
+    fn simd_label(&self) -> String {
+        "scalar".into()
+    }
 }
 
 /// Rust-native engine over an [`ExecutionBackend`] — dense (the oracle),
@@ -167,6 +173,10 @@ impl BatchForward for BackendEngine {
 
     fn threads(&self) -> usize {
         self.backend.threads()
+    }
+
+    fn simd_label(&self) -> String {
+        self.backend.simd().label().into()
     }
 }
 
@@ -1037,7 +1047,10 @@ impl Default for ServeOptions {
 /// Forward work runs on the engine's backend, whose fused/cached kernels
 /// row-shard over a persistent worker pool sized by `llvq serve
 /// --threads` (default: `threadpool::default_threads()`); `STATS` reports
-/// the live thread count as `threads=`.
+/// the live thread count as `threads=`. The fused backend's SIMD kernel is
+/// fixed at load time — runtime CPU-feature detection, overridable with
+/// `LLVQ_SIMD` / `llvq serve --simd` — and reported as `simd=` (always
+/// `scalar` for dense/cached backends).
 ///
 /// # Protocol reference
 ///
@@ -1049,7 +1062,7 @@ impl Default for ServeOptions {
 /// | command            | reply                                              |
 /// |--------------------|----------------------------------------------------|
 /// | `NEXT t1,t2,…`     | `OK next=<argmax> logit=<v>` — full-prefix forward |
-/// | `STATS`            | `OK requests=… mean_batch=… mean_latency_ms=… sessions=… gen_tokens=… mean_lanes=… prefill_jobs=… prefill_toks=… threads=… backend=… resident_bytes=…` |
+/// | `STATS`            | `OK requests=… mean_batch=… mean_latency_ms=… sessions=… gen_tokens=… mean_lanes=… prefill_jobs=… prefill_toks=… threads=… backend=… simd=… resident_bytes=…` |
 /// | `QUIT`             | closes the connection                              |
 ///
 /// **v2 — generation sessions (one session per connection):**
@@ -1081,7 +1094,7 @@ impl Default for ServeOptions {
 /// < TOK 44
 /// < OK generated=3 len=7
 /// > STATS
-/// < OK requests=0 mean_batch=0.00 mean_latency_ms=0.000 sessions=1 gen_tokens=3 mean_lanes=1.00 prefill_jobs=1 prefill_toks=4 threads=4 backend=fused resident_bytes=48768
+/// < OK requests=0 mean_batch=0.00 mean_latency_ms=0.000 sessions=1 gen_tokens=3 mean_lanes=1.00 prefill_jobs=1 prefill_toks=4 threads=4 backend=fused simd=avx2 resident_bytes=48768
 /// > CLOSE
 /// < OK closed len=7
 /// > QUIT
@@ -1179,7 +1192,7 @@ fn serve_lines(
                 "OK requests={} mean_batch={:.2} mean_latency_ms={:.3} \
                  sessions={} gen_tokens={} mean_lanes={:.2} \
                  prefill_jobs={} prefill_toks={} \
-                 threads={} backend={} resident_bytes={}",
+                 threads={} backend={} simd={} resident_bytes={}",
                 coord.metrics.requests.load(Ordering::Relaxed),
                 coord.metrics.mean_batch(),
                 coord.metrics.mean_latency_ms(),
@@ -1190,6 +1203,7 @@ fn serve_lines(
                 coord.metrics.prefill_toks.load(Ordering::Relaxed),
                 coord.engine().threads(),
                 coord.engine().backend_name(),
+                coord.engine().simd_label(),
                 coord.engine().resident_weight_bytes(),
             )?;
             continue;

@@ -1,3 +1,7 @@
+// std::simd is nightly-only; the portable kernel in quant::kernel is
+// opt-in behind this feature so stable builds never see the gate.
+#![cfg_attr(feature = "portable_simd", feature(portable_simd))]
+
 //! # LLVQ — Leech Lattice Vector Quantization for LLM compression
 //!
 //! Reproduction of *"Leech Lattice Vector Quantization for Efficient LLM
@@ -28,7 +32,16 @@
 //! ```text
 //! quant::VectorQuantizer      code_widths / encode_into / decode_from /
 //!                             spec  — per-block codec + self-describing
-//!                             quantizer header (all five quantizers)
+//!                             quantizer header (all five quantizers);
+//!                             decode_blocks_into streams whole segments
+//!                             of consecutive blocks for the SIMD tier
+//! quant::kernel               SIMD kernel dispatch for the fused matvec:
+//!                             runtime CPU-feature detection (AVX2/NEON/
+//!                             portable std::simd/scalar oracle) with the
+//!                             LLVQ_SIMD / --simd override, a fixed
+//!                             documented partial-sum shape, and segment-
+//!                             grouped block decode feeding the vector
+//!                             accumulators
 //! util::bits                  MSB-first BitWriter/BitReader substrate
 //! util::threadpool            scoped one-shots (parallel_map/chunks) for
 //!                             cold paths + the persistent Pool (long-lived
@@ -56,6 +69,7 @@
 //!                             and cached first-touch decode row-shard
 //!                             over the backend's persistent worker pool
 //!                             (--threads), bit-identically to threads=1
+//!                             for the quant::kernel kernel fixed at load
 //! model::transformer          forward() is generic over ForwardOps, so
 //!                             Weights and every ExecutionBackend share
 //!                             one forward pass (and one eval path);
@@ -130,6 +144,7 @@ pub mod quant {
     pub mod scalar;
     pub mod gain;
     pub mod e8;
+    pub mod kernel;
     pub mod llvq;
     pub mod product;
 }

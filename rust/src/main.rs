@@ -16,7 +16,9 @@
 //!   load / lazily decoded on first touch / matvec over the bit-packed
 //!   code streams — no dense materialization at all), `--threads` sizes
 //!   the persistent kernel pool the fused matmul and cached first-touch
-//!   decode row-shard over, `--prefill-chunk` bounds the prompt tokens a
+//!   decode row-shard over, `--simd` forces the fused SIMD kernel
+//!   (off|scalar|avx2|neon|portable; default `LLVQ_SIMD`, then runtime
+//!   detection), `--prefill-chunk` bounds the prompt tokens a
 //!   queued FEED may prefill per scheduler tick (pipelined
 //!   prefill-while-decoding: a long prompt no longer stalls active
 //!   generations), `--max-sessions` / `--max-conns` bound the session and
@@ -42,6 +44,7 @@ use llvq::model::sample::{SampleParams, Sampler};
 use llvq::model::transformer::{forward_step, prefill, KvCache, Weights};
 use llvq::pipeline::driver::{quantize_model, quantize_model_packed, PtqOptions};
 use llvq::pipeline::rotation::RotationMode;
+use llvq::quant::kernel::Kernel;
 use llvq::quant::VectorQuantizer;
 use llvq::util::cli::Args;
 use llvq::util::threadpool;
@@ -459,6 +462,12 @@ fn cmd_stats(rest: Vec<String>) -> i32 {
     let a = Args::new("llvq stats — header-only stats of a packed .llvqm artifact")
         .flag("path", "", "input .llvqm file")
         .flag("threads", "0", "kernel worker threads serve/generate would use (0 = auto)")
+        .flag(
+            "simd",
+            "",
+            "fused SIMD kernel to report: off|scalar|avx2|neon|portable \
+             (default: $LLVQ_SIMD, then runtime detection)",
+        )
         .parse(rest.into_iter())
         .unwrap();
     let path = a.get("path").unwrap();
@@ -466,6 +475,10 @@ fn cmd_stats(rest: Vec<String>) -> i32 {
         eprintln!("need --path <file.llvqm>");
         return 2;
     }
+    let simd = match simd_from(&a) {
+        Ok(k) => k,
+        Err(code) => return code,
+    };
     let path = std::path::PathBuf::from(path);
     // load_meta reads magic + JSON header only — stats never touch the
     // payload, so this stays O(header) even for big artifacts
@@ -490,6 +503,10 @@ fn cmd_stats(rest: Vec<String>) -> i32 {
             println!(
                 "  threads   : {} (kernel pool serve/generate would run here)",
                 threads_from(&a)
+            );
+            println!(
+                "  simd      : {} (fused kernel serve/generate would dispatch)",
+                simd.label()
             );
             0
         }
@@ -552,6 +569,7 @@ fn packed_backend(
     path: &std::path::Path,
     kind: BackendKind,
     threads: usize,
+    simd: Kernel,
 ) -> Result<ExecutionBackend, String> {
     match kind {
         BackendKind::Dense => {
@@ -560,7 +578,9 @@ fn packed_backend(
             Ok(ExecutionBackend::dense(w))
         }
         BackendKind::Cached => ExecutionBackend::packed_cached(PackedFile::open(path)?, threads),
-        BackendKind::Fused => ExecutionBackend::packed_fused(PackedFile::open(path)?, threads),
+        BackendKind::Fused => {
+            ExecutionBackend::packed_fused_kernel(PackedFile::open(path)?, threads, simd)
+        }
     }
 }
 
@@ -571,6 +591,16 @@ fn threads_from(a: &Args) -> usize {
         0 => threadpool::default_threads(),
         n => n,
     }
+}
+
+/// Resolve the `--simd` flag (empty = `LLVQ_SIMD` env, then runtime
+/// detection; forcing an unavailable kernel is a usage error, not a silent
+/// fallback). `Err` carries the process exit code.
+fn simd_from(a: &Args) -> Result<Kernel, i32> {
+    Kernel::resolve(&a.get("simd").unwrap()).map_err(|e| {
+        eprintln!("{e}");
+        2
+    })
 }
 
 /// Resolve the shared `--packed/--path/--model/--backend/--allow-random`
@@ -603,7 +633,8 @@ fn serving_backend(a: &Args) -> Result<ExecutionBackend, i32> {
         };
         let t0 = std::time::Instant::now();
         let threads = threads_from(a);
-        let backend = match packed_backend(&path, kind, threads) {
+        let simd = simd_from(a)?;
+        let backend = match packed_backend(&path, kind, threads, simd) {
             Ok(b) => b,
             Err(e) => {
                 eprintln!("{e}");
@@ -611,9 +642,10 @@ fn serving_backend(a: &Args) -> Result<ExecutionBackend, i32> {
             }
         };
         println!(
-            "loaded packed model ({} backend, {} kernel threads, {} B resident weights) \
-             in {:.0} ms: {}",
+            "loaded packed model ({} backend, {} simd kernel, {} kernel threads, \
+             {} B resident weights) in {:.0} ms: {}",
             backend.kind().label(),
+            backend.simd().label(),
             threads,
             backend.resident_weight_bytes(),
             t0.elapsed().as_secs_f64() * 1e3,
@@ -660,6 +692,12 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
         .flag("model", "llama2-tiny", "zoo name (artifacts/<name>.llvqw)")
         .flag("addr", "127.0.0.1:7199", "listen address")
         .flag("threads", "0", "kernel worker threads for the packed backends (0 = auto)")
+        .flag(
+            "simd",
+            "",
+            "fused SIMD kernel: off|scalar|avx2|neon|portable (default: \
+             $LLVQ_SIMD, then runtime detection)",
+        )
         .flag("max-batch", "8", "dynamic batch limit / decode-slate width")
         .flag("max-wait-ms", "2", "batch window")
         .flag(
@@ -722,6 +760,12 @@ fn cmd_generate(rest: Vec<String>) -> i32 {
         )
         .flag("model", "llama2-tiny", "zoo name (artifacts/<name>.llvqw)")
         .flag("threads", "0", "kernel worker threads for the packed backends (0 = auto)")
+        .flag(
+            "simd",
+            "",
+            "fused SIMD kernel: off|scalar|avx2|neon|portable (default: \
+             $LLVQ_SIMD, then runtime detection)",
+        )
         .flag("prompt", "1,2,3", "comma-separated prompt token ids")
         .flag("n", "16", "tokens to generate")
         .flag("temp", "0", "sampling temperature (0 = greedy)")

@@ -11,17 +11,24 @@ use crate::util::rng::Xoshiro256pp;
 
 /// In-place fast Walsh–Hadamard transform (unnormalized). `data.len()`
 /// must be a power of two.
+///
+/// The butterfly is expressed over paired half-slices rather than indexed
+/// loads so each stage is a bounds-check-free streaming add/sub the
+/// autovectorizer can widen — the activation-rotate half of the SIMD
+/// serving path (`quant::kernel`). The pair arithmetic is unchanged from
+/// the classic indexed form, so results are bit-identical.
 pub fn fwht(data: &mut [f64]) {
     let n = data.len();
     assert!(n.is_power_of_two(), "FWHT needs a power-of-two length");
     let mut h = 1;
     while h < n {
-        for i in (0..n).step_by(h * 2) {
-            for j in i..i + h {
-                let x = data[j];
-                let y = data[j + h];
-                data[j] = x + y;
-                data[j + h] = x - y;
+        for block in data.chunks_exact_mut(2 * h) {
+            let (lo, hi) = block.split_at_mut(h);
+            for (a, b) in lo.iter_mut().zip(hi.iter_mut()) {
+                let x = *a;
+                let y = *b;
+                *a = x + y;
+                *b = x - y;
             }
         }
         h *= 2;

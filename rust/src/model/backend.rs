@@ -18,9 +18,11 @@
 //!   track what is actually touched, and a fully-warm cache reproduces
 //!   dense logits bit-for-bit.
 //! * **fused** ([`FusedLayerOp`]) — matvec *directly over the bit-packed
-//!   code stream*: each row's codes are decoded block-by-block into a
-//!   24-float scratch and accumulated against the (rotated, scale-folded)
-//!   activation, so the dense matrix never exists in memory. Resident
+//!   code stream*: each row's codes are decoded a segment of consecutive
+//!   blocks at a time and accumulated against the (rotated, scale-folded)
+//!   activation through the SIMD kernel selected at construction
+//!   ([`crate::quant::kernel`]; `LLVQ_SIMD`/`--simd` override runtime
+//!   detection), so the dense matrix never exists in memory. Resident
 //!   weight bytes equal the on-disk code bytes (+ f64 column scales when
 //!   fine-tuning was enabled). Its `matmul_into` decodes each row **once
 //!   per call** and dots it against every activation lane — the decode
@@ -41,7 +43,9 @@
 //! weight to f32 first and accumulates the matvec in f32 — the same
 //! mathematical function with a different accumulation order, so fused
 //! logits agree to ~1e-5 *relative* (tested, argmax-stable) rather than
-//! bit-exactly.
+//! bit-exactly. The same 1e-5/argmax contract holds between SIMD kernels
+//! and the scalar oracle; for a *given* kernel, results are bit-identical
+//! across thread counts and batch shapes (`rust/tests/kernels.rs`).
 
 use std::sync::{Arc, OnceLock};
 
@@ -49,7 +53,8 @@ use crate::model::config::ModelConfig;
 use crate::model::packed::{unpack_layer_pool, PackedFile, PackedLayer};
 use crate::model::transformer::{linear, ForwardOps, LinearKind, Weights, LINEAR_KINDS};
 use crate::pipeline::rotation::LayerRotation;
-use crate::quant::{Code, PackedCodes, VectorQuantizer};
+use crate::quant::kernel::{decode_row_dot_multi_kernel, Kernel, KernelScratch};
+use crate::quant::{PackedCodes, VectorQuantizer};
 use crate::util::bits::BitReader;
 use crate::util::threadpool::{Pool, ShardedSlice};
 
@@ -191,13 +196,12 @@ struct FusedCall {
     ao: Vec<f64>,
 }
 
-/// Per-worker fused-matmul scratch (block decode buffer, code words,
-/// per-lane dots) — owned by the pool, one slot per executor, warm across
-/// calls and layers (the quantizer is fixed per model).
+/// Per-worker fused-matmul scratch (kernel segment/code buffers, per-lane
+/// dots) — owned by the pool, one slot per executor, warm across calls and
+/// layers (the quantizer is fixed per model).
 #[derive(Default)]
 struct FusedWorker {
-    code: Code,
-    block: Vec<f32>,
+    scratch: KernelScratch,
     lane_accs: Vec<f64>,
 }
 
@@ -212,11 +216,12 @@ thread_local! {
 }
 
 /// Fused dequant-matvec over the bit-packed code stream. The layer's dense
-/// matrix never exists: each row is decoded block-by-block into a
-/// `dim`-float scratch and immediately accumulated against the prepared
-/// activation, replaying the PTQ driver's reconstruction algebra
-/// (σ scaling, fine-tuned column scales, inverse rotation) around the
-/// matvec instead of around a matrix.
+/// matrix never exists: each row is decoded a segment of consecutive
+/// blocks at a time into flat scratch and immediately accumulated against
+/// the prepared activation through the kernel fixed at construction
+/// ([`crate::quant::kernel`]), replaying the PTQ driver's reconstruction
+/// algebra (σ scaling, fine-tuned column scales, inverse rotation) around
+/// the matvec instead of around a matrix.
 pub struct FusedLayerOp {
     q: Arc<dyn VectorQuantizer>,
     widths: Vec<u32>,
@@ -228,18 +233,23 @@ pub struct FusedLayerOp {
     rot: LayerRotation,
     /// Backend-wide persistent worker pool the matmul row-shards over.
     pool: Arc<Pool>,
+    /// Inner decode+dot kernel, fixed at backend construction
+    /// ([`Kernel::Scalar`] is the per-block oracle path).
+    kernel: Kernel,
     label: String,
 }
 
 impl FusedLayerOp {
     /// Build from a loaded packed layer (codes stay packed; this is the
     /// only copy the op keeps). `pool` is the backend's shared worker
-    /// pool; `Pool::new(1)` gives the sequential kernel.
+    /// pool; `Pool::new(1)` gives the sequential kernel. `kernel` selects
+    /// the inner decode+dot path (see [`crate::quant::kernel`]).
     pub fn new(
         q: Arc<dyn VectorQuantizer>,
         pl: PackedLayer,
         label: impl Into<String>,
         pool: Arc<Pool>,
+        kernel: Kernel,
     ) -> Self {
         let widths = q.code_widths();
         let rot = LayerRotation::new(pl.rot_mode, pl.cols, pl.rows, pl.rot_seed);
@@ -253,6 +263,7 @@ impl FusedLayerOp {
             codes: pl.codes,
             rot,
             pool,
+            kernel,
             label: label.into(),
         }
     }
@@ -273,16 +284,16 @@ impl LinearOp for FusedLayerOp {
     /// row loop is sharded across the backend's persistent worker pool
     /// (rows are independent: each shard reads its own byte ranges and
     /// writes its own accumulator rows). Per lane and per row, the
-    /// float-op sequence (rotate, β, block-major f64 accumulation, σ,
-    /// R_outᵀ) is identical to the single-threaded single-lane `matvec`,
-    /// so neither batching nor the thread count ever changes a logit bit.
+    /// float-op sequence (rotate, β, the selected kernel's fixed
+    /// accumulation shape, σ, R_outᵀ) depends only on the kernel chosen at
+    /// construction — never on batching or thread count — so neither ever
+    /// changes a logit bit for a given kernel.
     fn matmul_into(&self, xs: &[f32], ys: &mut [f32], n: usize) {
         debug_assert_eq!(xs.len(), n * self.cols);
         debug_assert_eq!(ys.len(), n * self.rows);
         if n == 0 {
             return;
         }
-        let d = self.q.dim();
         let rb = self.codes.row_bytes;
         FUSED_CALL.with(|cell| {
             let mut call = cell.borrow_mut();
@@ -312,18 +323,17 @@ impl LinearOp for FusedLayerOp {
                 let shard = ShardedSlice::new(&mut acc[..]);
                 self.pool.run_partitioned(self.rows, |range, scratch| {
                     let w = scratch.get_or(FusedWorker::default);
-                    w.block.clear();
-                    w.block.resize(d, 0f32);
                     w.lane_accs.clear();
                     w.lane_accs.resize(n, 0f64);
                     for r in range {
                         let mut br =
                             BitReader::new(&self.codes.data[r * rb..(r + 1) * rb]);
-                        self.q.decode_row_dot_multi(
+                        decode_row_dot_multi_kernel(
+                            self.q.as_ref(),
+                            self.kernel,
                             &self.widths,
                             &mut br,
-                            &mut w.code,
-                            &mut w.block,
+                            &mut w.scratch,
                             lanes,
                             self.cols,
                             &mut w.lane_accs,
@@ -411,6 +421,9 @@ pub struct ExecutionBackend {
     /// Kernel worker threads (executors of the shared [`Pool`]); 1 = the
     /// sequential kernels.
     threads: usize,
+    /// SIMD kernel the fused ops dispatch to ([`Kernel::Scalar`] for
+    /// dense/cached backends, which have no fused inner loop).
+    simd: Kernel,
     tok_emb: Vec<f32>,
     pos_emb: Vec<f32>,
     norms1: Vec<Vec<f32>>,
@@ -452,6 +465,7 @@ impl ExecutionBackend {
             cfg,
             kind: BackendKind::Dense,
             threads: 1,
+            simd: Kernel::Scalar,
             tok_emb: w.tok_emb,
             pos_emb: w.pos_emb,
             norms1,
@@ -467,19 +481,44 @@ impl ExecutionBackend {
     /// offset and dequantized on first touch, row-sharded over `threads`
     /// persistent pool workers.
     pub fn packed_cached(file: PackedFile, threads: usize) -> Result<Self, String> {
-        Self::from_packed(file, threads, BackendKind::Cached)
+        Self::from_packed(file, threads, BackendKind::Cached, Kernel::Scalar)
     }
 
     /// Fused dequant-matvec: reads every layer's *code stream* (not its
     /// dense expansion) at construction; matvecs run directly over the
     /// packed bits forever after, row-sharded over `threads` persistent
     /// pool workers (`threads = 1` is the sequential kernel; any thread
-    /// count is bit-identical to it).
+    /// count is bit-identical to it for a given SIMD kernel). The inner
+    /// kernel honours `LLVQ_SIMD` and falls back to auto-detection
+    /// ([`Kernel::resolve`]); use [`ExecutionBackend::packed_fused_kernel`]
+    /// to force one programmatically.
     pub fn packed_fused(file: PackedFile, threads: usize) -> Result<Self, String> {
-        Self::from_packed(file, threads, BackendKind::Fused)
+        let kernel = Kernel::resolve("")?;
+        Self::from_packed(file, threads, BackendKind::Fused, kernel)
     }
 
-    fn from_packed(file: PackedFile, threads: usize, kind: BackendKind) -> Result<Self, String> {
+    /// [`ExecutionBackend::packed_fused`] with an explicit SIMD kernel —
+    /// errors if the host cannot run `kernel` (no silent fallback).
+    pub fn packed_fused_kernel(
+        file: PackedFile,
+        threads: usize,
+        kernel: Kernel,
+    ) -> Result<Self, String> {
+        if !kernel.available() {
+            return Err(format!(
+                "SIMD kernel '{}' is not available on this host",
+                kernel.label()
+            ));
+        }
+        Self::from_packed(file, threads, BackendKind::Fused, kernel)
+    }
+
+    fn from_packed(
+        file: PackedFile,
+        threads: usize,
+        kind: BackendKind,
+        kernel: Kernel,
+    ) -> Result<Self, String> {
         file.meta.check_layout()?;
         let q: Arc<dyn VectorQuantizer> =
             Arc::from(crate::quant::quantizer_from_spec(&file.meta.quantizer)?);
@@ -534,7 +573,7 @@ impl ExecutionBackend {
                 }),
                 BackendKind::Fused => {
                     let pl = file.read_layer(idx)?;
-                    Box::new(FusedLayerOp::new(q.clone(), pl, label, pool.clone()))
+                    Box::new(FusedLayerOp::new(q.clone(), pl, label, pool.clone(), kernel))
                 }
                 BackendKind::Dense => unreachable!("dense backends wrap Weights"),
             };
@@ -549,6 +588,11 @@ impl ExecutionBackend {
             cfg,
             kind,
             threads,
+            simd: if kind == BackendKind::Fused {
+                kernel
+            } else {
+                Kernel::Scalar
+            },
             tok_emb: tail.tok_emb,
             pos_emb: tail.pos_emb,
             norms1: tail.norms1,
@@ -566,6 +610,12 @@ impl ExecutionBackend {
     /// Kernel worker threads this backend's pool runs with.
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// SIMD kernel the fused ops dispatch to (scalar for dense/cached
+    /// backends, which have no fused inner loop).
+    pub fn simd(&self) -> Kernel {
+        self.simd
     }
 
     pub fn cfg(&self) -> &ModelConfig {
@@ -780,6 +830,32 @@ mod tests {
                     want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
                     "threads={threads} n={n} diverged from the sequential kernel"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn forced_kernel_constructor_and_simd_accessor() {
+        let (_art, tmp) = artifact_on_disk();
+        let b = ExecutionBackend::packed_fused_kernel(
+            PackedFile::open(tmp.path()).unwrap(),
+            1,
+            Kernel::Scalar,
+        )
+        .unwrap();
+        assert_eq!(b.simd(), Kernel::Scalar);
+        // dense/cached backends have no fused inner loop → scalar label
+        let c = ExecutionBackend::packed_cached(PackedFile::open(tmp.path()).unwrap(), 1).unwrap();
+        assert_eq!(c.simd(), Kernel::Scalar);
+        // forcing a kernel the host cannot run must error, never fall back
+        for k in [Kernel::Avx2, Kernel::Neon, Kernel::Portable] {
+            if !k.available() {
+                let r = ExecutionBackend::packed_fused_kernel(
+                    PackedFile::open(tmp.path()).unwrap(),
+                    1,
+                    k,
+                );
+                assert!(r.is_err(), "{k:?} accepted despite being unavailable");
             }
         }
     }

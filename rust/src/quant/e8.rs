@@ -18,6 +18,7 @@
 use std::collections::HashMap;
 
 use crate::quant::{Code, VectorQuantizer};
+use crate::util::bits::BitReader;
 use crate::util::json::Json;
 use crate::util::rng::Xoshiro256pp;
 
@@ -279,6 +280,28 @@ impl VectorQuantizer for E8Codebook {
 
     fn code_widths(&self) -> Vec<u32> {
         vec![16]
+    }
+
+    fn decode_blocks_into(
+        &self,
+        _widths: &[u32],
+        r: &mut BitReader,
+        _code: &mut Code,
+        _scratch: &mut [f32],
+        out: &mut [f32],
+    ) {
+        // Stream 16-bit indices straight into the point table, writing each
+        // element through the same expression as dequantize (bit-exact);
+        // the final block may be partial and its padding lanes are dropped.
+        let mut i = 0;
+        while i < out.len() {
+            let p = &self.points[r.read(16) as usize];
+            let take = D8.min(out.len() - i);
+            for (o, &v) in out[i..i + take].iter_mut().zip(p.iter()) {
+                *o = (v as f64 * 0.5 * self.scale) as f32;
+            }
+            i += take;
+        }
     }
 
     fn spec(&self) -> Json {

@@ -12,6 +12,7 @@
 
 use crate::math::stats;
 use crate::quant::{Code, VectorQuantizer};
+use crate::util::bits::BitReader;
 use crate::util::json::Json;
 
 /// Scalar quantizer over gains with a χ_k-matched codebook.
@@ -91,6 +92,22 @@ impl VectorQuantizer for ChiGainQuantizer {
 
     fn code_widths(&self) -> Vec<u32> {
         vec![self.bits]
+    }
+
+    fn decode_blocks_into(
+        &self,
+        _widths: &[u32],
+        r: &mut BitReader,
+        _code: &mut Code,
+        _scratch: &mut [f32],
+        out: &mut [f32],
+    ) {
+        // dim = 1: stream each code straight through the level table —
+        // the same lookup dequantize performs (bit-exact; bits may be 0,
+        // where read(0) = 0 selects the single centroid).
+        for o in out.iter_mut() {
+            *o = self.levels[r.read(self.bits) as usize] as f32;
+        }
     }
 
     fn spec(&self) -> Json {

@@ -1,0 +1,459 @@
+//! SIMD execution tier for the fused dequant-matvec kernel.
+//!
+//! The scalar path in [`VectorQuantizer::decode_row_dot_multi`] decodes one
+//! block at a time into a `dim()`-float scratch and dots it in a scalar f64
+//! loop. This module restructures that hot loop so the vector units see it:
+//! a whole *group* of consecutive blocks is decoded into a flat row-segment
+//! scratch ([`SEGMENT`] weights per iteration, via
+//! [`VectorQuantizer::decode_blocks_into`]), and the segment × activation
+//! accumulation runs through an ISA-specific inner kernel selected **once**
+//! at backend construction ([`Kernel`]).
+//!
+//! ## Determinism contract
+//!
+//! The dequant stage is bit-exact vs the scalar path: `decode_blocks_into`
+//! overrides stream the same bit fields through the same arithmetic
+//! expressions as `dequantize`. The dot stage reassociates, so it fixes a
+//! documented partial-sum shape instead: within a segment, element `j`
+//! feeds partial sum `j % 4`, and the four partials reduce as
+//! `(p0 + p1) + (p2 + p3)` once per row. Segment boundaries depend only on
+//! `dim()` and `cols` — never on thread count or lane count — so results
+//! are identical across pool sizes and batch shapes for a given kernel,
+//! and every kernel stays within 1e-5 relative error of the scalar oracle
+//! (pinned by `rust/tests/kernels.rs` across all five quantizer specs).
+//!
+//! ## Dispatch
+//!
+//! [`Kernel::detect`] picks the best runtime-supported kernel (AVX2+FMA on
+//! x86-64, NEON on aarch64, `std::simd` when the nightly-only
+//! `portable_simd` cargo feature is on, scalar otherwise). The
+//! `LLVQ_SIMD=off|scalar|avx2|neon|portable` environment variable or the
+//! `--simd` CLI flag overrides detection; forcing a kernel the host cannot
+//! run is an error, not a silent fallback.
+
+use crate::quant::{Code, VectorQuantizer};
+use crate::util::bits::BitReader;
+
+/// Weights decoded per segment iteration. Divisible by every shipped block
+/// dimension (1 scalar/gain, 8 E8, 24 Leech) and by the 4-wide partial-sum
+/// shape, so segments always end on block *and* accumulator boundaries.
+pub const SEGMENT: usize = 192;
+
+/// Inner-kernel selection for the fused backend, resolved once at backend
+/// construction (see [`Kernel::resolve`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// The always-available oracle: delegate to the per-block scalar path
+    /// in `decode_row_dot_multi`, bit-identical to pre-dispatch builds.
+    Scalar,
+    /// AVX2 + FMA intrinsics (x86-64).
+    Avx2,
+    /// NEON intrinsics (aarch64).
+    Neon,
+    /// `std::simd` (any arch; requires the nightly-gated `portable_simd`
+    /// cargo feature).
+    Portable,
+}
+
+impl Kernel {
+    /// Parse an `LLVQ_SIMD` / `--simd` value. `"off"` is an alias for
+    /// `"scalar"` — both force the oracle path.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "off" | "scalar" => Ok(Kernel::Scalar),
+            "avx2" => Ok(Kernel::Avx2),
+            "neon" => Ok(Kernel::Neon),
+            "portable" => Ok(Kernel::Portable),
+            other => Err(format!(
+                "unknown SIMD kernel '{other}' (expected off|scalar|avx2|neon|portable)"
+            )),
+        }
+    }
+
+    /// Stable label, as reported by `STATS` and the bench `simd` column.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Avx2 => "avx2",
+            Kernel::Neon => "neon",
+            Kernel::Portable => "portable",
+        }
+    }
+
+    /// Can this kernel run on the current host (arch + runtime CPU
+    /// features + crate features)?
+    pub fn available(&self) -> bool {
+        match self {
+            Kernel::Scalar => true,
+            Kernel::Avx2 => avx2_available(),
+            Kernel::Neon => neon_available(),
+            Kernel::Portable => cfg!(feature = "portable_simd"),
+        }
+    }
+
+    /// Best available kernel on this host (vector kernels first, scalar as
+    /// the universal fallback).
+    pub fn detect() -> Self {
+        [Kernel::Avx2, Kernel::Neon, Kernel::Portable]
+            .into_iter()
+            .find(Kernel::available)
+            .unwrap_or(Kernel::Scalar)
+    }
+
+    /// Resolve an explicit preference: `None` auto-detects, `Some(name)`
+    /// parses it and errors if the host cannot run the forced kernel.
+    pub fn resolve_pref(pref: Option<&str>) -> Result<Self, String> {
+        let Some(name) = pref else {
+            return Ok(Self::detect());
+        };
+        let k = Self::parse(name)?;
+        if !k.available() {
+            return Err(format!(
+                "SIMD kernel '{}' is not available on this host (auto-detect picks '{}')",
+                k.label(),
+                Self::detect().label()
+            ));
+        }
+        Ok(k)
+    }
+
+    /// Resolve a CLI `--simd` flag value: a non-empty flag wins, then a
+    /// non-empty `LLVQ_SIMD` environment variable, then auto-detection.
+    pub fn resolve(flag: &str) -> Result<Self, String> {
+        if !flag.is_empty() {
+            return Self::resolve_pref(Some(flag));
+        }
+        match std::env::var("LLVQ_SIMD") {
+            Ok(v) if !v.is_empty() => Self::resolve_pref(Some(&v)),
+            _ => Ok(Self::detect()),
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
+}
+
+#[cfg(target_arch = "aarch64")]
+fn neon_available() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+#[cfg(not(target_arch = "aarch64"))]
+fn neon_available() -> bool {
+    false
+}
+
+/// Per-worker scratch for [`decode_row_dot_multi_kernel`] — one per pool
+/// worker, reused across rows so the dispatch loop is allocation-free
+/// after warm-up.
+#[derive(Default)]
+pub struct KernelScratch {
+    code: Code,
+    block: Vec<f32>,
+    seg: Vec<f32>,
+    accs: Vec<[f64; 4]>,
+}
+
+/// Fused decode + multi-lane dot through the selected kernel.
+///
+/// Semantics match [`VectorQuantizer::decode_row_dot_multi`]: read
+/// `⌈cols/dim⌉` codes from `r` and accumulate the decoded row against
+/// `accs.len()` activation lanes of length `cols` (concatenated in `xs`),
+/// overwriting `accs`. [`Kernel::Scalar`] delegates to the per-block
+/// scalar path verbatim (the oracle); vector kernels use the segmented
+/// partial-sum shape documented at module level.
+#[allow(clippy::too_many_arguments)]
+pub fn decode_row_dot_multi_kernel(
+    q: &dyn VectorQuantizer,
+    kind: Kernel,
+    widths: &[u32],
+    r: &mut BitReader,
+    s: &mut KernelScratch,
+    xs: &[f64],
+    cols: usize,
+    accs: &mut [f64],
+) {
+    let d = q.dim();
+    s.block.clear();
+    s.block.resize(d, 0.0);
+    if kind == Kernel::Scalar {
+        q.decode_row_dot_multi(widths, r, &mut s.code, &mut s.block, xs, cols, accs);
+        return;
+    }
+    let n = accs.len();
+    debug_assert_eq!(xs.len(), n * cols, "xs must hold accs.len() lanes of cols");
+    // Largest multiple of `dim` that fits the segment budget: segments end
+    // on block boundaries except the final partial block of the row.
+    let seg_cap = if d >= SEGMENT { d } else { SEGMENT - SEGMENT % d };
+    s.seg.clear();
+    s.seg.resize(seg_cap, 0.0);
+    s.accs.clear();
+    s.accs.resize(n, [0.0; 4]);
+    let mut i = 0;
+    while i < cols {
+        let take = seg_cap.min(cols - i);
+        q.decode_blocks_into(widths, r, &mut s.code, &mut s.block, &mut s.seg[..take]);
+        for (lane, acc4) in s.accs.iter_mut().enumerate() {
+            let x = &xs[lane * cols + i..lane * cols + i + take];
+            dot_accumulate(kind, &s.seg[..take], x, acc4);
+        }
+        i += take;
+    }
+    for (acc, a) in accs.iter_mut().zip(&s.accs) {
+        *acc = (a[0] + a[1]) + (a[2] + a[3]);
+    }
+}
+
+/// Accumulate `seg[j] * x[j]` into `acc[j % 4]` through the selected
+/// kernel. All kernels share this shape; they differ only in whether the
+/// multiply-add is fused (one rounding) or split (two), which is what the
+/// 1e-5 oracle tolerance absorbs.
+fn dot_accumulate(kind: Kernel, seg: &[f32], x: &[f64], acc: &mut [f64; 4]) {
+    debug_assert_eq!(seg.len(), x.len());
+    match kind {
+        Kernel::Scalar => dot_acc_generic(seg, x, acc),
+        Kernel::Avx2 => dot_acc_avx2(seg, x, acc),
+        Kernel::Neon => dot_acc_neon(seg, x, acc),
+        Kernel::Portable => dot_acc_portable(seg, x, acc),
+    }
+}
+
+/// Portable reference accumulator — same partial-sum shape, plain
+/// mul-then-add. The compiler is free to autovectorize it; the result is
+/// fixed either way.
+fn dot_acc_generic(seg: &[f32], x: &[f64], acc: &mut [f64; 4]) {
+    let n4 = seg.len() / 4 * 4;
+    for (s4, x4) in seg[..n4].chunks_exact(4).zip(x[..n4].chunks_exact(4)) {
+        acc[0] += s4[0] as f64 * x4[0];
+        acc[1] += s4[1] as f64 * x4[1];
+        acc[2] += s4[2] as f64 * x4[2];
+        acc[3] += s4[3] as f64 * x4[3];
+    }
+    for j in 0..seg.len() - n4 {
+        acc[j] += seg[n4 + j] as f64 * x[n4 + j];
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn dot_acc_avx2(seg: &[f32], x: &[f64], acc: &mut [f64; 4]) {
+    // safety: dispatch reaches here only when Kernel::Avx2.available()
+    // confirmed AVX2+FMA at backend construction.
+    unsafe { dot_acc_avx2_impl(seg, x, acc) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn dot_acc_avx2(seg: &[f32], x: &[f64], acc: &mut [f64; 4]) {
+    dot_acc_generic(seg, x, acc)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_acc_avx2_impl(seg: &[f32], x: &[f64], acc: &mut [f64; 4]) {
+    use std::arch::x86_64::*;
+    let n4 = seg.len() / 4 * 4;
+    let mut a = _mm256_loadu_pd(acc.as_ptr());
+    let mut i = 0;
+    while i < n4 {
+        let s = _mm256_cvtps_pd(_mm_loadu_ps(seg.as_ptr().add(i)));
+        let xv = _mm256_loadu_pd(x.as_ptr().add(i));
+        a = _mm256_fmadd_pd(s, xv, a);
+        i += 4;
+    }
+    _mm256_storeu_pd(acc.as_mut_ptr(), a);
+    for j in 0..seg.len() - n4 {
+        acc[j] += seg[n4 + j] as f64 * x[n4 + j];
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn dot_acc_neon(seg: &[f32], x: &[f64], acc: &mut [f64; 4]) {
+    // safety: dispatch reaches here only when Kernel::Neon.available()
+    // confirmed NEON at backend construction.
+    unsafe { dot_acc_neon_impl(seg, x, acc) }
+}
+
+#[cfg(not(target_arch = "aarch64"))]
+fn dot_acc_neon(seg: &[f32], x: &[f64], acc: &mut [f64; 4]) {
+    dot_acc_generic(seg, x, acc)
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dot_acc_neon_impl(seg: &[f32], x: &[f64], acc: &mut [f64; 4]) {
+    use std::arch::aarch64::*;
+    let n4 = seg.len() / 4 * 4;
+    let mut a01 = vld1q_f64(acc.as_ptr());
+    let mut a23 = vld1q_f64(acc.as_ptr().add(2));
+    let mut i = 0;
+    while i < n4 {
+        let s = vld1q_f32(seg.as_ptr().add(i));
+        let lo = vcvt_f64_f32(vget_low_f32(s));
+        let hi = vcvt_high_f64_f32(s);
+        a01 = vfmaq_f64(a01, lo, vld1q_f64(x.as_ptr().add(i)));
+        a23 = vfmaq_f64(a23, hi, vld1q_f64(x.as_ptr().add(i + 2)));
+        i += 4;
+    }
+    vst1q_f64(acc.as_mut_ptr(), a01);
+    vst1q_f64(acc.as_mut_ptr().add(2), a23);
+    for j in 0..seg.len() - n4 {
+        acc[j] += seg[n4 + j] as f64 * x[n4 + j];
+    }
+}
+
+#[cfg(feature = "portable_simd")]
+fn dot_acc_portable(seg: &[f32], x: &[f64], acc: &mut [f64; 4]) {
+    use std::simd::prelude::*;
+    let n4 = seg.len() / 4 * 4;
+    let mut a = f64x4::from_array(*acc);
+    for (s4, x4) in seg[..n4].chunks_exact(4).zip(x[..n4].chunks_exact(4)) {
+        a += f32x4::from_slice(s4).cast::<f64>() * f64x4::from_slice(x4);
+    }
+    *acc = a.to_array();
+    for j in 0..seg.len() - n4 {
+        acc[j] += seg[n4 + j] as f64 * x[n4 + j];
+    }
+}
+
+#[cfg(not(feature = "portable_simd"))]
+fn dot_acc_portable(seg: &[f32], x: &[f64], acc: &mut [f64; 4]) {
+    dot_acc_generic(seg, x, acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::scalar::UniformQuantizer;
+    use crate::util::bits::BitWriter;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn parse_labels_roundtrip_and_reject_unknown() {
+        for k in [Kernel::Scalar, Kernel::Avx2, Kernel::Neon, Kernel::Portable] {
+            assert_eq!(Kernel::parse(k.label()), Ok(k));
+        }
+        assert_eq!(Kernel::parse("off"), Ok(Kernel::Scalar));
+        let err = Kernel::parse("sse9000").unwrap_err();
+        assert!(err.contains("sse9000") && err.contains("portable"), "{err}");
+    }
+
+    #[test]
+    fn detection_and_forced_selection() {
+        // Auto-detection always lands on something the host can run.
+        let auto = Kernel::detect();
+        assert!(auto.available());
+        assert_eq!(Kernel::resolve_pref(None), Ok(auto));
+        // Forcing the fallback always works.
+        assert_eq!(Kernel::resolve_pref(Some("off")), Ok(Kernel::Scalar));
+        assert_eq!(Kernel::resolve_pref(Some("scalar")), Ok(Kernel::Scalar));
+        // Forcing any named kernel succeeds exactly when it is available.
+        for name in ["avx2", "neon", "portable"] {
+            let k = Kernel::parse(name).unwrap();
+            match Kernel::resolve_pref(Some(name)) {
+                Ok(got) => {
+                    assert!(k.available());
+                    assert_eq!(got, k);
+                }
+                Err(e) => {
+                    assert!(!k.available());
+                    assert!(e.contains(name), "{e}");
+                }
+            }
+        }
+        assert!(Kernel::resolve_pref(Some("bogus")).is_err());
+    }
+
+    #[test]
+    fn scalar_is_always_available() {
+        assert!(Kernel::Scalar.available());
+    }
+
+    /// Every available accumulator follows the documented partial-sum
+    /// shape: close to the generic reference (FMA vs split rounding only)
+    /// and bit-identical across reruns.
+    #[test]
+    fn dot_accumulators_share_shape_and_are_deterministic() {
+        let mut rng = Xoshiro256pp::new(0x51AD);
+        for len in [0usize, 1, 3, 4, 7, 48, 191, 192] {
+            let mut seg = vec![0f32; len];
+            rng.fill_gaussian_f32(&mut seg);
+            let mut x = vec![0f64; len];
+            rng.fill_gaussian_f64(&mut x);
+            let mut want = [0f64; 4];
+            dot_acc_generic(&seg, &x, &mut want);
+            for kind in [Kernel::Avx2, Kernel::Neon, Kernel::Portable] {
+                if !kind.available() {
+                    continue;
+                }
+                let mut got = [0f64; 4];
+                dot_accumulate(kind, &seg, &x, &mut got);
+                for (w, g) in want.iter().zip(&got) {
+                    let tol = 1e-12 * w.abs().max(1.0);
+                    assert!((w - g).abs() <= tol, "{kind:?} len {len}: {w} vs {g}");
+                }
+                let mut again = [0f64; 4];
+                dot_accumulate(kind, &seg, &x, &mut again);
+                assert_eq!(got.map(f64::to_bits), again.map(f64::to_bits));
+            }
+        }
+    }
+
+    /// The dispatch entry point agrees with the scalar oracle, and the
+    /// Scalar kind *is* the oracle (bit-identical delegation).
+    #[test]
+    fn dispatch_matches_scalar_oracle() {
+        let q = UniformQuantizer::new_gaussian_optimal(4);
+        let widths = q.code_widths();
+        let mut rng = Xoshiro256pp::new(0xD15);
+        for cols in [1usize, 4, 191, 192, 193, 400] {
+            let mut row = vec![0f32; cols];
+            rng.fill_gaussian_f32(&mut row);
+            let mut w = BitWriter::new();
+            crate::quant::product::encode_row_into(&q, &row, &mut w);
+            let bytes = w.finish();
+            let n = 3;
+            let mut xs = vec![0f64; n * cols];
+            rng.fill_gaussian_f64(&mut xs);
+            let mut want = vec![0f64; n];
+            let mut code = Code::empty();
+            let mut block = vec![0f32; q.dim()];
+            q.decode_row_dot_multi(
+                &widths,
+                &mut BitReader::new(&bytes),
+                &mut code,
+                &mut block,
+                &xs,
+                cols,
+                &mut want,
+            );
+            for kind in [Kernel::Scalar, Kernel::detect()] {
+                let mut s = KernelScratch::default();
+                let mut got = vec![0f64; n];
+                decode_row_dot_multi_kernel(
+                    &q,
+                    kind,
+                    &widths,
+                    &mut BitReader::new(&bytes),
+                    &mut s,
+                    &xs,
+                    cols,
+                    &mut got,
+                );
+                for (a, b) in want.iter().zip(&got) {
+                    if kind == Kernel::Scalar {
+                        assert_eq!(a.to_bits(), b.to_bits(), "scalar kind must be the oracle");
+                    } else {
+                        let tol = 1e-5 * a.abs().max(1.0);
+                        assert!((a - b).abs() <= tol, "{kind:?} cols {cols}: {a} vs {b}");
+                    }
+                }
+            }
+        }
+    }
+}

@@ -20,6 +20,7 @@ use crate::leech::decode::LeechDecoder;
 use crate::leech::index::LeechIndexer;
 use crate::quant::gain::ChiGainQuantizer;
 use crate::quant::{Code, VectorQuantizer};
+use crate::util::bits::BitReader;
 use crate::util::json::Json;
 use crate::util::rng::Xoshiro256pp;
 use crate::DIM;
@@ -157,6 +158,28 @@ impl VectorQuantizer for LlvqSpherical {
         vec![self.bits]
     }
 
+    fn decode_blocks_into(
+        &self,
+        _widths: &[u32],
+        r: &mut BitReader,
+        _code: &mut Code,
+        _scratch: &mut [f32],
+        out: &mut [f32],
+    ) {
+        // Stream one lattice index per block and write every element
+        // through the same expression as dequantize (bit-exact); the final
+        // block may be partial and its padding lanes are dropped.
+        let mut i = 0;
+        while i < out.len() {
+            let x = self.indexer.decode_index(r.read(self.bits));
+            let take = DIM.min(out.len() - i);
+            for (o, &v) in out[i..i + take].iter_mut().zip(x.iter()) {
+                *o = (v as f64 / SQRT8 * self.scale) as f32;
+            }
+            i += take;
+        }
+    }
+
     fn spec(&self) -> Json {
         Json::obj(vec![
             ("kind", Json::Str("llvq-spherical".into())),
@@ -277,6 +300,31 @@ impl VectorQuantizer for LlvqShapeGain {
     /// serialized as two separate bit fields.
     fn code_widths(&self) -> Vec<u32> {
         vec![self.shape_bits, self.gain.bits]
+    }
+
+    fn decode_blocks_into(
+        &self,
+        _widths: &[u32],
+        r: &mut BitReader,
+        _code: &mut Code,
+        _scratch: &mut [f32],
+        out: &mut [f32],
+    ) {
+        // Stream the (shape, gain) field pair per block in serialization
+        // order and write every element through the same expressions as
+        // dequantize (bit-exact); partial final block padding is dropped.
+        let mut i = 0;
+        while i < out.len() {
+            let v = self.indexer.decode_index(r.read(self.shape_bits));
+            let m = coset::shell_of(&v).expect("bad shape index");
+            let pnorm = (16.0 * m as f64).sqrt();
+            let g = self.gain.level(r.read(self.gain.bits) as usize);
+            let take = DIM.min(out.len() - i);
+            for (o, &c) in out[i..i + take].iter_mut().zip(v.iter()) {
+                *o = (c as f64 / pnorm * g) as f32;
+            }
+            i += take;
+        }
     }
 
     fn spec(&self) -> Json {

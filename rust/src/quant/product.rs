@@ -5,7 +5,7 @@
 //! independently per block — "assigning a dedicated dtype to an entire
 //! block of weights" (paper §1).
 
-use crate::quant::{read_code_with, write_code_with, Code, VectorQuantizer};
+use crate::quant::{write_code_with, Code, VectorQuantizer};
 use crate::util::bits::{BitReader, BitWriter};
 
 /// Quantize a full row (any length) with `q`, writing the reconstruction
@@ -95,15 +95,10 @@ pub fn decode_row_with(
     scratch: &mut [f32],
     out: &mut [f32],
 ) {
-    let d = q.dim();
-    let mut i = 0;
-    while i < out.len() {
-        read_code_with(widths, r, code);
-        q.dequantize(code, scratch);
-        let take = d.min(out.len() - i);
-        out[i..i + take].copy_from_slice(&scratch[..take]);
-        i += take;
-    }
+    // Grouped decode produces bit-identical values to the old per-block
+    // loop here (see the decode_blocks_into contract), so every unpack
+    // path inherits the streaming overrides for free.
+    q.decode_blocks_into(widths, r, code, scratch, out);
 }
 
 /// Reconstruct a row from its codes.

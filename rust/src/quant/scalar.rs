@@ -8,6 +8,7 @@
 //!   "Lloyd-Max" row).
 
 use crate::quant::{Code, VectorQuantizer};
+use crate::util::bits::BitReader;
 use crate::util::json::Json;
 use crate::util::rng::Xoshiro256pp;
 
@@ -114,6 +115,21 @@ impl VectorQuantizer for UniformQuantizer {
 
     fn code_widths(&self) -> Vec<u32> {
         vec![self.bits]
+    }
+
+    fn decode_blocks_into(
+        &self,
+        _widths: &[u32],
+        r: &mut BitReader,
+        _code: &mut Code,
+        _scratch: &mut [f32],
+        out: &mut [f32],
+    ) {
+        // dim = 1: every element is one whole code — stream the raw field
+        // through the same value_of expression as dequantize (bit-exact).
+        for o in out.iter_mut() {
+            *o = self.value_of(r.read(self.bits) as i64) as f32;
+        }
     }
 
     fn spec(&self) -> Json {
@@ -236,6 +252,21 @@ impl VectorQuantizer for LloydMaxQuantizer {
 
     fn code_widths(&self) -> Vec<u32> {
         vec![self.bits]
+    }
+
+    fn decode_blocks_into(
+        &self,
+        _widths: &[u32],
+        r: &mut BitReader,
+        _code: &mut Code,
+        _scratch: &mut [f32],
+        out: &mut [f32],
+    ) {
+        // dim = 1: stream each code straight through the center table —
+        // the same lookup dequantize performs (bit-exact).
+        for o in out.iter_mut() {
+            *o = self.centers[r.read(self.bits) as usize] as f32;
+        }
     }
 
     fn spec(&self) -> Json {

@@ -123,8 +123,58 @@ pub trait VectorQuantizer: Send + Sync {
     fn decode_from(&self, r: &mut BitReader, out: &mut [f32]) {
         let widths = self.code_widths();
         let mut code = Code::empty();
-        read_code_with(&widths, r, &mut code);
-        self.dequantize(&code, out);
+        self.decode_from_with(&widths, r, &mut code, out);
+    }
+
+    /// [`VectorQuantizer::decode_from`] against pre-fetched widths and a
+    /// caller-owned scratch code — the same hoisted-scratch shape as
+    /// [`VectorQuantizer::decode_row_dot`], so per-block decode loops
+    /// (unpack, cached first touch) stay allocation-free after warm-up.
+    fn decode_from_with(
+        &self,
+        widths: &[u32],
+        r: &mut BitReader,
+        code: &mut Code,
+        out: &mut [f32],
+    ) {
+        read_code_with(widths, r, code);
+        self.dequantize(code, out);
+    }
+
+    /// Decode `⌈out.len()/dim⌉` consecutive codes from the bitstream into
+    /// the flat row segment `out` (any length; padding lanes of the final
+    /// block are discarded). This is the grouped-decode half of the SIMD
+    /// kernel tier (`quant::kernel`): decoding a whole segment at once
+    /// gives the dot-stage vector kernels a contiguous run to consume.
+    ///
+    /// The default decodes block-by-block through
+    /// [`VectorQuantizer::dequantize`]; overrides stream the raw fields
+    /// directly but must stay **bit-exact** vs this default — same fields,
+    /// same arithmetic expressions per element (pinned by
+    /// `rust/tests/kernels.rs` across all five quantizer specs).
+    /// `scratch` is `dim`-length spill space for the final partial block.
+    fn decode_blocks_into(
+        &self,
+        widths: &[u32],
+        r: &mut BitReader,
+        code: &mut Code,
+        scratch: &mut [f32],
+        out: &mut [f32],
+    ) {
+        let d = self.dim();
+        debug_assert_eq!(scratch.len(), d);
+        let mut i = 0;
+        while i < out.len() {
+            read_code_with(widths, r, code);
+            let take = d.min(out.len() - i);
+            if take == d {
+                self.dequantize(code, &mut out[i..i + d]);
+            } else {
+                self.dequantize(code, scratch);
+                out[i..i + take].copy_from_slice(&scratch[..take]);
+            }
+            i += take;
+        }
     }
 
     /// Decode one product-coded row (`⌈x.len()/dim⌉` consecutive codes)
@@ -492,6 +542,41 @@ mod tests {
             );
             assert_eq!(solo.to_bits(), accs[lane].to_bits(), "lane {lane}");
         }
+    }
+
+    #[test]
+    fn decode_blocks_into_matches_per_block_decode() {
+        // grouped segment decode (the SIMD tier's dequant stage) must be
+        // bit-exact vs the one-block-at-a-time path, partial tail included
+        let q = Identity(4);
+        let row: Vec<f32> = (0..10).map(|i| i as f32 * 0.3 - 1.1).collect();
+        let mut w = BitWriter::new();
+        crate::quant::product::encode_row_into(&q, &row, &mut w);
+        let bytes = w.finish();
+        let widths = q.code_widths();
+        let mut code = Code::empty();
+        let mut scratch = vec![0f32; 4];
+        let mut per_block = vec![0f32; row.len()];
+        crate::quant::product::decode_row_with(
+            &q,
+            &widths,
+            &mut BitReader::new(&bytes),
+            &mut code,
+            &mut scratch,
+            &mut per_block,
+        );
+        let mut grouped = vec![0f32; row.len()];
+        q.decode_blocks_into(
+            &widths,
+            &mut BitReader::new(&bytes),
+            &mut code,
+            &mut scratch,
+            &mut grouped,
+        );
+        assert_eq!(
+            per_block.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            grouped.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        );
     }
 
     #[test]

@@ -1,0 +1,360 @@
+//! SIMD kernel tier: forced-selection coverage and scalar-oracle parity.
+//!
+//! The dispatch contract (documented in `quant::kernel`): the dequant
+//! stage of every kernel is **bit-exact** vs the scalar path — grouped
+//! `decode_blocks_into` overrides stream the same bit fields through the
+//! same arithmetic expressions as `dequantize` — while the dot stage uses
+//! a fixed 4-wide partial-sum shape, so vector kernels agree with the
+//! scalar oracle to ≤ 1e-5 *relative* (FMA vs split rounding), are
+//! bit-identical across reruns / thread counts / lane counts, and
+//! `Kernel::Scalar` *is* the oracle (bit-identical delegation). Pinned
+//! here across all five quantizer specs, at the code-stream level and
+//! through whole forward passes of forced-kernel backends.
+
+use std::sync::Arc;
+
+use llvq::leech::index::LeechIndexer;
+use llvq::model::backend::ExecutionBackend;
+use llvq::model::config::config_by_name;
+use llvq::model::packed::PackedFile;
+use llvq::model::transformer::{forward, ActivationCapture, Weights};
+use llvq::pipeline::driver::{quantize_model_packed, PtqArtifacts, PtqOptions};
+use llvq::pipeline::rotation::RotationMode;
+use llvq::quant::e8::{E8Codebook, E8Cut};
+use llvq::quant::kernel::{decode_row_dot_multi_kernel, Kernel, KernelScratch};
+use llvq::quant::llvq::{LlvqShapeGain, LlvqSpherical};
+use llvq::quant::product::encode_row_into;
+use llvq::quant::scalar::{LloydMaxQuantizer, UniformQuantizer};
+use llvq::quant::{Code, VectorQuantizer};
+use llvq::util::bits::{BitReader, BitWriter};
+use llvq::util::proptest::{check, TempArtifact};
+
+/// The five quantizer specs of the `.llvqm` codec surface (scalar uniform,
+/// scalar Lloyd–Max, E8, LLVQ spherical, LLVQ shape–gain).
+fn five_quantizers() -> Vec<(&'static str, Box<dyn VectorQuantizer>)> {
+    let ix = Arc::new(LeechIndexer::new(3));
+    vec![
+        (
+            "uniform",
+            Box::new(UniformQuantizer::new_gaussian_optimal(4)) as Box<dyn VectorQuantizer>,
+        ),
+        (
+            "lloyd-max",
+            Box::new(LloydMaxQuantizer::train_gaussian(3, 40_000, 4)),
+        ),
+        ("e8", Box::new(E8Codebook::new(E8Cut::Ball))),
+        (
+            "llvq-spherical",
+            Box::new(LlvqSpherical::with_scale(ix.clone(), 0.9)),
+        ),
+        ("llvq-shape-gain", Box::new(LlvqShapeGain::new(ix, 1))),
+    ]
+}
+
+/// Every kernel the current host can actually run (scalar always first).
+fn available_kernels() -> Vec<Kernel> {
+    [Kernel::Scalar, Kernel::Avx2, Kernel::Neon, Kernel::Portable]
+        .into_iter()
+        .filter(Kernel::available)
+        .collect()
+}
+
+/// PTQ the padding-exercising tiny config into a packed artifact.
+fn pack_tiny(q: &dyn VectorQuantizer, seed: u64, finetune: bool) -> PtqArtifacts {
+    let cfg = config_by_name("qwen3-4b-tiny").unwrap();
+    let w = Weights::random(&cfg, seed);
+    let opts = PtqOptions {
+        calib_seqs: 2,
+        finetune_scales: finetune,
+        rotation: RotationMode::InputOutput,
+        ..Default::default()
+    };
+    quantize_model_packed(&w, q, &opts)
+}
+
+fn save_temp(art: &PtqArtifacts, tag: &str) -> TempArtifact {
+    let tmp = TempArtifact::new(&format!("kernels-{tag}"), "llvqm");
+    art.packed.save(tmp.path()).unwrap();
+    tmp
+}
+
+fn argmax(row: &[f32]) -> usize {
+    let mut best = (0usize, f32::NEG_INFINITY);
+    for (i, &v) in row.iter().enumerate() {
+        if v > best.1 {
+            best = (i, v);
+        }
+    }
+    best.0
+}
+
+#[test]
+fn prop_every_kernel_matches_the_scalar_oracle_across_specs() {
+    // code-stream level: random rows through encode_row_into, decoded by
+    // decode_row_dot_multi_kernel under every available kernel. Scalar is
+    // bit-identical to the trait oracle; vector kernels are ≤ 1e-5
+    // relative, rerun-bit-identical, and each lane of a multi-lane pass
+    // is bit-identical to a single-lane pass of the same kernel.
+    for (name, q) in five_quantizers() {
+        let q = q.as_ref();
+        let widths = q.code_widths();
+        check(&format!("kernel-oracle-{name}"), 3, |rng| {
+            // cols crosses segment (192) and block boundaries, with tails
+            let cols = 1 + rng.next_range(400) as usize;
+            let mut row = vec![0f32; cols];
+            rng.fill_gaussian_f32(&mut row);
+            let mut w = BitWriter::new();
+            encode_row_into(q, &row, &mut w);
+            let bytes = w.finish();
+            let n = 3usize;
+            let mut xs = vec![0f64; n * cols];
+            rng.fill_gaussian_f64(&mut xs);
+
+            let mut want = vec![0f64; n];
+            let mut code = Code::empty();
+            let mut block = vec![0f32; q.dim()];
+            q.decode_row_dot_multi(
+                &widths,
+                &mut BitReader::new(&bytes),
+                &mut code,
+                &mut block,
+                &xs,
+                cols,
+                &mut want,
+            );
+            for kind in available_kernels() {
+                let mut s = KernelScratch::default();
+                let mut got = vec![0f64; n];
+                decode_row_dot_multi_kernel(
+                    q,
+                    kind,
+                    &widths,
+                    &mut BitReader::new(&bytes),
+                    &mut s,
+                    &xs,
+                    cols,
+                    &mut got,
+                );
+                for (lane, (a, b)) in want.iter().zip(&got).enumerate() {
+                    if kind == Kernel::Scalar {
+                        if a.to_bits() != b.to_bits() {
+                            return Err(format!(
+                                "{name}: Scalar kind is not the oracle (lane {lane})"
+                            ));
+                        }
+                    } else {
+                        let tol = 1e-5 * a.abs().max(1.0);
+                        if (a - b).abs() > tol {
+                            return Err(format!(
+                                "{name}/{kind:?} cols={cols} lane {lane}: {a} vs {b}"
+                            ));
+                        }
+                    }
+                }
+                // reruns are bit-identical (no hidden state in dispatch)
+                let mut again = vec![0f64; n];
+                decode_row_dot_multi_kernel(
+                    q,
+                    kind,
+                    &widths,
+                    &mut BitReader::new(&bytes),
+                    &mut s,
+                    &xs,
+                    cols,
+                    &mut again,
+                );
+                if got.iter().zip(&again).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                    return Err(format!("{name}/{kind:?}: rerun not bit-identical"));
+                }
+                // each lane equals a fresh single-lane pass (lane-count
+                // invariance of the partial-sum shape)
+                for lane in 0..n {
+                    let mut solo = vec![0f64; 1];
+                    let mut s1 = KernelScratch::default();
+                    decode_row_dot_multi_kernel(
+                        q,
+                        kind,
+                        &widths,
+                        &mut BitReader::new(&bytes),
+                        &mut s1,
+                        &xs[lane * cols..(lane + 1) * cols],
+                        cols,
+                        &mut solo,
+                    );
+                    if solo[0].to_bits() != got[lane].to_bits() {
+                        return Err(format!(
+                            "{name}/{kind:?}: lane {lane} differs from single-lane pass"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn prop_grouped_block_decode_is_bit_exact_across_specs() {
+    // the dequant-stage half of the contract: decode_blocks_into (and its
+    // streaming overrides in every quantizer) reproduces one-block-at-a-
+    // time decode_from_with bit for bit, partial tail blocks included.
+    for (name, q) in five_quantizers() {
+        let q = q.as_ref();
+        let d = q.dim();
+        let widths = q.code_widths();
+        check(&format!("kernel-grouped-decode-{name}"), 4, |rng| {
+            let cols = 1 + rng.next_range(300) as usize;
+            let mut row = vec![0f32; cols];
+            rng.fill_gaussian_f32(&mut row);
+            let mut w = BitWriter::new();
+            encode_row_into(q, &row, &mut w);
+            let bytes = w.finish();
+
+            let mut code = Code::empty();
+            let mut block = vec![0f32; d];
+            let mut per_block = vec![0f32; cols];
+            let mut r = BitReader::new(&bytes);
+            let mut i = 0;
+            while i < cols {
+                q.decode_from_with(&widths, &mut r, &mut code, &mut block);
+                let take = d.min(cols - i);
+                per_block[i..i + take].copy_from_slice(&block[..take]);
+                i += take;
+            }
+
+            let mut grouped = vec![0f32; cols];
+            q.decode_blocks_into(
+                &widths,
+                &mut BitReader::new(&bytes),
+                &mut code,
+                &mut block,
+                &mut grouped,
+            );
+            if per_block
+                .iter()
+                .zip(&grouped)
+                .any(|(a, b)| a.to_bits() != b.to_bits())
+            {
+                return Err(format!("{name}: grouped decode not bit-exact (cols={cols})"));
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn forced_scalar_backend_matches_auto_kernel_forward_pass() {
+    // backend level, two specs to bound runtime: a forced-scalar fused
+    // backend vs the auto-detected kernel over whole forward passes must
+    // agree to ≤ 1e-5 relative with identical argmax. On hosts where
+    // detection lands on scalar this degenerates to bit-equality — the
+    // forced-scalar leg itself runs everywhere (the CI scalar-fallback
+    // matrix leg relies on that).
+    let ix = Arc::new(LeechIndexer::new(3));
+    let specs: Vec<(&str, Box<dyn VectorQuantizer>)> = vec![
+        (
+            "uniform",
+            Box::new(UniformQuantizer::new_gaussian_optimal(4)),
+        ),
+        ("llvq-shape-gain", Box::new(LlvqShapeGain::new(ix, 1))),
+    ];
+    let auto = Kernel::detect();
+    for (i, (name, q)) in specs.into_iter().enumerate() {
+        let art = pack_tiny(q.as_ref(), 900 + i as u64, i % 2 == 0);
+        let tmp = save_temp(&art, name);
+        let scalar = ExecutionBackend::packed_fused_kernel(
+            PackedFile::open(tmp.path()).unwrap(),
+            2,
+            Kernel::Scalar,
+        )
+        .unwrap();
+        assert_eq!(scalar.simd(), Kernel::Scalar);
+        let vectored =
+            ExecutionBackend::packed_fused_kernel(PackedFile::open(tmp.path()).unwrap(), 2, auto)
+                .unwrap();
+        assert_eq!(vectored.simd(), auto);
+        let vocab = art.weights.cfg.vocab;
+        check(&format!("kernel-backend-{name}"), 3, |rng| {
+            let len = 1 + rng.next_range(10) as usize;
+            let toks: Vec<u8> = (0..len).map(|_| rng.next_range(64) as u8).collect();
+            let mut cap = ActivationCapture::default();
+            let s = forward(&scalar, &toks, &mut cap);
+            let v = forward(&vectored, &toks, &mut cap);
+            let linf = s.iter().fold(0f32, |a, &b| a.max(b.abs()));
+            let tol = 1e-5 * linf.max(1.0);
+            for (a, b) in s.iter().zip(&v) {
+                if (a - b).abs() > tol {
+                    return Err(format!(
+                        "{name}: {} kernel drifted {} > {tol} from scalar",
+                        auto.label(),
+                        (a - b).abs()
+                    ));
+                }
+            }
+            for p in 0..len {
+                let sl = &s[p * vocab..(p + 1) * vocab];
+                let vl = &v[p * vocab..(p + 1) * vocab];
+                if argmax(sl) != argmax(vl) {
+                    return Err(format!("{name}: argmax parity lost at position {p}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn forced_kernels_are_thread_count_invariant() {
+    // segment boundaries depend only on dim and cols, and the pool shards
+    // whole rows — so for a *fixed* kernel the pool size must not change a
+    // single bit. Checked for every kernel the host can run.
+    let q = E8Codebook::new(E8Cut::Ball);
+    let art = pack_tiny(&q, 77, true);
+    let tmp = save_temp(&art, "threads");
+    for kind in available_kernels() {
+        let b1 = ExecutionBackend::packed_fused_kernel(
+            PackedFile::open(tmp.path()).unwrap(),
+            1,
+            kind,
+        )
+        .unwrap();
+        let b4 = ExecutionBackend::packed_fused_kernel(
+            PackedFile::open(tmp.path()).unwrap(),
+            4,
+            kind,
+        )
+        .unwrap();
+        let toks: Vec<u8> = (0..9).map(|i| (i * 7 % 64) as u8).collect();
+        let mut cap = ActivationCapture::default();
+        let l1 = forward(&b1, &toks, &mut cap);
+        let l4 = forward(&b4, &toks, &mut cap);
+        assert!(
+            l1.iter().zip(&l4).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{kind:?}: threads=4 diverged from threads=1"
+        );
+    }
+}
+
+#[test]
+fn unavailable_kernels_are_rejected_not_silently_downgraded() {
+    let q = UniformQuantizer::new_gaussian_optimal(4);
+    let art = pack_tiny(&q, 5, false);
+    let tmp = save_temp(&art, "reject");
+    for kind in [Kernel::Avx2, Kernel::Neon, Kernel::Portable] {
+        if kind.available() {
+            continue;
+        }
+        let err = ExecutionBackend::packed_fused_kernel(
+            PackedFile::open(tmp.path()).unwrap(),
+            1,
+            kind,
+        )
+        .unwrap_err();
+        assert!(err.contains(kind.label()), "{err}");
+        assert!(Kernel::resolve(kind.label()).is_err());
+    }
+    // and the string-level override surface agrees with programmatic force
+    assert_eq!(Kernel::resolve("scalar").unwrap(), Kernel::Scalar);
+    assert_eq!(Kernel::resolve("off").unwrap(), Kernel::Scalar);
+    assert!(Kernel::resolve("not-a-kernel").is_err());
+}

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Run every bench harness that emits BENCH_*.json rows and leave the
+# files in the repo root (the kernel baseline BENCH_kernel.json is the
+# only one under version control — refresh it with this script).
+#
+# Defaults to smoke mode (LLVQ_BENCH_SMOKE=1: shrunken iteration counts
+# and codebook dims, rows tagged "smoke": true) so a laptop or CI runner
+# produces every file in seconds; export LLVQ_BENCH_SMOKE=0 for the full
+# measurement sweep. LLVQ_SIMD=off|scalar|avx2|neon|portable forces the
+# fused kernel the serving benches dispatch (default: auto-detection —
+# the simd-vs-scalar section always measures the forced-scalar baseline
+# alongside whatever detection picks).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export LLVQ_BENCH_SMOKE="${LLVQ_BENCH_SMOKE:-1}"
+
+cargo bench --bench packed
+cargo bench --bench serving
+ls -l BENCH_*.json
