@@ -126,7 +126,7 @@ fn main() {
         backend.resident_weight_bytes()
     );
 
-    let engine = Arc::new(BackendEngine { backend });
+    let engine = Arc::new(BackendEngine::new(backend));
     let coord = Coordinator::start(
         engine.clone(),
         BatcherConfig {

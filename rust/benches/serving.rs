@@ -11,11 +11,15 @@
 //! cached × 1/2/4/8 pool threads × single-lane and 8-lane slate, every
 //! row tagged with the `simd` kernel it dispatched) plus the
 //! forced-scalar-vs-auto-detected SIMD comparison in `BENCH_kernel.json`,
-//! and the pipelined-prefill scheduler comparison
+//! the pipelined-prefill scheduler comparison
 //! (time-to-first-token + active-lane throughput while a long prompt
-//! prefills, chunked vs monolithic) in `BENCH_prefill.json` (override with
+//! prefills, chunked vs monolithic) in `BENCH_prefill.json`, and the
+//! paged-KV comparison (sessions-per-GB for dense slabs vs f32 pages vs
+//! llvq cold pages, plus decode tok/s dense vs paged vs paged+quantized)
+//! in `BENCH_kv.json` (override with
 //! `LLVQ_BENCH_OUT` / `LLVQ_BENCH_GEN_OUT` / `LLVQ_BENCH_KERNEL_OUT` /
-//! `LLVQ_BENCH_PREFILL_OUT`; all files are rewritten each run), in the
+//! `LLVQ_BENCH_PREFILL_OUT` / `LLVQ_BENCH_KV_OUT`; all files are
+//! rewritten each run), in the
 //! flat row shape the `BENCH_*.json` trajectories use. `LLVQ_BENCH_SMOKE=1`
 //! shrinks iteration counts and codebook dims so CI produces every file in
 //! seconds (rows then carry `"smoke": true`).
@@ -28,6 +32,7 @@ use llvq::math::hadamard::RandomizedHadamard;
 use llvq::model::backend::{BackendKind, ExecutionBackend};
 use llvq::model::config::config_by_name;
 use llvq::model::corpus::Corpus;
+use llvq::model::kvpage::{KvCodec, KvQuantKind, PageArena, PagedKvCache};
 use llvq::model::packed::{PackedFile, PackedModel};
 use llvq::model::sample::{argmax, SampleParams};
 use llvq::model::transformer::{
@@ -135,7 +140,7 @@ fn prefill_pipeline_run(
     long_prompt: &[u8],
 ) -> PrefillRun {
     let coord = Coordinator::start(
-        Arc::new(BackendEngine { backend }),
+        Arc::new(BackendEngine::new(backend)),
         BatcherConfig {
             max_batch: 4,
             max_wait: Duration::from_millis(1),
@@ -277,14 +282,12 @@ fn main() {
         // includes the lazy decode of every touched layer)
         let r = bq.run(&format!("{label}: first token (cold)"), || {
             let be = build_backend(&path, kind, threads);
-            let engine = BackendEngine { backend: be };
+            let engine = BackendEngine::new(be);
             black_box(engine.forward_batch(std::slice::from_ref(&short[0])));
         });
         rows.push(row(&format!("first_token_{label}"), &r, vec![]));
         // steady state: warm backend, batched forward throughput
-        let engine = BackendEngine {
-            backend: build_backend(&path, kind, threads),
-        };
+        let engine = BackendEngine::new(build_backend(&path, kind, threads));
         engine.forward_batch(&short); // warm every layer
         let r = bq.run_throughput(
             &format!("{label}: steady batch=4 (seq/s)"),
@@ -625,6 +628,127 @@ fn main() {
         match std::fs::write(&prefill_out, Json::Arr(prefill_rows).to_string_pretty()) {
             Ok(()) => println!("wrote {prefill_out}"),
             Err(e) => eprintln!("[warn] could not write {prefill_out}: {e}"),
+        }
+    }
+
+    // ---- paged KV cache: capacity + throughput → BENCH_kv.json ----
+    // the paged-KV acceptance numbers: sessions-per-GB from the exact
+    // per-session byte shapes (dense worst-case slab vs f32 pages vs
+    // llvq-coded cold pages), plus decode tok/s dense vs paged vs
+    // paged+quantized on the fused backend (the hot serving path).
+    {
+        println!("\n== paged KV: dense slab vs f32 pages vs llvq cold pages ==");
+        let mut kv_rows: Vec<Json> = Vec::new();
+        let page_tokens = 16usize;
+        let dense_bytes = cfg.n_layers * 2 * cfg.max_seq * cfg.d_model * 4;
+        let page_bytes = cfg.n_layers * 2 * page_tokens * cfg.d_model * 4;
+        let codec = KvCodec::build(KvQuantKind::Llvq, cfg.d_model)
+            .unwrap()
+            .unwrap();
+        // a cold page is n_layers × 2 × page_tokens coded rows, each
+        // carrying its bit-packed codes plus one f32 sigma
+        let cold_page_bytes = cfg.n_layers * 2 * page_tokens * (codec.row_bytes() + 4);
+        // capacity at a typical live session length (dense admission
+        // charges max_seq regardless; paging charges actual pages)
+        let live_tokens = 32usize;
+        let live_pages = live_tokens.div_ceil(page_tokens);
+        let gb = (1u64 << 30) as f64;
+        let paged_session_bytes = live_pages * page_bytes;
+        // quantized: the hottest page stays f32, the rest are cold codes
+        let quant_session_bytes = page_bytes + (live_pages - 1) * cold_page_bytes;
+        let per_gb = [
+            ("dense", dense_bytes),
+            ("paged", paged_session_bytes),
+            ("paged_llvq", quant_session_bytes),
+        ];
+        for (name, bytes) in per_gb {
+            println!(
+                "{name:<11}: {bytes:>8} B/session ({live_tokens}-token live) → \
+                 {:.0} sessions/GB",
+                gb / bytes as f64
+            );
+        }
+        let mut pairs = vec![
+            ("suite", Json::Str("kv".into())),
+            ("name", Json::Str("sessions_per_gb".into())),
+            ("page_tokens", Json::Int(page_tokens as i64)),
+            ("live_tokens", Json::Int(live_tokens as i64)),
+            ("dense_bytes_per_session", Json::Int(dense_bytes as i64)),
+            ("paged_bytes_per_session", Json::Int(paged_session_bytes as i64)),
+            ("paged_llvq_bytes_per_session", Json::Int(quant_session_bytes as i64)),
+            ("sessions_per_gb_dense", Json::Num(gb / dense_bytes as f64)),
+            ("sessions_per_gb_paged", Json::Num(gb / paged_session_bytes as f64)),
+            (
+                "sessions_per_gb_paged_llvq",
+                Json::Num(gb / quant_session_bytes as f64),
+            ),
+        ];
+        if smoke {
+            pairs.push(("smoke", Json::Bool(true)));
+        }
+        kv_rows.push(Json::obj(pairs));
+
+        // decode throughput: same greedy run over the three cache shapes
+        // (page_tokens=8 + hot=8 for the quantized leg, so attention
+        // really reads decoded cold pages, not a trivially-all-hot cache)
+        let backend = build_backend(&path, BackendKind::Fused, threads);
+        {
+            let mut cache = KvCache::new(backend.cfg());
+            black_box(prefill(&backend, &mut cache, &prompt)); // warm
+        }
+        let r = bq.run(&format!("dense cache: kv gen ({gen_n} tok)"), || {
+            gen_kv(&backend, &prompt, gen_n);
+        });
+        println!("dense cache: {:.1} tok/s", gen_n as f64 / r.mean);
+        kv_rows.push(suite_row(
+            "kv",
+            "gen_dense",
+            &r,
+            vec![
+                ("tok_per_s", Json::Num(gen_n as f64 / r.mean)),
+                ("bytes_per_session", Json::Int(dense_bytes as i64)),
+            ],
+        ));
+        let bench_pt = 8usize;
+        for (name, quant, hot) in [
+            ("paged_none", KvQuantKind::None, 16usize),
+            ("paged_llvq", KvQuantKind::Llvq, 8),
+        ] {
+            let kv_codec = KvCodec::build(quant, cfg.d_model).unwrap();
+            let total = prompt.len() + gen_n;
+            let arena = PageArena::new(backend.cfg(), total.div_ceil(bench_pt), bench_pt);
+            let r = bq.run(&format!("{name}: kv gen ({gen_n} tok)"), || {
+                let mut cache = PagedKvCache::new(
+                    backend.cfg(),
+                    Arc::clone(&arena),
+                    kv_codec.clone(),
+                    hot,
+                );
+                let mut logits = prefill(&backend, &mut cache, &prompt);
+                for _ in 0..gen_n - 1 {
+                    let t = argmax(&logits) as u8;
+                    logits = forward_step(&backend, &mut cache, t);
+                }
+                black_box(argmax(&logits));
+            });
+            println!("{name}: {:.1} tok/s", gen_n as f64 / r.mean);
+            kv_rows.push(suite_row(
+                "kv",
+                &format!("gen_{name}"),
+                &r,
+                vec![
+                    ("tok_per_s", Json::Num(gen_n as f64 / r.mean)),
+                    ("page_tokens", Json::Int(bench_pt as i64)),
+                    ("hot_window", Json::Int(hot as i64)),
+                    ("kv_quant", Json::Str(quant.label().into())),
+                ],
+            ));
+        }
+        let kv_out =
+            std::env::var("LLVQ_BENCH_KV_OUT").unwrap_or_else(|_| "BENCH_kv.json".into());
+        match std::fs::write(&kv_out, Json::Arr(kv_rows).to_string_pretty()) {
+            Ok(()) => println!("wrote {kv_out}"),
+            Err(e) => eprintln!("[warn] could not write {kv_out}: {e}"),
         }
     }
 

@@ -53,9 +53,10 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::model::backend::ExecutionBackend;
+use crate::model::kvpage::{KvCodec, KvPageCounters, KvQuantKind, PageArena, PagedKvCache};
 use crate::model::sample::{argmax, SampleParams, Sampler};
 use crate::model::transformer::{
-    forward, forward_step_batch, ActivationCapture, KvCache, StepLane, Weights,
+    forward, forward_step_batch, ActivationCapture, KvCache, KvStore, StepLane, Weights,
 };
 
 /// A forward engine: one-shot batched prefix inference plus the stateful
@@ -68,14 +69,17 @@ pub trait BatchForward: Send + Sync {
     /// at the LAST position.
     fn forward_batch(&self, batch: &[Vec<u8>]) -> Vec<Vec<f32>>;
 
-    /// Open a generation session: a KV cache sized for this engine's
-    /// model. Sessions are pure state — any number may exist per engine.
-    fn open_session(&self) -> KvCache;
+    /// Open a generation session: a KV store sized for this engine's
+    /// model — a dense worst-case [`KvCache`] slab, or (for paged
+    /// engines) a zero-page [`PagedKvCache`] whose pages are reserved as
+    /// tokens actually arrive. Sessions are pure state — any number may
+    /// exist per engine.
+    fn open_session(&self) -> Box<dyn KvStore>;
 
     /// Append `tokens` to a session and return the logits at the last
     /// appended position (bit-identical to `forward_batch` over the
     /// session's full history).
-    fn prefill(&self, cache: &mut KvCache, tokens: &[u8]) -> Vec<f32>;
+    fn prefill(&self, cache: &mut dyn KvStore, tokens: &[u8]) -> Vec<f32>;
 
     /// Advance a slate of sessions by one token each, returning per-lane
     /// last-position logits. Backends amortize per-weight-row work across
@@ -83,8 +87,30 @@ pub trait BatchForward: Send + Sync {
     /// step.
     fn decode_step(&self, lanes: &mut [StepLane<'_>]) -> Vec<Vec<f32>>;
 
-    /// Recycle hook for a finished session (default: drop the cache).
-    fn close_session(&self, _cache: KvCache) {}
+    /// Recycle hook for a finished session (default: drop the cache —
+    /// which, for paged sessions, returns every page to the arena).
+    fn close_session(&self, _cache: Box<dyn KvStore>) {}
+
+    /// Live page-arena counters when this engine serves paged KV
+    /// sessions (None for dense worst-case sessions).
+    fn kv_counters(&self) -> Option<Arc<KvPageCounters>> {
+        None
+    }
+
+    /// Page budget of the engine's KV arena (0 = dense sessions).
+    fn kv_page_budget(&self) -> usize {
+        0
+    }
+
+    /// Tokens per KV page (0 = dense sessions).
+    fn kv_page_tokens(&self) -> usize {
+        0
+    }
+
+    /// Cold-page codec label (for `STATS`; "none" when unquantized).
+    fn kv_quant_label(&self) -> String {
+        "none".into()
+    }
 
     /// Label of the executing representation (for `STATS`).
     fn backend_name(&self) -> String {
@@ -110,19 +136,61 @@ pub trait BatchForward: Send + Sync {
     }
 }
 
+/// Paged-KV session configuration of a [`BackendEngine`]: the shared
+/// arena plus the cold-page codec every session opens against.
+struct PagedKv {
+    arena: Arc<PageArena>,
+    codec: Option<Arc<KvCodec>>,
+    hot_window: usize,
+    quant: KvQuantKind,
+}
+
 /// Rust-native engine over an [`ExecutionBackend`] — dense (the oracle),
 /// lazily-decoded packed, or fused packed, all behind one forward pass and
-/// one decode-step path.
+/// one decode-step path. Sessions are dense worst-case [`KvCache`] slabs
+/// by default; [`BackendEngine::paged`] switches them to arena-backed
+/// [`PagedKvCache`]s (optionally with lattice-quantized cold pages).
 pub struct BackendEngine {
     pub backend: ExecutionBackend,
+    kv: Option<PagedKv>,
 }
 
 impl BackendEngine {
+    /// Engine with dense worst-case KV sessions (the historical shape).
+    pub fn new(backend: ExecutionBackend) -> Self {
+        Self { backend, kv: None }
+    }
+
     /// Wrap dense weights (the no-artifacts fallback and oracle).
     pub fn dense(weights: Weights) -> Self {
-        Self {
-            backend: ExecutionBackend::dense(weights),
-        }
+        Self::new(ExecutionBackend::dense(weights))
+    }
+
+    /// Engine whose sessions draw fixed-size KV pages from a shared
+    /// arena of at most `pages` buffers of `page_tokens` tokens each,
+    /// quantizing pages older than the last `hot_window` tokens with
+    /// `quant` (`None` keeps every page f32 — bit-identical to dense
+    /// sessions). Errs on an unbuildable codec spec.
+    pub fn paged(
+        backend: ExecutionBackend,
+        pages: usize,
+        page_tokens: usize,
+        hot_window: usize,
+        quant: KvQuantKind,
+    ) -> Result<Self, String> {
+        let cfg = backend.cfg();
+        let page_tokens = page_tokens.clamp(1, cfg.max_seq);
+        let codec = KvCodec::build(quant, cfg.d_model)?;
+        let arena = PageArena::new(cfg, pages.max(1), page_tokens);
+        Ok(Self {
+            backend,
+            kv: Some(PagedKv {
+                arena,
+                codec,
+                hot_window,
+                quant,
+            }),
+        })
     }
 }
 
@@ -147,11 +215,19 @@ impl BatchForward for BackendEngine {
             .collect()
     }
 
-    fn open_session(&self) -> KvCache {
-        KvCache::new(self.backend.cfg())
+    fn open_session(&self) -> Box<dyn KvStore> {
+        match &self.kv {
+            Some(kv) => Box::new(PagedKvCache::new(
+                self.backend.cfg(),
+                Arc::clone(&kv.arena),
+                kv.codec.clone(),
+                kv.hot_window,
+            )),
+            None => Box::new(KvCache::new(self.backend.cfg())),
+        }
     }
 
-    fn prefill(&self, cache: &mut KvCache, tokens: &[u8]) -> Vec<f32> {
+    fn prefill(&self, cache: &mut dyn KvStore, tokens: &[u8]) -> Vec<f32> {
         crate::model::transformer::prefill(&self.backend, cache, tokens)
     }
 
@@ -177,6 +253,25 @@ impl BatchForward for BackendEngine {
 
     fn simd_label(&self) -> String {
         self.backend.simd().label().into()
+    }
+
+    fn kv_counters(&self) -> Option<Arc<KvPageCounters>> {
+        self.kv.as_ref().map(|kv| kv.arena.counters())
+    }
+
+    fn kv_page_budget(&self) -> usize {
+        self.kv.as_ref().map_or(0, |kv| kv.arena.max_pages())
+    }
+
+    fn kv_page_tokens(&self) -> usize {
+        self.kv.as_ref().map_or(0, |kv| kv.arena.page_tokens())
+    }
+
+    fn kv_quant_label(&self) -> String {
+        self.kv
+            .as_ref()
+            .map_or("none", |kv| kv.quant.label())
+            .into()
     }
 }
 
@@ -223,7 +318,7 @@ enum Msg {
 /// A parked session: its KV cache plus the logits at its last position
 /// (present once the first FEED has drained).
 struct Session {
-    cache: KvCache,
+    cache: Box<dyn KvStore>,
     last_logits: Option<Vec<f32>>,
 }
 
@@ -244,7 +339,7 @@ struct WaitingGen {
 /// half-done jobs behind other waiting ones.
 struct PrefillJob {
     sid: u64,
-    cache: KvCache,
+    cache: Box<dyn KvStore>,
     tokens: Vec<u8>,
     cursor: usize,
     /// Logits of the most recently completed chunk (the session's
@@ -263,7 +358,7 @@ impl PrefillJob {
 /// A session currently on the active decode slate.
 struct GenJob {
     sid: u64,
-    cache: KvCache,
+    cache: Box<dyn KvStore>,
     last_logits: Vec<f32>,
     sampler: Sampler,
     remaining: usize,
@@ -291,6 +386,9 @@ pub struct Metrics {
     pub prefill_jobs: AtomicU64,
     /// Prompt tokens appended through chunked prefill ticks.
     pub prefill_toks: AtomicU64,
+    /// KV page-arena counters, set once at startup for paged engines
+    /// (absent on dense engines — STATS then reports zeros).
+    pub kv: std::sync::OnceLock<Arc<KvPageCounters>>,
 }
 
 impl Metrics {
@@ -368,6 +466,9 @@ impl Coordinator {
     pub fn start(engine: Arc<dyn BatchForward>, cfg: BatcherConfig) -> Arc<Self> {
         let (tx, rx) = channel::<Msg>();
         let metrics = Arc::new(Metrics::default());
+        if let Some(counters) = engine.kv_counters() {
+            let _ = metrics.kv.set(counters);
+        }
         let stopping = Arc::new(AtomicBool::new(false));
         let m2 = metrics.clone();
         let s2 = stopping.clone();
@@ -702,6 +803,10 @@ fn handle_msg(
                 } else {
                     None
                 };
+                // reserve pages for the queued prompt plus the generated
+                // tokens now, so a paged arena that cannot hold the run
+                // answers `kv-oom` here instead of panicking mid-decode
+                let err = err.or_else(|| job.cache.reserve(job.queued() + n).err());
                 match err {
                     Some(e) => {
                         let _ = stream.send(Err(e));
@@ -778,6 +883,11 @@ fn queue_feed(
                 job.queued()
             ));
         }
+        // admission against the *live* page budget: reserve pages through
+        // the whole queued run now (reserve is monotonic, so the earlier
+        // reservation still covers tokens already queued) — an exhausted
+        // arena answers `kv-oom` and leaves the job untouched
+        job.cache.reserve(job.queued() + n)?;
         job.tokens.extend_from_slice(&tokens);
         return Ok(n);
     }
@@ -791,7 +901,14 @@ fn queue_feed(
             sess.cache.len()
         ));
     }
-    let sess = st.sessions.remove(&sid).expect("looked up above");
+    let mut sess = st.sessions.remove(&sid).expect("looked up above");
+    // paged engines admit against actual pages, not worst-case max_seq: an
+    // exhausted arena parks the session back and answers `kv-oom` (the
+    // client may retry after other sessions close)
+    if let Err(e) = sess.cache.reserve(n) {
+        st.sessions.insert(sid, sess);
+        return Err(e);
+    }
     st.prefilling.push_back(PrefillJob {
         sid,
         cache: sess.cache,
@@ -815,22 +932,27 @@ fn admit_gen(
     params: SampleParams,
     stream: Sender<Result<GenEvent, String>>,
 ) {
-    match gen_admit_error(st, engine, sid, n) {
-        Some(e) => {
-            let _ = stream.send(Err(e));
-        }
-        None => {
-            let sess = st.sessions.remove(&sid).expect("admission checked");
-            st.active.push(GenJob {
-                sid,
-                cache: sess.cache,
-                last_logits: sess.last_logits.expect("admission checked"),
-                sampler: Sampler::new(params),
-                remaining: n,
-                stream,
-            });
-        }
+    if let Some(e) = gen_admit_error(st, engine, sid, n) {
+        let _ = stream.send(Err(e));
+        return;
     }
+    let mut sess = st.sessions.remove(&sid).expect("admission checked");
+    // reserve pages for the whole run before joining the slate: a paged
+    // arena without room answers `kv-oom` as the stream's first event and
+    // the session parks again, untouched
+    if let Err(e) = sess.cache.reserve(n) {
+        st.sessions.insert(sid, sess);
+        let _ = stream.send(Err(e));
+        return;
+    }
+    st.active.push(GenJob {
+        sid,
+        cache: sess.cache,
+        last_logits: sess.last_logits.expect("admission checked"),
+        sampler: Sampler::new(params),
+        remaining: n,
+        stream,
+    });
 }
 
 /// One prefill tick: grant up to `prefill_chunk` prompt tokens to queued
@@ -970,7 +1092,7 @@ fn run_decode_tick(
             .take(take)
             .zip(&toks)
             .map(|(job, &token)| StepLane {
-                cache: &mut job.cache,
+                cache: job.cache.as_mut(),
                 token,
             })
             .collect();
@@ -1062,7 +1184,7 @@ impl Default for ServeOptions {
 /// | command            | reply                                              |
 /// |--------------------|----------------------------------------------------|
 /// | `NEXT t1,t2,…`     | `OK next=<argmax> logit=<v>` — full-prefix forward |
-/// | `STATS`            | `OK requests=… mean_batch=… mean_latency_ms=… sessions=… gen_tokens=… mean_lanes=… prefill_jobs=… prefill_toks=… threads=… backend=… simd=… resident_bytes=…` |
+/// | `STATS`            | `OK requests=… mean_batch=… mean_latency_ms=… sessions=… gen_tokens=… mean_lanes=… prefill_jobs=… prefill_toks=… kv_pages=<allocated>/<budget> kv_quantized=… kv_oom=… kv_quant=… threads=… backend=… simd=… resident_bytes=…` |
 /// | `QUIT`             | closes the connection                              |
 ///
 /// **v2 — generation sessions (one session per connection):**
@@ -1081,6 +1203,22 @@ impl Default for ServeOptions {
 /// session, including mid-prefill: a queued or half-done FEED's cache is
 /// freed and its session slot reclaimed.
 ///
+/// **Paged KV sessions** (`llvq serve --kv-pages N [--kv-page-size T]
+/// [--kv-quant none|e8|llvq]`): session caches draw fixed-size token pages
+/// from a shared arena of at most `N` pages instead of allocating a dense
+/// worst-case slab, so admission is against *actual* tokens — far more
+/// sessions fit the same memory budget. `FEED`/`GEN` against an exhausted
+/// arena answer a distinct `ERR kv-oom: page arena exhausted (…)` line;
+/// the session stays open and parked, so the client may retry after other
+/// sessions close, or `CLOSE` to release its own pages. With `--kv-quant
+/// e8|llvq`, pages entirely behind the hot window are re-encoded through
+/// the weight codecs (per-row RMS scale + unit-scale lattice codes) and
+/// decoded page-at-a-time on attention reads; `--kv-quant none` keeps
+/// every page f32 and is bit-identical to the dense cache. `STATS` reports
+/// occupancy as `kv_pages=<allocated>/<budget>`, `kv_quantized=` (cold
+/// pages currently resident as codes), `kv_oom=` (reservations refused),
+/// and `kv_quant=<none|e8|llvq>`; dense engines report `kv_pages=0/0`.
+///
 /// Example transcript (`>` client, `<` server):
 ///
 /// ```text
@@ -1094,7 +1232,7 @@ impl Default for ServeOptions {
 /// < TOK 44
 /// < OK generated=3 len=7
 /// > STATS
-/// < OK requests=0 mean_batch=0.00 mean_latency_ms=0.000 sessions=1 gen_tokens=3 mean_lanes=1.00 prefill_jobs=1 prefill_toks=4 threads=4 backend=fused simd=avx2 resident_bytes=48768
+/// < OK requests=0 mean_batch=0.00 mean_latency_ms=0.000 sessions=1 gen_tokens=3 mean_lanes=1.00 prefill_jobs=1 prefill_toks=4 kv_pages=0/0 kv_quantized=0 kv_oom=0 kv_quant=none threads=4 backend=fused simd=avx2 resident_bytes=48768
 /// > CLOSE
 /// < OK closed len=7
 /// > QUIT
@@ -1187,11 +1325,23 @@ fn serve_lines(
             return Ok(());
         }
         if line == "STATS" {
+            // page occupancy reads 0/0 on dense engines (no arena); the kv
+            // fields sit before `threads=` so `resident_bytes` stays the
+            // last key (parsers rsplit on `=`)
+            let (kv_alloc, kv_quantized, kv_oom) = match coord.metrics.kv.get() {
+                Some(c) => (
+                    c.allocated.load(Ordering::Relaxed),
+                    c.quantized.load(Ordering::Relaxed),
+                    c.oom.load(Ordering::Relaxed),
+                ),
+                None => (0, 0, 0),
+            };
             writeln!(
                 out,
                 "OK requests={} mean_batch={:.2} mean_latency_ms={:.3} \
                  sessions={} gen_tokens={} mean_lanes={:.2} \
                  prefill_jobs={} prefill_toks={} \
+                 kv_pages={}/{} kv_quantized={} kv_oom={} kv_quant={} \
                  threads={} backend={} simd={} resident_bytes={}",
                 coord.metrics.requests.load(Ordering::Relaxed),
                 coord.metrics.mean_batch(),
@@ -1201,6 +1351,11 @@ fn serve_lines(
                 coord.metrics.mean_lanes(),
                 coord.metrics.prefill_jobs.load(Ordering::Relaxed),
                 coord.metrics.prefill_toks.load(Ordering::Relaxed),
+                kv_alloc,
+                coord.engine().kv_page_budget(),
+                kv_quantized,
+                kv_oom,
+                coord.engine().kv_quant_label(),
                 coord.engine().threads(),
                 coord.engine().backend_name(),
                 coord.engine().simd_label(),
@@ -1337,10 +1492,10 @@ mod tests {
             fn forward_batch(&self, _batch: &[Vec<u8>]) -> Vec<Vec<f32>> {
                 panic!("simulated engine bug")
             }
-            fn open_session(&self) -> KvCache {
-                KvCache::new(&config_by_name("qwen3-4b-tiny").unwrap())
+            fn open_session(&self) -> Box<dyn KvStore> {
+                Box::new(KvCache::new(&config_by_name("qwen3-4b-tiny").unwrap()))
             }
-            fn prefill(&self, _cache: &mut KvCache, _tokens: &[u8]) -> Vec<f32> {
+            fn prefill(&self, _cache: &mut dyn KvStore, _tokens: &[u8]) -> Vec<f32> {
                 panic!("simulated engine bug")
             }
             fn decode_step(&self, _lanes: &mut [StepLane<'_>]) -> Vec<Vec<f32>> {
@@ -1415,12 +1570,15 @@ mod tests {
         fn forward_batch(&self, batch: &[Vec<u8>]) -> Vec<Vec<f32>> {
             self.inner.forward_batch(batch)
         }
-        fn open_session(&self) -> KvCache {
+        fn open_session(&self) -> Box<dyn KvStore> {
             self.inner.open_session()
         }
-        fn prefill(&self, cache: &mut KvCache, tokens: &[u8]) -> Vec<f32> {
+        fn prefill(&self, cache: &mut dyn KvStore, tokens: &[u8]) -> Vec<f32> {
             std::thread::sleep(self.delay);
             self.inner.prefill(cache, tokens)
+        }
+        fn close_session(&self, cache: Box<dyn KvStore>) {
+            self.inner.close_session(cache)
         }
         fn decode_step(&self, lanes: &mut [StepLane<'_>]) -> Vec<Vec<f32>> {
             self.inner.decode_step(lanes)
@@ -1753,5 +1911,206 @@ mod tests {
         for (x, y) in a[0].iter().zip(&b[1]) {
             assert!((x - y).abs() < 1e-6);
         }
+    }
+
+    fn paged_engine(
+        pages: usize,
+        page_tokens: usize,
+        hot_window: usize,
+        quant: KvQuantKind,
+    ) -> Arc<BackendEngine> {
+        let cfg = config_by_name("qwen3-4b-tiny").unwrap();
+        let backend = ExecutionBackend::dense(Weights::random(&cfg, 9));
+        Arc::new(BackendEngine::paged(backend, pages, page_tokens, hot_window, quant).unwrap())
+    }
+
+    #[test]
+    fn paged_admission_beats_dense_worst_case_and_answers_kv_oom() {
+        // a 6-page × 16-token arena holds 96 tokens of KV; dense
+        // worst-case admission (max_seq = 64 per session) would fit ONE
+        // session in that budget — paging admits three 16-token sessions
+        // concurrently, and the arena answers `kv-oom` only when a
+        // reservation genuinely cannot fit
+        let engine = paged_engine(6, 16, 32, KvQuantKind::None);
+        let coord = Coordinator::start(engine.clone(), BatcherConfig::default());
+        let counters = engine.kv_counters().unwrap();
+
+        let mut sids = Vec::new();
+        for c in 0..3u8 {
+            let sid = coord.open_session().unwrap();
+            assert_eq!(coord.feed(sid, vec![c; 16]).unwrap(), 16);
+            sids.push(sid);
+        }
+        // 3 pages reserved; a 64-token FEED needs 4 of the 3 remaining
+        let big = coord.open_session().unwrap();
+        let err = coord.feed(big, vec![1; 64]).unwrap_err();
+        assert!(err.starts_with("kv-oom"), "{err}");
+        assert!(counters.oom.load(Ordering::Relaxed) >= 1);
+        // the refused session is still open and usable at a smaller size
+        assert_eq!(coord.feed(big, vec![1; 16]).unwrap(), 16);
+
+        // greedy GEN over paged caches still streams fine
+        let events = coord.generate(sids[0], 2, SampleParams::default()).unwrap();
+        loop {
+            match events.recv().unwrap() {
+                Ok(GenEvent::Token(_)) => {}
+                Ok(GenEvent::Done { len }) => {
+                    assert_eq!(len, 18);
+                    break;
+                }
+                Err(e) => panic!("{e}"),
+            }
+        }
+
+        // closing every session drains the arena to zero allocated pages
+        for sid in sids {
+            coord.close_session(sid).unwrap();
+        }
+        coord.close_session(big).unwrap();
+        assert_eq!(counters.allocated.load(Ordering::Relaxed), 0, "page leak");
+        coord.stop();
+    }
+
+    #[test]
+    fn paged_greedy_generation_matches_dense() {
+        // same weights, same prompt: greedy GEN over a paged cache
+        // (quant=none, pages cooling behind an 8-token hot window) must
+        // stream the exact tokens the dense cache streams
+        let prompt: Vec<u8> = (0..13).map(|i| (i * 5 % 64) as u8).collect();
+        let n = 6usize;
+        let run = |engine: Arc<dyn BatchForward>| -> Vec<u8> {
+            let coord = Coordinator::start(engine, BatcherConfig::default());
+            let sid = coord.open_session().unwrap();
+            coord.feed(sid, prompt.clone()).unwrap();
+            let events = coord.generate(sid, n, SampleParams::default()).unwrap();
+            let mut toks = Vec::new();
+            loop {
+                match events.recv().unwrap() {
+                    Ok(GenEvent::Token(t)) => toks.push(t),
+                    Ok(GenEvent::Done { .. }) => break,
+                    Err(e) => panic!("{e}"),
+                }
+            }
+            coord.close_session(sid).unwrap();
+            coord.stop();
+            toks
+        };
+        let dense = run(tiny_engine());
+        let paged = run(paged_engine(16, 4, 8, KvQuantKind::None));
+        assert_eq!(dense, paged, "paged greedy decode diverged from dense");
+        // llvq-quantized cold pages keep greedy argmax parity on this
+        // seeded prompt (the acceptance bar for lossy cold storage)
+        let quantized = run(paged_engine(16, 4, 8, KvQuantKind::Llvq));
+        assert_eq!(dense, quantized, "llvq cold pages flipped a greedy token");
+    }
+
+    #[test]
+    fn paged_prefill_panic_frees_pages() {
+        // the panic-containment path must return reserved pages to the
+        // arena when it destroys the session (Box drop → PagedKvCache
+        // drop), not leak them
+        struct PanickyPaged {
+            inner: Arc<BackendEngine>,
+        }
+        impl BatchForward for PanickyPaged {
+            fn vocab(&self) -> usize {
+                self.inner.vocab()
+            }
+            fn max_seq(&self) -> usize {
+                self.inner.max_seq()
+            }
+            fn forward_batch(&self, batch: &[Vec<u8>]) -> Vec<Vec<f32>> {
+                self.inner.forward_batch(batch)
+            }
+            fn open_session(&self) -> Box<dyn KvStore> {
+                self.inner.open_session()
+            }
+            fn prefill(&self, _cache: &mut dyn KvStore, _tokens: &[u8]) -> Vec<f32> {
+                panic!("simulated engine bug")
+            }
+            fn decode_step(&self, lanes: &mut [StepLane<'_>]) -> Vec<Vec<f32>> {
+                self.inner.decode_step(lanes)
+            }
+            fn close_session(&self, cache: Box<dyn KvStore>) {
+                self.inner.close_session(cache)
+            }
+            fn kv_counters(&self) -> Option<Arc<KvPageCounters>> {
+                self.inner.kv_counters()
+            }
+        }
+        let inner = paged_engine(8, 4, 8, KvQuantKind::None);
+        let counters = inner.kv_counters().unwrap();
+        crate::util::proptest::with_silenced_panics(|| {
+            let coord = Coordinator::start(
+                Arc::new(PanickyPaged { inner }),
+                BatcherConfig::default(),
+            );
+            let sid = coord.open_session().unwrap();
+            // queue_feed reserves 4 pages up front; the first prefill
+            // chunk then panics and the job's session is destroyed
+            assert_eq!(coord.feed(sid, vec![1; 16]).unwrap(), 16);
+            // the destroyed session answers "unknown" once the tick ran
+            loop {
+                match coord.feed(sid, vec![1]) {
+                    Err(e) if e.contains("unknown session") => break,
+                    _ => std::thread::sleep(Duration::from_millis(2)),
+                }
+            }
+            assert_eq!(
+                counters.allocated.load(Ordering::Relaxed),
+                0,
+                "prefill panic leaked arena pages"
+            );
+            coord.stop();
+        });
+    }
+
+    #[test]
+    fn paged_stats_report_occupancy_over_tcp() {
+        let engine = paged_engine(8, 8, 16, KvQuantKind::Llvq);
+        let coord = Coordinator::start(engine, BatcherConfig::default());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let c2 = coord.clone();
+        std::thread::spawn(move || {
+            let _ = serve_tcp(c2, listener);
+        });
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        writeln!(s, "OPEN").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("OK session="), "{line}");
+        writeln!(s, "FEED 1,2,3,4,5,6,7,8,9").unwrap();
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("QUEUED 9"), "{line}");
+        writeln!(s, "STATS").unwrap();
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        // 9 tokens over 8-token pages = 2 pages reserved at admission
+        assert!(line.contains("kv_pages=2/8"), "{line}");
+        assert!(line.contains("kv_quant=llvq"), "{line}");
+        assert!(line.contains("kv_oom=0"), "{line}");
+        // the resident_bytes-last invariant survives the new fields
+        let last_key = line
+            .trim()
+            .rsplit(' ')
+            .next()
+            .unwrap()
+            .split('=')
+            .next()
+            .unwrap();
+        assert_eq!(last_key, "resident_bytes", "{line}");
+        writeln!(s, "CLOSE").unwrap();
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("OK closed"), "{line}");
+        writeln!(s, "STATS").unwrap();
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        assert!(line.contains("kv_pages=0/8"), "{line}");
+        writeln!(s, "QUIT").unwrap();
+        coord.stop();
     }
 }

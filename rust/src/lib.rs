@@ -76,6 +76,16 @@
 //!                             KvCache + prefill/forward_step[_batch] add
 //!                             the incremental decode path, bit-identical
 //!                             to full forward per position
+//! model::kvpage               paged KV storage: PageArena (budgeted
+//!                             free-list of fixed-size token pages shared
+//!                             by every session) + PagedKvCache, a KvStore
+//!                             admitting against actual pages instead of
+//!                             worst-case max_seq; cold pages (behind the
+//!                             hot window) optionally re-encoded through
+//!                             the weight codecs (--kv-quant none|e8|llvq)
+//!                             and decoded page-at-a-time on attention
+//!                             reads — quant=none is bit-identical to the
+//!                             dense KvCache
 //! model::sample               seeded Sampler (greedy / temperature /
 //!                             top-k) + the GEN argument parser
 //! coordinator                 BackendEngine: batched serving over any
@@ -87,9 +97,12 @@
 //!                             prompt tokens of queued FEED jobs per tick
 //!                             (pipelined chunked prefill — long prompts
 //!                             no longer stall active generations; FEED
-//!                             answers QUEUED immediately); STATS reports
-//!                             backend + resident weight bytes + session
-//!                             and prefill counters
+//!                             answers QUEUED immediately); sessions are
+//!                             dense slabs or paged caches (--kv-pages),
+//!                             admitted against the live arena with a
+//!                             distinct kv-oom error; STATS reports
+//!                             backend + resident weight bytes + session,
+//!                             prefill, and kv-page counters
 //! main (llvq pack/unpack/     CLI: produce, expand, inspect, serve, and
 //!       stats/serve/generate) generate from packed artifacts; serve
 //!                             --backend dense|cached|fused selects the
@@ -160,6 +173,7 @@ pub mod pipeline {
 pub mod model {
     pub mod config;
     pub mod transformer;
+    pub mod kvpage;
     pub mod io;
     pub mod packed;
     pub mod backend;

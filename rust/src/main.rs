@@ -22,16 +22,19 @@
 //!   queued FEED may prefill per scheduler tick (pipelined
 //!   prefill-while-decoding: a long prompt no longer stalls active
 //!   generations), `--max-sessions` / `--max-conns` bound the session and
-//!   connection pools.
+//!   connection pools, and `--kv-pages`/`--kv-page-size`/`--kv-quant`/
+//!   `--kv-hot` switch sessions from dense worst-case caches to paged KV
+//!   over a shared arena with optionally lattice-quantized cold pages
+//!   (admission answers `ERR kv-oom` when the arena is exhausted).
 //! * `generate` — KV-cached local generation from a prompt (greedy /
-//!   temperature / top-k, seeded), over any backend (`--threads` as in
-//!   `serve`).
+//!   temperature / top-k, seeded), over any backend (`--threads` and the
+//!   `--kv-*` paging flags as in `serve`).
 //! * `gen-model` — write a random-weight model (testing without python).
 //! * `info` — lattice summary (shell sizes, codebook bits, table VMEM).
 
 use std::sync::Arc;
 
-use llvq::coordinator::{BackendEngine, BatcherConfig, Coordinator, ServeOptions};
+use llvq::coordinator::{BackendEngine, BatchForward, BatcherConfig, Coordinator, ServeOptions};
 use llvq::experiments as exp;
 use llvq::leech::index::LeechIndexer;
 use llvq::leech::tables::KernelTables;
@@ -39,9 +42,10 @@ use llvq::model::backend::{BackendKind, ExecutionBackend};
 use llvq::model::config::{config_by_name, model_zoo, ModelConfig};
 use llvq::model::eval::evaluate;
 use llvq::model::io as model_io;
+use llvq::model::kvpage::KvQuantKind;
 use llvq::model::packed::{PackedFile, PackedModel};
 use llvq::model::sample::{SampleParams, Sampler};
-use llvq::model::transformer::{forward_step, prefill, KvCache, Weights};
+use llvq::model::transformer::{forward_step, prefill, KvStore, Weights};
 use llvq::pipeline::driver::{quantize_model, quantize_model_packed, PtqOptions};
 use llvq::pipeline::rotation::RotationMode;
 use llvq::quant::kernel::Kernel;
@@ -679,8 +683,64 @@ fn serving_backend(a: &Args) -> Result<ExecutionBackend, i32> {
     }
 }
 
+/// Add the shared paged-KV flags (`serve` and `generate` take the same
+/// four) to an [`Args`] builder.
+fn kv_flags(a: Args) -> Args {
+    a.flag(
+        "kv-pages",
+        "0",
+        "KV page-arena budget in pages shared by all sessions (0 = dense \
+         worst-case caches, the historical behaviour)",
+    )
+    .flag("kv-page-size", "16", "tokens per KV page")
+    .flag(
+        "kv-quant",
+        "none",
+        "cold-page codec: none (f32, bit-identical to dense) | e8 | llvq; \
+         pages fully behind the hot window are re-encoded through the \
+         weight codecs and decoded page-at-a-time on attention reads",
+    )
+    .flag(
+        "kv-hot",
+        "32",
+        "f32 hot window in tokens; only pages entirely behind it cool to \
+         the --kv-quant codec",
+    )
+}
+
+/// Resolve `--kv-pages/--kv-page-size/--kv-quant/--kv-hot` into an engine
+/// over `backend`; `Err` carries the process exit code.
+fn engine_from(a: &Args, backend: ExecutionBackend) -> Result<BackendEngine, i32> {
+    let quant = match KvQuantKind::parse(&a.get("kv-quant").unwrap()) {
+        Ok(q) => q,
+        Err(e) => {
+            eprintln!("{e}");
+            return Err(2);
+        }
+    };
+    let pages = a.get_usize("kv-pages");
+    if pages == 0 {
+        if quant != KvQuantKind::None {
+            eprintln!("--kv-quant {} requires --kv-pages > 0", quant.label());
+            return Err(2);
+        }
+        return Ok(BackendEngine::new(backend));
+    }
+    BackendEngine::paged(
+        backend,
+        pages,
+        a.get_usize("kv-page-size").max(1),
+        a.get_usize("kv-hot"),
+        quant,
+    )
+    .map_err(|e| {
+        eprintln!("{e}");
+        2
+    })
+}
+
 fn cmd_serve(rest: Vec<String>) -> i32 {
-    let a = Args::new("llvq serve — batching + generation inference server")
+    let a = kv_flags(Args::new("llvq serve — batching + generation inference server"))
         .flag("path", "", "model .llvqw to serve")
         .flag("packed", "", "packed .llvqm to serve")
         .flag(
@@ -714,7 +774,18 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
         Ok(b) => b,
         Err(code) => return code,
     };
-    let engine = Arc::new(BackendEngine { backend });
+    let engine = match engine_from(&a, backend) {
+        Ok(e) => Arc::new(e),
+        Err(code) => return code,
+    };
+    if engine.kv_page_budget() > 0 {
+        println!(
+            "paged KV sessions: {} pages × {} tokens, cold-page codec {}",
+            engine.kv_page_budget(),
+            engine.kv_page_tokens(),
+            engine.kv_quant_label()
+        );
+    }
     let coord = Coordinator::start(
         engine,
         BatcherConfig {
@@ -750,7 +821,7 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
 }
 
 fn cmd_generate(rest: Vec<String>) -> i32 {
-    let a = Args::new("llvq generate — KV-cached token generation from a prompt")
+    let a = kv_flags(Args::new("llvq generate — KV-cached token generation from a prompt"))
         .flag("path", "", "model .llvqw to load")
         .flag("packed", "", "packed .llvqm to load")
         .flag(
@@ -814,9 +885,20 @@ fn cmd_generate(rest: Vec<String>) -> i32 {
         top_k: a.get_usize("topk"),
         seed: a.get_u64("seed"),
     };
-    let mut cache = KvCache::new(&cfg);
+    let engine = match engine_from(&a, backend) {
+        Ok(e) => e,
+        Err(code) => return code,
+    };
+    let mut cache = engine.open_session();
+    // paged sessions admit against actual pages: reserve the whole run up
+    // front so an undersized --kv-pages budget fails cleanly before any
+    // forward work
+    if let Err(e) = cache.reserve(prompt.len() + n) {
+        eprintln!("{e}");
+        return 1;
+    }
     let t0 = std::time::Instant::now();
-    let mut logits = prefill(&backend, &mut cache, &prompt);
+    let mut logits = prefill(&engine.backend, cache.as_mut(), &prompt);
     let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
     let mut sampler = Sampler::new(params);
     let mut toks: Vec<u8> = Vec::with_capacity(n);
@@ -827,7 +909,7 @@ fn cmd_generate(rest: Vec<String>) -> i32 {
         // the last sampled token needs no decode step — nothing is
         // sampled after it
         if i + 1 < n {
-            logits = forward_step(&backend, &mut cache, t);
+            logits = forward_step(&engine.backend, cache.as_mut(), t);
         }
     }
     let gen_s = t1.elapsed().as_secs_f64();
@@ -836,10 +918,20 @@ fn cmd_generate(rest: Vec<String>) -> i32 {
     println!("tokens : {}", rendered.join(","));
     println!(
         "prefill {prefill_ms:.1} ms | {n} tokens in {:.1} ms → {:.1} tok/s \
-         ({} backend, temp={} topk={} seed={})",
+         ({} backend, kv={}, temp={} topk={} seed={})",
         gen_s * 1e3,
         n as f64 / gen_s.max(1e-9),
-        backend.kind().label(),
+        engine.backend.kind().label(),
+        if engine.kv_page_budget() > 0 {
+            format!(
+                "paged {}x{} quant={}",
+                engine.kv_page_budget(),
+                engine.kv_page_tokens(),
+                engine.kv_quant_label()
+            )
+        } else {
+            "dense".into()
+        },
         params.temperature,
         params.top_k,
         params.seed

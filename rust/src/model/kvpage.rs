@@ -1,0 +1,753 @@
+//! Paged KV-cache arena with lattice-quantized cold pages.
+//!
+//! Session memory, not weight memory, caps concurrency: a dense
+//! [`KvCache`](crate::model::transformer::KvCache) is a `layers × 2 ×
+//! max_seq × d_model` f32 slab allocated at worst-case capacity. This
+//! module pages that storage in fixed-size token blocks (the vLLM move):
+//! a [`PageArena`] owns a bounded free-list of page buffers shared by
+//! every session, and a [`PagedKvCache`] implements the same
+//! [`KvStore`] surface as the dense cache over a list of pages, so
+//! `prefill` / `forward_step_batch` run over either — sessions are
+//! admitted against *actual* token pages, not worst-case `max_seq`.
+//!
+//! Stage two is compression: pages that fall entirely behind the last
+//! `hot_window` tokens are *cold* — their K/V rows are RMS-normalized
+//! per row and encoded through an existing [`VectorQuantizer`] codec
+//! ([`KvQuantKind`]: `none | e8 | llvq`, built via `quantizer_from_spec`),
+//! then the f32 buffer returns to the arena. Attention reads decode cold
+//! pages row-by-row (`decode_blocks_into`) into reusable gather scratch.
+//! Hot pages stay f32, and the gather path moves those floats by copy
+//! only, so a paged cache with `KvQuantKind::None` is **bit-identical**
+//! to the dense cache (pinned by proptest in `rust/tests/kvpage.rs`).
+//!
+//! One page buffer covers *all* layers for `page_tokens` positions:
+//! layer `li`'s K rows live at `li·2·pt·d`, its V rows at
+//! `li·2·pt·d + pt·d` (`pt` = page tokens, `d` = d_model). Appends only
+//! ever land in trailing pages (which cannot be cold: a page cools only
+//! once it is full *and* behind the hot window), and cold pages are
+//! always full, so decode never sees a partial page.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+
+use crate::model::config::ModelConfig;
+use crate::model::transformer::KvStore;
+use crate::quant::traits::{quantizer_from_spec, Code, VectorQuantizer};
+use crate::util::bits::{BitReader, BitWriter};
+use crate::util::json::Json;
+
+/// Which codec compresses cold pages (`--kv-quant`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvQuantKind {
+    /// Cold pages stay f32 in the arena (no compression, bit-identical
+    /// to the dense cache).
+    None,
+    /// E8 lattice codebook (ball cut), 8-dim blocks.
+    E8,
+    /// Spherical Leech quantizer, 24-dim blocks.
+    Llvq,
+}
+
+impl KvQuantKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "none" => Ok(Self::None),
+            "e8" => Ok(Self::E8),
+            "llvq" => Ok(Self::Llvq),
+            other => Err(format!("unknown --kv-quant '{other}' (none|e8|llvq)")),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::None => "none",
+            Self::E8 => "e8",
+            Self::Llvq => "llvq",
+        }
+    }
+
+    /// Quantizer spec for this kind, in the exact shape
+    /// `quantizer_from_spec` consumes. Rows are RMS-normalized to unit
+    /// scale before encoding, so the scales here are the codecs' own
+    /// unit-variance operating points (llvq: β = √24/√(2M) at M = 6).
+    fn spec(&self) -> Option<Json> {
+        match self {
+            Self::None => None,
+            Self::E8 => Some(Json::obj(vec![
+                ("kind", Json::Str("e8".into())),
+                ("cut", Json::Str("ball".into())),
+                ("scale", Json::Num(0.9)),
+            ])),
+            Self::Llvq => Some(Json::obj(vec![
+                ("kind", Json::Str("llvq-spherical".into())),
+                ("max_m", Json::Int(6)),
+                ("scale", Json::Num(std::f64::consts::SQRT_2)),
+            ])),
+        }
+    }
+}
+
+/// Row codec for cold pages: a [`VectorQuantizer`] plus the derived
+/// per-row stream geometry. Each `d_model` row is its own byte-aligned
+/// MSB-first bitstream of `⌈d_model/dim⌉` codes, prefixed (out of band,
+/// in [`ColdPage::sigma`]) by its RMS scale — activations vary wildly in
+/// magnitude per position, so the unit-scale codebooks see normalized
+/// rows.
+pub struct KvCodec {
+    q: Box<dyn VectorQuantizer>,
+    widths: Vec<u32>,
+    row_bytes: usize,
+    d_model: usize,
+}
+
+impl KvCodec {
+    /// Build the codec for `kind` (None ⇒ `Ok(None)`: pages stay f32).
+    pub fn build(kind: KvQuantKind, d_model: usize) -> Result<Option<Arc<KvCodec>>, String> {
+        let Some(spec) = kind.spec() else {
+            return Ok(None);
+        };
+        let q = quantizer_from_spec(&spec)?;
+        let widths = q.code_widths();
+        let code_bits: u64 = widths.iter().map(|&w| w as u64).sum();
+        let blocks = d_model.div_ceil(q.dim()) as u64;
+        let row_bytes = ((blocks * code_bits).div_ceil(8)) as usize;
+        Ok(Some(Arc::new(KvCodec {
+            q,
+            widths,
+            row_bytes,
+            d_model,
+        })))
+    }
+
+    /// Encoded bytes per `d_model` row (excluding the f32 sigma).
+    pub fn row_bytes(&self) -> usize {
+        self.row_bytes
+    }
+
+    pub fn block_dim(&self) -> usize {
+        self.q.dim()
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.d_model
+    }
+
+    /// Encode one row: RMS-normalize into `norm_scratch`, quantize, and
+    /// append exactly [`KvCodec::row_bytes`] to `bytes`. Returns the
+    /// row's sigma (1.0 for all-zero / non-finite rows so decode is
+    /// always well-defined).
+    fn encode_row(&self, row: &[f32], norm_scratch: &mut Vec<f32>, bytes: &mut Vec<u8>) -> f32 {
+        debug_assert_eq!(row.len(), self.d_model);
+        let ms: f64 =
+            row.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / row.len() as f64;
+        let sigma = ms.sqrt() as f32;
+        let sigma = if sigma.is_finite() && sigma > 0.0 {
+            sigma
+        } else {
+            1.0
+        };
+        norm_scratch.clear();
+        norm_scratch.extend(row.iter().map(|&x| x / sigma));
+        let mut w = BitWriter::new();
+        crate::quant::product::encode_row_into(self.q.as_ref(), norm_scratch, &mut w);
+        let enc = w.finish();
+        debug_assert_eq!(enc.len(), self.row_bytes);
+        bytes.extend_from_slice(&enc);
+        sigma
+    }
+
+    /// Inverse of [`KvCodec::encode_row`]: decode one row stream and
+    /// denormalize by `sigma`. `block_scratch.len() == self.block_dim()`.
+    fn decode_row(
+        &self,
+        bytes: &[u8],
+        sigma: f32,
+        code: &mut Code,
+        block_scratch: &mut [f32],
+        out: &mut [f32],
+    ) {
+        let mut r = BitReader::new(bytes);
+        self.q
+            .decode_blocks_into(&self.widths, &mut r, code, block_scratch, out);
+        for v in out.iter_mut() {
+            *v *= sigma;
+        }
+    }
+}
+
+/// Live page-arena occupancy, shared (by `Arc`) between the arena, the
+/// coordinator's `Metrics`, and STATS. All counters are monotonic except
+/// `allocated` / `quantized`, which track current residency.
+#[derive(Debug, Default)]
+pub struct KvPageCounters {
+    /// f32 pages currently checked out of the arena.
+    pub allocated: AtomicUsize,
+    /// Lifetime page allocations.
+    pub alloc_total: AtomicU64,
+    /// Lifetime page frees (returns to the free list).
+    pub freed_total: AtomicU64,
+    /// Cold (quantized) pages currently resident.
+    pub quantized: AtomicUsize,
+    /// Lifetime page-cooling events.
+    pub quantized_total: AtomicU64,
+    /// Reservations refused because the arena budget was exhausted.
+    pub oom: AtomicU64,
+}
+
+/// Fixed-size-block page allocator shared by every session of one
+/// engine: a budgeted free-list of zeroed f32 page buffers. Allocation
+/// past the budget fails with a `kv-oom:`-prefixed error — the
+/// coordinator surfaces that verbatim as a distinct protocol error line.
+pub struct PageArena {
+    n_layers: usize,
+    d_model: usize,
+    page_tokens: usize,
+    max_pages: usize,
+    free: Mutex<Vec<Box<[f32]>>>,
+    counters: Arc<KvPageCounters>,
+}
+
+impl PageArena {
+    pub fn new(cfg: &ModelConfig, max_pages: usize, page_tokens: usize) -> Arc<Self> {
+        assert!(page_tokens >= 1, "page_tokens must be >= 1");
+        assert!(max_pages >= 1, "page budget must be >= 1");
+        Arc::new(Self {
+            n_layers: cfg.n_layers,
+            d_model: cfg.d_model,
+            page_tokens,
+            max_pages,
+            free: Mutex::new(Vec::new()),
+            counters: Arc::new(KvPageCounters::default()),
+        })
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    pub fn max_pages(&self) -> usize {
+        self.max_pages
+    }
+
+    pub fn counters(&self) -> Arc<KvPageCounters> {
+        Arc::clone(&self.counters)
+    }
+
+    /// f32 slots in one page buffer: all layers × (K + V) × page rows.
+    pub fn page_floats(&self) -> usize {
+        self.n_layers * 2 * self.page_tokens * self.d_model
+    }
+
+    pub fn page_bytes(&self) -> usize {
+        self.page_floats() * std::mem::size_of::<f32>()
+    }
+
+    fn try_alloc(&self) -> Result<Box<[f32]>, String> {
+        let mut free = self.free.lock().unwrap_or_else(|e| e.into_inner());
+        // `allocated` is only mutated under this lock, so check+bump is
+        // race-free; lock-free STATS reads may lag by one page at most.
+        if self.counters.allocated.load(Relaxed) >= self.max_pages {
+            self.counters.oom.fetch_add(1, Relaxed);
+            return Err(format!(
+                "kv-oom: page arena exhausted ({} pages of {} tokens)",
+                self.max_pages, self.page_tokens
+            ));
+        }
+        let buf = match free.pop() {
+            Some(mut b) => {
+                b.fill(0.0);
+                b
+            }
+            None => vec![0f32; self.page_floats()].into_boxed_slice(),
+        };
+        self.counters.allocated.fetch_add(1, Relaxed);
+        self.counters.alloc_total.fetch_add(1, Relaxed);
+        Ok(buf)
+    }
+
+    fn free_page(&self, buf: Box<[f32]>) {
+        let mut free = self.free.lock().unwrap_or_else(|e| e.into_inner());
+        free.push(buf);
+        self.counters.allocated.fetch_sub(1, Relaxed);
+        self.counters.freed_total.fetch_add(1, Relaxed);
+    }
+}
+
+/// A cooled page: per-row byte-aligned code streams ordered
+/// `[layer][K rows.. V rows..]` plus the parallel per-row RMS scales.
+struct ColdPage {
+    bytes: Vec<u8>,
+    sigma: Vec<f32>,
+}
+
+enum Page {
+    Hot(Box<[f32]>),
+    Cold(ColdPage),
+}
+
+/// A session KV cache backed by arena pages (see the module docs for the
+/// page layout). Implements [`KvStore`], so every transformer entry
+/// point (`prefill`, `forward_step`, `forward_step_batch`) runs over it
+/// unchanged. Dropping the cache returns every hot page to the arena —
+/// reclamation on close / disconnect / worker panic is the owning
+/// session being dropped, with no separate bookkeeping to leak.
+pub struct PagedKvCache {
+    arena: Arc<PageArena>,
+    codec: Option<Arc<KvCodec>>,
+    hot_window: usize,
+    n_layers: usize,
+    d_model: usize,
+    max_seq: usize,
+    len: usize,
+    pages: Vec<Page>,
+    // reusable gather scratch: one layer's contiguous K/V prefix
+    k_gather: Vec<f32>,
+    v_gather: Vec<f32>,
+    // reusable decode scratch
+    code: Code,
+    block_scratch: Vec<f32>,
+    norm_scratch: Vec<f32>,
+}
+
+impl PagedKvCache {
+    /// A zero-page session cache; pages are allocated by
+    /// [`KvStore::reserve`] as tokens actually arrive. `hot_window` is
+    /// the trailing token count kept f32 (0 = quantize every full page;
+    /// ignored when `codec` is `None`).
+    pub fn new(
+        cfg: &ModelConfig,
+        arena: Arc<PageArena>,
+        codec: Option<Arc<KvCodec>>,
+        hot_window: usize,
+    ) -> Self {
+        assert!(
+            arena.n_layers == cfg.n_layers && arena.d_model == cfg.d_model,
+            "page arena shape does not match model config"
+        );
+        if let Some(c) = &codec {
+            assert_eq!(c.d_model(), cfg.d_model, "kv codec d_model mismatch");
+        }
+        let block_scratch = vec![0f32; codec.as_ref().map(|c| c.block_dim()).unwrap_or(1)];
+        Self {
+            arena,
+            codec,
+            hot_window,
+            n_layers: cfg.n_layers,
+            d_model: cfg.d_model,
+            max_seq: cfg.max_seq,
+            len: 0,
+            pages: Vec::new(),
+            k_gather: Vec::new(),
+            v_gather: Vec::new(),
+            code: Code::empty(),
+            block_scratch,
+            norm_scratch: Vec::new(),
+        }
+    }
+
+    /// Pages currently held (hot + cold).
+    pub fn page_count(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Cold (quantized) pages currently held.
+    pub fn cold_page_count(&self) -> usize {
+        self.pages
+            .iter()
+            .filter(|p| matches!(p, Page::Cold(_)))
+            .count()
+    }
+
+    fn write_rows(&mut self, li: usize, base: usize, k_new: &[f32], v_new: &[f32]) {
+        let d = self.d_model;
+        let pt = self.arena.page_tokens();
+        let s = k_new.len() / d;
+        for j in 0..s {
+            let p = base + j;
+            let (pi, slot) = (p / pt, p % pt);
+            let page = match &mut self.pages[pi] {
+                Page::Hot(b) => b,
+                // appends only target positions >= len, and a page cools
+                // only once it is full and strictly behind len
+                Page::Cold(_) => unreachable!("append into cold page"),
+            };
+            let ko = li * 2 * pt * d + slot * d;
+            let vo = ko + pt * d;
+            page[ko..ko + d].copy_from_slice(&k_new[j * d..(j + 1) * d]);
+            page[vo..vo + d].copy_from_slice(&v_new[j * d..(j + 1) * d]);
+        }
+    }
+
+    /// Materialize layer `li`'s contiguous K/V prefix (`rows` positions)
+    /// into the gather scratch. Hot pages are moved by `copy_from_slice`
+    /// (bit-preserving); cold pages decode row-by-row.
+    fn gather_layer(&mut self, li: usize, rows: usize) {
+        let d = self.d_model;
+        let pt = self.arena.page_tokens();
+        if self.k_gather.len() < rows * d {
+            self.k_gather.resize(rows * d, 0.0);
+            self.v_gather.resize(rows * d, 0.0);
+        }
+        let pages = &self.pages;
+        let k_gather = &mut self.k_gather;
+        let v_gather = &mut self.v_gather;
+        let code = &mut self.code;
+        let scr = &mut self.block_scratch;
+        let mut done = 0usize;
+        for (pi, page) in pages.iter().enumerate() {
+            if done >= rows {
+                break;
+            }
+            let take = pt.min(rows - done);
+            debug_assert_eq!(done, pi * pt);
+            match page {
+                Page::Hot(b) => {
+                    let ko = li * 2 * pt * d;
+                    let vo = ko + pt * d;
+                    k_gather[done * d..(done + take) * d].copy_from_slice(&b[ko..ko + take * d]);
+                    v_gather[done * d..(done + take) * d].copy_from_slice(&b[vo..vo + take * d]);
+                }
+                Page::Cold(cp) => {
+                    let codec = self.codec.as_ref().expect("cold page without codec");
+                    let rb = codec.row_bytes();
+                    // cold pages are always full (they cool only once
+                    // every slot is behind len), so take == pt here
+                    for slot in 0..take {
+                        let kr = li * 2 * pt + slot;
+                        let vr = kr + pt;
+                        codec.decode_row(
+                            &cp.bytes[kr * rb..(kr + 1) * rb],
+                            cp.sigma[kr],
+                            code,
+                            scr,
+                            &mut k_gather[(done + slot) * d..(done + slot + 1) * d],
+                        );
+                        codec.decode_row(
+                            &cp.bytes[vr * rb..(vr + 1) * rb],
+                            cp.sigma[vr],
+                            code,
+                            scr,
+                            &mut v_gather[(done + slot) * d..(done + slot + 1) * d],
+                        );
+                    }
+                }
+            }
+            done += take;
+        }
+    }
+
+    /// Quantize every full page that now sits entirely behind the hot
+    /// window, returning its f32 buffer to the arena. Runs on commit, so
+    /// cooling happens between forward passes, never between layers of
+    /// one pass.
+    fn cool_pages(&mut self) {
+        let Some(codec) = self.codec.clone() else {
+            return;
+        };
+        let pt = self.arena.page_tokens();
+        let d = self.d_model;
+        let cold_limit = self.len.saturating_sub(self.hot_window);
+        for pi in 0..self.pages.len() {
+            if (pi + 1) * pt > cold_limit {
+                break;
+            }
+            if matches!(self.pages[pi], Page::Cold(_)) {
+                continue;
+            }
+            let mut bytes = Vec::with_capacity(self.n_layers * 2 * pt * codec.row_bytes());
+            let mut sigma = Vec::with_capacity(self.n_layers * 2 * pt);
+            {
+                let Page::Hot(buf) = &self.pages[pi] else {
+                    unreachable!()
+                };
+                for li in 0..self.n_layers {
+                    for half in 0..2 {
+                        let off = li * 2 * pt * d + half * pt * d;
+                        for slot in 0..pt {
+                            let row = &buf[off + slot * d..off + (slot + 1) * d];
+                            sigma.push(codec.encode_row(row, &mut self.norm_scratch, &mut bytes));
+                        }
+                    }
+                }
+            }
+            let old = std::mem::replace(&mut self.pages[pi], Page::Cold(ColdPage { bytes, sigma }));
+            if let Page::Hot(buf) = old {
+                self.arena.free_page(buf);
+            }
+            let c = self.arena.counters();
+            c.quantized.fetch_add(1, Relaxed);
+            c.quantized_total.fetch_add(1, Relaxed);
+        }
+    }
+}
+
+impl KvStore for PagedKvCache {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn capacity(&self) -> usize {
+        self.max_seq
+    }
+
+    fn check_append(&self, n: usize) -> Result<(), String> {
+        if self.len + n <= self.max_seq {
+            Ok(())
+        } else {
+            Err(format!(
+                "sequence of {n} tokens at position {} exceeds cache capacity {}",
+                self.len, self.max_seq
+            ))
+        }
+    }
+
+    fn reserve(&mut self, n: usize) -> Result<(), String> {
+        self.check_append(n)?;
+        let target = (self.len + n).div_ceil(self.arena.page_tokens());
+        let start = self.pages.len();
+        while self.pages.len() < target {
+            match self.arena.try_alloc() {
+                Ok(buf) => self.pages.push(Page::Hot(buf)),
+                Err(e) => {
+                    // roll back this call's allocations so a refused
+                    // reservation leaves the session (and budget) as-is
+                    while self.pages.len() > start {
+                        if let Some(Page::Hot(buf)) = self.pages.pop() {
+                            self.arena.free_page(buf);
+                        }
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn check_model(&self, cfg: &ModelConfig) {
+        assert!(
+            self.n_layers == cfg.n_layers
+                && self.d_model == cfg.d_model
+                && self.max_seq <= cfg.max_seq,
+            "PagedKvCache shape does not match model config"
+        );
+    }
+
+    fn append_layer(
+        &mut self,
+        li: usize,
+        k_new: &[f32],
+        v_new: &[f32],
+        attend_fn: &mut dyn FnMut(&[f32], &[f32]),
+    ) {
+        let d = self.d_model;
+        debug_assert_eq!(k_new.len() % d, 0);
+        let s = k_new.len() / d;
+        let base = self.len;
+        self.write_rows(li, base, k_new, v_new);
+        self.gather_layer(li, base + s);
+        attend_fn(
+            &self.k_gather[..(base + s) * d],
+            &self.v_gather[..(base + s) * d],
+        );
+    }
+
+    fn commit(&mut self, s: usize) {
+        self.len += s;
+        self.cool_pages();
+    }
+}
+
+impl Drop for PagedKvCache {
+    fn drop(&mut self) {
+        let counters = self.arena.counters();
+        for page in self.pages.drain(..) {
+            match page {
+                Page::Hot(buf) => self.arena.free_page(buf),
+                Page::Cold(_) => {
+                    counters.quantized.fetch_sub(1, Relaxed);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::config_by_name;
+    use crate::model::transformer::{forward_step, prefill, KvCache, Weights};
+
+    fn cfg() -> ModelConfig {
+        config_by_name("qwen3-4b-tiny").unwrap()
+    }
+
+    #[test]
+    fn arena_alloc_free_recycles_and_counts() {
+        let cfg = cfg();
+        let arena = PageArena::new(&cfg, 2, 4);
+        let a = arena.try_alloc().unwrap();
+        let b = arena.try_alloc().unwrap();
+        assert_eq!(arena.counters().allocated.load(Relaxed), 2);
+        let err = arena.try_alloc().unwrap_err();
+        assert!(err.starts_with("kv-oom"), "got {err}");
+        assert_eq!(arena.counters().oom.load(Relaxed), 1);
+        arena.free_page(a);
+        arena.free_page(b);
+        assert_eq!(arena.counters().allocated.load(Relaxed), 0);
+        // recycled buffers come back zeroed
+        let c = arena.try_alloc().unwrap();
+        assert!(c.iter().all(|&x| x == 0.0));
+        assert_eq!(arena.counters().alloc_total.load(Relaxed), 3);
+        arena.free_page(c);
+    }
+
+    #[test]
+    fn reserve_rolls_back_on_oom_and_drop_drains() {
+        let cfg = cfg();
+        let arena = PageArena::new(&cfg, 3, 4);
+        let mut cache = PagedKvCache::new(&cfg, Arc::clone(&arena), None, 32);
+        cache.reserve(6).unwrap(); // 2 pages
+        assert_eq!(cache.page_count(), 2);
+        // needs 2 more pages but only 1 remains: refuse and roll back
+        let err = cache.reserve(10).unwrap_err();
+        assert!(err.starts_with("kv-oom"), "got {err}");
+        assert_eq!(cache.page_count(), 2);
+        assert_eq!(arena.counters().allocated.load(Relaxed), 2);
+        // capacity check still wins over the page budget
+        assert!(cache
+            .reserve(cfg.max_seq + 1)
+            .unwrap_err()
+            .contains("exceeds cache capacity"));
+        drop(cache);
+        assert_eq!(arena.counters().allocated.load(Relaxed), 0);
+    }
+
+    #[test]
+    fn paged_prefill_and_steps_match_dense_bitwise() {
+        // quant=none: gather copies f32s, so the paged cache must equal
+        // the dense cache bit-for-bit (the full property, across specs /
+        // backends / page geometry, lives in rust/tests/kvpage.rs)
+        let cfg = cfg();
+        let w = Weights::random(&cfg, 41);
+        let arena = PageArena::new(&cfg, 64, 5);
+        let mut paged = PagedKvCache::new(&cfg, arena, None, 8);
+        let mut dense = KvCache::new(&cfg);
+        let prompt: Vec<u8> = (0..13).map(|i| (i * 7 % 64) as u8).collect();
+        let a = prefill(&w, &mut dense, &prompt);
+        let b = prefill(&w, &mut paged, &prompt);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+        for step in 0..9u8 {
+            let a = forward_step(&w, &mut dense, step % 64);
+            let b = forward_step(&w, &mut paged, step % 64);
+            assert!(
+                a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "paged cache diverged at step {step}"
+            );
+        }
+        assert_eq!(paged.len(), dense.len());
+        assert_eq!(paged.page_count(), (13 + 9usize).div_ceil(5));
+    }
+
+    #[test]
+    fn cold_pages_quantize_free_arena_pages_and_stay_close() {
+        let cfg = cfg();
+        let w = Weights::random(&cfg, 43);
+        let arena = PageArena::new(&cfg, 64, 4);
+        let codec = KvCodec::build(KvQuantKind::E8, cfg.d_model).unwrap();
+        let mut paged = PagedKvCache::new(&cfg, Arc::clone(&arena), codec, 4);
+        let mut dense = KvCache::new(&cfg);
+        let prompt: Vec<u8> = (0..24).map(|i| (i * 5 % 64) as u8).collect();
+        let a = prefill(&w, &mut dense, &prompt);
+        let b = prefill(&w, &mut paged, &prompt);
+        // positions 0..20 are behind the 4-token hot window: 5 pages cold
+        assert_eq!(paged.cold_page_count(), 5);
+        assert_eq!(arena.counters().quantized.load(Relaxed), 5);
+        // cold pages released their f32 buffers back to the arena
+        assert_eq!(
+            arena.counters().allocated.load(Relaxed) as usize,
+            paged.page_count() - paged.cold_page_count()
+        );
+        // lossy but sane: reconstructed attention keeps logits close
+        let rel: f32 = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f32::max)
+            / a.iter().map(|x| x.abs()).fold(0.0, f32::max).max(1e-6);
+        assert!(rel < 0.5, "quantized-KV logits unreasonably far: {rel}");
+        drop(paged);
+        assert_eq!(arena.counters().allocated.load(Relaxed), 0);
+        assert_eq!(arena.counters().quantized.load(Relaxed), 0);
+    }
+
+    #[test]
+    fn quantized_decode_is_deterministic() {
+        let cfg = cfg();
+        let w = Weights::random(&cfg, 47);
+        let run = || {
+            let arena = PageArena::new(&cfg, 64, 4);
+            let codec = KvCodec::build(KvQuantKind::E8, cfg.d_model).unwrap();
+            let mut paged = PagedKvCache::new(&cfg, arena, codec, 2);
+            let mut logits = prefill(&w, &mut paged, &[3, 1, 4, 1, 5, 9, 2, 6]);
+            for s in 0..12u8 {
+                logits = forward_step(&w, &mut paged, s % 64);
+            }
+            logits
+        };
+        let (a, b) = (run(), run());
+        assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn codec_row_roundtrip_bounds() {
+        let cfg = cfg();
+        for kind in [KvQuantKind::E8, KvQuantKind::Llvq] {
+            let codec = KvCodec::build(kind, cfg.d_model).unwrap().unwrap();
+            let row: Vec<f32> = (0..cfg.d_model)
+                .map(|i| ((i as f32) * 0.37).sin() * 3.0)
+                .collect();
+            let mut bytes = Vec::new();
+            let mut norm = Vec::new();
+            let sigma = codec.encode_row(&row, &mut norm, &mut bytes);
+            assert_eq!(bytes.len(), codec.row_bytes());
+            let mut out = vec![0f32; cfg.d_model];
+            let mut code = Code::empty();
+            let mut scr = vec![0f32; codec.block_dim()];
+            codec.decode_row(&bytes, sigma, &mut code, &mut scr, &mut out);
+            let err: f32 = row
+                .iter()
+                .zip(&out)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+                / row.iter().map(|a| a * a).sum::<f32>();
+            assert!(err < 0.5, "{}: relative row error {err}", kind.label());
+        }
+    }
+
+    #[test]
+    fn zero_rows_roundtrip_without_nan() {
+        let cfg = cfg();
+        let codec = KvCodec::build(KvQuantKind::E8, cfg.d_model)
+            .unwrap()
+            .unwrap();
+        let row = vec![0f32; cfg.d_model];
+        let mut bytes = Vec::new();
+        let mut norm = Vec::new();
+        let sigma = codec.encode_row(&row, &mut norm, &mut bytes);
+        assert_eq!(sigma, 1.0);
+        let mut out = vec![1f32; cfg.d_model];
+        let mut code = Code::empty();
+        let mut scr = vec![0f32; codec.block_dim()];
+        codec.decode_row(&bytes, sigma, &mut code, &mut scr, &mut out);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn kv_quant_kind_parses() {
+        assert_eq!(KvQuantKind::parse("none").unwrap(), KvQuantKind::None);
+        assert_eq!(KvQuantKind::parse("e8").unwrap(), KvQuantKind::E8);
+        assert_eq!(KvQuantKind::parse("llvq").unwrap(), KvQuantKind::Llvq);
+        assert!(KvQuantKind::parse("lattice").is_err());
+        assert!(KvCodec::build(KvQuantKind::None, 144).unwrap().is_none());
+    }
+}

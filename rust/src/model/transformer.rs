@@ -374,6 +374,112 @@ impl KvCache {
     }
 }
 
+/// The session-cache surface every transformer entry point runs over:
+/// the dense [`KvCache`] slab and the paged
+/// [`PagedKvCache`](crate::model::kvpage::PagedKvCache) both implement
+/// it, so [`prefill`] / [`forward_step`] / [`forward_step_batch`] are
+/// storage-agnostic. `Send` is a supertrait because the serving
+/// coordinator moves boxed session caches into its worker thread.
+///
+/// The append contract mirrors [`run_blocks`]' historical in-place
+/// sequence exactly: per layer, [`KvStore::append_layer`] stores the
+/// run's new K/V rows and hands the *whole contiguous prefix* (positions
+/// `0..len()+s`) to the callback for attention, and a final
+/// [`KvStore::commit`] advances `len` once every layer has appended.
+/// Implementations must reproduce stored f32 rows bit-exactly for
+/// unquantized storage — that is what keeps paged sessions bit-identical
+/// to dense ones.
+pub trait KvStore: Send {
+    /// Tokens appended so far (the next token lands at this position).
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Maximum tokens this cache can hold.
+    fn capacity(&self) -> usize;
+
+    /// Err when appending `n` more tokens would overflow [`KvStore::capacity`].
+    fn check_append(&self, n: usize) -> Result<(), String>;
+
+    /// Ensure backing storage exists for `n` more tokens: the capacity
+    /// check plus (for paged caches) eager page allocation against the
+    /// shared arena budget — a refusal is a `kv-oom:`-prefixed error and
+    /// leaves the cache unchanged. The serving scheduler calls this at
+    /// admission so budget exhaustion is a clean protocol error, not a
+    /// worker panic.
+    fn reserve(&mut self, n: usize) -> Result<(), String>;
+
+    /// Panic if this cache was built for a different model shape.
+    fn check_model(&self, cfg: &ModelConfig);
+
+    /// Append layer `li`'s K/V rows for the run's new positions
+    /// (`k_new`/`v_new` are `s × d_model`, positions `len()..len()+s`),
+    /// then call `attend_fn(kc, vc)` with contiguous row-major K/V
+    /// covering positions `0..len()+s` of that layer.
+    fn append_layer(
+        &mut self,
+        li: usize,
+        k_new: &[f32],
+        v_new: &[f32],
+        attend_fn: &mut dyn FnMut(&[f32], &[f32]),
+    );
+
+    /// Finish a run of [`KvStore::append_layer`] calls: advance `len` by
+    /// `s`. Paged caches also quantize pages that fell behind the hot
+    /// window here — strictly between forward passes, never mid-pass.
+    fn commit(&mut self, s: usize);
+}
+
+impl KvStore for KvCache {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn capacity(&self) -> usize {
+        self.max_seq
+    }
+
+    fn check_append(&self, n: usize) -> Result<(), String> {
+        KvCache::check_append(self, n)
+    }
+
+    fn reserve(&mut self, n: usize) -> Result<(), String> {
+        // dense storage is preallocated at worst case: reserving is just
+        // the capacity check
+        KvCache::check_append(self, n)
+    }
+
+    fn check_model(&self, cfg: &ModelConfig) {
+        KvCache::check_model(self, cfg);
+    }
+
+    fn append_layer(
+        &mut self,
+        li: usize,
+        k_new: &[f32],
+        v_new: &[f32],
+        attend_fn: &mut dyn FnMut(&[f32], &[f32]),
+    ) {
+        let d = self.d_model;
+        debug_assert_eq!(k_new.len() % d, 0);
+        let s = k_new.len() / d;
+        let base = self.len;
+        let lo = self.layer_offset(li);
+        self.k[lo + base * d..lo + (base + s) * d].copy_from_slice(k_new);
+        self.v[lo + base * d..lo + (base + s) * d].copy_from_slice(v_new);
+        attend_fn(
+            &self.k[lo..lo + (base + s) * d],
+            &self.v[lo..lo + (base + s) * d],
+        );
+    }
+
+    fn commit(&mut self, s: usize) {
+        self.len += s;
+    }
+}
+
 /// Causal attention for one query position over cached K/V (`kc`/`vc` hold
 /// positions `0..=pos` of one layer, row-major `pos × d`). `out` receives
 /// the concatenated head outputs; `scores` is reusable scratch. The float
@@ -427,17 +533,17 @@ fn attend(
 /// `cache` and returning the new positions' final hidden states (`s × d`,
 /// pre-final-norm). Shared by [`forward`] (fresh cache, all logits) and
 /// [`prefill`] (session cache, last logits) so the two can never diverge.
-fn run_blocks<M: ForwardOps + ?Sized>(
+fn run_blocks<M: ForwardOps + ?Sized, C: KvStore + ?Sized>(
     m: &M,
-    cache: &mut KvCache,
+    cache: &mut C,
     tokens: &[u8],
     capture: &mut ActivationCapture,
 ) -> Vec<f32> {
     let cfg = m.cfg();
     let (s, d) = (tokens.len(), cfg.d_model);
-    let base = cache.len;
+    let base = cache.len();
     assert!(s > 0, "empty token sequence");
-    if let Err(e) = cache.check_append(s) {
+    if let Err(e) = cache.reserve(s) {
         panic!("{e}");
     }
     cache.check_model(cfg);
@@ -480,23 +586,23 @@ fn run_blocks<M: ForwardOps + ?Sized>(
         m.linear_batch(li, LinearKind::Wk, &xs, &mut k, s);
         m.linear_batch(li, LinearKind::Wv, &xs, &mut v, s);
         // append this run's K/V, then attend over the whole prefix
-        let lo = cache.layer_offset(li);
-        cache.k[lo + base * d..lo + (base + s) * d].copy_from_slice(&k);
-        cache.v[lo + base * d..lo + (base + s) * d].copy_from_slice(&v);
-        let kc = &cache.k[lo..lo + (base + s) * d];
-        let vc = &cache.v[lo..lo + (base + s) * d];
-        for t in 0..s {
-            attend(
-                kc,
-                vc,
-                base + t,
-                d,
-                hd,
-                nh,
-                &q[t * d..(t + 1) * d],
-                &mut attn_out[t * d..(t + 1) * d],
-                &mut scores,
-            );
+        {
+            let (q_ref, ao, sc) = (&q, &mut attn_out, &mut scores);
+            cache.append_layer(li, &k, &v, &mut |kc, vc| {
+                for t in 0..s {
+                    attend(
+                        kc,
+                        vc,
+                        base + t,
+                        d,
+                        hd,
+                        nh,
+                        &q_ref[t * d..(t + 1) * d],
+                        &mut ao[t * d..(t + 1) * d],
+                        sc,
+                    );
+                }
+            });
         }
         for t in 0..s {
             capture.record(li, LinearKind::Wo, &attn_out[t * d..(t + 1) * d]);
@@ -524,7 +630,7 @@ fn run_blocks<M: ForwardOps + ?Sized>(
             *hi += o;
         }
     }
-    cache.len = base + s;
+    cache.commit(s);
     h
 }
 
@@ -559,9 +665,9 @@ pub fn forward<M: ForwardOps + ?Sized>(
 /// Append `tokens` to a generation session, returning the logits at the
 /// last appended position (vocab-sized) — bit-identical to the last row
 /// of [`forward`] over the session's whole token history.
-pub fn prefill<M: ForwardOps + ?Sized>(
+pub fn prefill<M: ForwardOps + ?Sized, C: KvStore + ?Sized>(
     m: &M,
-    cache: &mut KvCache,
+    cache: &mut C,
     tokens: &[u8],
 ) -> Vec<f32> {
     let cfg = m.cfg();
@@ -584,9 +690,9 @@ pub fn prefill<M: ForwardOps + ?Sized>(
 /// chunk size — the property the coordinator's pipelined prefill scheduler
 /// rests on, pinned across quantizer specs and thread counts by proptests
 /// in `rust/tests/generation.rs`.
-pub fn prefill_chunked<M: ForwardOps + ?Sized>(
+pub fn prefill_chunked<M: ForwardOps + ?Sized, C: KvStore + ?Sized>(
     m: &M,
-    cache: &mut KvCache,
+    cache: &mut C,
     tokens: &[u8],
     chunk: usize,
 ) -> Vec<f32> {
@@ -601,18 +707,19 @@ pub fn prefill_chunked<M: ForwardOps + ?Sized>(
 
 /// Append one token to a session and return its logits — the single-lane
 /// decode step (see [`forward_step_batch`] for the slate version).
-pub fn forward_step<M: ForwardOps + ?Sized>(
+pub fn forward_step<M: ForwardOps + ?Sized, C: KvStore + ?Sized>(
     m: &M,
-    cache: &mut KvCache,
+    cache: &mut C,
     token: u8,
 ) -> Vec<f32> {
     prefill(m, cache, &[token])
 }
 
 /// One batch lane of a decode step: a session cache plus the token to
-/// append to it. Lanes may sit at different positions.
+/// append to it. Lanes may sit at different positions. The cache is a
+/// [`KvStore`] trait object so dense and paged sessions share a slate.
 pub struct StepLane<'a> {
-    pub cache: &'a mut KvCache,
+    pub cache: &'a mut dyn KvStore,
     pub token: u8,
 }
 
@@ -636,12 +743,12 @@ pub fn forward_step_batch<M: ForwardOps + ?Sized>(
 
     let (tok_emb, pos_emb) = (m.tok_emb(), m.pos_emb());
     let mut h = vec![0f32; n * d];
-    for (l, lane) in lanes.iter().enumerate() {
+    for (l, lane) in lanes.iter_mut().enumerate() {
         let tok = lane.token as usize;
         assert!(tok < cfg.vocab, "token id {tok} >= vocab {}", cfg.vocab);
         lane.cache.check_model(cfg);
-        let p = lane.cache.len;
-        if let Err(e) = lane.cache.check_append(1) {
+        let p = lane.cache.len();
+        if let Err(e) = lane.cache.reserve(1) {
             panic!("{e}");
         }
         for i in 0..d {
@@ -669,22 +776,17 @@ pub fn forward_step_batch<M: ForwardOps + ?Sized>(
         m.linear_batch(li, LinearKind::Wk, &xs, &mut k, n);
         m.linear_batch(li, LinearKind::Wv, &xs, &mut v, n);
         for (l, lane) in lanes.iter_mut().enumerate() {
-            let t = lane.cache.len;
-            let lo = lane.cache.layer_offset(li);
-            lane.cache.k[lo + t * d..lo + (t + 1) * d]
-                .copy_from_slice(&k[l * d..(l + 1) * d]);
-            lane.cache.v[lo + t * d..lo + (t + 1) * d]
-                .copy_from_slice(&v[l * d..(l + 1) * d]);
-            attend(
-                &lane.cache.k[lo..lo + (t + 1) * d],
-                &lane.cache.v[lo..lo + (t + 1) * d],
-                t,
-                d,
-                hd,
-                nh,
+            let t = lane.cache.len();
+            let (q_row, ao, sc) = (
                 &q[l * d..(l + 1) * d],
                 &mut attn_out[l * d..(l + 1) * d],
                 &mut scores,
+            );
+            lane.cache.append_layer(
+                li,
+                &k[l * d..(l + 1) * d],
+                &v[l * d..(l + 1) * d],
+                &mut |kc, vc| attend(kc, vc, t, d, hd, nh, q_row, ao, sc),
             );
         }
         m.linear_batch(li, LinearKind::Wo, &attn_out, &mut out, n);
@@ -707,7 +809,7 @@ pub fn forward_step_batch<M: ForwardOps + ?Sized>(
         }
     }
     for lane in lanes.iter_mut() {
-        lane.cache.len += 1;
+        lane.cache.commit(1);
     }
 
     let mut normed = vec![0f32; d];

@@ -235,7 +235,7 @@ fn fused_tcp_serving_matches_dense_oracle_within_packed_resident_bytes() {
     let vocab = art.weights.cfg.vocab;
     let expect = argmax(&oracle[(toks.len() - 1) * vocab..toks.len() * vocab]);
 
-    let engine = Arc::new(BackendEngine { backend: fused });
+    let engine = Arc::new(BackendEngine::new(fused));
     let coord = Coordinator::start(engine, BatcherConfig::default());
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();

@@ -23,7 +23,7 @@ use llvq::model::packed::PackedFile;
 use llvq::model::sample::argmax;
 use llvq::model::transformer::{
     forward, forward_step, forward_step_batch, prefill, prefill_chunked, ActivationCapture,
-    ForwardOps, KvCache, StepLane, Weights,
+    ForwardOps, KvCache, KvStore, StepLane, Weights,
 };
 use llvq::pipeline::driver::{quantize_model_packed, PtqArtifacts, PtqOptions};
 use llvq::pipeline::rotation::RotationMode;
@@ -274,15 +274,21 @@ impl BatchForward for SlowPrefill {
     fn forward_batch(&self, batch: &[Vec<u8>]) -> Vec<Vec<f32>> {
         self.inner.forward_batch(batch)
     }
-    fn open_session(&self) -> KvCache {
+    fn open_session(&self) -> Box<dyn KvStore> {
         self.inner.open_session()
     }
-    fn prefill(&self, cache: &mut KvCache, tokens: &[u8]) -> Vec<f32> {
+    fn prefill(&self, cache: &mut dyn KvStore, tokens: &[u8]) -> Vec<f32> {
         std::thread::sleep(self.delay);
         self.inner.prefill(cache, tokens)
     }
     fn decode_step(&self, lanes: &mut [StepLane<'_>]) -> Vec<Vec<f32>> {
         self.inner.decode_step(lanes)
+    }
+    fn close_session(&self, cache: Box<dyn KvStore>) {
+        self.inner.close_session(cache)
+    }
+    fn kv_counters(&self) -> Option<Arc<llvq::model::kvpage::KvPageCounters>> {
+        self.inner.kv_counters()
     }
 }
 
@@ -395,7 +401,7 @@ fn tcp_v2_protocol_generates_streams_and_replays_deterministically() {
     let fused =
         ExecutionBackend::packed_fused(PackedFile::open(tmp.path()).unwrap(), 2).unwrap();
     let coord = Coordinator::start(
-        Arc::new(BackendEngine { backend: fused }),
+        Arc::new(BackendEngine::new(fused)),
         BatcherConfig::default(),
     );
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();

@@ -1,0 +1,231 @@
+//! Paged-KV integration tier: the paged cache against the dense oracle
+//! across quantizer specs, backends, kernel thread counts, and page
+//! geometry.
+//!
+//! The load-bearing property (`paged-kv-bit-identity`, seed-replayed from
+//! `proptest-regressions/`): with `--kv-quant none` a [`PagedKvCache`] is
+//! a pure re-layout — prefill plus greedy steps must reproduce the dense
+//! [`KvCache`] logits bit for bit on every backend, for every page size
+//! and hot window. Quantized cold pages are lossy by design, so they get
+//! weaker (but still pinned) assertions: deterministic replay, real
+//! arena-page release on cooling, and greedy argmax parity on seeded
+//! prompts.
+
+use std::sync::Arc;
+
+use llvq::coordinator::{BackendEngine, BatchForward};
+use llvq::model::backend::ExecutionBackend;
+use llvq::model::config::config_by_name;
+use llvq::model::kvpage::{KvCodec, KvQuantKind, PageArena, PagedKvCache};
+use llvq::model::packed::PackedFile;
+use llvq::model::sample::argmax;
+use llvq::model::transformer::{forward_step, prefill, ForwardOps, KvCache, KvStore, Weights};
+use llvq::pipeline::driver::{quantize_model_packed, PtqOptions};
+use llvq::pipeline::rotation::RotationMode;
+use llvq::quant::e8::{E8Codebook, E8Cut};
+use llvq::quant::llvq::LlvqSpherical;
+use llvq::quant::scalar::UniformQuantizer;
+use llvq::quant::VectorQuantizer;
+use llvq::util::proptest::{check, TempArtifact};
+
+/// Weight-quantizer specs whose backends the paged cache must be
+/// layout-transparent over (a subset of the five: enough to cover
+/// scalar, E8, and Leech code paths without a minutes-long tier-1).
+fn specs() -> Vec<(&'static str, Box<dyn VectorQuantizer>)> {
+    vec![
+        (
+            "uniform",
+            Box::new(UniformQuantizer::new_gaussian_optimal(4)) as Box<dyn VectorQuantizer>,
+        ),
+        ("e8", Box::new(E8Codebook::new(E8Cut::Ball))),
+        (
+            "llvq-spherical",
+            Box::new(LlvqSpherical::with_scale(
+                Arc::new(llvq::leech::index::LeechIndexer::new(3)),
+                0.9,
+            )),
+        ),
+    ]
+}
+
+/// Dense-vs-paged bit-identity over one backend for one geometry.
+fn assert_paged_matches_dense<M: ForwardOps + ?Sized>(
+    m: &M,
+    prompt: &[u8],
+    steps: usize,
+    page_tokens: usize,
+    hot_window: usize,
+    label: &str,
+) -> Result<(), String> {
+    let cfg = m.cfg();
+    let total = prompt.len() + steps;
+    let arena = PageArena::new(cfg, total.div_ceil(page_tokens), page_tokens);
+    let mut paged = PagedKvCache::new(cfg, Arc::clone(&arena), None, hot_window);
+    let mut dense = KvCache::new(cfg);
+    let a = prefill(m, &mut dense, prompt);
+    let b = prefill(m, &mut paged, prompt);
+    if a.iter().zip(&b).any(|(x, y)| x.to_bits() != y.to_bits()) {
+        return Err(format!("{label}: prefill logits diverged"));
+    }
+    // greedy continuation, stepping both caches with the dense argmax
+    let mut logits = a;
+    for s in 0..steps {
+        let t = argmax(&logits) as u8;
+        let x = forward_step(m, &mut dense, t);
+        let y = forward_step(m, &mut paged, t);
+        if x.iter().zip(&y).any(|(p, q)| p.to_bits() != q.to_bits()) {
+            return Err(format!(
+                "{label}: step {s} diverged (page_tokens={page_tokens} hot={hot_window})"
+            ));
+        }
+        logits = x;
+    }
+    if paged.len() != dense.len() || paged.len() != total {
+        return Err(format!("{label}: cache length drifted"));
+    }
+    if paged.page_count() != total.div_ceil(page_tokens) {
+        return Err(format!("{label}: unexpected page count"));
+    }
+    drop(paged);
+    let leaked = arena.counters().allocated.load(std::sync::atomic::Ordering::Relaxed);
+    if leaked != 0 {
+        return Err(format!("{label}: dropped cache leaked {leaked} pages"));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_paged_kv_bit_identity_across_specs_backends_and_geometry() {
+    // the paged-vs-dense pin, mirroring the chunked-prefill property:
+    // quant=none paging is invisible to the math on the dense oracle and
+    // the fused backend at 1 and 4 kernel threads, for random prompts,
+    // page sizes, and hot windows (including hot=0: every full page
+    // "cools" — a no-op without a codec, but it walks the cooling path)
+    for (i, (name, q)) in specs().into_iter().enumerate() {
+        let cfg = config_by_name("qwen3-4b-tiny").unwrap();
+        let w = Weights::random(&cfg, 900 + i as u64);
+        let opts = PtqOptions {
+            calib_seqs: 2,
+            rotation: RotationMode::Input,
+            ..Default::default()
+        };
+        let art = quantize_model_packed(&w, q.as_ref(), &opts);
+        let tmp = TempArtifact::new(&format!("kvpage-{name}"), "llvqm");
+        art.packed.save(tmp.path()).unwrap();
+        let dense = ExecutionBackend::dense(art.weights.clone());
+        let fused1 =
+            ExecutionBackend::packed_fused(PackedFile::open(tmp.path()).unwrap(), 1).unwrap();
+        let fused4 =
+            ExecutionBackend::packed_fused(PackedFile::open(tmp.path()).unwrap(), 4).unwrap();
+        let backends: [(&str, &dyn ForwardOps); 3] =
+            [("dense", &dense), ("fused-t1", &fused1), ("fused-t4", &fused4)];
+        check(&format!("paged-kv-bit-identity-{name}"), 3, |rng| {
+            let plen = 2 + rng.next_range(30) as usize;
+            let prompt: Vec<u8> = (0..plen).map(|_| rng.next_range(64) as u8).collect();
+            let steps = 1 + rng.next_range(8) as usize;
+            let page_tokens = 1 + rng.next_range(9) as usize;
+            let hot_window = rng.next_range(24) as usize;
+            for &(label, m) in &backends {
+                assert_paged_matches_dense(
+                    m,
+                    &prompt,
+                    steps,
+                    page_tokens,
+                    hot_window,
+                    &format!("{name}/{label}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn quantized_cold_pages_replay_deterministically_and_release_pages() {
+    // lossy cold storage still has exact obligations: the same token run
+    // must produce the same logits twice (encode/decode is a pure
+    // function), cooling must hand hot buffers back to the arena, and
+    // occupancy accounting must balance
+    let cfg = config_by_name("qwen3-4b-tiny").unwrap();
+    let w = Weights::random(&cfg, 77);
+    let prompt: Vec<u8> = (0..24).map(|i| (i * 11 % 64) as u8).collect();
+    for kind in [KvQuantKind::E8, KvQuantKind::Llvq] {
+        let codec = KvCodec::build(kind, cfg.d_model).unwrap();
+        let run = || {
+            let arena = PageArena::new(&cfg, 16, 4);
+            let mut cache = PagedKvCache::new(&cfg, Arc::clone(&arena), codec.clone(), 4);
+            let mut logits = prefill(&w, &mut cache, &prompt);
+            for _ in 0..4 {
+                logits = forward_step(&w, &mut cache, argmax(&logits) as u8);
+            }
+            let cold = cache.cold_page_count();
+            let hot_allocated = arena
+                .counters()
+                .allocated
+                .load(std::sync::atomic::Ordering::Relaxed);
+            (logits, cold, hot_allocated, cache.page_count())
+        };
+        let (l1, cold, hot_allocated, total_pages) = run();
+        let (l2, cold2, ..) = run();
+        assert_eq!(cold, cold2, "{kind:?}: cooling not deterministic");
+        assert!(cold > 0, "{kind:?}: the 4-token hot window never cooled a page");
+        assert_eq!(
+            hot_allocated,
+            total_pages - cold,
+            "{kind:?}: arena occupancy out of balance with cold-page count"
+        );
+        assert!(
+            l1.iter().zip(&l2).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{kind:?}: quantized replay diverged"
+        );
+    }
+}
+
+#[test]
+fn paged_engine_packs_more_sessions_into_the_same_bytes() {
+    // the subsystem's reason to exist, measured through the engine
+    // surface: under a byte budget equal to FOUR dense worst-case caches,
+    // a paged engine holds many more live 8-token sessions
+    let cfg = config_by_name("qwen3-4b-tiny").unwrap();
+    let dense_cache_bytes = cfg.n_layers * 2 * cfg.max_seq * cfg.d_model * 4;
+    let page_tokens = 8usize;
+    let page_bytes = cfg.n_layers * 2 * page_tokens * cfg.d_model * 4;
+    let budget_bytes = 4 * dense_cache_bytes;
+    let pages = budget_bytes / page_bytes;
+    let engine = BackendEngine::paged(
+        ExecutionBackend::dense(Weights::random(&cfg, 5)),
+        pages,
+        page_tokens,
+        16,
+        KvQuantKind::None,
+    )
+    .unwrap();
+    assert_eq!(engine.kv_page_budget(), pages);
+    let mut sessions = Vec::new();
+    loop {
+        let mut c = engine.open_session();
+        if c.reserve(page_tokens).is_err() {
+            break;
+        }
+        engine.prefill(c.as_mut(), &vec![3u8; page_tokens]);
+        sessions.push(c);
+    }
+    assert_eq!(sessions.len(), pages, "every page should host one session");
+    assert!(
+        sessions.len() > 4 * 2,
+        "paged admission ({}) should beat dense worst-case (4) by far",
+        sessions.len()
+    );
+    // and they all come back
+    for c in sessions {
+        engine.close_session(c);
+    }
+    assert_eq!(
+        engine
+            .kv_counters()
+            .unwrap()
+            .allocated
+            .load(std::sync::atomic::Ordering::Relaxed),
+        0
+    );
+}

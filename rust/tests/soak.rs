@@ -13,6 +13,14 @@
 //! `cargo test --release --test soak -- --ignored` under an
 //! `LLVQ_THREADS ∈ {1, 4}` matrix (the kernel pool reads that env var
 //! through `threadpool::default_threads`), not in the tier-1 suite.
+//!
+//! `LLVQ_SOAK_KV_PAGES` > 0 switches the engine to paged KV sessions over
+//! an arena of that many 4-token pages (`LLVQ_SOAK_KV_QUANT` picks the
+//! cold-page codec). A small budget makes `ERR kv-oom` a *normal* answer
+//! under the storm: clients retry it with backoff, and the final STATS
+//! poll additionally asserts the arena drained to `kv_pages=0/…` — rude
+//! disconnects and panics must return every page, not just the session
+//! slot.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -22,6 +30,7 @@ use std::time::{Duration, Instant};
 use llvq::coordinator::{serve_tcp_opts, BackendEngine, BatcherConfig, Coordinator, ServeOptions};
 use llvq::model::backend::ExecutionBackend;
 use llvq::model::config::config_by_name;
+use llvq::model::kvpage::KvQuantKind;
 use llvq::model::packed::PackedFile;
 use llvq::model::transformer::Weights;
 use llvq::pipeline::driver::{quantize_model_packed, PtqOptions};
@@ -57,15 +66,35 @@ fn client_round(addr: std::net::SocketAddr, seed: u64, feed_len: usize, gen_n: u
         if part.is_empty() {
             continue;
         }
-        writeln!(s, "FEED {}", part.join(",")).unwrap();
-        let l = read_line(&mut r);
-        assert!(l.starts_with("QUEUED "), "FEED: {l}");
+        // under a small --kv-pages budget, kv-oom is a normal answer
+        // while other sessions hold the arena: retry with backoff
+        let oom_deadline = Instant::now() + STALL_LIMIT;
+        loop {
+            writeln!(s, "FEED {}", part.join(",")).unwrap();
+            let l = read_line(&mut r);
+            if l.starts_with("QUEUED ") {
+                break;
+            }
+            assert!(l.starts_with("ERR kv-oom"), "FEED: {l}");
+            assert!(Instant::now() < oom_deadline, "kv-oom never cleared: {l}");
+            std::thread::sleep(Duration::from_millis(20));
+        }
     }
+    let oom_deadline = Instant::now() + STALL_LIMIT;
     writeln!(s, "GEN {gen_n} temp=0.8 topk=8 seed={seed}").unwrap();
     let mut got = 0usize;
     let mut last = Instant::now();
     loop {
         let l = read_line(&mut r);
+        if l.starts_with("ERR kv-oom") {
+            // arena full at GEN admission: the session survived — retry
+            assert_eq!(got, 0, "kv-oom after tokens streamed: {l}");
+            assert!(Instant::now() < oom_deadline, "kv-oom never cleared: {l}");
+            std::thread::sleep(Duration::from_millis(20));
+            writeln!(s, "GEN {gen_n} temp=0.8 topk=8 seed={seed}").unwrap();
+            last = Instant::now();
+            continue;
+        }
         if l.starts_with("TOK ") {
             assert!(
                 last.elapsed() < STALL_LIMIT,
@@ -97,7 +126,12 @@ fn rude_client(addr: std::net::SocketAddr, seed: u64) {
     let toks: Vec<String> = (0..40).map(|i| ((seed as usize + i) % 64).to_string()).collect();
     writeln!(s, "FEED {}", toks.join(",")).unwrap();
     let l = read_line(&mut r);
-    assert!(l.starts_with("QUEUED "), "FEED: {l}");
+    // a rude client under a small page budget may be refused — it walks
+    // away either way, and either way no page may leak
+    assert!(
+        l.starts_with("QUEUED ") || l.starts_with("ERR kv-oom"),
+        "FEED: {l}"
+    );
     if seed % 2 == 1 {
         writeln!(s, "GEN 8 temp=0.9 seed={seed}").unwrap();
     }
@@ -125,8 +159,25 @@ fn soak_mixed_long_feeds_and_gens_over_tcp() {
         ExecutionBackend::packed_fused(PackedFile::open(tmp.path()).unwrap(), threads).unwrap();
     println!("soak: fused backend, {threads} kernel threads (LLVQ_THREADS matrix)");
 
+    // CI's paged-KV leg sets LLVQ_SOAK_KV_PAGES (and LLVQ_SOAK_KV_QUANT)
+    // to run the same storm over a small shared page arena
+    let kv_pages: usize = std::env::var("LLVQ_SOAK_KV_PAGES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    let paged = kv_pages > 0;
+    let engine = if paged {
+        let quant = KvQuantKind::parse(
+            &std::env::var("LLVQ_SOAK_KV_QUANT").unwrap_or_else(|_| "none".into()),
+        )
+        .unwrap();
+        println!("soak: paged KV, {kv_pages} pages × 4 tokens, quant={}", quant.label());
+        BackendEngine::paged(fused, kv_pages, 4, 8, quant).unwrap()
+    } else {
+        BackendEngine::new(fused)
+    };
     let coord = Coordinator::start(
-        Arc::new(BackendEngine { backend: fused }),
+        Arc::new(engine),
         BatcherConfig {
             max_batch: 4,
             max_wait: Duration::from_millis(1),
@@ -183,6 +234,18 @@ fn soak_mixed_long_feeds_and_gens_over_tcp() {
                 .parse()
                 .unwrap();
             assert!(toks > 0, "no prefill work recorded: {l}");
+            if paged {
+                // every session is gone, so every page must be back in
+                // the free list — rude disconnects included
+                let occ = l
+                    .split_whitespace()
+                    .find_map(|kv| kv.strip_prefix("kv_pages="))
+                    .expect("kv_pages in STATS");
+                assert!(
+                    occ.starts_with("0/"),
+                    "arena did not drain to zero allocated pages: {l}"
+                );
+            }
             break;
         }
         std::thread::sleep(Duration::from_millis(50));

@@ -1,7 +1,10 @@
 #!/usr/bin/env bash
 # Run every bench harness that emits BENCH_*.json rows and leave the
 # files in the repo root (the kernel baseline BENCH_kernel.json is the
-# only one under version control — refresh it with this script).
+# only one under version control — refresh it with this script). The
+# serving harness now also writes BENCH_kv.json: the paged-KV capacity
+# comparison (sessions-per-GB for dense vs paged vs paged+llvq cold
+# pages) plus measured decode tok/s across the three cache modes.
 #
 # Defaults to smoke mode (LLVQ_BENCH_SMOKE=1: shrunken iteration counts
 # and codebook dims, rows tagged "smoke": true) so a laptop or CI runner
