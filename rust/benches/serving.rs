@@ -6,8 +6,10 @@
 //! overhead of §5.3.
 //!
 //! Besides the human-readable report, every backend measurement lands as a
-//! JSON row in `BENCH_serving.json`, every generation measurement in
-//! `BENCH_generation.json`, the kernel thread-scaling sweep (fused and
+//! JSON row in `BENCH_serving.json` (which also carries a `"sim"` suite:
+//! one row per scheduler-simulator scenario with its wall time, virtual
+//! ticks, counters, invariant verdict, and determinism fingerprint),
+//! every generation measurement in `BENCH_generation.json`, the kernel thread-scaling sweep (fused and
 //! cached × 1/2/4/8 pool threads × single-lane and 8-lane slate, every
 //! row tagged with the `simd` kernel it dispatched) plus the
 //! forced-scalar-vs-auto-detected SIMD comparison in `BENCH_kernel.json`,
@@ -43,6 +45,8 @@ use llvq::pipeline::driver::{quantize_model_packed, PtqOptions};
 use llvq::pipeline::rotation::RotationMode;
 use llvq::quant::kernel::Kernel;
 use llvq::quant::llvq::LlvqShapeGain;
+use llvq::sim::harness::Simulator;
+use llvq::sim::scenario::Scenario;
 use llvq::util::bench::{black_box, Bench, BenchResult};
 use llvq::util::json::Json;
 
@@ -797,6 +801,62 @@ fn main() {
             coord.metrics.mean_latency_ms()
         );
         coord.stop();
+    }
+
+    // ---- deterministic scheduler simulator: scenario corpus ----
+    // virtual-clock replays of the named workload corpus (`llvq sim
+    // --list`): wall seconds per scenario, virtual ticks to quiescence,
+    // and the scheduler counters the run produced. `clean` is the
+    // per-tick invariant verdict, `fingerprint` the log+stats FNV the
+    // same seed must reproduce on any machine or thread count.
+    {
+        println!("\n== scheduler simulator: scenario corpus (virtual clock) ==");
+        let seed = 1u64;
+        for sc in Scenario::ALL {
+            let trace = sc.trace(seed);
+            let mut sim = Simulator::new(&trace).unwrap();
+            let t0 = std::time::Instant::now();
+            let report = sim.run_to_end(sc.max_ticks());
+            let wall = t0.elapsed().as_secs_f64();
+            let stat = |key: &str| -> i64 {
+                report
+                    .stats
+                    .split_whitespace()
+                    .find_map(|kv| kv.strip_prefix(&format!("{key}=")))
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(0)
+            };
+            println!(
+                "{:<18}: {:>3} ticks in {:6.1} ms | gen {:>3} prefill {:>3} \
+                 kv-oom {} | {}",
+                sc.name(),
+                report.ticks,
+                wall * 1e3,
+                stat("gen_tokens"),
+                stat("prefill_toks"),
+                stat("kv_oom"),
+                if report.ok() { "clean" } else { "VIOLATION" }
+            );
+            let mut pairs = vec![
+                ("suite", Json::Str("sim".into())),
+                ("name", Json::Str(sc.name().into())),
+                ("seed", Json::Int(seed as i64)),
+                ("wall_s", Json::Num(wall)),
+                ("ticks", Json::Int(report.ticks as i64)),
+                ("gen_tokens", Json::Int(stat("gen_tokens"))),
+                ("prefill_toks", Json::Int(stat("prefill_toks"))),
+                ("kv_oom", Json::Int(stat("kv_oom"))),
+                ("clean", Json::Bool(report.ok())),
+                (
+                    "fingerprint",
+                    Json::Str(format!("{:016x}", report.fingerprint())),
+                ),
+            ];
+            if smoke {
+                pairs.push(("smoke", Json::Bool(true)));
+            }
+            rows.push(Json::obj(pairs));
+        }
     }
 
     println!("\n== online Hadamard overhead (unfused rotations, §5.3) ==");

@@ -42,6 +42,16 @@
 //! panicking forward pass answers `ERR` (or fails the waiting `GEN`
 //! stream) and destroys only the sessions it touched instead of killing
 //! the worker and hanging every later request.
+//!
+//! The per-tick state machine itself — event intake → admission/reserve →
+//! one-shot prefix batch → decode slate → prefill chunk budget → metrics —
+//! lives in [`SchedulerCore`], which owns no thread, socket, or wall
+//! clock. The worker thread here is one driver of that core (real channel
+//! + wall-clock batch window); the deterministic simulator in
+//! [`crate::sim`] is another (virtual clock, scripted event traces,
+//! byte-exact replay). `STATS` formatting is shared the same way:
+//! [`Metrics::snapshot`] produces the one ordered field list both the TCP
+//! reply and the simulator's per-tick dump print.
 
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
@@ -275,11 +285,13 @@ impl BatchForward for BackendEngine {
     }
 }
 
-/// One queued one-shot request.
-struct Pending {
-    tokens: Vec<u8>,
-    reply: Sender<Result<Vec<f32>, String>>,
-    enqueued: Instant,
+/// One queued one-shot request. `enqueued` is the wall-clock arrival time
+/// feeding the latency metric; the simulator passes `None` — virtual time
+/// has no wall clock, and a deterministic replay must never read one.
+pub(crate) struct Pending {
+    pub(crate) tokens: Vec<u8>,
+    pub(crate) reply: Sender<Result<Vec<f32>, String>>,
+    pub(crate) enqueued: Option<Instant>,
 }
 
 /// One streamed generation event.
@@ -292,8 +304,10 @@ pub enum GenEvent {
     Done { len: usize },
 }
 
-/// Worker-side message set.
-enum Msg {
+/// Worker-side message set — the event-intake surface of
+/// [`SchedulerCore::handle`], shared by the channel-fed worker thread and
+/// the simulator's scripted traces.
+pub(crate) enum Msg {
     Prefix(Pending),
     Open {
         reply: Sender<Result<u64, String>>,
@@ -420,6 +434,101 @@ impl Metrics {
             self.decode_lanes.load(Ordering::Relaxed) as f64 / s as f64
         }
     }
+
+    /// Snapshot every `STATS` field, in wire order, against `engine`'s
+    /// identity fields. The TCP `STATS` handler and the simulator's
+    /// per-tick dump both format through this — one source of truth, so
+    /// the two surfaces can never diverge. Field order is part of the
+    /// wire contract (`resident_bytes` stays LAST — parsers rsplit on
+    /// `=`; the kv fields sit before `threads=`) and is pinned by a unit
+    /// test.
+    pub fn snapshot(&self, engine: &dyn BatchForward) -> StatsSnapshot {
+        let (kv_alloc, kv_quantized, kv_oom) = match self.kv.get() {
+            Some(c) => (
+                c.allocated.load(Ordering::Relaxed),
+                c.quantized.load(Ordering::Relaxed),
+                c.oom.load(Ordering::Relaxed),
+            ),
+            None => (0, 0, 0),
+        };
+        StatsSnapshot {
+            fields: vec![
+                ("requests", self.requests.load(Ordering::Relaxed).to_string()),
+                ("mean_batch", format!("{:.2}", self.mean_batch())),
+                ("mean_latency_ms", format!("{:.3}", self.mean_latency_ms())),
+                (
+                    "sessions",
+                    self.open_sessions.load(Ordering::Relaxed).to_string(),
+                ),
+                (
+                    "gen_tokens",
+                    self.gen_tokens.load(Ordering::Relaxed).to_string(),
+                ),
+                ("mean_lanes", format!("{:.2}", self.mean_lanes())),
+                (
+                    "prefill_jobs",
+                    self.prefill_jobs.load(Ordering::Relaxed).to_string(),
+                ),
+                (
+                    "prefill_toks",
+                    self.prefill_toks.load(Ordering::Relaxed).to_string(),
+                ),
+                ("kv_pages", format!("{kv_alloc}/{}", engine.kv_page_budget())),
+                ("kv_quantized", kv_quantized.to_string()),
+                ("kv_oom", kv_oom.to_string()),
+                ("kv_quant", engine.kv_quant_label()),
+                ("threads", engine.threads().to_string()),
+                ("backend", engine.backend_name()),
+                ("simd", engine.simd_label()),
+                (
+                    "resident_bytes",
+                    engine.resident_weight_bytes().to_string(),
+                ),
+            ],
+        }
+    }
+}
+
+/// An ordered key→value snapshot of [`Metrics`] plus engine identity,
+/// produced by [`Metrics::snapshot`]. `Display` renders the canonical
+/// `k=v k=v …` line (without the protocol's `OK ` prefix).
+pub struct StatsSnapshot {
+    fields: Vec<(&'static str, String)>,
+}
+
+impl StatsSnapshot {
+    /// The ordered fields.
+    pub fn fields(&self) -> &[(&'static str, String)] {
+        &self.fields
+    }
+
+    /// Value of one key, if present.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.fields
+            .iter()
+            .find(|(k, _)| *k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// The canonical single-line rendering.
+    pub fn line(&self) -> String {
+        let mut s = String::new();
+        for (i, (k, v)) in self.fields.iter().enumerate() {
+            if i > 0 {
+                s.push(' ');
+            }
+            s.push_str(k);
+            s.push('=');
+            s.push_str(v);
+        }
+        s
+    }
+}
+
+impl std::fmt::Display for StatsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.line())
+    }
 }
 
 /// Scheduler configuration.
@@ -499,36 +608,14 @@ impl Coordinator {
         tx.send(msg).map_err(|_| "worker gone".to_string())
     }
 
-    /// Reject malformed token runs before they reach the worker: an id ≥
-    /// vocab would index the embedding table out of bounds (the panic is
-    /// also contained by catch_unwind, but validation gives the caller a
-    /// precise error and keeps poison out of the batch).
-    fn validate_tokens(&self, tokens: &[u8]) -> Result<(), String> {
-        if tokens.is_empty() {
-            return Err("empty token list".into());
-        }
-        if tokens.len() > self.engine.max_seq() {
-            return Err(format!(
-                "sequence length {} exceeds max_seq {}",
-                tokens.len(),
-                self.engine.max_seq()
-            ));
-        }
-        let vocab = self.engine.vocab();
-        if let Some(&bad) = tokens.iter().find(|&&t| (t as usize) >= vocab) {
-            return Err(format!("token id {bad} out of range (vocab {vocab})"));
-        }
-        Ok(())
-    }
-
     /// Blocking one-shot request: returns last-position logits.
     pub fn submit(&self, tokens: Vec<u8>) -> Result<Vec<f32>, String> {
-        self.validate_tokens(&tokens)?;
+        validate_tokens(self.engine.as_ref(), &tokens)?;
         let (rtx, rrx) = channel();
         self.send(Msg::Prefix(Pending {
             tokens,
             reply: rtx,
-            enqueued: Instant::now(),
+            enqueued: Some(Instant::now()),
         }))?;
         match rrx.recv() {
             Ok(r) => r,
@@ -553,7 +640,7 @@ impl Coordinator {
     /// session whose previous job is still draining extends that job; a
     /// subsequent [`Coordinator::generate`] blocks until the queue drains.
     pub fn feed(&self, sid: u64, tokens: Vec<u8>) -> Result<usize, String> {
-        self.validate_tokens(&tokens)?;
+        validate_tokens(self.engine.as_ref(), &tokens)?;
         let (rtx, rrx) = channel();
         self.send(Msg::Feed {
             sid,
@@ -618,8 +705,46 @@ impl Coordinator {
     }
 }
 
-/// Worker-private scheduler state.
-struct WorkerState {
+/// Reject malformed token runs before they reach the scheduler: an id ≥
+/// vocab would index the embedding table out of bounds (the panic is also
+/// contained by catch_unwind, but validation gives the caller a precise
+/// error and keeps poison out of the batch). Shared by the coordinator's
+/// client surface and the simulator's scripted FEED/NEXT intake, so both
+/// drivers reject exactly the same inputs.
+pub(crate) fn validate_tokens(engine: &dyn BatchForward, tokens: &[u8]) -> Result<(), String> {
+    if tokens.is_empty() {
+        return Err("empty token list".into());
+    }
+    if tokens.len() > engine.max_seq() {
+        return Err(format!(
+            "sequence length {} exceeds max_seq {}",
+            tokens.len(),
+            engine.max_seq()
+        ));
+    }
+    let vocab = engine.vocab();
+    if let Some(&bad) = tokens.iter().find(|&&t| (t as usize) >= vocab) {
+        return Err(format!("token id {bad} out of range (vocab {vocab})"));
+    }
+    Ok(())
+}
+
+/// The scheduler's per-tick state machine, extracted from the worker
+/// thread so two drivers can share it verbatim: the threaded TCP path
+/// ([`worker_loop`]: real channel, wall-clock batch window) and the
+/// deterministic simulator ([`crate::sim`]: virtual clock, scripted
+/// traces). No thread, socket, or wall time lives in here.
+///
+/// [`SchedulerCore::handle`] is event intake — admission, page
+/// reservation, and queue mutation for one message, every reply channel
+/// answered synchronously (GEN streams answer over their lifetime).
+/// [`SchedulerCore::tick`] runs one scheduler tick in the order the
+/// worker thread has always run: one one-shot prefix batch, then the
+/// decode slate, then the prefill chunk budget.
+pub struct SchedulerCore {
+    engine: Arc<dyn BatchForward>,
+    cfg: BatcherConfig,
+    metrics: Arc<Metrics>,
     sessions: HashMap<u64, Session>,
     active: Vec<GenJob>,
     /// Queued chunked-prefill jobs, front = next to be granted tokens.
@@ -628,11 +753,98 @@ struct WorkerState {
     next_sid: u64,
 }
 
-impl WorkerState {
-    /// Decode lanes or prefill jobs waiting — the tick loop must keep
-    /// spinning (never block on the channel) while any exist.
-    fn has_scheduled_work(&self) -> bool {
+/// Point-in-time queue/slate occupancy of a [`SchedulerCore`] — the
+/// introspection surface behind the simulator's per-tick invariant checks
+/// and step-through dump. Parked sids are sorted: the session map is a
+/// HashMap, and its iteration order must never leak into deterministic
+/// output.
+pub struct SchedOccupancy {
+    /// Parked sessions, sorted by sid.
+    pub parked: Vec<u64>,
+    /// Active decode lanes in slate order: (sid, tokens remaining).
+    pub active: Vec<(u64, usize)>,
+    /// Queued prefill jobs in queue order: (sid, cursor, prompt length).
+    pub prefilling: Vec<(u64, usize, usize)>,
+    /// One-shot prefix requests waiting for the next batch.
+    pub prefix_queued: usize,
+}
+
+impl SchedulerCore {
+    /// Fresh scheduler state over `engine`. Wires the engine's KV
+    /// page-arena counters into `metrics` (paged engines only) so every
+    /// driver's STATS surface sees them.
+    pub fn new(engine: Arc<dyn BatchForward>, cfg: BatcherConfig, metrics: Arc<Metrics>) -> Self {
+        if let Some(counters) = engine.kv_counters() {
+            let _ = metrics.kv.set(counters);
+        }
+        Self {
+            engine,
+            cfg,
+            metrics,
+            sessions: HashMap::new(),
+            active: Vec::new(),
+            prefilling: VecDeque::new(),
+            prefix: Vec::new(),
+            next_sid: 1,
+        }
+    }
+
+    /// The engine this scheduler drives.
+    pub fn engine(&self) -> &Arc<dyn BatchForward> {
+        &self.engine
+    }
+
+    /// The scheduler configuration.
+    pub fn config(&self) -> &BatcherConfig {
+        &self.cfg
+    }
+
+    /// The shared metrics block.
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Decode lanes or prefill jobs waiting — a driver must keep ticking
+    /// (never block on its event source) while any exist.
+    pub fn has_scheduled_work(&self) -> bool {
         !self.active.is_empty() || !self.prefilling.is_empty()
+    }
+
+    /// Anything at all for [`SchedulerCore::tick`] to do, queued one-shot
+    /// requests included. Drivers may only block or exit when this is
+    /// false (one prefix batch runs per tick, so a burst of one-shots can
+    /// outlive the tick that admitted it).
+    pub fn has_runnable_work(&self) -> bool {
+        self.has_scheduled_work() || !self.prefix.is_empty()
+    }
+
+    /// One-shot requests currently queued (the worker's batch window).
+    pub(crate) fn prefix_queued(&self) -> usize {
+        self.prefix.len()
+    }
+
+    /// One scheduler tick: one one-shot prefix batch, then the decode
+    /// slate, then the prefill chunk budget.
+    pub fn tick(&mut self) {
+        self.run_prefix_batch();
+        self.run_decode_tick();
+        self.run_prefill_tick();
+    }
+
+    /// Snapshot the queues and slate for invariant checks / debugging.
+    pub fn occupancy(&self) -> SchedOccupancy {
+        let mut parked: Vec<u64> = self.sessions.keys().copied().collect();
+        parked.sort_unstable();
+        SchedOccupancy {
+            parked,
+            active: self.active.iter().map(|j| (j.sid, j.remaining)).collect(),
+            prefilling: self
+                .prefilling
+                .iter()
+                .map(|j| (j.sid, j.cursor, j.tokens.len()))
+                .collect(),
+            prefix_queued: self.prefix.len(),
+        }
     }
 }
 
@@ -643,22 +855,16 @@ fn worker_loop(
     metrics: Arc<Metrics>,
     stopping: Arc<AtomicBool>,
 ) {
-    let mut st = WorkerState {
-        sessions: HashMap::new(),
-        active: Vec::new(),
-        prefilling: VecDeque::new(),
-        prefix: Vec::new(),
-        next_sid: 1,
-    };
+    let mut core = SchedulerCore::new(engine, cfg, metrics);
     let mut closed = false;
     loop {
-        if !st.has_scheduled_work() {
+        if !core.has_runnable_work() {
             if closed {
                 return;
             }
             // idle: block for the next message
             match rx.recv() {
-                Ok(m) => handle_msg(m, &mut st, engine.as_ref(), &cfg, &metrics),
+                Ok(m) => core.handle(m),
                 Err(_) => {
                     closed = true;
                     continue;
@@ -668,385 +874,376 @@ fn worker_loop(
                 // draining after stop(): the sender is closed, so
                 // everything still queued is final — take it all now
                 // instead of holding a batch window open
-                closed |= drain_all(&rx, &mut st, engine.as_ref(), &cfg, &metrics);
-            } else if !st.prefix.is_empty() && !st.has_scheduled_work() {
+                closed |= drain_all(&rx, &mut core);
+            } else if core.prefix_queued() > 0 && !core.has_scheduled_work() {
                 // legacy dynamic batching: hold the window open for more
                 // one-shot requests, but only while no decode or prefill
                 // work waits
-                let deadline = Instant::now() + cfg.max_wait;
-                while st.prefix.len() < cfg.max_batch && !st.has_scheduled_work() {
+                let deadline = Instant::now() + core.config().max_wait;
+                while core.prefix_queued() < core.config().max_batch
+                    && !core.has_scheduled_work()
+                {
                     let now = Instant::now();
                     if now >= deadline {
                         break;
                     }
                     match rx.recv_timeout(deadline - now) {
-                        Ok(m) => handle_msg(m, &mut st, engine.as_ref(), &cfg, &metrics),
+                        Ok(m) => core.handle(m),
                         Err(_) => break, // timeout or disconnect
                     }
                 }
             }
         } else {
             // continuous batching: absorb whatever arrived between ticks
-            closed |= drain_all(&rx, &mut st, engine.as_ref(), &cfg, &metrics);
+            closed |= drain_all(&rx, &mut core);
         }
-        run_prefix_batches(&mut st, engine.as_ref(), &cfg, &metrics);
-        run_decode_tick(&mut st, engine.as_ref(), &cfg, &metrics);
-        run_prefill_tick(&mut st, engine.as_ref(), &cfg, &metrics);
+        core.tick();
     }
 }
 
 /// Drain every queued message without blocking; true if the channel is
 /// closed.
-fn drain_all(
-    rx: &Receiver<Msg>,
-    st: &mut WorkerState,
-    engine: &dyn BatchForward,
-    cfg: &BatcherConfig,
-    metrics: &Metrics,
-) -> bool {
+fn drain_all(rx: &Receiver<Msg>, core: &mut SchedulerCore) -> bool {
     loop {
         match rx.try_recv() {
-            Ok(m) => handle_msg(m, st, engine, cfg, metrics),
+            Ok(m) => core.handle(m),
             Err(TryRecvError::Empty) => return false,
             Err(TryRecvError::Disconnected) => return true,
         }
     }
 }
 
-/// Why a GEN request cannot join the slate (None = admissible).
-fn gen_admit_error(
-    st: &WorkerState,
-    engine: &dyn BatchForward,
-    sid: u64,
-    n: usize,
-) -> Option<String> {
-    if n == 0 {
-        return Some("GEN needs n >= 1".into());
-    }
-    if st.active.iter().any(|j| j.sid == sid) {
-        return Some(format!("session {sid} is busy generating"));
-    }
-    let Some(sess) = st.sessions.get(&sid) else {
-        return Some(format!("unknown session {sid}"));
-    };
-    if sess.last_logits.is_none() {
-        return Some("FEED tokens before GEN".into());
-    }
-    if engine.vocab() > 256 {
-        return Some("GEN requires vocab <= 256 (u8 token ids)".into());
-    }
-    if sess.cache.len() + n > engine.max_seq() {
-        return Some(format!(
-            "GEN {n} would exceed max_seq {} (session holds {} tokens)",
-            engine.max_seq(),
-            sess.cache.len()
-        ));
-    }
-    None
-}
-
-fn handle_msg(
-    msg: Msg,
-    st: &mut WorkerState,
-    engine: &dyn BatchForward,
-    cfg: &BatcherConfig,
-    metrics: &Metrics,
-) {
-    match msg {
-        Msg::Prefix(p) => st.prefix.push(p),
-        Msg::Open { reply } => {
-            let open = st.sessions.len() + st.active.len() + st.prefilling.len();
-            let r = if open >= cfg.max_sessions {
-                Err(format!("too many sessions (max {})", cfg.max_sessions))
-            } else {
-                let sid = st.next_sid;
-                st.next_sid += 1;
-                st.sessions.insert(
-                    sid,
-                    Session {
-                        cache: engine.open_session(),
-                        last_logits: None,
-                    },
-                );
-                metrics.sessions_opened.fetch_add(1, Ordering::Relaxed);
-                metrics.open_sessions.fetch_add(1, Ordering::Relaxed);
-                Ok(sid)
-            };
-            let _ = reply.send(r);
+impl SchedulerCore {
+    /// Why a GEN request cannot join the slate (None = admissible).
+    fn gen_admit_error(&self, sid: u64, n: usize) -> Option<String> {
+        if n == 0 {
+            return Some("GEN needs n >= 1".into());
         }
-        Msg::Feed { sid, tokens, reply } => {
-            let _ = reply.send(queue_feed(st, engine, metrics, sid, tokens));
+        if self.active.iter().any(|j| j.sid == sid) {
+            return Some(format!("session {sid} is busy generating"));
         }
-        Msg::Gen {
-            sid,
-            n,
-            params,
-            stream,
-        } => {
-            if let Some(job) = st.prefilling.iter_mut().find(|j| j.sid == sid) {
-                // GEN on a still-prefilling session parks behind the job
-                // and runs through normal admission when it drains; the
-                // bounds that can be checked now are checked now
-                let err = if job.waiting_gen.is_some() {
-                    Some(format!("session {sid} is busy generating"))
-                } else if n == 0 {
-                    Some("GEN needs n >= 1".into())
-                } else if engine.vocab() > 256 {
-                    Some("GEN requires vocab <= 256 (u8 token ids)".into())
-                } else if job.cache.len() + job.queued() + n > engine.max_seq() {
-                    Some(format!(
-                        "GEN {n} would exceed max_seq {} (session holds {} tokens, {} queued)",
-                        engine.max_seq(),
-                        job.cache.len(),
-                        job.queued()
-                    ))
-                } else {
-                    None
-                };
-                // reserve pages for the queued prompt plus the generated
-                // tokens now, so a paged arena that cannot hold the run
-                // answers `kv-oom` here instead of panicking mid-decode
-                let err = err.or_else(|| job.cache.reserve(job.queued() + n).err());
-                match err {
-                    Some(e) => {
-                        let _ = stream.send(Err(e));
-                    }
-                    None => job.waiting_gen = Some(WaitingGen { n, params, stream }),
-                }
-            } else {
-                admit_gen(st, engine, sid, n, params, stream);
-            }
+        let Some(sess) = self.sessions.get(&sid) else {
+            return Some(format!("unknown session {sid}"));
+        };
+        if sess.last_logits.is_none() {
+            return Some("FEED tokens before GEN".into());
         }
-        Msg::Close { sid, reply } => {
-            let r = if let Some(sess) = st.sessions.remove(&sid) {
-                let len = sess.cache.len();
-                engine.close_session(sess.cache);
-                metrics.open_sessions.fetch_sub(1, Ordering::Relaxed);
-                Ok(len)
-            } else if let Some(i) = st.active.iter().position(|j| j.sid == sid) {
-                // closing mid-GEN aborts the stream
-                let job = st.active.remove(i);
-                let _ = job.stream.send(Err("session closed".into()));
-                let len = job.cache.len();
-                engine.close_session(job.cache);
-                metrics.open_sessions.fetch_sub(1, Ordering::Relaxed);
-                Ok(len)
-            } else if let Some(i) = st.prefilling.iter().position(|j| j.sid == sid) {
-                // closing mid-prefill (e.g. the client disconnected with
-                // its FEED still queued) frees the cache, drops the queued
-                // tokens, and fails any GEN waiting on the job
-                let mut job = st.prefilling.remove(i).expect("index from position");
-                if let Some(wg) = job.waiting_gen.take() {
-                    let _ = wg.stream.send(Err("session closed".into()));
-                }
-                let len = job.cache.len();
-                engine.close_session(job.cache);
-                metrics.open_sessions.fetch_sub(1, Ordering::Relaxed);
-                Ok(len)
-            } else {
-                Err(format!("unknown session {sid}"))
-            };
-            let _ = reply.send(r);
+        if self.engine.vocab() > 256 {
+            return Some("GEN requires vocab <= 256 (u8 token ids)".into());
         }
-    }
-}
-
-/// Queue `tokens` as chunked-prefill work for session `sid`, replying with
-/// the number of tokens queued. The engine never runs here — the prompt
-/// drains at `prefill_chunk` tokens per scheduler tick, so a long FEED
-/// cannot stall the decode slate. A FEED on a session whose job is still
-/// draining extends that job (chunked FEED); once a GEN is waiting on the
-/// job, further FEEDs are rejected (the GEN pinned the token run).
-fn queue_feed(
-    st: &mut WorkerState,
-    engine: &dyn BatchForward,
-    metrics: &Metrics,
-    sid: u64,
-    tokens: Vec<u8>,
-) -> Result<usize, String> {
-    let n = tokens.len();
-    if n == 0 {
-        return Err("empty token list".into());
-    }
-    if st.active.iter().any(|j| j.sid == sid) {
-        return Err(format!("session {sid} is busy generating"));
-    }
-    if let Some(job) = st.prefilling.iter_mut().find(|j| j.sid == sid) {
-        if job.waiting_gen.is_some() {
-            return Err(format!("session {sid} is busy generating"));
-        }
-        if job.cache.len() + job.queued() + n > engine.max_seq() {
-            return Err(format!(
-                "FEED of {n} tokens would exceed max_seq {} (session holds {}, {} queued)",
-                engine.max_seq(),
-                job.cache.len(),
-                job.queued()
+        if sess.cache.len() + n > self.engine.max_seq() {
+            return Some(format!(
+                "GEN {n} would exceed max_seq {} (session holds {} tokens)",
+                self.engine.max_seq(),
+                sess.cache.len()
             ));
         }
-        // admission against the *live* page budget: reserve pages through
-        // the whole queued run now (reserve is monotonic, so the earlier
-        // reservation still covers tokens already queued) — an exhausted
-        // arena answers `kv-oom` and leaves the job untouched
-        job.cache.reserve(job.queued() + n)?;
-        job.tokens.extend_from_slice(&tokens);
-        return Ok(n);
+        None
     }
-    let Some(sess) = st.sessions.get(&sid) else {
-        return Err(format!("unknown session {sid}"));
-    };
-    if sess.cache.len() + n > engine.max_seq() {
-        return Err(format!(
-            "FEED of {n} tokens would exceed max_seq {} (session holds {})",
-            engine.max_seq(),
-            sess.cache.len()
-        ));
-    }
-    let mut sess = st.sessions.remove(&sid).expect("looked up above");
-    // paged engines admit against actual pages, not worst-case max_seq: an
-    // exhausted arena parks the session back and answers `kv-oom` (the
-    // client may retry after other sessions close)
-    if let Err(e) = sess.cache.reserve(n) {
-        st.sessions.insert(sid, sess);
-        return Err(e);
-    }
-    st.prefilling.push_back(PrefillJob {
-        sid,
-        cache: sess.cache,
-        tokens,
-        cursor: 0,
-        last_logits: sess.last_logits,
-        waiting_gen: None,
-    });
-    metrics.prefill_jobs.fetch_add(1, Ordering::Relaxed);
-    Ok(n)
-}
 
-/// Run GEN admission on a parked session: on success the session moves to
-/// the active decode slate; on failure the error arrives as the stream's
-/// first event and the session stays parked.
-fn admit_gen(
-    st: &mut WorkerState,
-    engine: &dyn BatchForward,
-    sid: u64,
-    n: usize,
-    params: SampleParams,
-    stream: Sender<Result<GenEvent, String>>,
-) {
-    if let Some(e) = gen_admit_error(st, engine, sid, n) {
-        let _ = stream.send(Err(e));
-        return;
-    }
-    let mut sess = st.sessions.remove(&sid).expect("admission checked");
-    // reserve pages for the whole run before joining the slate: a paged
-    // arena without room answers `kv-oom` as the stream's first event and
-    // the session parks again, untouched
-    if let Err(e) = sess.cache.reserve(n) {
-        st.sessions.insert(sid, sess);
-        let _ = stream.send(Err(e));
-        return;
-    }
-    st.active.push(GenJob {
-        sid,
-        cache: sess.cache,
-        last_logits: sess.last_logits.expect("admission checked"),
-        sampler: Sampler::new(params),
-        remaining: n,
-        stream,
-    });
-}
-
-/// One prefill tick: grant up to `prefill_chunk` prompt tokens to queued
-/// prefill jobs, front of the queue first. A job with tokens left after
-/// the tick's budget is spent rotates to the back (fairness between
-/// concurrent long FEEDs); a drained job parks its session again and
-/// launches any GEN that was waiting on it. Every chunk runs under
-/// `catch_unwind`: a panicking engine destroys exactly that job's session,
-/// never the worker.
-fn run_prefill_tick(
-    st: &mut WorkerState,
-    engine: &dyn BatchForward,
-    cfg: &BatcherConfig,
-    metrics: &Metrics,
-) {
-    let mut budget = cfg.prefill_chunk.max(1);
-    while budget > 0 {
-        let Some(mut job) = st.prefilling.pop_front() else {
-            return;
-        };
-        // jobs always hold ≥ 1 queued token (drained jobs leave the queue
-        // immediately below), so take ≥ 1 and the loop terminates
-        let take = budget.min(job.queued());
-        let res = {
-            let chunk = &job.tokens[job.cursor..job.cursor + take];
-            let cache = &mut job.cache;
-            catch_unwind(AssertUnwindSafe(|| engine.prefill(cache, chunk)))
-        };
-        match res {
-            Ok(logits) => {
-                job.cursor += take;
-                budget -= take;
-                job.last_logits = Some(logits);
-                metrics.prefill_toks.fetch_add(take as u64, Ordering::Relaxed);
-                if job.queued() == 0 {
-                    finish_prefill_job(st, engine, job);
+    /// Event intake: admission, page reservation, and queue mutation for
+    /// one message.
+    pub(crate) fn handle(&mut self, msg: Msg) {
+        match msg {
+            Msg::Prefix(p) => self.prefix.push(p),
+            Msg::Open { reply } => {
+                let open = self.sessions.len() + self.active.len() + self.prefilling.len();
+                let r = if open >= self.cfg.max_sessions {
+                    Err(format!("too many sessions (max {})", self.cfg.max_sessions))
                 } else {
-                    st.prefilling.push_back(job);
+                    let sid = self.next_sid;
+                    self.next_sid += 1;
+                    self.sessions.insert(
+                        sid,
+                        Session {
+                            cache: self.engine.open_session(),
+                            last_logits: None,
+                        },
+                    );
+                    self.metrics.sessions_opened.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.open_sessions.fetch_add(1, Ordering::Relaxed);
+                    Ok(sid)
+                };
+                let _ = reply.send(r);
+            }
+            Msg::Feed { sid, tokens, reply } => {
+                let _ = reply.send(self.queue_feed(sid, tokens));
+            }
+            Msg::Gen {
+                sid,
+                n,
+                params,
+                stream,
+            } => {
+                let vocab = self.engine.vocab();
+                let max_seq = self.engine.max_seq();
+                if let Some(job) = self.prefilling.iter_mut().find(|j| j.sid == sid) {
+                    // GEN on a still-prefilling session parks behind the
+                    // job and runs through normal admission when it
+                    // drains; the bounds that can be checked now are
+                    // checked now
+                    let err = if job.waiting_gen.is_some() {
+                        Some(format!("session {sid} is busy generating"))
+                    } else if n == 0 {
+                        Some("GEN needs n >= 1".into())
+                    } else if vocab > 256 {
+                        Some("GEN requires vocab <= 256 (u8 token ids)".into())
+                    } else if job.cache.len() + job.queued() + n > max_seq {
+                        Some(format!(
+                            "GEN {n} would exceed max_seq {max_seq} (session holds {} tokens, {} queued)",
+                            job.cache.len(),
+                            job.queued()
+                        ))
+                    } else {
+                        None
+                    };
+                    // reserve pages for the queued prompt plus the
+                    // generated tokens now, so a paged arena that cannot
+                    // hold the run answers `kv-oom` here instead of
+                    // panicking mid-decode
+                    let err = err.or_else(|| job.cache.reserve(job.queued() + n).err());
+                    match err {
+                        Some(e) => {
+                            let _ = stream.send(Err(e));
+                        }
+                        None => job.waiting_gen = Some(WaitingGen { n, params, stream }),
+                    }
+                } else {
+                    self.admit_gen(sid, n, params, stream);
                 }
             }
-            Err(_) => {
-                // the cache is indeterminate after a panic: destroy the
-                // session; a waiting GEN learns through its stream (the
-                // FEED itself was already answered at queue time)
-                if let Some(wg) = job.waiting_gen.take() {
-                    let _ = wg.stream.send(Err(
-                        "engine panicked during prefill; session destroyed".into(),
-                    ));
-                }
-                metrics.open_sessions.fetch_sub(1, Ordering::Relaxed);
-                engine.close_session(job.cache);
+            Msg::Close { sid, reply } => {
+                let r = if let Some(sess) = self.sessions.remove(&sid) {
+                    let len = sess.cache.len();
+                    self.engine.close_session(sess.cache);
+                    self.metrics.open_sessions.fetch_sub(1, Ordering::Relaxed);
+                    Ok(len)
+                } else if let Some(i) = self.active.iter().position(|j| j.sid == sid) {
+                    // closing mid-GEN aborts the stream
+                    let job = self.active.remove(i);
+                    let _ = job.stream.send(Err("session closed".into()));
+                    let len = job.cache.len();
+                    self.engine.close_session(job.cache);
+                    self.metrics.open_sessions.fetch_sub(1, Ordering::Relaxed);
+                    Ok(len)
+                } else if let Some(i) = self.prefilling.iter().position(|j| j.sid == sid) {
+                    // closing mid-prefill (e.g. the client disconnected
+                    // with its FEED still queued) frees the cache, drops
+                    // the queued tokens, and fails any GEN waiting on the
+                    // job
+                    let mut job = self.prefilling.remove(i).expect("index from position");
+                    if let Some(wg) = job.waiting_gen.take() {
+                        let _ = wg.stream.send(Err("session closed".into()));
+                    }
+                    let len = job.cache.len();
+                    self.engine.close_session(job.cache);
+                    self.metrics.open_sessions.fetch_sub(1, Ordering::Relaxed);
+                    Ok(len)
+                } else {
+                    Err(format!("unknown session {sid}"))
+                };
+                let _ = reply.send(r);
             }
         }
     }
 }
 
-/// A drained prefill job parks its session (with the final chunk's logits)
-/// and, if a GEN was waiting on it, runs that GEN's admission now.
-fn finish_prefill_job(st: &mut WorkerState, engine: &dyn BatchForward, job: PrefillJob) {
-    let PrefillJob {
-        sid,
-        cache,
-        last_logits,
-        waiting_gen,
-        ..
-    } = job;
-    st.sessions.insert(
-        sid,
-        Session {
-            cache,
-            last_logits: Some(last_logits.expect("a drained job ran at least one chunk")),
-        },
-    );
-    if let Some(wg) = waiting_gen {
-        admit_gen(st, engine, sid, wg.n, wg.params, wg.stream);
+impl SchedulerCore {
+    /// Queue `tokens` as chunked-prefill work for session `sid`, replying
+    /// with the number of tokens queued. The engine never runs here — the
+    /// prompt drains at `prefill_chunk` tokens per scheduler tick, so a
+    /// long FEED cannot stall the decode slate. A FEED on a session whose
+    /// job is still draining extends that job (chunked FEED); once a GEN
+    /// is waiting on the job, further FEEDs are rejected (the GEN pinned
+    /// the token run).
+    fn queue_feed(&mut self, sid: u64, tokens: Vec<u8>) -> Result<usize, String> {
+        let n = tokens.len();
+        let max_seq = self.engine.max_seq();
+        if n == 0 {
+            return Err("empty token list".into());
+        }
+        if self.active.iter().any(|j| j.sid == sid) {
+            return Err(format!("session {sid} is busy generating"));
+        }
+        if let Some(job) = self.prefilling.iter_mut().find(|j| j.sid == sid) {
+            if job.waiting_gen.is_some() {
+                return Err(format!("session {sid} is busy generating"));
+            }
+            if job.cache.len() + job.queued() + n > max_seq {
+                return Err(format!(
+                    "FEED of {n} tokens would exceed max_seq {max_seq} (session holds {}, {} queued)",
+                    job.cache.len(),
+                    job.queued()
+                ));
+            }
+            // admission against the *live* page budget: reserve pages
+            // through the whole queued run now (reserve is monotonic, so
+            // the earlier reservation still covers tokens already queued)
+            // — an exhausted arena answers `kv-oom` and leaves the job
+            // untouched
+            job.cache.reserve(job.queued() + n)?;
+            job.tokens.extend_from_slice(&tokens);
+            return Ok(n);
+        }
+        let Some(sess) = self.sessions.get(&sid) else {
+            return Err(format!("unknown session {sid}"));
+        };
+        if sess.cache.len() + n > max_seq {
+            return Err(format!(
+                "FEED of {n} tokens would exceed max_seq {max_seq} (session holds {})",
+                sess.cache.len()
+            ));
+        }
+        let mut sess = self.sessions.remove(&sid).expect("looked up above");
+        // paged engines admit against actual pages, not worst-case
+        // max_seq: an exhausted arena parks the session back and answers
+        // `kv-oom` (the client may retry after other sessions close)
+        if let Err(e) = sess.cache.reserve(n) {
+            self.sessions.insert(sid, sess);
+            return Err(e);
+        }
+        self.prefilling.push_back(PrefillJob {
+            sid,
+            cache: sess.cache,
+            tokens,
+            cursor: 0,
+            last_logits: sess.last_logits,
+            waiting_gen: None,
+        });
+        self.metrics.prefill_jobs.fetch_add(1, Ordering::Relaxed);
+        Ok(n)
+    }
+
+    /// Run GEN admission on a parked session: on success the session
+    /// moves to the active decode slate; on failure the error arrives as
+    /// the stream's first event and the session stays parked.
+    fn admit_gen(
+        &mut self,
+        sid: u64,
+        n: usize,
+        params: SampleParams,
+        stream: Sender<Result<GenEvent, String>>,
+    ) {
+        if let Some(e) = self.gen_admit_error(sid, n) {
+            let _ = stream.send(Err(e));
+            return;
+        }
+        let mut sess = self.sessions.remove(&sid).expect("admission checked");
+        // reserve pages for the whole run before joining the slate: a
+        // paged arena without room answers `kv-oom` as the stream's first
+        // event and the session parks again, untouched
+        if let Err(e) = sess.cache.reserve(n) {
+            self.sessions.insert(sid, sess);
+            let _ = stream.send(Err(e));
+            return;
+        }
+        self.active.push(GenJob {
+            sid,
+            cache: sess.cache,
+            last_logits: sess.last_logits.expect("admission checked"),
+            sampler: Sampler::new(params),
+            remaining: n,
+            stream,
+        });
     }
 }
 
-/// Answer every queued one-shot request, `max_batch` at a time. A panic
-/// inside the engine answers `ERR` for that batch instead of killing the
-/// worker (the historical poison-hang).
-fn run_prefix_batches(
-    st: &mut WorkerState,
-    engine: &dyn BatchForward,
-    cfg: &BatcherConfig,
-    metrics: &Metrics,
-) {
-    while !st.prefix.is_empty() {
-        let take = st.prefix.len().min(cfg.max_batch.max(1));
-        let batch: Vec<Pending> = st.prefix.drain(..take).collect();
+impl SchedulerCore {
+    /// One prefill tick: grant up to `prefill_chunk` prompt tokens to
+    /// queued prefill jobs, front of the queue first. A job with tokens
+    /// left after the tick's budget is spent rotates to the back
+    /// (fairness between concurrent long FEEDs); a drained job parks its
+    /// session again and launches any GEN that was waiting on it. Every
+    /// chunk runs under `catch_unwind`: a panicking engine destroys
+    /// exactly that job's session, never the scheduler.
+    fn run_prefill_tick(&mut self) {
+        let engine = Arc::clone(&self.engine);
+        let mut budget = self.cfg.prefill_chunk.max(1);
+        while budget > 0 {
+            let Some(mut job) = self.prefilling.pop_front() else {
+                return;
+            };
+            // jobs always hold ≥ 1 queued token (drained jobs leave the
+            // queue immediately below), so take ≥ 1 and the loop
+            // terminates
+            let take = budget.min(job.queued());
+            let res = {
+                let chunk = &job.tokens[job.cursor..job.cursor + take];
+                let cache = &mut job.cache;
+                catch_unwind(AssertUnwindSafe(|| engine.prefill(cache.as_mut(), chunk)))
+            };
+            match res {
+                Ok(logits) => {
+                    job.cursor += take;
+                    budget -= take;
+                    job.last_logits = Some(logits);
+                    self.metrics
+                        .prefill_toks
+                        .fetch_add(take as u64, Ordering::Relaxed);
+                    if job.queued() == 0 {
+                        self.finish_prefill_job(job);
+                    } else {
+                        self.prefilling.push_back(job);
+                    }
+                }
+                Err(_) => {
+                    // the cache is indeterminate after a panic: destroy
+                    // the session; a waiting GEN learns through its
+                    // stream (the FEED itself was already answered at
+                    // queue time)
+                    if let Some(wg) = job.waiting_gen.take() {
+                        let _ = wg.stream.send(Err(
+                            "engine panicked during prefill; session destroyed".into(),
+                        ));
+                    }
+                    self.metrics.open_sessions.fetch_sub(1, Ordering::Relaxed);
+                    engine.close_session(job.cache);
+                }
+            }
+        }
+    }
+
+    /// A drained prefill job parks its session (with the final chunk's
+    /// logits) and, if a GEN was waiting on it, runs that GEN's admission
+    /// now.
+    fn finish_prefill_job(&mut self, job: PrefillJob) {
+        let PrefillJob {
+            sid,
+            cache,
+            last_logits,
+            waiting_gen,
+            ..
+        } = job;
+        self.sessions.insert(
+            sid,
+            Session {
+                cache,
+                last_logits: Some(last_logits.expect("a drained job ran at least one chunk")),
+            },
+        );
+        if let Some(wg) = waiting_gen {
+            self.admit_gen(sid, wg.n, wg.params, wg.stream);
+        }
+    }
+
+    /// Answer ONE batch of queued one-shot requests (up to `max_batch`).
+    /// One batch per tick — not the whole queue — so a NEXT flood
+    /// interleaves with decode slates instead of running all its forward
+    /// passes back-to-back while active generations stall (the fairness
+    /// fix the simulator's mixed v1/v2 scenario pins). A panic inside the
+    /// engine answers `ERR` for that batch instead of killing the worker
+    /// (the historical poison-hang).
+    fn run_prefix_batch(&mut self) {
+        if self.prefix.is_empty() {
+            return;
+        }
+        let engine = Arc::clone(&self.engine);
+        let take = self.prefix.len().min(self.cfg.max_batch.max(1));
+        let batch: Vec<Pending> = self.prefix.drain(..take).collect();
         let inputs: Vec<Vec<u8>> = batch.iter().map(|p| p.tokens.clone()).collect();
         let outputs = catch_unwind(AssertUnwindSafe(|| engine.forward_batch(&inputs)));
-        metrics.batches.fetch_add(1, Ordering::Relaxed);
-        metrics
+        self.metrics.batches.fetch_add(1, Ordering::Relaxed);
+        self.metrics
             .batched_items
             .fetch_add(batch.len() as u64, Ordering::Relaxed);
         let outs: Vec<Result<Vec<f32>, String>> = match outputs {
@@ -1057,90 +1254,96 @@ fn run_prefix_batches(
                 .collect(),
         };
         for (p, out) in batch.into_iter().zip(outs) {
-            metrics.requests.fetch_add(1, Ordering::Relaxed);
-            metrics
+            self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+            // virtual-clock drivers pass no arrival time (see Pending):
+            // the latency metric then counts the request at zero cost
+            // instead of reading a wall clock mid-replay
+            let waited = p.enqueued.map_or(0, |t| t.elapsed().as_micros() as u64);
+            self.metrics
                 .total_latency_us
-                .fetch_add(p.enqueued.elapsed().as_micros() as u64, Ordering::Relaxed);
+                .fetch_add(waited, Ordering::Relaxed);
             let _ = p.reply.send(out);
         }
     }
-}
 
-/// One scheduler tick over the active slate: sample a token per lane from
-/// its current logits, stream it, and append it via a single batched
-/// decode step. Finished (or abandoned) jobs park their sessions again.
-fn run_decode_tick(
-    st: &mut WorkerState,
-    engine: &dyn BatchForward,
-    cfg: &BatcherConfig,
-    metrics: &Metrics,
-) {
-    if st.active.is_empty() {
-        return;
-    }
-    let take = st.active.len().min(cfg.max_batch.max(1));
-    let toks: Vec<u8> = st
-        .active
-        .iter_mut()
-        .take(take)
-        .map(|job| job.sampler.sample(&job.last_logits) as u8)
-        .collect();
-    let step = {
-        let mut lanes: Vec<StepLane<'_>> = st
+    /// One scheduler tick over the active slate: sample a token per lane
+    /// from its current logits, stream it, and append it via a single
+    /// batched decode step. Finished (or abandoned) jobs park their
+    /// sessions again.
+    fn run_decode_tick(&mut self) {
+        if self.active.is_empty() {
+            return;
+        }
+        let engine = Arc::clone(&self.engine);
+        let take = self.active.len().min(self.cfg.max_batch.max(1));
+        let toks: Vec<u8> = self
             .active
             .iter_mut()
             .take(take)
-            .zip(&toks)
-            .map(|(job, &token)| StepLane {
-                cache: job.cache.as_mut(),
-                token,
-            })
+            .map(|job| job.sampler.sample(&job.last_logits) as u8)
             .collect();
-        catch_unwind(AssertUnwindSafe(|| engine.decode_step(&mut lanes)))
-    };
-    match step {
-        Ok(logits) => {
-            debug_assert_eq!(logits.len(), take);
-            metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
-            metrics.decode_lanes.fetch_add(take as u64, Ordering::Relaxed);
-            metrics.gen_tokens.fetch_add(take as u64, Ordering::Relaxed);
-            let mut finished: Vec<usize> = Vec::new();
-            for (i, (job, out)) in st.active.iter_mut().take(take).zip(logits).enumerate() {
-                let alive = job.stream.send(Ok(GenEvent::Token(toks[i]))).is_ok();
-                job.last_logits = out;
-                job.remaining -= 1;
-                if job.remaining == 0 || !alive {
-                    finished.push(i);
+        let step = {
+            let mut lanes: Vec<StepLane<'_>> = self
+                .active
+                .iter_mut()
+                .take(take)
+                .zip(&toks)
+                .map(|(job, &token)| StepLane {
+                    cache: job.cache.as_mut(),
+                    token,
+                })
+                .collect();
+            catch_unwind(AssertUnwindSafe(|| engine.decode_step(&mut lanes)))
+        };
+        match step {
+            Ok(logits) => {
+                debug_assert_eq!(logits.len(), take);
+                self.metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
+                self.metrics
+                    .decode_lanes
+                    .fetch_add(take as u64, Ordering::Relaxed);
+                self.metrics
+                    .gen_tokens
+                    .fetch_add(take as u64, Ordering::Relaxed);
+                let mut finished: Vec<usize> = Vec::new();
+                for (i, (job, out)) in self.active.iter_mut().take(take).zip(logits).enumerate() {
+                    let alive = job.stream.send(Ok(GenEvent::Token(toks[i]))).is_ok();
+                    job.last_logits = out;
+                    job.remaining -= 1;
+                    if job.remaining == 0 || !alive {
+                        finished.push(i);
+                    }
+                }
+                for &i in finished.iter().rev() {
+                    let job = self.active.remove(i);
+                    let _ = job.stream.send(Ok(GenEvent::Done {
+                        len: job.cache.len(),
+                    }));
+                    self.sessions.insert(
+                        job.sid,
+                        Session {
+                            cache: job.cache,
+                            last_logits: Some(job.last_logits),
+                        },
+                    );
+                }
+                // fairness: served lanes rotate behind any waiting ones
+                let served = take - finished.len();
+                if served > 0 && self.active.len() > served {
+                    self.active.rotate_left(served);
                 }
             }
-            for &i in finished.iter().rev() {
-                let job = st.active.remove(i);
-                let _ = job.stream.send(Ok(GenEvent::Done {
-                    len: job.cache.len(),
-                }));
-                st.sessions.insert(
-                    job.sid,
-                    Session {
-                        cache: job.cache,
-                        last_logits: Some(job.last_logits),
-                    },
-                );
-            }
-            // fairness: served lanes rotate behind any waiting ones
-            let served = take - finished.len();
-            if served > 0 && st.active.len() > served {
-                st.active.rotate_left(served);
-            }
-        }
-        Err(_) => {
-            // a panicking decode leaves the slate's caches indeterminate:
-            // fail and destroy exactly those sessions, keep the rest
-            for job in st.active.drain(..take) {
-                let _ = job
-                    .stream
-                    .send(Err("decode step panicked; session destroyed".into()));
-                metrics.open_sessions.fetch_sub(1, Ordering::Relaxed);
-                engine.close_session(job.cache);
+            Err(_) => {
+                // a panicking decode leaves the slate's caches
+                // indeterminate: fail and destroy exactly those sessions,
+                // keep the rest
+                for job in self.active.drain(..take) {
+                    let _ = job
+                        .stream
+                        .send(Err("decode step panicked; session destroyed".into()));
+                    self.metrics.open_sessions.fetch_sub(1, Ordering::Relaxed);
+                    engine.close_session(job.cache);
+                }
             }
         }
     }
@@ -1325,41 +1528,13 @@ fn serve_lines(
             return Ok(());
         }
         if line == "STATS" {
-            // page occupancy reads 0/0 on dense engines (no arena); the kv
-            // fields sit before `threads=` so `resident_bytes` stays the
-            // last key (parsers rsplit on `=`)
-            let (kv_alloc, kv_quantized, kv_oom) = match coord.metrics.kv.get() {
-                Some(c) => (
-                    c.allocated.load(Ordering::Relaxed),
-                    c.quantized.load(Ordering::Relaxed),
-                    c.oom.load(Ordering::Relaxed),
-                ),
-                None => (0, 0, 0),
-            };
+            // one formatter for every stats surface: Metrics::snapshot
+            // (field order pinned there — resident_bytes stays last, kv
+            // fields before threads=)
             writeln!(
                 out,
-                "OK requests={} mean_batch={:.2} mean_latency_ms={:.3} \
-                 sessions={} gen_tokens={} mean_lanes={:.2} \
-                 prefill_jobs={} prefill_toks={} \
-                 kv_pages={}/{} kv_quantized={} kv_oom={} kv_quant={} \
-                 threads={} backend={} simd={} resident_bytes={}",
-                coord.metrics.requests.load(Ordering::Relaxed),
-                coord.metrics.mean_batch(),
-                coord.metrics.mean_latency_ms(),
-                coord.metrics.open_sessions.load(Ordering::Relaxed),
-                coord.metrics.gen_tokens.load(Ordering::Relaxed),
-                coord.metrics.mean_lanes(),
-                coord.metrics.prefill_jobs.load(Ordering::Relaxed),
-                coord.metrics.prefill_toks.load(Ordering::Relaxed),
-                kv_alloc,
-                coord.engine().kv_page_budget(),
-                kv_quantized,
-                kv_oom,
-                coord.engine().kv_quant_label(),
-                coord.engine().threads(),
-                coord.engine().backend_name(),
-                coord.engine().simd_label(),
-                coord.engine().resident_weight_bytes(),
+                "OK {}",
+                coord.metrics.snapshot(coord.engine().as_ref())
             )?;
             continue;
         }
@@ -1453,6 +1628,47 @@ mod tests {
     fn tiny_engine() -> Arc<dyn BatchForward> {
         let cfg = config_by_name("qwen3-4b-tiny").unwrap();
         Arc::new(BackendEngine::dense(Weights::random(&cfg, 9)))
+    }
+
+    #[test]
+    fn stats_snapshot_field_order_is_pinned() {
+        // the STATS wire contract: exactly these keys, in exactly this
+        // order, resident_bytes LAST (parsers rsplit on `=`) — both the
+        // TCP reply and the simulator dump format through this snapshot
+        let engine = tiny_engine();
+        let m = Metrics::default();
+        let snap = m.snapshot(engine.as_ref());
+        let keys: Vec<&str> = snap.fields().iter().map(|(k, _)| *k).collect();
+        assert_eq!(
+            keys,
+            [
+                "requests",
+                "mean_batch",
+                "mean_latency_ms",
+                "sessions",
+                "gen_tokens",
+                "mean_lanes",
+                "prefill_jobs",
+                "prefill_toks",
+                "kv_pages",
+                "kv_quantized",
+                "kv_oom",
+                "kv_quant",
+                "threads",
+                "backend",
+                "simd",
+                "resident_bytes",
+            ]
+        );
+        assert!(
+            snap.line()
+                .starts_with("requests=0 mean_batch=0.00 mean_latency_ms=0.000 sessions=0"),
+            "{}",
+            snap.line()
+        );
+        assert_eq!(snap.get("backend"), Some("dense"));
+        assert_eq!(snap.get("kv_pages"), Some("0/0"), "dense engine has no arena");
+        assert!(snap.get("nope").is_none());
     }
 
     #[test]

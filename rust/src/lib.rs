@@ -102,7 +102,21 @@
 //!                             admitted against the live arena with a
 //!                             distinct kv-oom error; STATS reports
 //!                             backend + resident weight bytes + session,
-//!                             prefill, and kv-page counters
+//!                             prefill, and kv-page counters; the per-tick
+//!                             state machine lives in SchedulerCore, which
+//!                             the worker thread and the simulator both
+//!                             drive, and STATS formats through the shared
+//!                             Metrics::snapshot
+//! sim                         deterministic scheduler simulator: a
+//!                             virtual-clock driver of SchedulerCore — no
+//!                             threads, sockets, or wall time — with
+//!                             scripted/seeded event traces (sim::trace,
+//!                             committed replayable .trace files), per-tick
+//!                             invariant checks + step-through dump
+//!                             (sim::harness), and the named workload
+//!                             corpus (sim::scenario) that tests, CI's
+//!                             sim-scenarios job, and BENCH_serving.json
+//!                             all run against
 //! main (llvq pack/unpack/     CLI: produce, expand, inspect, serve, and
 //!       stats/serve/generate) generate from packed artifacts; serve
 //!                             --backend dense|cached|fused selects the
@@ -122,6 +136,9 @@
 //! * [`coordinator`] — batched + sessioned inference service over any
 //!   backend (v1 `NEXT` and the streaming v2 `OPEN`/`FEED`/`GEN` wire
 //!   protocol).
+//! * [`sim`] — the deterministic virtual-clock scheduler simulator:
+//!   scripted/replayable event traces, per-tick invariants, and the named
+//!   workload scenario corpus.
 //! * [`experiments`] — regenerators for every table/figure in the paper.
 
 pub mod util {
@@ -184,6 +201,16 @@ pub mod model {
 
 pub mod runtime;
 pub mod coordinator;
+
+pub mod sim {
+    //! Deterministic scheduler simulator — see [`harness`] for the
+    //! virtual-clock driver, [`trace`] for the committed-replay text
+    //! format, [`scenario`] for the named workload corpus.
+    pub mod trace;
+    pub mod harness;
+    pub mod scenario;
+}
+
 pub mod experiments;
 
 /// Dimension of the Leech lattice and of every LLVQ block.

@@ -26,6 +26,13 @@
 //!   `--kv-hot` switch sessions from dense worst-case caches to paged KV
 //!   over a shared arena with optionally lattice-quantized cold pages
 //!   (admission answers `ERR kv-oom` when the arena is exhausted).
+//! * `sim` — deterministic scheduler simulator: replay a named workload
+//!   scenario (`--scenario burst --seed 7`) or a committed `.trace` file
+//!   (`--trace rust/tests/sim_traces/smoke.trace`) on a virtual clock —
+//!   no threads, sockets, or wall time — with per-tick invariant checks;
+//!   `--step` prints the occupancy dump every tick, `--save-trace`
+//!   exports the run as a canonical trace for committing as a
+//!   regression test, and a violation exits 1.
 //! * `generate` — KV-cached local generation from a prompt (greedy /
 //!   temperature / top-k, seeded), over any backend (`--threads` and the
 //!   `--kv-*` paging flags as in `serve`).
@@ -66,12 +73,13 @@ fn main() {
         "stats" => cmd_stats(rest),
         "eval" => cmd_eval(rest),
         "serve" => cmd_serve(rest),
+        "sim" => cmd_sim(rest),
         "generate" => cmd_generate(rest),
         "gen-model" => cmd_gen_model(rest),
         "info" => cmd_info(rest),
         _ => {
             eprintln!(
-                "usage: llvq <exp|tables|quantize|pack|unpack|stats|eval|serve|generate|gen-model|info> [flags]\n\
+                "usage: llvq <exp|tables|quantize|pack|unpack|stats|eval|serve|sim|generate|gen-model|info> [flags]\n\
                  try: llvq exp table1"
             );
             2
@@ -818,6 +826,106 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
         return 1;
     }
     0
+}
+
+fn cmd_sim(rest: Vec<String>) -> i32 {
+    use llvq::sim::harness::Simulator;
+    use llvq::sim::scenario::Scenario;
+    use llvq::sim::trace::Trace;
+    let a = Args::new("llvq sim — deterministic scheduler simulator (virtual clock)")
+        .flag("scenario", "", "named workload from the corpus (see --list)")
+        .flag("trace", "", "replay a committed .trace file instead of a scenario")
+        .flag("seed", "1", "scenario seed (prompt contents, lengths, sampling)")
+        .flag(
+            "max-ticks",
+            "0",
+            "quiescence bound in virtual ticks (0 = the scenario's own bound)",
+        )
+        .flag(
+            "save-trace",
+            "",
+            "export the run as a canonical .trace (commit it under \
+             rust/tests/sim_traces/ to pin a failure forever)",
+        )
+        .switch("step", "step-through: print the occupancy dump after every tick")
+        .switch("log", "print the full reply log after the run")
+        .switch("list", "list the scenario corpus and exit")
+        .parse(rest.into_iter())
+        .unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2)
+        });
+    if a.get_bool("list") {
+        for sc in Scenario::ALL {
+            println!("{}", sc.name());
+        }
+        return 0;
+    }
+    let scenario = a.get("scenario").filter(|s| !s.is_empty());
+    let trace_path = a.get("trace").filter(|s| !s.is_empty());
+    let (trace, default_ticks) = match (scenario, trace_path) {
+        (Some(name), None) => match Scenario::parse(&name) {
+            Ok(sc) => (sc.trace(a.get_u64("seed")), sc.max_ticks()),
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        },
+        (None, Some(path)) => match Trace::load(std::path::Path::new(&path)) {
+            Ok(t) => (t, 500),
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        },
+        _ => {
+            eprintln!("pick exactly one of --scenario <name> or --trace <file> (or --list)");
+            return 2;
+        }
+    };
+    if let Some(path) = a.get("save-trace").filter(|s| !s.is_empty()) {
+        if let Err(e) = trace.save(std::path::Path::new(&path)) {
+            eprintln!("{e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
+    let mut sim = match Simulator::new(&trace) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let max_ticks = match a.get_u64("max-ticks") {
+        0 => default_ticks,
+        n => n,
+    };
+    if a.get_bool("step") {
+        while !sim.done() && sim.now() < max_ticks {
+            sim.step();
+            println!("{}", sim.dump());
+        }
+    }
+    // after a --step walk this returns immediately (or records
+    // non-quiescence at the bound — a liveness failure, not a timeout)
+    let report = sim.run_to_end(max_ticks);
+    if a.get_bool("log") {
+        print!("{}", report.log_text());
+    }
+    println!(
+        "{} ticks, fingerprint {:016x}\nstats: {}",
+        report.ticks,
+        report.fingerprint(),
+        report.stats
+    );
+    match &report.violation {
+        Some(v) => {
+            eprintln!("INVARIANT VIOLATION: {v}");
+            1
+        }
+        None => 0,
+    }
 }
 
 fn cmd_generate(rest: Vec<String>) -> i32 {

@@ -1,0 +1,675 @@
+//! The deterministic simulator: a virtual-clock driver of
+//! [`SchedulerCore`].
+//!
+//! [`Simulator::step`] runs one virtual tick: apply every scripted
+//! [`TraceEvent`] due at the current tick (event intake through the same
+//! [`SchedulerCore::handle`] the worker thread uses), run one
+//! [`SchedulerCore::tick`], drain every reply/stream channel, then
+//! assert the per-tick invariants. No threads, no sockets, no wall
+//! time — `Pending::enqueued` is `None`, so not even the latency metric
+//! reads a clock. The same trace therefore produces a bit-identical
+//! reply log, final [`Metrics::snapshot`] line, and
+//! [`SimReport::fingerprint`] on every run, on every machine, at every
+//! kernel thread count.
+//!
+//! Replies are logged in the TCP front-end's exact wire formats
+//! (`OK session=…`, `QUEUED n`, `TOK t`, `ERR kv-oom: …`), so a
+//! simulator log reads like a multiplexed protocol transcript and the
+//! TCP-equivalence test can diff the two surfaces line-for-line.
+//!
+//! Engine faults are scripted through [`FaultInjector`], a
+//! [`BatchForward`] wrapper that panics on the next N forward calls —
+//! exercising the scheduler's `catch_unwind` containment without a real
+//! bug.
+//!
+//! # Per-tick invariants (first violation wins; see
+//! [`Simulator::violation`])
+//!
+//! * session accounting — `Metrics::open_sessions` equals parked +
+//!   active + prefilling, and never exceeds `max_sessions`;
+//! * slate bounds — at most one batched decode step per tick, carrying
+//!   at most `max_batch` lanes;
+//! * page balance — `allocated ≤ budget` and
+//!   `alloc_total − freed_total == allocated` (a leaked or double-freed
+//!   page trips this the tick it happens);
+//! * no starved prefill — every queued prefill job makes cursor
+//!   progress at least once per `max_sessions + 2` ticks (the fair
+//!   rotation bound).
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, TryRecvError};
+use std::sync::Arc;
+
+use crate::coordinator::{
+    validate_tokens, BatchForward, GenEvent, Metrics, Msg, Pending, SchedulerCore,
+};
+use crate::model::kvpage::KvPageCounters;
+use crate::model::sample::argmax;
+use crate::model::transformer::{KvStore, StepLane};
+
+use super::trace::{Action, Trace, TraceEvent};
+
+/// A [`BatchForward`] wrapper that injects engine panics on demand: each
+/// [`FaultInjector::arm`]ed charge makes the next forward-path call
+/// (`forward_batch` / `prefill` / `decode_step`) panic. Identity
+/// methods and session open/close always delegate — a fault engine must
+/// still free pages, or the page-balance invariant (rightly) trips.
+pub struct FaultInjector {
+    inner: Arc<dyn BatchForward>,
+    armed: AtomicU64,
+}
+
+impl FaultInjector {
+    pub fn new(inner: Arc<dyn BatchForward>) -> Self {
+        Self {
+            inner,
+            armed: AtomicU64::new(0),
+        }
+    }
+
+    /// Arm `calls` more one-shot faults.
+    pub fn arm(&self, calls: u64) {
+        self.armed.fetch_add(calls, Ordering::SeqCst);
+    }
+
+    fn trip(&self) {
+        if self.armed.load(Ordering::SeqCst) > 0 {
+            self.armed.fetch_sub(1, Ordering::SeqCst);
+            panic!("sim: injected engine fault");
+        }
+    }
+}
+
+impl BatchForward for FaultInjector {
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+
+    fn max_seq(&self) -> usize {
+        self.inner.max_seq()
+    }
+
+    fn forward_batch(&self, batch: &[Vec<u8>]) -> Vec<Vec<f32>> {
+        self.trip();
+        self.inner.forward_batch(batch)
+    }
+
+    fn open_session(&self) -> Box<dyn KvStore> {
+        self.inner.open_session()
+    }
+
+    fn prefill(&self, cache: &mut dyn KvStore, tokens: &[u8]) -> Vec<f32> {
+        self.trip();
+        self.inner.prefill(cache, tokens)
+    }
+
+    fn decode_step(&self, lanes: &mut [StepLane<'_>]) -> Vec<Vec<f32>> {
+        self.trip();
+        self.inner.decode_step(lanes)
+    }
+
+    fn close_session(&self, cache: Box<dyn KvStore>) {
+        self.inner.close_session(cache)
+    }
+
+    fn kv_counters(&self) -> Option<Arc<KvPageCounters>> {
+        self.inner.kv_counters()
+    }
+
+    fn kv_page_budget(&self) -> usize {
+        self.inner.kv_page_budget()
+    }
+
+    fn kv_page_tokens(&self) -> usize {
+        self.inner.kv_page_tokens()
+    }
+
+    fn kv_quant_label(&self) -> String {
+        self.inner.kv_quant_label()
+    }
+
+    fn backend_name(&self) -> String {
+        self.inner.backend_name()
+    }
+
+    fn resident_weight_bytes(&self) -> usize {
+        self.inner.resident_weight_bytes()
+    }
+
+    fn threads(&self) -> usize {
+        self.inner.threads()
+    }
+
+    fn simd_label(&self) -> String {
+        self.inner.simd_label()
+    }
+}
+
+/// One scripted client connection's live state.
+#[derive(Default)]
+struct Conn {
+    sid: Option<u64>,
+    /// Streaming GEN in flight (the stream receiver the TCP handler
+    /// would be blocking on).
+    gen: Option<Receiver<Result<GenEvent, String>>>,
+    /// Tokens streamed by the current GEN (resets per GEN, for the
+    /// `OK generated=` count).
+    gen_count: usize,
+    /// Outstanding v1 NEXT replies, FIFO (the prefix queue answers in
+    /// order).
+    pending_next: VecDeque<Receiver<Result<Vec<f32>, String>>>,
+    /// Every TOK payload this connection ever received, in order.
+    toks: Vec<u8>,
+    /// Every reply line, in order, wire-format — diffable against a
+    /// real TCP transcript.
+    replies: Vec<String>,
+}
+
+/// Deltas and streaks the per-tick invariant checks compare against.
+#[derive(Default)]
+struct Book {
+    steps: u64,
+    lanes: u64,
+    /// Per prefilling sid: (last cursor seen, consecutive no-progress
+    /// ticks).
+    prefill: HashMap<u64, (usize, u64)>,
+}
+
+/// The result of a completed (or aborted) simulator run.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    /// Virtual ticks executed.
+    pub ticks: u64,
+    /// The full reply log: `t=<tick> c=<conn> <wire line>`.
+    pub log: Vec<String>,
+    /// Final [`Metrics::snapshot`] line.
+    pub stats: String,
+    /// Per-connection TOK payloads, in stream order.
+    pub conn_tokens: BTreeMap<u32, Vec<u8>>,
+    /// Per-connection reply lines, in wire format.
+    pub conn_replies: BTreeMap<u32, Vec<String>>,
+    /// First invariant violation (or non-quiescence), if any.
+    pub violation: Option<String>,
+}
+
+impl SimReport {
+    /// No invariant tripped and the run quiesced.
+    pub fn ok(&self) -> bool {
+        self.violation.is_none()
+    }
+
+    /// The log as one newline-joined block (byte-exact across runs).
+    pub fn log_text(&self) -> String {
+        let mut s = self.log.join("\n");
+        s.push('\n');
+        s
+    }
+
+    /// FNV-1a over log + final stats — the one-number determinism
+    /// check two runs of the same trace must agree on.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |s: &str| {
+            for &b in s.as_bytes() {
+                h ^= u64::from(b);
+                h = h.wrapping_mul(0x1_0000_0000_01b3);
+            }
+            h ^= u64::from(b'\n');
+            h = h.wrapping_mul(0x1_0000_0000_01b3);
+        };
+        for line in &self.log {
+            eat(line);
+        }
+        eat(&self.stats);
+        h
+    }
+}
+
+fn sync_reply<T>(rx: Receiver<Result<T, String>>) -> Result<T, String> {
+    // `SchedulerCore::handle` answers every reply channel synchronously,
+    // so the reply is already buffered by the time handle() returns
+    match rx.try_recv() {
+        Ok(r) => r,
+        Err(_) => Err("worker dropped request".into()),
+    }
+}
+
+/// The virtual-clock scheduler simulator. See the module doc.
+pub struct Simulator {
+    core: SchedulerCore,
+    fault: Arc<FaultInjector>,
+    now: u64,
+    events: VecDeque<TraceEvent>,
+    conns: BTreeMap<u32, Conn>,
+    log: Vec<String>,
+    violation: Option<String>,
+    book: Book,
+}
+
+impl Simulator {
+    /// Build the trace's own engine spec and simulate over it.
+    pub fn new(trace: &Trace) -> Result<Simulator, String> {
+        Ok(Self::with_engine(trace.setup.engine.build()?, trace))
+    }
+
+    /// Simulate `trace`'s events and scheduler config over a caller-built
+    /// engine (e.g. a fused-backend engine the spec line cannot
+    /// describe). The engine is wrapped in a [`FaultInjector`] either
+    /// way, so `panic` events keep working.
+    pub fn with_engine(engine: Arc<dyn BatchForward>, trace: &Trace) -> Simulator {
+        let fault = Arc::new(FaultInjector::new(engine));
+        let core = SchedulerCore::new(
+            fault.clone() as Arc<dyn BatchForward>,
+            trace.setup.batcher,
+            Arc::new(Metrics::default()),
+        );
+        let mut events = trace.events.clone();
+        events.sort_by_key(|e| e.at);
+        Simulator {
+            core,
+            fault,
+            now: 0,
+            events: events.into(),
+            conns: BTreeMap::new(),
+            log: Vec::new(),
+            violation: None,
+            book: Book::default(),
+        }
+    }
+
+    /// Current virtual tick.
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// The scheduler state under test.
+    pub fn core(&self) -> &SchedulerCore {
+        &self.core
+    }
+
+    /// First invariant violation so far, if any.
+    pub fn violation(&self) -> Option<&str> {
+        self.violation.as_deref()
+    }
+
+    /// The reply log so far.
+    pub fn log_lines(&self) -> &[String] {
+        &self.log
+    }
+
+    /// All scripted events applied, every queue idle, every stream and
+    /// one-shot reply delivered.
+    pub fn done(&self) -> bool {
+        self.events.is_empty()
+            && !self.core.has_runnable_work()
+            && self
+                .conns
+                .values()
+                .all(|c| c.gen.is_none() && c.pending_next.is_empty())
+    }
+
+    /// One virtual tick: due events → scheduler tick → channel drain →
+    /// invariant checks.
+    pub fn step(&mut self) {
+        while self.events.front().is_some_and(|e| e.at <= self.now) {
+            let ev = self.events.pop_front().expect("front checked");
+            self.apply(ev);
+        }
+        self.core.tick();
+        self.drain();
+        self.check_invariants();
+        self.now += 1;
+    }
+
+    /// Step until [`Simulator::done`] or `max_ticks`, then report.
+    /// Non-quiescence within the bound is itself recorded as a
+    /// violation — a liveness failure, not a timeout.
+    pub fn run_to_end(&mut self, max_ticks: u64) -> SimReport {
+        while !self.done() && self.now < max_ticks {
+            self.step();
+        }
+        if !self.done() && self.violation.is_none() {
+            self.violation = Some(format!("did not quiesce within {max_ticks} ticks"));
+        }
+        self.report()
+    }
+
+    /// Snapshot the run so far as a [`SimReport`].
+    pub fn report(&self) -> SimReport {
+        SimReport {
+            ticks: self.now,
+            log: self.log.clone(),
+            stats: self
+                .core
+                .metrics()
+                .snapshot(self.core.engine().as_ref())
+                .line(),
+            conn_tokens: self
+                .conns
+                .iter()
+                .map(|(&c, conn)| (c, conn.toks.clone()))
+                .collect(),
+            conn_replies: self
+                .conns
+                .iter()
+                .map(|(&c, conn)| (c, conn.replies.clone()))
+                .collect(),
+            violation: self.violation.clone(),
+        }
+    }
+
+    /// The step-through debug printer: one occupancy line plus the
+    /// shared stats line (same [`Metrics::snapshot`] formatter as the
+    /// TCP `STATS` reply).
+    pub fn dump(&self) -> String {
+        let occ = self.core.occupancy();
+        let parked: Vec<String> = occ.parked.iter().map(|s| s.to_string()).collect();
+        let active: Vec<String> = occ
+            .active
+            .iter()
+            .map(|(s, r)| format!("{s}:{r}"))
+            .collect();
+        let pre: Vec<String> = occ
+            .prefilling
+            .iter()
+            .map(|(s, c, n)| format!("{s}:{c}/{n}"))
+            .collect();
+        format!(
+            "t={} parked=[{}] active=[{}] prefill=[{}] prefix={}\nstats: {}",
+            self.now,
+            parked.join(","),
+            active.join(","),
+            pre.join(","),
+            occ.prefix_queued,
+            self.core
+                .metrics()
+                .snapshot(self.core.engine().as_ref())
+                .line()
+        )
+    }
+
+    fn conn(&mut self, c: u32) -> &mut Conn {
+        self.conns.entry(c).or_default()
+    }
+
+    /// Record one wire-format reply line for `conn`, tick-stamped in the
+    /// global log.
+    fn reply(&mut self, conn: u32, line: String) {
+        self.log.push(format!("t={} c={conn} {line}", self.now));
+        self.conn(conn).replies.push(line);
+    }
+
+    fn apply(&mut self, ev: TraceEvent) {
+        let TraceEvent { conn, action, .. } = ev;
+        match action {
+            Action::Open => {
+                if self.conn(conn).sid.is_some() {
+                    self.reply(conn, "ERR session already open on this connection".into());
+                    return;
+                }
+                let (tx, rx) = channel();
+                self.core.handle(Msg::Open { reply: tx });
+                let line = match sync_reply(rx) {
+                    Ok(s) => {
+                        self.conn(conn).sid = Some(s);
+                        format!("OK session={s}")
+                    }
+                    Err(e) => format!("ERR {e}"),
+                };
+                self.reply(conn, line);
+            }
+            Action::Feed(tokens) => {
+                let Some(sid) = self.conn(conn).sid else {
+                    self.reply(conn, "ERR no open session (send OPEN first)".into());
+                    return;
+                };
+                // client-surface validation parity with Coordinator::feed
+                if let Err(e) = validate_tokens(self.core.engine().as_ref(), &tokens) {
+                    self.reply(conn, format!("ERR {e}"));
+                    return;
+                }
+                let (tx, rx) = channel();
+                self.core.handle(Msg::Feed {
+                    sid,
+                    tokens,
+                    reply: tx,
+                });
+                let line = match sync_reply(rx) {
+                    Ok(n) => format!("QUEUED {n}"),
+                    Err(e) => format!("ERR {e}"),
+                };
+                self.reply(conn, line);
+            }
+            Action::Gen { n, params } => {
+                let Some(sid) = self.conn(conn).sid else {
+                    self.reply(conn, "ERR no open session (send OPEN first)".into());
+                    return;
+                };
+                if self.conn(conn).gen.is_some() {
+                    // a real TCP client cannot pipeline GENs (the handler
+                    // blocks on the stream); a scripted one can — reject
+                    self.reply(conn, "ERR previous GEN still streaming".into());
+                    return;
+                }
+                if n == 0 {
+                    // mirrors Coordinator::generate's pre-check
+                    self.reply(conn, "ERR GEN needs n >= 1".into());
+                    return;
+                }
+                let (tx, rx) = channel();
+                self.core.handle(Msg::Gen {
+                    sid,
+                    n,
+                    params,
+                    stream: tx,
+                });
+                let c = self.conn(conn);
+                c.gen = Some(rx);
+                c.gen_count = 0;
+            }
+            Action::Close => {
+                let Some(sid) = self.conn(conn).sid.take() else {
+                    self.reply(conn, "ERR no open session".into());
+                    return;
+                };
+                let (tx, rx) = channel();
+                self.core.handle(Msg::Close { sid, reply: tx });
+                let line = match sync_reply(rx) {
+                    Ok(len) => format!("OK closed len={len}"),
+                    Err(e) => format!("ERR {e}"),
+                };
+                self.reply(conn, line);
+            }
+            Action::Disconnect => {
+                // rude drop, in handle_conn's order: the GEN stream
+                // receiver dies with the socket, then the session closes
+                let c = self.conn(conn);
+                c.gen = None;
+                c.pending_next.clear();
+                let sid = c.sid.take();
+                self.log
+                    .push(format!("t={} c={conn} <disconnected>", self.now));
+                if let Some(sid) = sid {
+                    let (tx, rx) = channel();
+                    self.core.handle(Msg::Close { sid, reply: tx });
+                    let _ = rx.try_recv(); // a rude client never reads it
+                }
+            }
+            Action::Next(tokens) => {
+                // validation parity with Coordinator::submit
+                if let Err(e) = validate_tokens(self.core.engine().as_ref(), &tokens) {
+                    self.reply(conn, format!("ERR {e}"));
+                    return;
+                }
+                let (tx, rx) = channel();
+                self.core.handle(Msg::Prefix(Pending {
+                    tokens,
+                    reply: tx,
+                    enqueued: None, // virtual time: never read a wall clock
+                }));
+                self.conn(conn).pending_next.push_back(rx);
+            }
+            Action::Stats => {
+                let line = format!(
+                    "OK {}",
+                    self.core
+                        .metrics()
+                        .snapshot(self.core.engine().as_ref())
+                        .line()
+                );
+                self.reply(conn, line);
+            }
+            Action::Panic { calls } => {
+                self.fault.arm(calls);
+                self.log
+                    .push(format!("t={} <panic armed x{calls}>", self.now));
+            }
+        }
+    }
+
+    /// Deliver everything the tick produced: outstanding NEXT replies
+    /// (front-first — the prefix queue is FIFO) and GEN stream events,
+    /// per connection in ascending id order (a BTreeMap, so the log
+    /// order is deterministic).
+    fn drain(&mut self) {
+        let ids: Vec<u32> = self.conns.keys().copied().collect();
+        for id in ids {
+            loop {
+                let res = match self.conns.get(&id).and_then(|c| c.pending_next.front()) {
+                    Some(rx) => match rx.try_recv() {
+                        Ok(r) => Some(r),
+                        Err(TryRecvError::Empty) => None,
+                        Err(TryRecvError::Disconnected) => {
+                            Some(Err("worker dropped request".into()))
+                        }
+                    },
+                    None => None,
+                };
+                let Some(r) = res else { break };
+                self.conns
+                    .get_mut(&id)
+                    .expect("id from keys")
+                    .pending_next
+                    .pop_front();
+                let line = match r {
+                    Ok(logits) => {
+                        let bi = argmax(&logits);
+                        format!("OK next={bi} logit={:.4}", logits[bi])
+                    }
+                    Err(e) => format!("ERR {e}"),
+                };
+                self.reply(id, line);
+            }
+            loop {
+                let res = match self.conns.get(&id).and_then(|c| c.gen.as_ref()) {
+                    Some(rx) => match rx.try_recv() {
+                        Ok(r) => Some(Some(r)),
+                        Err(TryRecvError::Empty) => None,
+                        Err(TryRecvError::Disconnected) => Some(None),
+                    },
+                    None => None,
+                };
+                let Some(r) = res else { break };
+                match r {
+                    Some(Ok(GenEvent::Token(t))) => {
+                        let c = self.conns.get_mut(&id).expect("id from keys");
+                        c.toks.push(t);
+                        c.gen_count += 1;
+                        self.reply(id, format!("TOK {t}"));
+                    }
+                    Some(Ok(GenEvent::Done { len })) => {
+                        let g = {
+                            let c = self.conns.get_mut(&id).expect("id from keys");
+                            c.gen = None;
+                            c.gen_count
+                        };
+                        self.reply(id, format!("OK generated={g} len={len}"));
+                    }
+                    Some(Err(e)) => {
+                        self.conns.get_mut(&id).expect("id from keys").gen = None;
+                        self.reply(id, format!("ERR {e}"));
+                    }
+                    None => {
+                        // sender dropped without Done/Err — mirror the
+                        // TCP handler's abort line
+                        self.conns.get_mut(&id).expect("id from keys").gen = None;
+                        self.reply(id, "ERR generation aborted".into());
+                    }
+                }
+            }
+        }
+    }
+
+    fn violate(&mut self, msg: String) {
+        if self.violation.is_none() {
+            self.violation = Some(format!("tick {}: {msg}", self.now));
+        }
+    }
+
+    fn check_invariants(&mut self) {
+        let occ = self.core.occupancy();
+        let cfg = *self.core.config();
+        let m = Arc::clone(self.core.metrics());
+        let open = occ.parked.len() + occ.active.len() + occ.prefilling.len();
+        let counted = m.open_sessions.load(Ordering::Relaxed) as usize;
+        if counted != open {
+            self.violate(format!(
+                "session leak: metrics count {counted} open sessions, scheduler holds {open}"
+            ));
+        }
+        if open > cfg.max_sessions {
+            self.violate(format!(
+                "admission breach: {open} sessions open, max_sessions={}",
+                cfg.max_sessions
+            ));
+        }
+        let steps = m.decode_steps.load(Ordering::Relaxed);
+        let lanes = m.decode_lanes.load(Ordering::Relaxed);
+        let dsteps = steps.saturating_sub(self.book.steps);
+        let dlanes = lanes.saturating_sub(self.book.lanes);
+        if dsteps > 1 {
+            self.violate(format!("{dsteps} decode steps in one tick"));
+        }
+        if dlanes > dsteps * cfg.max_batch as u64 {
+            self.violate(format!(
+                "decode slate carried {dlanes} lanes in one tick (max_batch={})",
+                cfg.max_batch
+            ));
+        }
+        self.book.steps = steps;
+        self.book.lanes = lanes;
+        if let Some(c) = m.kv.get() {
+            let allocated = c.allocated.load(Ordering::Relaxed);
+            let budget = self.core.engine().kv_page_budget();
+            if allocated > budget {
+                self.violate(format!("kv arena over budget: {allocated}/{budget} pages"));
+            }
+            let at = c.alloc_total.load(Ordering::Relaxed);
+            let ft = c.freed_total.load(Ordering::Relaxed);
+            if at.checked_sub(ft) != Some(allocated as u64) {
+                self.violate(format!(
+                    "kv page counters do not balance: alloc_total={at} freed_total={ft} allocated={allocated}"
+                ));
+            }
+        }
+        // fair rotation grants every queued job a chunk at least once per
+        // queue-length ticks; max_sessions bounds the queue, +2 is slack
+        // for the tick the job was queued on
+        let bound = cfg.max_sessions as u64 + 2;
+        let mut prefill = HashMap::new();
+        for &(sid, cursor, _len) in &occ.prefilling {
+            let streak = match self.book.prefill.get(&sid) {
+                Some(&(c, s)) if c == cursor => s + 1,
+                _ => 0,
+            };
+            if streak > bound {
+                self.violate(format!(
+                    "prefill starvation: session {sid} made no progress for {streak} ticks"
+                ));
+            }
+            prefill.insert(sid, (cursor, streak));
+        }
+        self.book.prefill = prefill;
+    }
+}

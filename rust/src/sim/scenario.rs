@@ -1,0 +1,274 @@
+//! The named workload corpus: ~6 scripted scenarios covering the
+//! scheduler shapes that historically only the real-time soak test
+//! sampled. Each is a seeded [`Trace`] generator — the structure is
+//! fixed, the seed varies prompt contents and lengths through the
+//! crate's own [`Xoshiro256pp`], so `(scenario, seed)` fully determines
+//! the run and any failure replays from just those two values (or from
+//! the committed `.trace` file `llvq sim --save-trace` writes).
+//!
+//! Every scenario is run by the `sim-scenarios` CI job and the
+//! `rust/tests/sim.rs` suite (per-tick invariants + bit-identical
+//! replay), and timed into `BENCH_serving.json` by `benches/serving.rs`.
+
+use std::time::Duration;
+
+use crate::coordinator::BatcherConfig;
+use crate::model::kvpage::KvQuantKind;
+use crate::model::sample::SampleParams;
+use crate::util::rng::Xoshiro256pp;
+
+use super::trace::{Action, EngineSpec, Trace};
+
+/// Tiny-model vocabulary (qwen3-4b-tiny) — scenario tokens stay below
+/// this.
+const VOCAB: u64 = 64;
+
+fn toks(rng: &mut Xoshiro256pp, n: usize) -> Vec<u8> {
+    (0..n).map(|_| rng.next_range(VOCAB) as u8).collect()
+}
+
+fn greedy() -> SampleParams {
+    SampleParams::default()
+}
+
+fn seeded(seed: u64) -> SampleParams {
+    SampleParams {
+        temperature: 0.8,
+        top_k: 8,
+        seed,
+    }
+}
+
+/// The scheduler shapes under test. See each constructor for the story.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scenario {
+    /// Everyone arrives at once: 8 sessions open, feed, and generate on
+    /// tick 0–1 against a 4-lane slate.
+    Burst,
+    /// Near-max_seq prompts from 4 sessions at `prefill_chunk=4`: tens
+    /// of ticks of chunked prefill with GENs parked behind their jobs.
+    LongPromptFlood,
+    /// Streamers that trickle 2–4 token FEEDs for dozens of ticks,
+    /// extending half-drained prefill jobs, then generate.
+    SlowDrip,
+    /// Rude clients: mid-prefill and mid-GEN disconnects under load,
+    /// then a polite second wave that must find every slot reclaimed.
+    DisconnectStorm,
+    /// A 6-page arena thrashed by competing sessions: `kv-oom` refusals
+    /// must leave sessions alive, and every page must drain back.
+    KvOomThrash,
+    /// v1 `NEXT` floods interleaved with v2 GEN streams plus one
+    /// injected engine panic — the fairness and containment mix.
+    MixedV1V2,
+}
+
+impl Scenario {
+    pub const ALL: [Scenario; 6] = [
+        Scenario::Burst,
+        Scenario::LongPromptFlood,
+        Scenario::SlowDrip,
+        Scenario::DisconnectStorm,
+        Scenario::KvOomThrash,
+        Scenario::MixedV1V2,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::Burst => "burst",
+            Scenario::LongPromptFlood => "long-prompt-flood",
+            Scenario::SlowDrip => "slow-drip",
+            Scenario::DisconnectStorm => "disconnect-storm",
+            Scenario::KvOomThrash => "kv-oom-thrash",
+            Scenario::MixedV1V2 => "mixed-v1-v2",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Scenario, String> {
+        Scenario::ALL
+            .iter()
+            .copied()
+            .find(|sc| sc.name() == s)
+            .ok_or_else(|| {
+                let names: Vec<&str> = Scenario::ALL.iter().map(|sc| sc.name()).collect();
+                format!("unknown scenario '{s}' ({})", names.join("|"))
+            })
+    }
+
+    /// Generous quiescence bound for [`Simulator::run_to_end`]
+    /// (exceeding it is a liveness violation, so the slack is deliberate).
+    ///
+    /// [`Simulator::run_to_end`]: super::harness::Simulator::run_to_end
+    pub fn max_ticks(&self) -> u64 {
+        match self {
+            Scenario::LongPromptFlood => 400,
+            _ => 200,
+        }
+    }
+
+    /// Build the seeded trace.
+    pub fn trace(&self, seed: u64) -> Trace {
+        let mut rng = Xoshiro256pp::new(seed ^ 0x5eed_51u64);
+        let mut t = match self {
+            Scenario::Burst => burst(&mut rng),
+            Scenario::LongPromptFlood => long_prompt_flood(&mut rng),
+            Scenario::SlowDrip => slow_drip(&mut rng),
+            Scenario::DisconnectStorm => disconnect_storm(&mut rng),
+            Scenario::KvOomThrash => kv_oom_thrash(&mut rng),
+            Scenario::MixedV1V2 => mixed_v1_v2(&mut rng),
+        };
+        t.normalize();
+        t
+    }
+}
+
+fn base_config() -> BatcherConfig {
+    BatcherConfig {
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        max_sessions: 8,
+        prefill_chunk: 4,
+    }
+}
+
+fn burst(rng: &mut Xoshiro256pp) -> Trace {
+    let mut t = Trace::new(base_config(), EngineSpec::Dense { seed: 9 });
+    for c in 1..=8u32 {
+        let prompt = 8 + rng.next_range(9) as usize; // 8..=16
+        let n = 4 + rng.next_range(3) as usize; // 4..=6
+        t.push(0, c, Action::Open);
+        t.push(0, c, Action::Feed(toks(rng, prompt)));
+        let params = if c % 2 == 0 { greedy() } else { seeded(c as u64) };
+        t.push(1, c, Action::Gen { n, params });
+        t.push(90, c, Action::Close);
+    }
+    t.push(91, 1, Action::Stats);
+    t
+}
+
+fn long_prompt_flood(rng: &mut Xoshiro256pp) -> Trace {
+    let mut t = Trace::new(base_config(), EngineSpec::Dense { seed: 9 });
+    for c in 1..=4u32 {
+        let prompt = 56 + rng.next_range(5) as usize; // 56..=60 of max_seq 64
+        t.push(u64::from(c) - 1, c, Action::Open);
+        t.push(u64::from(c) - 1, c, Action::Feed(toks(rng, prompt)));
+        // parks behind the still-draining job (waiting_gen path)
+        t.push(u64::from(c), c, Action::Gen { n: 2, params: greedy() });
+        t.push(150, c, Action::Close);
+    }
+    t.push(151, 1, Action::Stats);
+    t
+}
+
+fn slow_drip(rng: &mut Xoshiro256pp) -> Trace {
+    let mut t = Trace::new(base_config(), EngineSpec::Dense { seed: 9 });
+    for c in 1..=3u32 {
+        t.push(0, c, Action::Open);
+        // 6 drips of 2–4 tokens, 5 ticks apart, staggered per conn:
+        // some land on an idle session, some extend a half-drained job
+        for drip in 0..6u64 {
+            let n = 2 + rng.next_range(3) as usize; // 2..=4
+            t.push(1 + drip * 5 + u64::from(c), c, Action::Feed(toks(rng, n)));
+        }
+        t.push(40, c, Action::Gen { n: 8, params: seeded(u64::from(c) * 7) });
+        t.push(80, c, Action::Close);
+    }
+    t.push(81, 1, Action::Stats);
+    t
+}
+
+fn disconnect_storm(rng: &mut Xoshiro256pp) -> Trace {
+    let mut t = Trace::new(
+        BatcherConfig {
+            max_sessions: 12,
+            ..base_config()
+        },
+        EngineSpec::Dense { seed: 9 },
+    );
+    // first wave: 8 sessions under load, all of them rude
+    for c in 1..=8u32 {
+        let prompt = 20 + rng.next_range(21) as usize; // 20..=40
+        t.push(0, c, Action::Open);
+        t.push(0, c, Action::Feed(toks(rng, prompt)));
+        if c % 2 == 0 {
+            // disconnects land mid-GEN
+            t.push(2, c, Action::Gen { n: 6, params: seeded(u64::from(c)) });
+        }
+        // staggered drops: mid-prefill for the odd conns, mid-GEN for
+        // the even ones
+        t.push(3 + u64::from(c), c, Action::Disconnect);
+    }
+    // second wave: polite clients must find every slot and page back
+    for c in 9..=12u32 {
+        let prompt = 6 + rng.next_range(7) as usize; // 6..=12
+        t.push(20, c, Action::Open);
+        t.push(20, c, Action::Feed(toks(rng, prompt)));
+        t.push(21, c, Action::Gen { n: 4, params: greedy() });
+        t.push(70, c, Action::Close);
+    }
+    t.push(71, 9, Action::Stats);
+    t
+}
+
+fn kv_oom_thrash(rng: &mut Xoshiro256pp) -> Trace {
+    // 6-page arena of 4-token pages: three 6-token prompts fill it
+    // (2 pages each), so the fourth session's FEED must answer kv-oom
+    // and survive to retry after the disconnect wave frees pages
+    let mut t = Trace::new(
+        base_config(),
+        EngineSpec::Paged {
+            seed: 9,
+            pages: 6,
+            page_tokens: 4,
+            hot_window: 8,
+            quant: KvQuantKind::None,
+        },
+    );
+    for c in 1..=3u32 {
+        t.push(0, c, Action::Open);
+        t.push(0, c, Action::Feed(toks(rng, 6)));
+    }
+    // fits the slack of conn 1's two reserved pages (6 used of 8)
+    t.push(2, 1, Action::Gen { n: 2, params: greedy() });
+    t.push(0, 4, Action::Open);
+    t.push(1, 4, Action::Feed(toks(rng, 8))); // arena full -> ERR kv-oom
+    t.push(4, 2, Action::Disconnect); // frees 2 pages
+    t.push(6, 3, Action::Disconnect); // frees 2 more
+    t.push(8, 4, Action::Feed(toks(rng, 6))); // retry now fits
+    t.push(10, 4, Action::Gen { n: 2, params: greedy() });
+    t.push(12, 5, Action::Open);
+    t.push(12, 5, Action::Feed(toks(rng, 20))); // 5 pages -> kv-oom again
+    t.push(14, 5, Action::Feed(toks(rng, 4)));
+    t.push(16, 5, Action::Gen { n: 1, params: greedy() });
+    t.push(18, 5, Action::Disconnect);
+    t.push(22, 1, Action::Close);
+    t.push(26, 4, Action::Close);
+    t.push(27, 1, Action::Stats);
+    t
+}
+
+fn mixed_v1_v2(rng: &mut Xoshiro256pp) -> Trace {
+    let mut t = Trace::new(base_config(), EngineSpec::Dense { seed: 9 });
+    // v2 streamers
+    for c in 1..=2u32 {
+        let prompt = 10 + rng.next_range(11) as usize; // 10..=20
+        t.push(0, c, Action::Open);
+        t.push(0, c, Action::Feed(toks(rng, prompt)));
+        t.push(1, c, Action::Gen { n: 10, params: seeded(u64::from(c) * 13) });
+    }
+    // v1 NEXT flood riding alongside — one prefix batch per tick keeps
+    // these from starving the decode slate (the fairness fix this
+    // scenario pins)
+    for c in 3..=4u32 {
+        for i in 0..6u64 {
+            let n = 2 + rng.next_range(5) as usize; // 2..=6
+            t.push(1 + i, c, Action::Next(toks(rng, n)));
+        }
+    }
+    // one contained engine fault mid-storm: whichever call it lands on,
+    // exactly one batch/job fails and the scheduler survives
+    t.push(4, 0, Action::Panic { calls: 1 });
+    t.push(60, 1, Action::Close);
+    t.push(60, 2, Action::Close);
+    t.push(61, 3, Action::Stats);
+    t
+}

@@ -1,0 +1,393 @@
+//! Scripted event traces for the deterministic scheduler simulator.
+//!
+//! A trace is a self-contained description of one simulator run: the
+//! scheduler configuration, the engine to build, and a list of client
+//! events pinned to virtual ticks. The text form is line-oriented so a
+//! failing run can be committed verbatim (see `rust/tests/sim_traces/`)
+//! and replayed byte-exactly forever — [`Trace::parse`] and
+//! [`Trace::to_text`] round-trip, pinned by a unit test.
+//!
+//! # Format (`.trace`, one directive per line)
+//!
+//! ```text
+//! # comments and blank lines are ignored
+//! config max_batch=4 max_wait_ms=2 max_sessions=8 prefill_chunk=4
+//! engine paged seed=9 pages=6 page_tokens=4 hot=8 quant=none
+//! tick 0 conn 1 open
+//! tick 0 conn 1 feed 5,6,7
+//! tick 1 conn 1 gen 4 temp=0 topk=0 seed=0
+//! tick 2 conn 2 next 5,6
+//! tick 2 conn 2 stats
+//! tick 3 panic 1
+//! tick 30 conn 1 close
+//! tick 31 conn 2 disconnect
+//! ```
+//!
+//! * `config` / `engine` — the [`SimSetup`] header. Omitted keys take
+//!   the defaults of [`BatcherConfig`] / [`EngineSpec`]. `engine dense`
+//!   builds a dense-KV tiny-model engine; `engine paged` an arena-backed
+//!   one (`quant` ∈ `none|e8|llvq`). Weights are `Weights::random` over
+//!   the committed `qwen3-4b-tiny` config, so a seed fully determines
+//!   the model.
+//! * `tick <t> conn <c> <action>` — apply a client action at virtual
+//!   tick `t` (before that tick's scheduler pass). `open`, `feed`,
+//!   `gen`, `close`, `disconnect`, `next`, `stats` mirror the TCP verbs
+//!   (`disconnect` is a rude drop: the GEN stream is abandoned and the
+//!   session closed, exactly what `handle_conn` does when a socket
+//!   dies).
+//! * `tick <t> panic <k>` — arm the fault injector: the next `k` engine
+//!   calls (prefill / decode / one-shot forward) panic, exercising the
+//!   scheduler's `catch_unwind` containment.
+//!
+//! Events within one tick apply in file order; [`Trace::normalize`]
+//! stable-sorts by tick without disturbing that order.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::{BackendEngine, BatchForward, BatcherConfig};
+use crate::model::backend::ExecutionBackend;
+use crate::model::config::config_by_name;
+use crate::model::kvpage::KvQuantKind;
+use crate::model::sample::SampleParams;
+use crate::model::transformer::Weights;
+
+/// Which engine a trace runs against. Everything is derived from the
+/// committed tiny-model config plus the seeds below, so a spec line
+/// fully determines the forward pass.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EngineSpec {
+    /// Dense worst-case KV sessions (`BackendEngine::dense`).
+    Dense { seed: u64 },
+    /// Arena-backed paged KV sessions (`BackendEngine::paged`) — the
+    /// shape every kv-oom scenario needs.
+    Paged {
+        seed: u64,
+        pages: usize,
+        page_tokens: usize,
+        hot_window: usize,
+        quant: KvQuantKind,
+    },
+}
+
+impl Default for EngineSpec {
+    fn default() -> Self {
+        EngineSpec::Dense { seed: 9 }
+    }
+}
+
+impl EngineSpec {
+    /// Build the engine this spec describes (tiny zoo model, seeded
+    /// random weights).
+    pub fn build(&self) -> Result<Arc<dyn BatchForward>, String> {
+        let cfg = config_by_name("qwen3-4b-tiny").ok_or("model zoo is missing qwen3-4b-tiny")?;
+        Ok(match *self {
+            EngineSpec::Dense { seed } => {
+                Arc::new(BackendEngine::dense(Weights::random(&cfg, seed)))
+            }
+            EngineSpec::Paged {
+                seed,
+                pages,
+                page_tokens,
+                hot_window,
+                quant,
+            } => {
+                let backend = ExecutionBackend::dense(Weights::random(&cfg, seed));
+                Arc::new(BackendEngine::paged(
+                    backend,
+                    pages,
+                    page_tokens,
+                    hot_window,
+                    quant,
+                )?)
+            }
+        })
+    }
+
+    fn to_line(&self) -> String {
+        match *self {
+            EngineSpec::Dense { seed } => format!("engine dense seed={seed}"),
+            EngineSpec::Paged {
+                seed,
+                pages,
+                page_tokens,
+                hot_window,
+                quant,
+            } => format!(
+                "engine paged seed={seed} pages={pages} page_tokens={page_tokens} hot={hot_window} quant={}",
+                quant.label()
+            ),
+        }
+    }
+
+    fn parse(rest: &str) -> Result<Self, String> {
+        let mut it = rest.split_whitespace();
+        let kind = it.next().ok_or("engine needs a kind (dense|paged)")?;
+        let mut seed = 9u64;
+        let mut pages = 8usize;
+        let mut page_tokens = 4usize;
+        let mut hot = 8usize;
+        let mut quant = KvQuantKind::None;
+        for a in it {
+            let (k, v) = a
+                .split_once('=')
+                .ok_or_else(|| format!("bad engine arg '{a}' (want key=value)"))?;
+            match k {
+                "seed" => seed = v.parse().map_err(|_| format!("bad seed '{v}'"))?,
+                "pages" => pages = v.parse().map_err(|_| format!("bad pages '{v}'"))?,
+                "page_tokens" => {
+                    page_tokens = v.parse().map_err(|_| format!("bad page_tokens '{v}'"))?
+                }
+                "hot" => hot = v.parse().map_err(|_| format!("bad hot '{v}'"))?,
+                "quant" => quant = KvQuantKind::parse(v)?,
+                other => return Err(format!("unknown engine arg '{other}'")),
+            }
+        }
+        match kind {
+            "dense" => Ok(EngineSpec::Dense { seed }),
+            "paged" => Ok(EngineSpec::Paged {
+                seed,
+                pages,
+                page_tokens,
+                hot_window: hot,
+                quant,
+            }),
+            other => Err(format!("unknown engine kind '{other}' (dense|paged)")),
+        }
+    }
+}
+
+/// The run header of a trace: scheduler config plus engine spec.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimSetup {
+    pub batcher: BatcherConfig,
+    pub engine: EngineSpec,
+}
+
+/// One scripted client action (mirrors a TCP verb; see the module doc).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Action {
+    Open,
+    Feed(Vec<u8>),
+    Gen { n: usize, params: SampleParams },
+    Close,
+    /// Rude drop: abandon any streaming GEN, then close the session —
+    /// what the TCP front-end does when a socket dies mid-flight.
+    Disconnect,
+    /// v1 one-shot `NEXT` request (answered on a later tick's prefix
+    /// batch).
+    Next(Vec<u8>),
+    /// Log the shared [`Metrics::snapshot`] line at this point.
+    Stats,
+    /// Arm the fault injector: the next `calls` engine calls panic.
+    Panic { calls: u64 },
+}
+
+/// One scripted event: `action` on connection `conn` applied at virtual
+/// tick `at` (conn 0 for [`Action::Panic`], which has no client).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub at: u64,
+    pub conn: u32,
+    pub action: Action,
+}
+
+/// A full simulator run script: setup header plus tick-pinned events.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub setup: SimSetup,
+    pub events: Vec<TraceEvent>,
+}
+
+fn parse_tokens(s: &str) -> Result<Vec<u8>, String> {
+    let toks: Result<Vec<u8>, _> = s.split(',').map(|t| t.trim().parse::<u8>()).collect();
+    match toks {
+        Ok(v) if !v.is_empty() => Ok(v),
+        _ => Err(format!("bad token list '{s}'")),
+    }
+}
+
+fn fmt_tokens(toks: &[u8]) -> String {
+    toks.iter()
+        .map(|t| t.to_string())
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+impl Trace {
+    /// Empty trace over a setup (scenario builders start here).
+    pub fn new(batcher: BatcherConfig, engine: EngineSpec) -> Self {
+        Self {
+            setup: SimSetup { batcher, engine },
+            events: Vec::new(),
+        }
+    }
+
+    /// Append one event.
+    pub fn push(&mut self, at: u64, conn: u32, action: Action) {
+        self.events.push(TraceEvent { at, conn, action });
+    }
+
+    /// Stable-sort events by tick (within-tick file order is preserved —
+    /// it is part of the replay contract).
+    pub fn normalize(&mut self) {
+        self.events.sort_by_key(|e| e.at);
+    }
+
+    /// Parse the text format of the module doc. Later `config` /
+    /// `engine` lines override earlier ones; event order is kept.
+    pub fn parse(text: &str) -> Result<Trace, String> {
+        let mut trace = Trace::default();
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            Self::parse_line(line, &mut trace).map_err(|e| format!("trace line {}: {e}", i + 1))?;
+        }
+        trace.normalize();
+        Ok(trace)
+    }
+
+    fn parse_line(line: &str, trace: &mut Trace) -> Result<(), String> {
+        if let Some(rest) = line.strip_prefix("config ") {
+            for a in rest.split_whitespace() {
+                let (k, v) = a
+                    .split_once('=')
+                    .ok_or_else(|| format!("bad config arg '{a}' (want key=value)"))?;
+                let b = &mut trace.setup.batcher;
+                match k {
+                    "max_batch" => {
+                        b.max_batch = v.parse().map_err(|_| format!("bad max_batch '{v}'"))?
+                    }
+                    "max_wait_ms" => {
+                        let ms: u64 = v.parse().map_err(|_| format!("bad max_wait_ms '{v}'"))?;
+                        b.max_wait = Duration::from_millis(ms);
+                    }
+                    "max_sessions" => {
+                        b.max_sessions = v.parse().map_err(|_| format!("bad max_sessions '{v}'"))?
+                    }
+                    "prefill_chunk" => {
+                        b.prefill_chunk =
+                            v.parse().map_err(|_| format!("bad prefill_chunk '{v}'"))?
+                    }
+                    other => return Err(format!("unknown config arg '{other}'")),
+                }
+            }
+            return Ok(());
+        }
+        if let Some(rest) = line.strip_prefix("engine ") {
+            trace.setup.engine = EngineSpec::parse(rest)?;
+            return Ok(());
+        }
+        let Some(rest) = line.strip_prefix("tick ") else {
+            return Err(format!("unrecognized directive '{line}'"));
+        };
+        let mut it = rest.split_whitespace();
+        let at: u64 = it
+            .next()
+            .ok_or("tick needs a number")?
+            .parse()
+            .map_err(|_| "bad tick number".to_string())?;
+        match it.next() {
+            Some("panic") => {
+                let calls: u64 = it
+                    .next()
+                    .ok_or("panic needs a call count")?
+                    .parse()
+                    .map_err(|_| "bad panic call count".to_string())?;
+                trace.push(at, 0, Action::Panic { calls });
+            }
+            Some("conn") => {
+                let conn: u32 = it
+                    .next()
+                    .ok_or("conn needs a number")?
+                    .parse()
+                    .map_err(|_| "bad conn number".to_string())?;
+                let verb = it.next().ok_or("event needs an action")?;
+                let action = match verb {
+                    "open" => Action::Open,
+                    "close" => Action::Close,
+                    "disconnect" => Action::Disconnect,
+                    "stats" => Action::Stats,
+                    "feed" => Action::Feed(parse_tokens(it.next().ok_or("feed needs tokens")?)?),
+                    "next" => Action::Next(parse_tokens(it.next().ok_or("next needs tokens")?)?),
+                    "gen" => {
+                        let n: usize = it
+                            .next()
+                            .ok_or("gen needs a token count")?
+                            .parse()
+                            .map_err(|_| "bad gen token count".to_string())?;
+                        Action::Gen {
+                            n,
+                            params: SampleParams::from_kv_args(it)?,
+                        }
+                    }
+                    other => return Err(format!("unknown action '{other}'")),
+                };
+                trace.push(at, conn, action);
+            }
+            _ => return Err("tick needs 'conn <c> <action>' or 'panic <k>'".into()),
+        }
+        Ok(())
+    }
+
+    /// Render the canonical text form (normalized; re-parsing yields an
+    /// equal trace — `f32` `Display` is shortest-roundtrip, so sampler
+    /// temperatures survive the trip bit-exactly).
+    pub fn to_text(&self) -> String {
+        let b = &self.setup.batcher;
+        let mut s = String::new();
+        s.push_str("# llvq scheduler-simulator trace (format: rust/src/sim/trace.rs)\n");
+        s.push_str(&format!(
+            "config max_batch={} max_wait_ms={} max_sessions={} prefill_chunk={}\n",
+            b.max_batch,
+            b.max_wait.as_millis(),
+            b.max_sessions,
+            b.prefill_chunk
+        ));
+        s.push_str(&self.setup.engine.to_line());
+        s.push('\n');
+        let mut events = self.events.clone();
+        events.sort_by_key(|e| e.at);
+        for ev in &events {
+            match &ev.action {
+                Action::Panic { calls } => {
+                    s.push_str(&format!("tick {} panic {calls}\n", ev.at));
+                }
+                action => {
+                    s.push_str(&format!("tick {} conn {} ", ev.at, ev.conn));
+                    match action {
+                        Action::Open => s.push_str("open"),
+                        Action::Close => s.push_str("close"),
+                        Action::Disconnect => s.push_str("disconnect"),
+                        Action::Stats => s.push_str("stats"),
+                        Action::Feed(t) => s.push_str(&format!("feed {}", fmt_tokens(t))),
+                        Action::Next(t) => s.push_str(&format!("next {}", fmt_tokens(t))),
+                        Action::Gen { n, params } => s.push_str(&format!(
+                            "gen {n} temp={} topk={} seed={}",
+                            params.temperature, params.top_k, params.seed
+                        )),
+                        Action::Panic { .. } => unreachable!("matched above"),
+                    }
+                    s.push('\n');
+                }
+            }
+        }
+        s
+    }
+
+    /// Parse a committed `.trace` file.
+    pub fn load(path: &Path) -> Result<Trace, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Write the canonical text form to `path` (the "commit this failing
+    /// trace" workflow).
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        std::fs::write(path, self.to_text()).map_err(|e| format!("write {}: {e}", path.display()))
+    }
+}

@@ -3,11 +3,14 @@
 //! disconnects, against the fused backend with a small `prefill_chunk`
 //! (so every long prompt crosses many scheduler ticks).
 //!
-//! Assertions: no `ERR` on any well-formed command, no generation stall
-//! longer than `STALL_LIMIT` (the "no stall > N ticks" bound, expressed
-//! in wall time because ticks are not observable over the wire), every
-//! session's slot is reclaimed (STATS drains to `sessions=0`), and
-//! `Coordinator::stop` returns — a clean drain, not a hang.
+//! Assertions: no `ERR` on any well-formed command, every session's slot
+//! is reclaimed (STATS drains to `sessions=0`), and `Coordinator::stop`
+//! returns — a clean drain, not a hang. This tier keeps only what needs
+//! real sockets and threads; the timing-sensitive scheduling bounds that
+//! used to be sampled here in wall time (no per-token stall, no starved
+//! prefill job, slate limits) are asserted deterministically every
+//! virtual tick by the simulator tier (`rust/tests/sim.rs` over
+//! `llvq::sim`), where they cannot flake on a loaded runner.
 //!
 //! The test is `#[ignore]`d: it runs in CI's dedicated soak job via
 //! `cargo test --release --test soak -- --ignored` under an
@@ -38,10 +41,8 @@ use llvq::pipeline::rotation::RotationMode;
 use llvq::quant::scalar::UniformQuantizer;
 use llvq::util::proptest::TempArtifact;
 
-/// Worst tolerable gap between two TOK lines of one GEN (generous for
-/// loaded CI runners; a monolithic-prefill stall of a whole long prompt
-/// slate-wide would still sit far below this on the tiny model, so the
-/// bound guards against scheduler hangs, not micro-latency).
+/// Deadline for `ERR kv-oom` retries to clear (liveness only — the
+/// per-token pacing bounds live in the deterministic simulator tier).
 const STALL_LIMIT: Duration = Duration::from_secs(20);
 
 fn read_line(r: &mut BufReader<TcpStream>) -> String {
@@ -50,8 +51,8 @@ fn read_line(r: &mut BufReader<TcpStream>) -> String {
     line.trim().to_string()
 }
 
-/// One full client round; panics on any ERR or stall. Returns streamed
-/// token count.
+/// One full client round; panics on any ERR. Returns streamed token
+/// count.
 fn client_round(addr: std::net::SocketAddr, seed: u64, feed_len: usize, gen_n: usize) -> usize {
     let mut s = TcpStream::connect(addr).unwrap();
     let mut r = BufReader::new(s.try_clone().unwrap());
@@ -83,7 +84,6 @@ fn client_round(addr: std::net::SocketAddr, seed: u64, feed_len: usize, gen_n: u
     let oom_deadline = Instant::now() + STALL_LIMIT;
     writeln!(s, "GEN {gen_n} temp=0.8 topk=8 seed={seed}").unwrap();
     let mut got = 0usize;
-    let mut last = Instant::now();
     loop {
         let l = read_line(&mut r);
         if l.starts_with("ERR kv-oom") {
@@ -92,16 +92,9 @@ fn client_round(addr: std::net::SocketAddr, seed: u64, feed_len: usize, gen_n: u
             assert!(Instant::now() < oom_deadline, "kv-oom never cleared: {l}");
             std::thread::sleep(Duration::from_millis(20));
             writeln!(s, "GEN {gen_n} temp=0.8 topk=8 seed={seed}").unwrap();
-            last = Instant::now();
             continue;
         }
         if l.starts_with("TOK ") {
-            assert!(
-                last.elapsed() < STALL_LIMIT,
-                "stall of {:?} between tokens",
-                last.elapsed()
-            );
-            last = Instant::now();
             got += 1;
         } else {
             assert!(l.starts_with(&format!("OK generated={gen_n}")), "GEN end: {l}");

@@ -1,10 +1,14 @@
 #!/usr/bin/env bash
 # Run every bench harness that emits BENCH_*.json rows and leave the
-# files in the repo root (the kernel baseline BENCH_kernel.json is the
-# only one under version control — refresh it with this script). The
-# serving harness now also writes BENCH_kv.json: the paged-KV capacity
-# comparison (sessions-per-GB for dense vs paged vs paged+llvq cold
-# pages) plus measured decode tok/s across the three cache modes.
+# files in the repo root. BENCH_*.json is under version control (not
+# gitignored): commit the refreshed files alongside the change they
+# measure, so the perf trajectory lives in the tree rather than only in
+# CI workflow artifacts. The serving harness writes BENCH_serving.json
+# (backend rows plus a "sim" suite: one row per deterministic
+# scheduler-simulator scenario — wall time, virtual ticks, counters,
+# invariant verdict, determinism fingerprint), BENCH_generation.json,
+# BENCH_kernel.json, BENCH_prefill.json, and BENCH_kv.json; the packed
+# harness writes BENCH_packed.json.
 #
 # Defaults to smoke mode (LLVQ_BENCH_SMOKE=1: shrunken iteration counts
 # and codebook dims, rows tagged "smoke": true) so a laptop or CI runner
