@@ -1031,6 +1031,8 @@ impl SchedulerCore {
                     // with its FEED still queued) frees the cache, drops
                     // the queued tokens, and fails any GEN waiting on the
                     // job
+                    // lint:allow(no-panic-serving): `i` came from
+                    // position() on this same Vec one line up
                     let mut job = self.prefilling.remove(i).expect("index from position");
                     if let Some(wg) = job.waiting_gen.take() {
                         let _ = wg.stream.send(Err("session closed".into()));
@@ -1094,6 +1096,8 @@ impl SchedulerCore {
                 sess.cache.len()
             ));
         }
+        // lint:allow(no-panic-serving): the admission block above returned
+        // early unless `sid` is present in the map
         let mut sess = self.sessions.remove(&sid).expect("looked up above");
         // paged engines admit against actual pages, not worst-case
         // max_seq: an exhausted arena parks the session back and answers
@@ -1128,6 +1132,8 @@ impl SchedulerCore {
             let _ = stream.send(Err(e));
             return;
         }
+        // lint:allow(no-panic-serving): gen_admit_error just verified the
+        // session exists and holds logits
         let mut sess = self.sessions.remove(&sid).expect("admission checked");
         // reserve pages for the whole run before joining the slate: a
         // paged arena without room answers `kv-oom` as the stream's first
@@ -1140,6 +1146,8 @@ impl SchedulerCore {
         self.active.push(GenJob {
             sid,
             cache: sess.cache,
+            // lint:allow(no-panic-serving): gen_admit_error rejects
+            // sessions without logits before this point
             last_logits: sess.last_logits.expect("admission checked"),
             sampler: Sampler::new(params),
             remaining: n,
@@ -1218,6 +1226,8 @@ impl SchedulerCore {
             sid,
             Session {
                 cache,
+                // lint:allow(no-panic-serving): a job only drains after
+                // its final chunk ran, and every chunk stores logits
                 last_logits: Some(last_logits.expect("a drained job ran at least one chunk")),
             },
         );

@@ -1,6 +1,21 @@
 // std::simd is nightly-only; the portable kernel in quant::kernel is
 // opt-in behind this feature so stable builds never see the gate.
 #![cfg_attr(feature = "portable_simd", feature(portable_simd))]
+// Every unsafe operation inside an `unsafe fn` must sit in an explicit
+// `unsafe {}` block with its own SAFETY justification — the fn-level
+// keyword only states the *caller's* obligation. Enforced together with
+// the repo-native `llvq lint` safety-comment rule (see LINTS.md).
+#![deny(unsafe_op_in_unsafe_fn)]
+// Curated warn set (verify.sh runs clippy with -D warnings, so these are
+// effectively denies in CI): cheap hygiene lints that never fight the
+// codebase's established idioms.
+#![warn(
+    missing_abi,
+    non_ascii_idents,
+    keyword_idents,
+    unused_extern_crates,
+    unused_lifetimes
+)]
 
 //! # LLVQ — Leech Lattice Vector Quantization for LLM compression
 //!
@@ -117,6 +132,17 @@
 //!                             corpus (sim::scenario) that tests, CI's
 //!                             sim-scenarios job, and BENCH_serving.json
 //!                             all run against
+//! lint                        repo-native static analysis: a minimal
+//!                             Rust token scanner (lint::source), the
+//!                             rule set encoding the crate's own
+//!                             conventions — SAFETY-commented unsafe,
+//!                             panic-free serving paths, poison-recovering
+//!                             locks, dispatch-gated target_feature, and
+//!                             STATS/wire-literal consistency
+//!                             (lint::rules) — and the deterministic
+//!                             text/JSON reporter (lint::engine) behind
+//!                             `llvq lint`, scripts/verify.sh, and CI's
+//!                             lint job; LINTS.md documents every rule
 //! main (llvq pack/unpack/     CLI: produce, expand, inspect, serve, and
 //!       stats/serve/generate) generate from packed artifacts; serve
 //!                             --backend dense|cached|fused selects the
@@ -201,6 +227,15 @@ pub mod model {
 
 pub mod runtime;
 pub mod coordinator;
+
+pub mod lint {
+    //! Repo-native static analysis — see [`engine`] for the driver,
+    //! [`rules`] for the rule set, [`source`] for the token scanner, and
+    //! `LINTS.md` at the repo root for rationale and escape hatches.
+    pub mod source;
+    pub mod rules;
+    pub mod engine;
+}
 
 pub mod sim {
     //! Deterministic scheduler simulator — see [`harness`] for the

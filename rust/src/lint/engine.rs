@@ -1,0 +1,164 @@
+//! Lint driver: collect the tree, run the rules, render deterministically.
+//!
+//! Two entry points:
+//! * [`lint_files`] — pure: takes `(repo-relative path, text)` pairs and
+//!   returns sorted findings. Tests feed it virtual trees to prove each
+//!   rule fires (and doesn't) without touching the working copy.
+//! * [`run_lint`] — walks a real repo root (`rust/src`, `rust/tests`,
+//!   `rust/benches`, `examples`), skipping the committed lint fixtures,
+//!   and lints what it finds. `scripts/verify.sh` and CI's lint job call
+//!   this through `llvq lint`.
+//!
+//! Output is deterministic by construction: files are read in sorted
+//! path order and findings are sorted by (file, line, rule, message), so
+//! `--json` output is byte-identical across runs and machines.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::lint::rules::{self, Finding};
+use crate::lint::source::SourceFile;
+use crate::util::json::Json;
+
+/// Directories under the repo root that hold lintable Rust sources.
+pub const LINT_DIRS: &[&str] = &["rust/src", "rust/tests", "rust/benches", "examples"];
+
+/// Path components excluded from the walk: committed rule fixtures are
+/// *deliberately* dirty, and `target/` is build output.
+const SKIP_COMPONENTS: &[&str] = &["lint_fixtures", "target"];
+
+/// Lint a virtual tree of `(repo-relative path, source text)` pairs.
+pub fn lint_files(inputs: &[(String, String)]) -> Vec<Finding> {
+    let files: Vec<SourceFile> = inputs
+        .iter()
+        .map(|(p, t)| SourceFile::parse(p, t))
+        .collect();
+    let mut out = Vec::new();
+    for f in &files {
+        rules::check_file(f, &mut out);
+    }
+    rules::check_repo(&files, &mut out);
+    out.sort();
+    out.dedup();
+    out
+}
+
+/// Walk `root` and lint every tracked `.rs` source. `rule` restricts the
+/// report to one rule by name (the full set still runs; filtering is on
+/// output so cross-rule state never diverges).
+pub fn run_lint(root: &Path, rule: Option<&str>) -> Result<Vec<Finding>, String> {
+    if let Some(r) = rule {
+        if !rules::known_rule(r) {
+            let names: Vec<&str> = rules::RULES.iter().map(|(n, _)| *n).collect();
+            return Err(format!("unknown rule `{r}` (have: {})", names.join(", ")));
+        }
+    }
+    let inputs = collect_inputs(root)?;
+    if inputs.is_empty() {
+        return Err(format!(
+            "no Rust sources under {} (expected {})",
+            root.display(),
+            LINT_DIRS.join(", ")
+        ));
+    }
+    let mut findings = lint_files(&inputs);
+    if let Some(r) = rule {
+        findings.retain(|f| f.rule == r);
+    }
+    Ok(findings)
+}
+
+/// Read every lintable source under `root`, sorted by relative path.
+pub fn collect_inputs(root: &Path) -> Result<Vec<(String, String)>, String> {
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for dir in LINT_DIRS {
+        let abs = root.join(dir);
+        if abs.is_dir() {
+            walk(&abs, &mut paths)?;
+        }
+    }
+    let mut inputs = Vec::with_capacity(paths.len());
+    for p in paths {
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(&p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text =
+            fs::read_to_string(&p).map_err(|e| format!("reading {}: {e}", p.display()))?;
+        inputs.push((rel, text));
+    }
+    inputs.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(inputs)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let rd = fs::read_dir(dir).map_err(|e| format!("reading {}: {e}", dir.display()))?;
+    let mut entries: Vec<PathBuf> = Vec::new();
+    for e in rd {
+        entries.push(e.map_err(|e| format!("reading {}: {e}", dir.display()))?.path());
+    }
+    entries.sort();
+    for p in entries {
+        let name = p.file_name().map(|n| n.to_string_lossy().to_string());
+        if let Some(n) = &name {
+            if SKIP_COMPONENTS.contains(&n.as_str()) || n.starts_with('.') {
+                continue;
+            }
+        }
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// `file:line: [rule] message` per finding plus a one-line summary —
+/// stable, grep-able, and clickable in most terminals.
+pub fn render_text(findings: &[Finding]) -> String {
+    let mut out = String::new();
+    for f in findings {
+        out.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.message));
+    }
+    if findings.is_empty() {
+        out.push_str("lint clean: 0 findings\n");
+    } else {
+        out.push_str(&format!("lint: {} finding(s)\n", findings.len()));
+    }
+    out
+}
+
+/// Compact JSON report; keys and array order are deterministic.
+pub fn render_json(findings: &[Finding]) -> String {
+    let arr = findings
+        .iter()
+        .map(|f| {
+            Json::obj(vec![
+                ("file", Json::Str(f.file.clone())),
+                ("line", Json::Int(f.line as i64)),
+                ("rule", Json::Str(f.rule.to_string())),
+                ("message", Json::Str(f.message.clone())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("findings", Json::Arr(arr)),
+        ("total", Json::Int(findings.len() as i64)),
+    ])
+    .to_string_compact()
+}
+
+/// Walk upward from `start` to the first directory that looks like this
+/// repo's root (has both `Cargo.toml` and `rust/`).
+pub fn find_repo_root(start: &Path) -> Option<PathBuf> {
+    let mut cur = Some(start.to_path_buf());
+    while let Some(d) = cur {
+        if d.join("Cargo.toml").is_file() && d.join("rust").is_dir() {
+            return Some(d);
+        }
+        cur = d.parent().map(|p| p.to_path_buf());
+    }
+    None
+}

@@ -1,0 +1,653 @@
+//! The rule set: invariants the repo already relies on, now enforced.
+//!
+//! Each rule matches token shapes or line patterns from
+//! [`crate::lint::source::SourceFile`] — deliberately conservative
+//! patterns with near-zero false positives on this tree, escapable (where
+//! escape makes sense) via an inline `lint:allow` comment directive
+//! carrying a reason. See `LINTS.md` at the repo root for the rationale
+//! and one worked example per rule.
+
+use crate::lint::source::{SourceFile, TokKind};
+
+/// One reported violation. The derived ordering (file, line, rule,
+/// message) is the engine's deterministic output order.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+pub const SAFETY_COMMENT: &str = "safety-comment";
+pub const NO_PANIC_SERVING: &str = "no-panic-serving";
+pub const LOCK_POISON: &str = "lock-poison";
+pub const TARGET_FEATURE_UNSAFE: &str = "target-feature-unsafe";
+pub const STATS_WIRE_ORDER: &str = "stats-wire-order";
+pub const ALLOW_SYNTAX: &str = "allow-syntax";
+
+/// `(name, summary)` for `--rule` validation and the text report footer.
+pub const RULES: &[(&str, &str)] = &[
+    (
+        SAFETY_COMMENT,
+        "every unsafe block/fn/impl carries a SAFETY: justification",
+    ),
+    (
+        NO_PANIC_SERVING,
+        "no unwrap/expect/panic in non-test serving-path modules",
+    ),
+    (
+        LOCK_POISON,
+        "lock() results recover from poisoning, never bare-unwrap",
+    ),
+    (
+        TARGET_FEATURE_UNSAFE,
+        "target_feature fns are unsafe and live behind quant::kernel dispatch",
+    ),
+    (
+        STATS_WIRE_ORDER,
+        "STATS field order and wire-protocol verbs stay consistent everywhere",
+    ),
+    (
+        ALLOW_SYNTAX,
+        "lint:allow directives name a real rule and carry a reason",
+    ),
+];
+
+/// Non-test serving-path modules rule 2 guards: a panic here tears down a
+/// worker mid-request. (`main.rs` is CLI startup — usage errors exit on
+/// purpose — and stays out of scope; see LINTS.md.)
+pub const SERVING_MODULES: &[&str] = &[
+    "rust/src/coordinator.rs",
+    "rust/src/model/backend.rs",
+    "rust/src/model/kvpage.rs",
+    "rust/src/util/threadpool.rs",
+];
+
+/// Every verb a `write!`/`writeln!` reply may lead with: v1/v2 requests
+/// echoed in errors plus the reply verbs themselves.
+pub const WIRE_VERBS: &[&str] = &[
+    "CLOSE", "ERR", "FEED", "GEN", "NEXT", "OK", "OPEN", "QUEUED", "QUIT", "STATS", "TOK",
+];
+
+/// Request verbs the coordinator must recognize as string literals.
+pub const REQUEST_VERBS: &[&str] = &["OPEN", "FEED", "GEN", "CLOSE", "NEXT", "STATS", "QUIT"];
+
+/// Lowercase event verbs the sim trace format commits to.
+pub const TRACE_VERBS: &[&str] = &["open", "feed", "gen", "close"];
+
+pub fn known_rule(name: &str) -> bool {
+    RULES.iter().any(|(n, _)| *n == name)
+}
+
+/// Run every per-file rule over `f`.
+pub fn check_file(f: &SourceFile, out: &mut Vec<Finding>) {
+    check_safety_comments(f, out);
+    check_no_panic_serving(f, out);
+    check_lock_poison(f, out);
+    check_target_feature(f, out);
+    check_reply_verbs(f, out);
+    check_allow_syntax(f, out);
+}
+
+/// Run the repo-level consistency rule (STATS field order across files)
+/// over the whole file set.
+pub fn check_repo(files: &[SourceFile], out: &mut Vec<Finding>) {
+    let coordinator = files
+        .iter()
+        .find(|f| f.path.ends_with("src/coordinator.rs"));
+    let canon = match coordinator.and_then(extract_canonical_fields) {
+        Some(c) => c,
+        None => {
+            if let Some(f) = coordinator {
+                out.push(Finding {
+                    file: f.path.clone(),
+                    line: 1,
+                    rule: STATS_WIRE_ORDER,
+                    message: "could not locate the canonical `fields: vec![..]` list in \
+                              Metrics::snapshot"
+                        .to_string(),
+                });
+            }
+            return;
+        }
+    };
+    check_canonical_shape(&canon, out);
+    if let Some(f) = coordinator {
+        check_stats_doc_table(f, &canon.fields, out);
+        check_request_verbs_present(f, out);
+    }
+    for f in files {
+        check_field_order_lines(f, &canon.fields, out);
+        if f.path.ends_with("sim/trace.rs") {
+            check_trace_verbs_present(f, out);
+        }
+    }
+}
+
+// ---------------------------------------------------------------- rule 1
+
+fn check_safety_comments(f: &SourceFile, out: &mut Vec<Finding>) {
+    for site in f.unsafe_sites() {
+        if f.has_safety_comment(site.line) || f.allowed(SAFETY_COMMENT, site.line) {
+            continue;
+        }
+        out.push(Finding {
+            file: f.path.clone(),
+            line: site.line,
+            rule: SAFETY_COMMENT,
+            message: format!(
+                "unsafe {} without a `SAFETY:` comment (or `# Safety` doc section) \
+                 attached above it",
+                site.kind
+            ),
+        });
+    }
+}
+
+// ---------------------------------------------------------------- rule 2
+
+fn check_no_panic_serving(f: &SourceFile, out: &mut Vec<Finding>) {
+    if !SERVING_MODULES.contains(&f.path.as_str()) {
+        return;
+    }
+    let toks = &f.toks;
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident || f.in_test(t.line) {
+            continue;
+        }
+        let hit = match t.text.as_str() {
+            // method call: `.unwrap()` / `.expect(`
+            "unwrap" | "expect" => {
+                i > 0
+                    && toks[i - 1].text == "."
+                    && toks.get(i + 1).is_some_and(|n| n.text == "(")
+            }
+            // panicking macro invocation
+            "panic" | "unreachable" | "todo" | "unimplemented" => {
+                toks.get(i + 1).is_some_and(|n| n.text == "!")
+            }
+            _ => false,
+        };
+        if !hit || f.allowed(NO_PANIC_SERVING, t.line) {
+            continue;
+        }
+        out.push(Finding {
+            file: f.path.clone(),
+            line: t.line,
+            rule: NO_PANIC_SERVING,
+            message: format!(
+                "`{}` on the serving path — return an Err, or justify with a \
+                 lint:allow directive carrying a reason",
+                t.text
+            ),
+        });
+    }
+}
+
+// ---------------------------------------------------------------- rule 3
+
+fn check_lock_poison(f: &SourceFile, out: &mut Vec<Finding>) {
+    let toks = &f.toks;
+    for i in 1..toks.len() {
+        if toks[i].kind != TokKind::Ident || toks[i].text != "lock" {
+            continue;
+        }
+        let bare = toks[i - 1].text == "."
+            && toks.get(i + 1).is_some_and(|t| t.text == "(")
+            && toks.get(i + 2).is_some_and(|t| t.text == ")")
+            && toks.get(i + 3).is_some_and(|t| t.text == ".")
+            && toks
+                .get(i + 4)
+                .is_some_and(|t| t.text == "unwrap" || t.text == "expect");
+        let line = toks[i].line;
+        if !bare || f.in_test(line) || f.allowed(LOCK_POISON, line) {
+            continue;
+        }
+        out.push(Finding {
+            file: f.path.clone(),
+            line,
+            rule: LOCK_POISON,
+            message: "bare `.lock().unwrap()` — recover from poisoning with \
+                      `.unwrap_or_else(|e| e.into_inner())` (threadpool::relock is \
+                      the canonical helper)"
+                .to_string(),
+        });
+    }
+}
+
+// ---------------------------------------------------------------- rule 4
+
+fn check_target_feature(f: &SourceFile, out: &mut Vec<Finding>) {
+    let toks = &f.toks;
+    let in_dispatch_module = f.path.ends_with("src/quant/kernel.rs");
+    let mut any_attr = false;
+    let mut i = 0;
+    while i + 2 < toks.len() {
+        let is_attr = toks[i].text == "#"
+            && toks[i + 1].text == "["
+            && toks[i + 2].text == "target_feature";
+        if !is_attr {
+            i += 1;
+            continue;
+        }
+        any_attr = true;
+        let attr_line = toks[i].line;
+        let mut j = skip_attr(toks, i + 1);
+        // scan the item header (skipping further attributes) for `unsafe`
+        // before `fn`
+        let mut saw_unsafe = false;
+        let mut saw_fn = false;
+        let mut guard = 0;
+        while j < toks.len() && guard < 48 {
+            if toks[j].text == "#" && toks.get(j + 1).is_some_and(|t| t.text == "[") {
+                j = skip_attr(toks, j + 1);
+                guard += 1;
+                continue;
+            }
+            if toks[j].kind == TokKind::Ident {
+                match toks[j].text.as_str() {
+                    "unsafe" => saw_unsafe = true,
+                    "fn" => {
+                        saw_fn = true;
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+            j += 1;
+            guard += 1;
+        }
+        if saw_fn && !saw_unsafe && !f.allowed(TARGET_FEATURE_UNSAFE, attr_line) {
+            out.push(Finding {
+                file: f.path.clone(),
+                line: attr_line,
+                rule: TARGET_FEATURE_UNSAFE,
+                message: "#[target_feature] function must be declared `unsafe` — callers \
+                          must prove the CPU support the attribute assumes"
+                    .to_string(),
+            });
+        }
+        if !in_dispatch_module && !f.allowed(TARGET_FEATURE_UNSAFE, attr_line) {
+            out.push(Finding {
+                file: f.path.clone(),
+                line: attr_line,
+                rule: TARGET_FEATURE_UNSAFE,
+                message: "#[target_feature] outside rust/src/quant/kernel.rs — feature-gated \
+                          code must stay behind the runtime-detection dispatch there"
+                    .to_string(),
+            });
+        }
+        i = j + 1;
+    }
+    if any_attr && in_dispatch_module {
+        let has_detect = toks.iter().any(|t| {
+            t.kind == TokKind::Ident
+                && (t.text == "is_x86_feature_detected" || t.text == "is_aarch64_feature_detected")
+        });
+        if !has_detect {
+            out.push(Finding {
+                file: f.path.clone(),
+                line: 1,
+                rule: TARGET_FEATURE_UNSAFE,
+                message: "dispatch module declares #[target_feature] fns but never calls a \
+                          runtime feature-detection macro"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// `toks[open_idx]` is the `[` of an attribute; return the index just
+/// past its matching `]`.
+fn skip_attr(toks: &[crate::lint::source::Tok], open_idx: usize) -> usize {
+    let mut depth = 0usize;
+    let mut j = open_idx;
+    while j < toks.len() {
+        match toks[j].text.as_str() {
+            "[" => depth += 1,
+            "]" => {
+                depth -= 1;
+                if depth == 0 {
+                    return j + 1;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    j
+}
+
+// ---------------------------------------------------------------- rule 5
+
+struct CanonicalFields {
+    fields: Vec<String>,
+    file: String,
+    line: usize,
+}
+
+/// Pull the canonical STATS field order out of `Metrics::snapshot`'s
+/// `fields: vec![("name", value), ..]` literal.
+fn extract_canonical_fields(f: &SourceFile) -> Option<CanonicalFields> {
+    let toks = &f.toks;
+    for i in 0..toks.len().saturating_sub(4) {
+        let hit = toks[i].text == "fields"
+            && toks[i + 1].text == ":"
+            && toks[i + 2].text == "vec"
+            && toks[i + 3].text == "!"
+            && toks[i + 4].text == "[";
+        if !hit {
+            continue;
+        }
+        let mut fields = Vec::new();
+        let mut depth = 0i32;
+        let mut j = i + 4;
+        while j < toks.len() {
+            let t = &toks[j];
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    "[" => depth += 1,
+                    "]" => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            // a tuple key: string right after `(` that follows `[` or `,`
+            if t.kind == TokKind::Str
+                && j >= 2
+                && toks[j - 1].text == "("
+                && matches!(toks[j - 2].text.as_str(), "[" | ",")
+            {
+                fields.push(t.text.clone());
+            }
+            j += 1;
+        }
+        if fields.is_empty() {
+            return None;
+        }
+        return Some(CanonicalFields {
+            fields,
+            file: f.path.clone(),
+            line: toks[i].line,
+        });
+    }
+    None
+}
+
+/// The canonical list itself must keep `resident_bytes` last (bench
+/// parsers rsplit on it) and the kv page counters ahead of `threads`.
+fn check_canonical_shape(canon: &CanonicalFields, out: &mut Vec<Finding>) {
+    if canon.fields.last().map(|s| s.as_str()) != Some("resident_bytes") {
+        out.push(Finding {
+            file: canon.file.clone(),
+            line: canon.line,
+            rule: STATS_WIRE_ORDER,
+            message: "`resident_bytes` must be the last snapshot field — parsers split it \
+                      off the line tail"
+                .to_string(),
+        });
+    }
+    let threads_at = canon.fields.iter().position(|s| s == "threads");
+    if let Some(ti) = threads_at {
+        for (i, name) in canon.fields.iter().enumerate() {
+            if name.starts_with("kv_") && i > ti {
+                out.push(Finding {
+                    file: canon.file.clone(),
+                    line: canon.line,
+                    rule: STATS_WIRE_ORDER,
+                    message: format!("kv page counter `{name}` must precede `threads=` in the \
+                                      snapshot field order"),
+                });
+            }
+        }
+    }
+}
+
+/// Position of `name=` in `line` as a standalone field key (the
+/// preceding char must not extend an identifier, so `kv_quant=` never
+/// matches inside `kv_quantized=`).
+fn find_field(line: &str, name: &str) -> Option<usize> {
+    let bytes = line.as_bytes();
+    let mut from = 0usize;
+    while let Some(rel) = line[from..].find(name) {
+        let at = from + rel;
+        let end = at + name.len();
+        let prev_ok = at == 0 || {
+            let p = bytes[at - 1];
+            !(p.is_ascii_alphanumeric() || p == b'_')
+        };
+        if prev_ok && bytes.get(end) == Some(&b'=') {
+            return Some(at);
+        }
+        from = at + 1;
+    }
+    None
+}
+
+/// The coordinator rustdoc's STATS reply row must list every canonical
+/// field, in canonical order — docs drift silently otherwise.
+fn check_stats_doc_table(f: &SourceFile, canon: &[String], out: &mut Vec<Finding>) {
+    let doc = f
+        .comments
+        .iter()
+        .find(|(_, text)| text.contains("STATS") && text.contains("requests="));
+    let (&line, text) = match doc {
+        Some(d) => d,
+        None => {
+            out.push(Finding {
+                file: f.path.clone(),
+                line: 1,
+                rule: STATS_WIRE_ORDER,
+                message: "no rustdoc line documents the STATS reply fields (expected a doc \
+                          row mentioning STATS with the field list)"
+                    .to_string(),
+            });
+            return;
+        }
+    };
+    let mut last: Option<(usize, &str)> = None;
+    for name in canon {
+        match find_field(text, name) {
+            Some(p) => {
+                if let Some((lp, lname)) = last {
+                    if p < lp {
+                        out.push(Finding {
+                            file: f.path.clone(),
+                            line,
+                            rule: STATS_WIRE_ORDER,
+                            message: format!(
+                                "STATS doc lists `{name}` before `{lname}` — out of snapshot \
+                                 order"
+                            ),
+                        });
+                        return;
+                    }
+                }
+                last = Some((p, name));
+            }
+            None => {
+                out.push(Finding {
+                    file: f.path.clone(),
+                    line,
+                    rule: STATS_WIRE_ORDER,
+                    message: format!("STATS doc row is missing snapshot field `{name}`"),
+                });
+                return;
+            }
+        }
+    }
+}
+
+/// Any line (code, doc, or literal) quoting three or more snapshot
+/// fields must quote them in canonical order — this is what keeps the
+/// sim dump, serve_tcp rustdoc, transcripts, and bench parsers agreeing.
+fn check_field_order_lines(f: &SourceFile, canon: &[String], out: &mut Vec<Finding>) {
+    for (idx, line) in f.lines.iter().enumerate() {
+        let mut present: Vec<(usize, usize)> = canon
+            .iter()
+            .enumerate()
+            .filter_map(|(ci, name)| find_field(line, name).map(|pos| (pos, ci)))
+            .collect();
+        if present.len() < 3 {
+            continue;
+        }
+        present.sort_unstable();
+        let lno = idx + 1;
+        if f.allowed(STATS_WIRE_ORDER, lno) {
+            continue;
+        }
+        for w in present.windows(2) {
+            if w[0].1 >= w[1].1 {
+                out.push(Finding {
+                    file: f.path.clone(),
+                    line: lno,
+                    rule: STATS_WIRE_ORDER,
+                    message: format!(
+                        "`{}` quoted before `{}` — snapshot fields must appear in \
+                         Metrics::snapshot order wherever three or more are named",
+                        canon[w[1].1], canon[w[0].1]
+                    ),
+                });
+                break;
+            }
+        }
+    }
+}
+
+/// `write!`/`writeln!` replies must lead with a known wire verb: a typo'd
+/// or invented verb would silently break every client parser.
+fn check_reply_verbs(f: &SourceFile, out: &mut Vec<Finding>) {
+    let toks = &f.toks;
+    for i in 0..toks.len() {
+        let is_write = toks[i].kind == TokKind::Ident
+            && (toks[i].text == "write" || toks[i].text == "writeln")
+            && toks.get(i + 1).is_some_and(|t| t.text == "!")
+            && toks.get(i + 2).is_some_and(|t| t.text == "(");
+        if !is_write {
+            continue;
+        }
+        let mut depth = 0i32;
+        let mut j = i + 2;
+        let limit = (i + 32).min(toks.len());
+        while j < limit {
+            match (toks[j].kind, toks[j].text.as_str()) {
+                (TokKind::Punct, "(") => depth += 1,
+                (TokKind::Punct, ")") => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                (TokKind::Str, _) if depth == 1 => {
+                    let line = toks[j].line;
+                    if let Some(verb) = leading_caps_word(&toks[j].text) {
+                        if !WIRE_VERBS.contains(&verb)
+                            && !f.in_test(line)
+                            && !f.allowed(STATS_WIRE_ORDER, line)
+                        {
+                            out.push(Finding {
+                                file: f.path.clone(),
+                                line,
+                                rule: STATS_WIRE_ORDER,
+                                message: format!(
+                                    "reply leads with `{verb}`, which is not a wire-protocol \
+                                     verb — clients key on the first word"
+                                ),
+                            });
+                        }
+                    }
+                    break;
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+    }
+}
+
+/// Leading run of 2+ uppercase ASCII letters terminated by end, space, or
+/// a format placeholder.
+fn leading_caps_word(s: &str) -> Option<&str> {
+    let end = s
+        .find(|c: char| !c.is_ascii_uppercase())
+        .unwrap_or(s.len());
+    if end < 2 {
+        return None;
+    }
+    match s[end..].chars().next() {
+        None | Some(' ') | Some('{') => Some(&s[..end]),
+        _ => None,
+    }
+}
+
+/// The coordinator must keep recognizing every request verb literally.
+fn check_request_verbs_present(f: &SourceFile, out: &mut Vec<Finding>) {
+    for verb in REQUEST_VERBS {
+        let present = f.toks.iter().any(|t| {
+            t.kind == TokKind::Str
+                && (t.text == *verb || t.text.strip_prefix(verb).is_some_and(|r| r.starts_with(' ')))
+        });
+        if !present {
+            out.push(Finding {
+                file: f.path.clone(),
+                line: 1,
+                rule: STATS_WIRE_ORDER,
+                message: format!(
+                    "request verb `{verb}` no longer appears as a string literal — the \
+                     wire protocol must keep accepting it"
+                ),
+            });
+        }
+    }
+}
+
+/// The committed trace format keeps its lowercase event verbs.
+fn check_trace_verbs_present(f: &SourceFile, out: &mut Vec<Finding>) {
+    for verb in TRACE_VERBS {
+        let present = f
+            .toks
+            .iter()
+            .any(|t| t.kind == TokKind::Str && t.text == *verb);
+        if !present {
+            out.push(Finding {
+                file: f.path.clone(),
+                line: 1,
+                rule: STATS_WIRE_ORDER,
+                message: format!(
+                    "trace event verb `{verb}` no longer appears as a string literal — \
+                     committed .trace files would stop replaying"
+                ),
+            });
+        }
+    }
+}
+
+// ----------------------------------------------------------- meta rule
+
+fn check_allow_syntax(f: &SourceFile, out: &mut Vec<Finding>) {
+    for a in &f.allows {
+        let message = if a.malformed {
+            "unterminated lint:allow directive — expected `(<rule>): <reason>`".to_string()
+        } else if !known_rule(&a.rule) {
+            format!("lint:allow names unknown rule `{}`", a.rule)
+        } else if a.reason.len() < 3 {
+            format!(
+                "lint:allow({}) carries no reason — say why the exception is sound",
+                a.rule
+            )
+        } else {
+            continue;
+        };
+        out.push(Finding {
+            file: f.path.clone(),
+            line: a.comment_line,
+            rule: ALLOW_SYNTAX,
+            message,
+        });
+    }
+}

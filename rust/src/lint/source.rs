@@ -1,0 +1,611 @@
+//! Minimal Rust source scanner backing the repo-native lint engine.
+//!
+//! Deliberately not a parser: a lossy token stream (identifiers,
+//! punctuation, string/char/number literals, lifetimes) plus the comment
+//! list and a handful of line classifications — code lines, attribute
+//! lines, `#[cfg(test)]` regions — is enough for every rule in
+//! [`crate::lint::rules`], and keeps the whole pass dependency-free. The
+//! scanner is honest about what it is: rules match token shapes and line
+//! patterns, not semantics, which is exactly the granularity the repo's
+//! conventions (`// SAFETY:`, poison-recovering locks, wire-literal
+//! ordering) are written at.
+
+use std::collections::BTreeMap;
+
+/// Token classes the rules discriminate on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    /// String literal (normal / raw / byte). `text` holds the content
+    /// between the quotes, escape sequences left as written.
+    Str,
+    /// Char or number literal; the content is irrelevant to every rule.
+    Lit,
+    /// A lifetime such as `'a` (`text` excludes the tick).
+    Lifetime,
+    /// A single punctuation character.
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    /// 1-based line the token starts on.
+    pub line: usize,
+}
+
+/// A parsed `lint:allow` escape hatch: `// lint:allow` followed by
+/// `(<rule>): <reason>`. (Spelled out indirectly here so this very doc
+/// comment is not itself parsed as a directive.)
+#[derive(Debug, Clone)]
+pub struct AllowDirective {
+    pub rule: String,
+    pub reason: String,
+    /// Line the directive governs: the comment's own line when it trails a
+    /// statement, otherwise the next code line below it.
+    pub target_line: usize,
+    /// Line the comment itself sits on (for reporting).
+    pub comment_line: usize,
+    /// The `(` had no matching `)` — reported by the allow-syntax rule.
+    pub malformed: bool,
+}
+
+/// One scanned source file: raw lines, token stream, comments, and the
+/// line classifications the rules consume.
+pub struct SourceFile {
+    /// Repo-relative path with forward slashes (e.g. `rust/src/lib.rs`).
+    pub path: String,
+    pub lines: Vec<String>,
+    pub toks: Vec<Tok>,
+    /// Line → concatenated comment text on that line (markers stripped,
+    /// trimmed). Doc comments keep their extra `/` or `!` as leading text.
+    pub comments: BTreeMap<usize, String>,
+    /// Whole file is test/bench/example context (path under `rust/tests`,
+    /// `rust/benches`, or `examples`).
+    pub is_test_file: bool,
+    pub allows: Vec<AllowDirective>,
+    code: Vec<bool>,
+    attr: Vec<bool>,
+    test: Vec<bool>,
+}
+
+/// A site the `safety-comment` rule must find a justification for.
+#[derive(Debug, Clone, Copy)]
+pub struct UnsafeSite {
+    pub line: usize,
+    pub kind: &'static str,
+}
+
+impl SourceFile {
+    pub fn parse(path: &str, text: &str) -> SourceFile {
+        let lines: Vec<String> = text.lines().map(|l| l.to_string()).collect();
+        let nlines = lines.len();
+        let (toks, comments) = lex(text);
+
+        let mut code = vec![false; nlines + 2];
+        let mut attr = vec![false; nlines + 2];
+        let mut first_on_line: BTreeMap<usize, usize> = BTreeMap::new();
+        for (i, t) in toks.iter().enumerate() {
+            if t.line < code.len() {
+                code[t.line] = true;
+            }
+            first_on_line.entry(t.line).or_insert(i);
+        }
+        for (&line, &i) in &first_on_line {
+            if toks[i].kind == TokKind::Punct && toks[i].text == "#" {
+                attr[line] = true;
+            }
+        }
+
+        let test = test_regions(&toks, nlines);
+        let is_test_file = {
+            let p = path.replace('\\', "/");
+            p.starts_with("rust/tests/")
+                || p.starts_with("rust/benches/")
+                || p.starts_with("examples/")
+        };
+
+        let mut f = SourceFile {
+            path: path.replace('\\', "/"),
+            lines,
+            toks,
+            comments,
+            is_test_file,
+            allows: Vec::new(),
+            code,
+            attr,
+            test,
+        };
+        f.allows = f.parse_allows();
+        f
+    }
+
+    /// True when any token starts on `line` (1-based).
+    pub fn is_code_line(&self, line: usize) -> bool {
+        self.code.get(line).copied().unwrap_or(false)
+    }
+
+    /// True when the first token on `line` is `#` (an attribute).
+    pub fn is_attr_line(&self, line: usize) -> bool {
+        self.attr.get(line).copied().unwrap_or(false)
+    }
+
+    /// True inside a `#[cfg(test)]` item or anywhere in a test/bench/
+    /// example file.
+    pub fn in_test(&self, line: usize) -> bool {
+        self.is_test_file || self.test.get(line).copied().unwrap_or(false)
+    }
+
+    pub fn comment_on(&self, line: usize) -> Option<&str> {
+        self.comments.get(&line).map(|s| s.as_str())
+    }
+
+    /// A valid `lint:allow` directive for `rule` (known shape,
+    /// non-trivial reason) governs `line`. Malformed directives never
+    /// suppress — they are themselves findings of the allow-syntax rule.
+    pub fn allowed(&self, rule: &str, line: usize) -> bool {
+        self.allows.iter().any(|a| {
+            a.rule == rule && a.target_line == line && !a.malformed && a.reason.len() >= 3
+        })
+    }
+
+    /// Every `unsafe` introducing a block, fn, impl, trait, or extern
+    /// block. `unsafe fn` in *type position* (`call: unsafe fn(..)`,
+    /// `as unsafe fn(..)`) is not a site — there is nothing to justify at
+    /// a type.
+    pub fn unsafe_sites(&self) -> Vec<UnsafeSite> {
+        let mut out = Vec::new();
+        for (i, t) in self.toks.iter().enumerate() {
+            if t.kind != TokKind::Ident || t.text != "unsafe" {
+                continue;
+            }
+            let next = match self.toks.get(i + 1) {
+                Some(n) => n,
+                None => continue,
+            };
+            let kind = match (next.kind, next.text.as_str()) {
+                (TokKind::Punct, "{") => "block",
+                (TokKind::Ident, "fn") => {
+                    if self.fn_type_position(i) {
+                        continue;
+                    }
+                    "fn"
+                }
+                (TokKind::Ident, "extern") => "fn",
+                (TokKind::Ident, "impl") => "impl",
+                (TokKind::Ident, "trait") => "trait",
+                _ => continue,
+            };
+            out.push(UnsafeSite { line: t.line, kind });
+        }
+        out
+    }
+
+    /// `unsafe fn` preceded by `:`/`(`/`,`/`<`/`=`/`&`/`>` (the tail of
+    /// `->`) or `as` is a function-pointer type, not a declaration.
+    fn fn_type_position(&self, unsafe_idx: usize) -> bool {
+        let prev = match unsafe_idx.checked_sub(1).and_then(|p| self.toks.get(p)) {
+            Some(p) => p,
+            None => return false,
+        };
+        match prev.kind {
+            TokKind::Punct => {
+                matches!(prev.text.as_str(), ":" | "(" | "," | "<" | "=" | "&" | ">" | "|")
+            }
+            TokKind::Ident => prev.text == "as",
+            _ => false,
+        }
+    }
+
+    /// Walk the comment block attached to `site_line` (same line, or
+    /// upward over comment and attribute lines) looking for a `SAFETY:`
+    /// marker or a rustdoc `# Safety` section. A blank or plain-code line
+    /// breaks the association.
+    pub fn has_safety_comment(&self, site_line: usize) -> bool {
+        let is_safety =
+            |c: &str| c.contains("SAFETY:") || c.contains("SAFETY(") || c.contains("# Safety");
+        if self.comment_on(site_line).is_some_and(is_safety) {
+            return true;
+        }
+        let mut l = site_line;
+        while l > 1 {
+            l -= 1;
+            let comment = self.comment_on(l);
+            let code = self.is_code_line(l);
+            if let Some(c) = comment {
+                if is_safety(c) {
+                    return true;
+                }
+                if !code {
+                    continue; // comment-only line: keep walking the block
+                }
+                return false; // trailing comment of the statement above
+            }
+            if self.is_attr_line(l) {
+                continue; // attributes sit between the comment and the item
+            }
+            return false;
+        }
+        false
+    }
+
+    fn parse_allows(&self) -> Vec<AllowDirective> {
+        let mut out = Vec::new();
+        for (&line, text) in &self.comments {
+            let mut rest = text.as_str();
+            while let Some(pos) = rest.find("lint:allow(") {
+                let after = &rest[pos + "lint:allow(".len()..];
+                let (rule, reason, malformed) = match after.find(')') {
+                    Some(close) => {
+                        let reason = after[close + 1..]
+                            .trim_start_matches([':', '-', ' '])
+                            .trim()
+                            .to_string();
+                        (after[..close].trim().to_string(), reason, false)
+                    }
+                    None => (after.trim().to_string(), String::new(), true),
+                };
+                let target_line = if self.is_code_line(line) {
+                    line
+                } else {
+                    // governs the next code line below the comment
+                    (line + 1..self.lines.len() + 1)
+                        .find(|&l| self.is_code_line(l))
+                        .unwrap_or(line)
+                };
+                out.push(AllowDirective {
+                    rule,
+                    reason,
+                    target_line,
+                    comment_line: line,
+                    malformed,
+                });
+                rest = after;
+            }
+        }
+        out
+    }
+}
+
+/// Mark the line span of every item annotated `#[cfg(test)]`: from the
+/// attribute to the matching close brace of the item body (or the
+/// terminating `;` for brace-less items).
+fn test_regions(toks: &[Tok], nlines: usize) -> Vec<bool> {
+    let mut test = vec![false; nlines + 2];
+    let pat = ["#", "[", "cfg", "(", "test", ")", "]"];
+    let mut i = 0;
+    while i + pat.len() <= toks.len() {
+        let hit = toks[i..i + pat.len()]
+            .iter()
+            .zip(pat.iter())
+            .all(|(t, p)| t.text == *p);
+        if !hit {
+            i += 1;
+            continue;
+        }
+        let start_line = toks[i].line;
+        let mut j = i + pat.len();
+        let mut depth = 0usize;
+        let mut end_line = start_line;
+        while let Some(t) = toks.get(j) {
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    "{" => depth += 1,
+                    "}" => {
+                        depth = depth.saturating_sub(1);
+                        if depth == 0 {
+                            end_line = t.line;
+                            break;
+                        }
+                    }
+                    ";" if depth == 0 => {
+                        end_line = t.line;
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+            end_line = t.line;
+            j += 1;
+        }
+        for l in start_line..=end_line.min(nlines) {
+            test[l] = true;
+        }
+        i = j + 1;
+    }
+    test
+}
+
+/// Tokenize `text`. Returns the token stream plus a map of line →
+/// comment text (line and block comments; block comments are recorded on
+/// their first line).
+fn lex(text: &str) -> (Vec<Tok>, BTreeMap<usize, String>) {
+    let cs: Vec<char> = text.chars().collect();
+    let n = cs.len();
+    let mut toks = Vec::new();
+    let mut comments: BTreeMap<usize, String> = BTreeMap::new();
+    let mut push_comment = |line: usize, body: &str| {
+        let body = body.trim();
+        let slot = comments.entry(line).or_default();
+        if !slot.is_empty() {
+            slot.push(' ');
+        }
+        slot.push_str(body);
+    };
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == '/' && cs.get(i + 1) == Some(&'/') {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && cs[j] != '\n' {
+                j += 1;
+            }
+            let body: String = cs[start..j].iter().collect();
+            push_comment(line, &body);
+            i = j;
+            continue;
+        }
+        // block comment (nested)
+        if c == '/' && cs.get(i + 1) == Some(&'*') {
+            let first = line;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            let mut body = String::new();
+            while j < n && depth > 0 {
+                if cs[j] == '/' && cs.get(j + 1) == Some(&'*') {
+                    depth += 1;
+                    j += 2;
+                    continue;
+                }
+                if cs[j] == '*' && cs.get(j + 1) == Some(&'/') {
+                    depth -= 1;
+                    j += 2;
+                    continue;
+                }
+                if cs[j] == '\n' {
+                    line += 1;
+                }
+                body.push(cs[j]);
+                j += 1;
+            }
+            push_comment(first, &body);
+            i = j;
+            continue;
+        }
+        // string literals, including r"", r#""#, b"", br#""#
+        if c == '"' {
+            let (tok, ni, nl) = lex_string(&cs, i, line);
+            toks.push(tok);
+            i = ni;
+            line = nl;
+            continue;
+        }
+        if (c == 'r' || c == 'b') && is_string_start(&cs, i) {
+            let (tok, ni, nl) = lex_prefixed_string(&cs, i, line);
+            toks.push(tok);
+            i = ni;
+            line = nl;
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            let (tok, ni) = lex_tick(&cs, i, line);
+            if let Some(t) = tok {
+                toks.push(t);
+            }
+            i = ni;
+            continue;
+        }
+        if c == '_' || c.is_ascii_alphabetic() {
+            let mut j = i + 1;
+            while j < n && (cs[j] == '_' || cs[j].is_ascii_alphanumeric()) {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Ident,
+                text: cs[i..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            // loose: digits, type suffixes, hex, underscores, one decimal dot
+            let mut j = i + 1;
+            while j < n {
+                if cs[j] == '_' || cs[j].is_ascii_alphanumeric() {
+                    j += 1;
+                } else if cs[j] == '.' && cs.get(j + 1).is_some_and(|d| d.is_ascii_digit()) {
+                    j += 2;
+                } else {
+                    break;
+                }
+            }
+            toks.push(Tok {
+                kind: TokKind::Lit,
+                text: cs[i..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        toks.push(Tok {
+            kind: TokKind::Punct,
+            text: c.to_string(),
+            line,
+        });
+        i += 1;
+    }
+    (toks, comments)
+}
+
+/// `r` or `b` at `i` starts a string literal (`r"`, `r#`, `b"`, `br"`,
+/// `br#`) rather than an identifier.
+fn is_string_start(cs: &[char], i: usize) -> bool {
+    match cs[i] {
+        'r' => matches!(cs.get(i + 1), Some('"') | Some('#')),
+        'b' => match cs.get(i + 1) {
+            Some('"') => true,
+            Some('r') => matches!(cs.get(i + 2), Some('"') | Some('#')),
+            _ => false,
+        },
+        _ => false,
+    }
+}
+
+/// Normal (escaped) string starting at the `"` in `cs[i]`.
+fn lex_string(cs: &[char], i: usize, mut line: usize) -> (Tok, usize, usize) {
+    let start_line = line;
+    let mut j = i + 1;
+    let mut body = String::new();
+    while j < cs.len() {
+        match cs[j] {
+            '\\' => {
+                body.push(cs[j]);
+                if let Some(&e) = cs.get(j + 1) {
+                    body.push(e);
+                    if e == '\n' {
+                        line += 1;
+                    }
+                }
+                j += 2;
+            }
+            '"' => {
+                j += 1;
+                break;
+            }
+            ch => {
+                if ch == '\n' {
+                    line += 1;
+                }
+                body.push(ch);
+                j += 1;
+            }
+        }
+    }
+    (
+        Tok {
+            kind: TokKind::Str,
+            text: body,
+            line: start_line,
+        },
+        j,
+        line,
+    )
+}
+
+/// Raw / byte string starting at the `r`/`b` prefix in `cs[i]`.
+fn lex_prefixed_string(cs: &[char], i: usize, mut line: usize) -> (Tok, usize, usize) {
+    let mut j = i;
+    let mut raw = false;
+    while j < cs.len() && (cs[j] == 'r' || cs[j] == 'b') {
+        raw |= cs[j] == 'r';
+        j += 1;
+    }
+    if !raw {
+        // plain byte string b"..." — escaped like a normal string
+        let (mut tok, ni, nl) = lex_string(cs, j, line);
+        tok.line = line;
+        return (tok, ni, nl);
+    }
+    let mut hashes = 0usize;
+    while cs.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    let start_line = line;
+    let mut body = String::new();
+    j += 1; // opening quote
+    while j < cs.len() {
+        if cs[j] == '"' {
+            let mut k = 0;
+            while k < hashes && cs.get(j + 1 + k) == Some(&'#') {
+                k += 1;
+            }
+            if k == hashes {
+                j += 1 + hashes;
+                break;
+            }
+        }
+        if cs[j] == '\n' {
+            line += 1;
+        }
+        body.push(cs[j]);
+        j += 1;
+    }
+    (
+        Tok {
+            kind: TokKind::Str,
+            text: body,
+            line: start_line,
+        },
+        j,
+        line,
+    )
+}
+
+/// `'` at `cs[i]`: either a char literal (skipped as [`TokKind::Lit`]) or
+/// a lifetime token.
+fn lex_tick(cs: &[char], i: usize, line: usize) -> (Option<Tok>, usize) {
+    let lit = |j: usize| {
+        (
+            Some(Tok {
+                kind: TokKind::Lit,
+                text: String::new(),
+                line,
+            }),
+            j,
+        )
+    };
+    match cs.get(i + 1) {
+        Some('\\') => {
+            // escaped char: scan to the closing tick
+            let mut j = i + 2;
+            while j < cs.len() && cs[j] != '\'' {
+                if cs[j] == '\\' {
+                    j += 1;
+                }
+                j += 1;
+            }
+            lit(j + 1)
+        }
+        Some(&c) if c == '_' || c.is_ascii_alphabetic() => {
+            let mut j = i + 2;
+            while j < cs.len() && (cs[j] == '_' || cs[j].is_ascii_alphanumeric()) {
+                j += 1;
+            }
+            if cs.get(j) == Some(&'\'') {
+                lit(j + 1) // 'a'
+            } else {
+                let t = Tok {
+                    kind: TokKind::Lifetime,
+                    text: cs[i + 1..j].iter().collect(),
+                    line,
+                };
+                (Some(t), j)
+            }
+        }
+        Some(_) => {
+            // char like '(' or '0': tick, one char, tick
+            if cs.get(i + 2) == Some(&'\'') {
+                lit(i + 3)
+            } else {
+                lit(i + 1)
+            }
+        }
+        None => (None, i + 1),
+    }
+}

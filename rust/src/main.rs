@@ -33,6 +33,11 @@
 //!   `--step` prints the occupancy dump every tick, `--save-trace`
 //!   exports the run as a canonical trace for committing as a
 //!   regression test, and a violation exits 1.
+//! * `lint` — repo-native static analysis (see `LINTS.md`): run the
+//!   in-tree rule engine over `rust/` and `examples/` and exit 1 on any
+//!   finding; `--json` emits the deterministic machine report,
+//!   `--rule <name>` restricts output to one rule, `--list` names the
+//!   rule set. `scripts/verify.sh` and CI's lint job gate on it.
 //! * `generate` — KV-cached local generation from a prompt (greedy /
 //!   temperature / top-k, seeded), over any backend (`--threads` and the
 //!   `--kv-*` paging flags as in `serve`).
@@ -74,12 +79,13 @@ fn main() {
         "eval" => cmd_eval(rest),
         "serve" => cmd_serve(rest),
         "sim" => cmd_sim(rest),
+        "lint" => cmd_lint(rest),
         "generate" => cmd_generate(rest),
         "gen-model" => cmd_gen_model(rest),
         "info" => cmd_info(rest),
         _ => {
             eprintln!(
-                "usage: llvq <exp|tables|quantize|pack|unpack|stats|eval|serve|sim|generate|gen-model|info> [flags]\n\
+                "usage: llvq <exp|tables|quantize|pack|unpack|stats|eval|serve|sim|lint|generate|gen-model|info> [flags]\n\
                  try: llvq exp table1"
             );
             2
@@ -925,6 +931,61 @@ fn cmd_sim(rest: Vec<String>) -> i32 {
             1
         }
         None => 0,
+    }
+}
+
+fn cmd_lint(rest: Vec<String>) -> i32 {
+    use llvq::lint::engine;
+    use llvq::lint::rules::RULES;
+    let a = Args::new("llvq lint — repo-native static analysis (rules in LINTS.md)")
+        .flag("rule", "", "report findings of a single rule by name")
+        .flag("root", "", "repo root (default: walk up from the cwd)")
+        .switch("json", "emit the deterministic JSON report instead of text")
+        .switch("list", "list the rule set and exit")
+        .parse(rest.into_iter())
+        .unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2)
+        });
+    if a.get_bool("list") {
+        for (name, summary) in RULES {
+            println!("{name:<22} {summary}");
+        }
+        return 0;
+    }
+    let root = match a.get("root").filter(|s| !s.is_empty()) {
+        Some(r) => std::path::PathBuf::from(r),
+        None => {
+            let cwd = std::env::current_dir().unwrap_or_else(|_| std::path::PathBuf::from("."));
+            match engine::find_repo_root(&cwd) {
+                Some(r) => r,
+                None => {
+                    eprintln!(
+                        "no repo root (Cargo.toml + rust/) above {} — pass --root",
+                        cwd.display()
+                    );
+                    return 2;
+                }
+            }
+        }
+    };
+    let rule = a.get("rule").filter(|s| !s.is_empty());
+    let findings = match engine::run_lint(&root, rule.as_deref()) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if a.get_bool("json") {
+        println!("{}", engine::render_json(&findings));
+    } else {
+        print!("{}", engine::render_text(&findings));
+    }
+    if findings.is_empty() {
+        0
+    } else {
+        1
     }
 }
 

@@ -369,6 +369,9 @@ impl PagedKvCache {
                 Page::Hot(b) => b,
                 // appends only target positions >= len, and a page cools
                 // only once it is full and strictly behind len
+                // lint:allow(no-panic-serving): per the invariant above, a
+                // cold page here means the arena accounting is already
+                // corrupt — crashing the lane beats silently mixing dtypes
                 Page::Cold(_) => unreachable!("append into cold page"),
             };
             let ko = li * 2 * pt * d + slot * d;
@@ -408,6 +411,8 @@ impl PagedKvCache {
                     v_gather[done * d..(done + take) * d].copy_from_slice(&b[vo..vo + take * d]);
                 }
                 Page::Cold(cp) => {
+                    // lint:allow(no-panic-serving): pages only cool inside
+                    // commit(), which is gated on this codec being Some
                     let codec = self.codec.as_ref().expect("cold page without codec");
                     let rb = codec.row_bytes();
                     // cold pages are always full (they cool only once
@@ -458,6 +463,8 @@ impl PagedKvCache {
             let mut sigma = Vec::with_capacity(self.n_layers * 2 * pt);
             {
                 let Page::Hot(buf) = &self.pages[pi] else {
+                    // lint:allow(no-panic-serving): the matches! guard at
+                    // the top of this loop iteration skipped cold pages
                     unreachable!()
                 };
                 for li in 0..self.n_layers {
@@ -622,6 +629,9 @@ mod tests {
         assert_eq!(arena.counters().allocated.load(Relaxed), 0);
     }
 
+    // full transformer forward — too slow under Miri's interpreter; the
+    // arena/reserve tests above cover the pointer-heavy paths it checks
+    #[cfg_attr(miri, ignore)]
     #[test]
     fn paged_prefill_and_steps_match_dense_bitwise() {
         // quant=none: gather copies f32s, so the paged cache must equal
@@ -648,6 +658,8 @@ mod tests {
         assert_eq!(paged.page_count(), (13 + 9usize).div_ceil(5));
     }
 
+    // builds a model + E8 codec and runs prefill — minutes under Miri
+    #[cfg_attr(miri, ignore)]
     #[test]
     fn cold_pages_quantize_free_arena_pages_and_stay_close() {
         let cfg = cfg();
@@ -698,6 +710,9 @@ mod tests {
         assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
     }
 
+    // Llvq codec construction enumerates Leech leaders — minutes under
+    // Miri; the zero-row E8 roundtrip below keeps codec coverage
+    #[cfg_attr(miri, ignore)]
     #[test]
     fn codec_row_roundtrip_bounds() {
         let cfg = cfg();

@@ -846,7 +846,7 @@ pub fn unpack_layer_pool(
         s.block.clear();
         s.block.resize(d, 0f32);
         for r in range {
-            // safety: row ranges are disjoint across shards
+            // SAFETY: row ranges are disjoint across shards
             let out = unsafe { shard.range_mut(r * pl.cols..(r + 1) * pl.cols) };
             decode_row_scaled(
                 q,

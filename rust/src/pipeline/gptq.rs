@@ -199,14 +199,14 @@ pub fn quantize_layer(
         let row_stream = stream.finish();
         debug_assert_eq!(row_stream.len(), row_bytes);
         bits_acc.fetch_add(bits, std::sync::atomic::Ordering::Relaxed);
-        *w_hat[r].lock().unwrap() = (out, row_stream);
+        *w_hat[r].lock().unwrap_or_else(|e| e.into_inner()) = (out, row_stream);
     });
 
     // assemble + proxy loss
     let mut flat = vec![0f32; rows * cols];
     let mut data = vec![0u8; rows * row_bytes];
     for (r, m) in w_hat.iter().enumerate() {
-        let v = m.lock().unwrap();
+        let v = m.lock().unwrap_or_else(|e| e.into_inner());
         flat[r * cols..(r + 1) * cols].copy_from_slice(&v.0);
         data[r * row_bytes..(r + 1) * row_bytes].copy_from_slice(&v.1);
     }

@@ -243,7 +243,7 @@ fn dot_acc_generic(seg: &[f32], x: &[f64], acc: &mut [f64; 4]) {
 
 #[cfg(target_arch = "x86_64")]
 fn dot_acc_avx2(seg: &[f32], x: &[f64], acc: &mut [f64; 4]) {
-    // safety: dispatch reaches here only when Kernel::Avx2.available()
+    // SAFETY: dispatch reaches here only when Kernel::Avx2.available()
     // confirmed AVX2+FMA at backend construction.
     unsafe { dot_acc_avx2_impl(seg, x, acc) }
 }
@@ -253,20 +253,28 @@ fn dot_acc_avx2(seg: &[f32], x: &[f64], acc: &mut [f64; 4]) {
     dot_acc_generic(seg, x, acc)
 }
 
+// SAFETY(contract): callers must have verified AVX2+FMA support — the
+// runtime dispatch above is the only caller and checks once at backend
+// construction.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2", enable = "fma")]
 unsafe fn dot_acc_avx2_impl(seg: &[f32], x: &[f64], acc: &mut [f64; 4]) {
     use std::arch::x86_64::*;
     let n4 = seg.len() / 4 * 4;
-    let mut a = _mm256_loadu_pd(acc.as_ptr());
-    let mut i = 0;
-    while i < n4 {
-        let s = _mm256_cvtps_pd(_mm_loadu_ps(seg.as_ptr().add(i)));
-        let xv = _mm256_loadu_pd(x.as_ptr().add(i));
-        a = _mm256_fmadd_pd(s, xv, a);
-        i += 4;
+    // SAFETY: intrinsics require AVX2+FMA (the fn contract); every
+    // unaligned load/store stays in bounds — `i < n4 <= seg.len()`,
+    // `x.len() == seg.len()` per the kernel layout, and `acc` is 4 wide.
+    unsafe {
+        let mut a = _mm256_loadu_pd(acc.as_ptr());
+        let mut i = 0;
+        while i < n4 {
+            let s = _mm256_cvtps_pd(_mm_loadu_ps(seg.as_ptr().add(i)));
+            let xv = _mm256_loadu_pd(x.as_ptr().add(i));
+            a = _mm256_fmadd_pd(s, xv, a);
+            i += 4;
+        }
+        _mm256_storeu_pd(acc.as_mut_ptr(), a);
     }
-    _mm256_storeu_pd(acc.as_mut_ptr(), a);
     for j in 0..seg.len() - n4 {
         acc[j] += seg[n4 + j] as f64 * x[n4 + j];
     }
@@ -274,7 +282,7 @@ unsafe fn dot_acc_avx2_impl(seg: &[f32], x: &[f64], acc: &mut [f64; 4]) {
 
 #[cfg(target_arch = "aarch64")]
 fn dot_acc_neon(seg: &[f32], x: &[f64], acc: &mut [f64; 4]) {
-    // safety: dispatch reaches here only when Kernel::Neon.available()
+    // SAFETY: dispatch reaches here only when Kernel::Neon.available()
     // confirmed NEON at backend construction.
     unsafe { dot_acc_neon_impl(seg, x, acc) }
 }
@@ -284,24 +292,32 @@ fn dot_acc_neon(seg: &[f32], x: &[f64], acc: &mut [f64; 4]) {
     dot_acc_generic(seg, x, acc)
 }
 
+// SAFETY(contract): callers must have verified NEON support — the
+// runtime dispatch above is the only caller and checks once at backend
+// construction.
 #[cfg(target_arch = "aarch64")]
 #[target_feature(enable = "neon")]
 unsafe fn dot_acc_neon_impl(seg: &[f32], x: &[f64], acc: &mut [f64; 4]) {
     use std::arch::aarch64::*;
     let n4 = seg.len() / 4 * 4;
-    let mut a01 = vld1q_f64(acc.as_ptr());
-    let mut a23 = vld1q_f64(acc.as_ptr().add(2));
-    let mut i = 0;
-    while i < n4 {
-        let s = vld1q_f32(seg.as_ptr().add(i));
-        let lo = vcvt_f64_f32(vget_low_f32(s));
-        let hi = vcvt_high_f64_f32(s);
-        a01 = vfmaq_f64(a01, lo, vld1q_f64(x.as_ptr().add(i)));
-        a23 = vfmaq_f64(a23, hi, vld1q_f64(x.as_ptr().add(i + 2)));
-        i += 4;
+    // SAFETY: intrinsics require NEON (the fn contract); every load/store
+    // stays in bounds — `i + 3 < n4 <= seg.len()`, `x.len() == seg.len()`
+    // per the kernel layout, and `acc` is 4 wide.
+    unsafe {
+        let mut a01 = vld1q_f64(acc.as_ptr());
+        let mut a23 = vld1q_f64(acc.as_ptr().add(2));
+        let mut i = 0;
+        while i < n4 {
+            let s = vld1q_f32(seg.as_ptr().add(i));
+            let lo = vcvt_f64_f32(vget_low_f32(s));
+            let hi = vcvt_high_f64_f32(s);
+            a01 = vfmaq_f64(a01, lo, vld1q_f64(x.as_ptr().add(i)));
+            a23 = vfmaq_f64(a23, hi, vld1q_f64(x.as_ptr().add(i + 2)));
+            i += 4;
+        }
+        vst1q_f64(acc.as_mut_ptr(), a01);
+        vst1q_f64(acc.as_mut_ptr().add(2), a23);
     }
-    vst1q_f64(acc.as_mut_ptr(), a01);
-    vst1q_f64(acc.as_mut_ptr().add(2), a23);
     for j in 0..seg.len() - n4 {
         acc[j] += seg[n4 + j] as f64 * x[n4 + j];
     }

@@ -60,7 +60,7 @@ mod imp {
         /// same file compile exactly once.
         pub fn load(&self, path: &Path) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
             let key = cache_key(path);
-            if let Some(e) = self.cache.lock().unwrap().get(&key) {
+            if let Some(e) = self.cache.lock().unwrap_or_else(|e| e.into_inner()).get(&key) {
                 return Ok(e.clone());
             }
             let proto = xla::HloModuleProto::from_text_file(
@@ -73,7 +73,10 @@ mod imp {
                     .compile(&comp)
                     .with_context(|| format!("compiling {}", path.display()))?,
             );
-            self.cache.lock().unwrap().insert(key, exe.clone());
+            self.cache
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .insert(key, exe.clone());
             Ok(exe)
         }
 

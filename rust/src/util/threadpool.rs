@@ -104,7 +104,7 @@ where
             out.iter_mut().map(std::sync::Mutex::new).collect();
         parallel_dynamic(n, nthreads, 8, |i| {
             let r = f(i);
-            **slots[i].lock().unwrap() = r;
+            **slots[i].lock().unwrap_or_else(|e| e.into_inner()) = r;
         });
     }
     out
@@ -134,6 +134,9 @@ impl Scratch {
         self.0
             .as_mut()
             .and_then(|b| b.downcast_mut::<T>())
+            // lint:allow(no-panic-serving): the branch above just stored a
+            // Box<T> whenever the downcast could fail, so this is proven
+            // infallible two lines up, not a recoverable condition
             .expect("scratch was just set to T")
     }
 }
@@ -149,7 +152,13 @@ pub struct ShardedSlice<'a, T> {
     _life: std::marker::PhantomData<&'a mut [T]>,
 }
 
+// SAFETY: a ShardedSlice is just the base pointer and length of the
+// caller's `&mut [T]`; moving it to another thread moves T values only
+// through the `range_mut` views, so `T: Send` is the whole obligation.
 unsafe impl<T: Send> Send for ShardedSlice<'_, T> {}
+// SAFETY: `&ShardedSlice` exposes mutation solely via `range_mut`, whose
+// contract demands disjoint ranges across concurrent users — shared
+// access is therefore equivalent to `&mut [T]` split into disjoint parts.
 unsafe impl<T: Send> Sync for ShardedSlice<'_, T> {}
 
 impl<'a, T> ShardedSlice<'a, T> {
@@ -178,7 +187,11 @@ impl<'a, T> ShardedSlice<'a, T> {
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn range_mut(&self, range: Range<usize>) -> &mut [T] {
         debug_assert!(range.start <= range.end && range.end <= self.len);
-        std::slice::from_raw_parts_mut(self.ptr.add(range.start), range.end - range.start)
+        // SAFETY: the caller contract above — `range` in bounds of the
+        // slice this was built from (so the pointer arithmetic stays
+        // inside the allocation) and concurrently-outstanding ranges
+        // disjoint (so the &mut views never alias).
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(range.start), range.end - range.start) }
     }
 }
 
@@ -193,7 +206,7 @@ struct Job {
     chunk: usize,
 }
 
-// Safety: the raw closure pointer is only dereferenced during the epoch,
+// SAFETY: the raw closure pointer is only dereferenced during the epoch,
 // while the owning `run_partitioned` frame is alive and blocked.
 unsafe impl Send for Job {}
 
@@ -268,6 +281,10 @@ impl Pool {
                 std::thread::Builder::new()
                     .name(format!("llvq-pool-{t}"))
                     .spawn(move || worker_loop(sh, t))
+                    // lint:allow(no-panic-serving): pool construction
+                    // happens once at backend startup, before any request
+                    // is accepted — failing to spawn an OS thread there is
+                    // fatal by design, not a serving-path error
                     .expect("spawn pool worker")
             })
             .collect();
@@ -308,12 +325,17 @@ impl Pool {
         let _serial = relock(self.run_lock.lock());
         let chunk = n.div_ceil(self.threads);
 
+        // SAFETY(contract): `data` must be the `&F` of a live closure of
+        // exactly this `F` — guaranteed below, where the only caller
+        // erases `&f` and then blocks in this frame until the epoch ends.
         unsafe fn shim<F: Fn(Range<usize>, &mut Scratch) + Sync>(
             data: *const (),
             range: Range<usize>,
             scratch: &mut Scratch,
         ) {
-            let f = &*(data as *const F);
+            // SAFETY: see the fn contract — `data` points at a live `F`
+            // borrowed by the blocked `run_partitioned` frame.
+            let f = unsafe { &*(data as *const F) };
             f(range, scratch)
         }
 
@@ -391,6 +413,10 @@ fn worker_loop(shared: Arc<PoolShared>, t: usize) {
         let mut bad = false;
         if lo < hi {
             let mut scratch = relock(shared.scratch[t].lock());
+            // SAFETY: `job` was published for this epoch by a
+            // `run_partitioned` frame that stays blocked until `active`
+            // drains, so the erased closure behind `job.data` is alive for
+            // the whole call.
             bad = catch_unwind(AssertUnwindSafe(|| unsafe {
                 (job.call)(job.data, lo..hi, &mut scratch)
             }))
@@ -473,6 +499,8 @@ mod tests {
         {
             let shard = ShardedSlice::new(&mut seen);
             pool.run_partitioned(9, |range, _s| {
+                // SAFETY: run_partitioned hands each executor a disjoint
+                // in-bounds range of 0..9
                 let out = unsafe { shard.range_mut(range) };
                 out.iter_mut().for_each(|v| *v = true);
             });
@@ -513,6 +541,8 @@ mod tests {
             let shard = ShardedSlice::new(&mut par);
             pool.run_partitioned(n, |range, _s| {
                 let lo = range.start;
+                // SAFETY: run_partitioned hands each executor a disjoint
+                // in-bounds range of 0..n
                 let out = unsafe { shard.range_mut(range) };
                 for (k, v) in out.iter_mut().enumerate() {
                     *v = ((lo + k) as u64).wrapping_mul(0x9E3779B9);

@@ -1,0 +1,237 @@
+//! Lint-engine tests: every rule proven by a fixture it must flag and a
+//! fixture it must pass, the self-check that the repo's own tree is
+//! lint-clean, and determinism of the JSON report.
+//!
+//! Fixtures live under `lint_fixtures/` on disk (the engine's walker
+//! skips that directory — they are deliberately dirty) and are fed to
+//! the pure [`lint_files`] entry point under *virtual* repo paths, so a
+//! single snippet can be tested as a serving module, a test file, or the
+//! coordinator.
+
+use llvq::lint::engine::{collect_inputs, lint_files, render_json, render_text, run_lint};
+use llvq::lint::rules::{
+    Finding, ALLOW_SYNTAX, LOCK_POISON, NO_PANIC_SERVING, SAFETY_COMMENT, STATS_WIRE_ORDER,
+    TARGET_FEATURE_UNSAFE,
+};
+use std::path::Path;
+
+const SAFETY_BAD: &str = include_str!("lint_fixtures/safety_bad.rs");
+const SAFETY_OK: &str = include_str!("lint_fixtures/safety_ok.rs");
+const PANIC_BAD: &str = include_str!("lint_fixtures/panic_bad.rs");
+const PANIC_OK: &str = include_str!("lint_fixtures/panic_ok.rs");
+const LOCK_BAD: &str = include_str!("lint_fixtures/lock_bad.rs");
+const LOCK_OK: &str = include_str!("lint_fixtures/lock_ok.rs");
+const TF_BAD: &str = include_str!("lint_fixtures/tf_bad.rs");
+const TF_OK: &str = include_str!("lint_fixtures/tf_ok.rs");
+const STATS_BAD: &str = include_str!("lint_fixtures/stats_bad.rs");
+const STATS_OK: &str = include_str!("lint_fixtures/stats_ok.rs");
+const STATS_LINE_BAD: &str = include_str!("lint_fixtures/stats_line_bad.rs");
+const ALLOW_BAD: &str = include_str!("lint_fixtures/allow_bad.rs");
+
+fn lint_one(path: &str, text: &str) -> Vec<Finding> {
+    lint_files(&[(path.to_string(), text.to_string())])
+}
+
+/// Sorted lines at which `rule` fired.
+fn lines_of(findings: &[Finding], rule: &str) -> Vec<usize> {
+    let mut v: Vec<usize> = findings
+        .iter()
+        .filter(|f| f.rule == rule)
+        .map(|f| f.line)
+        .collect();
+    v.sort_unstable();
+    v
+}
+
+// ------------------------------------------------------------- rule 1
+
+#[test]
+fn safety_rule_flags_every_unjustified_site() {
+    let f = lint_one("rust/src/model/fixture.rs", SAFETY_BAD);
+    assert_eq!(
+        lines_of(&f, SAFETY_COMMENT),
+        vec![5, 10, 11, 16, 19],
+        "block, unsafe fn, inner block, and both impls must all be flagged: {f:?}"
+    );
+}
+
+#[test]
+fn safety_rule_accepts_justified_sites_and_type_positions() {
+    let f = lint_one("rust/src/model/fixture.rs", SAFETY_OK);
+    assert!(
+        f.is_empty(),
+        "SAFETY comments, # Safety doc sections, trailing comments, and \
+         fn-pointer types must all pass: {f:?}"
+    );
+}
+
+// ------------------------------------------------------------- rule 2
+
+#[test]
+fn panic_rule_flags_serving_modules_only() {
+    let serving = lint_one("rust/src/model/kvpage.rs", PANIC_BAD);
+    assert_eq!(
+        lines_of(&serving, NO_PANIC_SERVING),
+        vec![5, 9, 16, 21, 25],
+        "unwrap, expect, unreachable!, todo!, panic!: {serving:?}"
+    );
+
+    let library = lint_one("rust/src/leech/coset.rs", PANIC_BAD);
+    assert_eq!(lines_of(&library, NO_PANIC_SERVING), Vec::<usize>::new());
+
+    let test_file = lint_one("rust/tests/fixture.rs", PANIC_BAD);
+    assert_eq!(lines_of(&test_file, NO_PANIC_SERVING), Vec::<usize>::new());
+}
+
+#[test]
+fn panic_rule_accepts_results_allows_and_test_regions() {
+    let f = lint_one("rust/src/model/kvpage.rs", PANIC_OK);
+    assert!(
+        f.is_empty(),
+        "Result flow, a justified allow, and cfg(test) panics must pass: {f:?}"
+    );
+}
+
+// ------------------------------------------------------------- rule 3
+
+#[test]
+fn lock_rule_flags_bare_unwrap_and_expect() {
+    let f = lint_one("rust/src/pipeline/fixture.rs", LOCK_BAD);
+    assert_eq!(
+        lines_of(&f, LOCK_POISON),
+        vec![6, 11],
+        "same-line and split-across-lines bare locks: {f:?}"
+    );
+}
+
+#[test]
+fn lock_rule_accepts_poison_recovery_and_test_regions() {
+    let f = lint_one("rust/src/pipeline/fixture.rs", LOCK_OK);
+    assert!(f.is_empty(), "{f:?}");
+}
+
+// ------------------------------------------------------------- rule 4
+
+#[test]
+fn target_feature_rule_flags_safe_fn_and_foreign_module() {
+    let in_kernel = lint_one("rust/src/quant/kernel.rs", TF_BAD);
+    assert_eq!(
+        lines_of(&in_kernel, TARGET_FEATURE_UNSAFE),
+        vec![1, 5],
+        "missing detection macro (file-level) + safe fn (attr line): {in_kernel:?}"
+    );
+
+    let foreign = lint_one("rust/src/math/linalg.rs", TF_BAD);
+    assert_eq!(
+        lines_of(&foreign, TARGET_FEATURE_UNSAFE),
+        vec![5, 5],
+        "safe fn + outside-dispatch-module, both at the attribute: {foreign:?}"
+    );
+}
+
+#[test]
+fn target_feature_rule_accepts_dispatched_unsafe_fn() {
+    let f = lint_one("rust/src/quant/kernel.rs", TF_OK);
+    assert!(f.is_empty(), "{f:?}");
+}
+
+// ------------------------------------------------------------- rule 5
+
+#[test]
+fn stats_rule_flags_order_drift_and_unknown_verbs() {
+    let f = lint_one("rust/src/coordinator.rs", STATS_BAD);
+    assert_eq!(
+        lines_of(&f, STATS_WIRE_ORDER),
+        vec![11, 11, 22, 22, 36],
+        "doc row out of order + multi-field line out of order (11), \
+         resident_bytes not last + kv counter behind threads (22), \
+         unknown reply verb (36): {f:?}"
+    );
+}
+
+#[test]
+fn stats_rule_accepts_consistent_surface_and_flags_drifted_parser() {
+    let clean = lint_one("rust/src/coordinator.rs", STATS_OK);
+    assert!(clean.is_empty(), "{clean:?}");
+
+    let pair = lint_files(&[
+        ("rust/src/coordinator.rs".to_string(), STATS_OK.to_string()),
+        ("rust/src/util/bench.rs".to_string(), STATS_LINE_BAD.to_string()),
+    ]);
+    assert_eq!(pair.len(), 1, "{pair:?}");
+    assert_eq!(pair[0].rule, STATS_WIRE_ORDER);
+    assert_eq!((pair[0].file.as_str(), pair[0].line), ("rust/src/util/bench.rs", 5));
+}
+
+// ----------------------------------------------------------- meta rule
+
+#[test]
+fn allow_rule_flags_bad_directives_without_suppressing() {
+    let f = lint_one("rust/src/util/fixture.rs", ALLOW_BAD);
+    assert_eq!(
+        lines_of(&f, ALLOW_SYNTAX),
+        vec![7, 12, 17],
+        "unknown rule, missing reason, unterminated: {f:?}"
+    );
+    assert_eq!(
+        lines_of(&f, LOCK_POISON),
+        vec![8, 13, 18],
+        "an invalid directive must not suppress the underlying finding: {f:?}"
+    );
+}
+
+// ----------------------------------------------------- repo self-check
+
+/// The committed tree is lint-clean — this is the same gate
+/// `scripts/verify.sh` and CI's lint job apply via `llvq lint`.
+#[test]
+fn repo_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let findings = run_lint(root, None).expect("walking the repo");
+    assert!(
+        findings.is_empty(),
+        "the tree must pass its own lint gate:\n{}",
+        render_text(&findings)
+    );
+}
+
+#[test]
+fn walker_skips_the_deliberately_dirty_fixtures() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let inputs = collect_inputs(root).expect("walking the repo");
+    assert!(inputs.iter().any(|(p, _)| p == "rust/src/lint/engine.rs"));
+    assert!(inputs.iter().any(|(p, _)| p == "rust/tests/lint.rs"));
+    assert!(
+        !inputs.iter().any(|(p, _)| p.contains("lint_fixtures")),
+        "fixtures must never be linted as part of the tree"
+    );
+}
+
+// ------------------------------------------------------- determinism
+
+#[test]
+fn json_report_is_deterministic_and_order_independent() {
+    let a = vec![
+        ("rust/src/coordinator.rs".to_string(), STATS_BAD.to_string()),
+        ("rust/src/model/kvpage.rs".to_string(), PANIC_BAD.to_string()),
+    ];
+    let b: Vec<(String, String)> = a.iter().rev().cloned().collect();
+    let fa = lint_files(&a);
+    let fb = lint_files(&b);
+    assert_eq!(fa, fb, "input order must not change the report");
+    assert_eq!(render_json(&fa), render_json(&fb));
+    assert!(render_json(&fa).starts_with("{\"findings\":["));
+
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let once = run_lint(root, None).expect("walking the repo");
+    let twice = run_lint(root, None).expect("walking the repo");
+    assert_eq!(render_json(&once), render_json(&twice));
+}
+
+#[test]
+fn rule_filter_restricts_output() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let only = run_lint(root, Some(SAFETY_COMMENT)).expect("walking the repo");
+    assert!(only.iter().all(|f| f.rule == SAFETY_COMMENT));
+    assert!(run_lint(root, Some("no-such-rule")).is_err());
+}

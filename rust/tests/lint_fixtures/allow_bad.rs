@@ -1,0 +1,19 @@
+// Fixture: malformed allow directives. A bad directive must not
+// suppress the underlying finding either.
+
+use std::sync::Mutex;
+
+pub fn unknown_rule(counter: &Mutex<u64>) {
+    // lint:allow(no-such-rule): confidently citing a rule that is not real
+    *counter.lock().unwrap() += 1;
+}
+
+pub fn missing_reason(counter: &Mutex<u64>) {
+    // lint:allow(lock-poison)
+    *counter.lock().unwrap() += 1;
+}
+
+pub fn unterminated(counter: &Mutex<u64>) {
+    // lint:allow(lock-poison
+    *counter.lock().unwrap() += 1;
+}

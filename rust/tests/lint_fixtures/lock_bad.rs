@@ -1,0 +1,13 @@
+// Fixture: bare poison-propagating lock acquisitions.
+
+use std::sync::Mutex;
+
+pub fn bump(counter: &Mutex<u64>) {
+    *counter.lock().unwrap() += 1;
+}
+
+pub fn read(counter: &Mutex<u64>) -> u64 {
+    *counter
+        .lock()
+        .expect("not poisoned")
+}

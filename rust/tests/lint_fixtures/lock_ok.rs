@@ -1,0 +1,19 @@
+// Fixture: the poison-recovering pattern from PR 4, plus the test-region
+// exemption (tests poison locks on purpose to exercise recovery).
+
+use std::sync::Mutex;
+
+pub fn bump(counter: &Mutex<u64>) {
+    *counter.lock().unwrap_or_else(|e| e.into_inner()) += 1;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deliberate_bare_lock_in_test() {
+        let m = Mutex::new(1u64);
+        assert_eq!(*m.lock().unwrap(), 1);
+    }
+}

@@ -1,0 +1,26 @@
+// Fixture: panicking calls on what the test presents as a serving-path
+// module (the test feeds this text under a serving module's path).
+
+pub fn lookup(map: &std::collections::HashMap<u64, u32>, k: u64) -> u32 {
+    *map.get(&k).unwrap()
+}
+
+pub fn read(v: &[u32], i: usize) -> u32 {
+    *v.get(i).expect("index in bounds")
+}
+
+pub fn dispatch(kind: u8) -> u32 {
+    match kind {
+        0 => 1,
+        1 => 2,
+        _ => unreachable!("kinds are validated at the boundary"),
+    }
+}
+
+pub fn not_done() {
+    todo!()
+}
+
+pub fn boom() {
+    panic!("unconditional");
+}

@@ -1,0 +1,25 @@
+// Fixture: the compliant shapes — Result flow, a justified allow
+// directive, and test-region panics, all under a serving module's path.
+
+pub fn lookup(map: &std::collections::HashMap<u64, u32>, k: u64) -> Result<u32, String> {
+    map.get(&k).copied().ok_or_else(|| format!("unknown session {k}"))
+}
+
+pub fn checked(v: &[u32]) -> u32 {
+    let i = v.iter().position(|&x| x > 0).unwrap_or(0);
+    // lint:allow(no-panic-serving): position() above proves the index is
+    // in bounds of the same slice
+    *v.get(i).expect("index from position")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn panics_are_fine_in_tests() {
+        let v = vec![1u32];
+        assert_eq!(*v.first().unwrap(), 1);
+        if v.len() > 1 {
+            panic!("impossible");
+        }
+    }
+}

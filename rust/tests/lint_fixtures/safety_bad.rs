@@ -1,0 +1,19 @@
+// Fixture: every unsafe site here lacks a SAFETY justification.
+// (Never compiled — the lint scanner only lexes these files.)
+
+pub fn write_through(p: *mut u8) {
+    unsafe {
+        *p = 0;
+    }
+}
+
+pub unsafe fn no_doc_section(p: *const u8) -> u8 {
+    unsafe { *p }
+}
+
+struct Wrapper(*mut u8);
+
+unsafe impl Send for Wrapper {}
+
+// a comment that is not a justification
+unsafe impl Sync for Wrapper {}

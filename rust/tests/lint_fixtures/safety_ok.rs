@@ -1,0 +1,37 @@
+// Fixture: every unsafe site carries a justification the rule accepts.
+
+pub fn write_through(p: *mut u8) {
+    // SAFETY: caller handed us a valid, exclusively-owned pointer
+    unsafe {
+        *p = 0;
+    }
+}
+
+/// Reads a byte.
+///
+/// # Safety
+///
+/// `p` must be valid for reads.
+pub unsafe fn doc_section(p: *const u8) -> u8 {
+    // SAFETY: forwarded caller contract from the doc section above
+    unsafe { *p }
+}
+
+struct Wrapper(*mut u8);
+
+// SAFETY: the pointer is only dereferenced on the owning thread
+#[allow(dead_code)]
+unsafe impl Send for Wrapper {}
+
+fn trailing(p: *mut u8) {
+    unsafe { *p = 1 } // SAFETY: same-line trailing justification
+}
+
+// an `unsafe fn` in type position is not a site needing justification
+struct Table {
+    call: unsafe fn(*const ()) -> u8,
+}
+
+fn casts(f: unsafe fn(*const ()) -> u8) -> unsafe fn(*const ()) -> u8 {
+    f
+}

@@ -1,0 +1,40 @@
+// Fixture: every way the STATS/wire surface can drift — resident_bytes
+// not last, a kv counter behind threads, a rustdoc row out of order, and
+// a reply verb no client knows.
+
+use std::fmt::Write as _;
+
+pub struct Snapshot {
+    pub fields: Vec<(&'static str, String)>,
+}
+
+/// Replies to `STATS` with `OK kv_pages=… requests=… resident_bytes=… threads=…`.
+pub struct Metrics {
+    requests: u64,
+    kv_pages: u64,
+    threads: usize,
+    resident_bytes: usize,
+}
+
+impl Metrics {
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            fields: vec![
+                ("requests", self.requests.to_string()),
+                ("threads", self.threads.to_string()),
+                ("kv_pages", self.kv_pages.to_string()),
+                ("resident_bytes", self.resident_bytes.to_string()),
+                ("requests_dup", self.requests.to_string()),
+            ],
+        }
+    }
+}
+
+pub fn reply(out: &mut String, line: &str, m: &Metrics) {
+    let verbs = ["OPEN", "FEED ", "GEN ", "CLOSE", "NEXT ", "STATS", "QUIT"];
+    if line == verbs[5] {
+        let _ = writeln!(out, "BUSY {}", m.snapshot().fields.len());
+    } else {
+        let _ = writeln!(out, "ERR unknown request");
+    }
+}

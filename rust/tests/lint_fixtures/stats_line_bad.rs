@@ -1,0 +1,8 @@
+// Fixture: a "bench parser" quoting three snapshot fields out of the
+// canonical order on one line (paired with stats_ok.rs as the
+// coordinator side of the virtual tree).
+
+/// Parses `threads=… kv_pages=… resident_bytes=…` tails from STATS lines.
+pub fn parse_tail(line: &str) -> Option<(&str, &str)> {
+    line.rsplit_once("resident_bytes=")
+}

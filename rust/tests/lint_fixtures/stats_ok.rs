@@ -1,0 +1,43 @@
+// Fixture: a miniature coordinator with a consistent STATS surface —
+// canonical field list (resident_bytes last, kv_* before threads), a
+// rustdoc row in the same order, and only known wire verbs in replies.
+
+use std::fmt::Write as _;
+
+pub struct Snapshot {
+    pub fields: Vec<(&'static str, String)>,
+}
+
+/// Replies to `STATS` with `OK requests=… kv_pages=… threads=… resident_bytes=…`.
+pub struct Metrics {
+    requests: u64,
+    kv_pages: u64,
+    threads: usize,
+    resident_bytes: usize,
+}
+
+impl Metrics {
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            fields: vec![
+                ("requests", self.requests.to_string()),
+                ("kv_pages", self.kv_pages.to_string()),
+                ("threads", self.threads.to_string()),
+                ("resident_bytes", self.resident_bytes.to_string()),
+            ],
+        }
+    }
+}
+
+pub fn reply(out: &mut String, line: &str, m: &Metrics) {
+    let verbs = ["OPEN", "FEED ", "GEN ", "CLOSE", "NEXT ", "STATS", "QUIT"];
+    if line == verbs[5] {
+        let mut s = String::new();
+        for (k, v) in &m.snapshot().fields {
+            let _ = write!(s, "{k}={v} ");
+        }
+        let _ = writeln!(out, "OK {s}");
+    } else {
+        let _ = writeln!(out, "ERR unknown request");
+    }
+}

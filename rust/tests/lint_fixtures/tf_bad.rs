@@ -1,0 +1,8 @@
+// Fixture: a safe #[target_feature] function — callers could reach it
+// without any CPU check. The test feeds this under the dispatch module's
+// path (missing detection macro) and under a foreign module's path.
+
+#[target_feature(enable = "avx2")]
+fn dot(seg: &[f32]) -> f32 {
+    seg.iter().sum()
+}

@@ -1,0 +1,18 @@
+// Fixture: the compliant shape — unsafe fn, extra attribute in between,
+// and the runtime-detection dispatch present in the same module.
+
+pub fn dot(seg: &[f32]) -> f32 {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        // SAFETY: detection above proves AVX2 support
+        unsafe { dot_avx2(seg) }
+    } else {
+        seg.iter().sum()
+    }
+}
+
+// SAFETY(contract): callers must have verified AVX2 support.
+#[target_feature(enable = "avx2")]
+#[allow(dead_code)]
+unsafe fn dot_avx2(seg: &[f32]) -> f32 {
+    seg.iter().sum()
+}
