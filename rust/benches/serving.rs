@@ -756,6 +756,81 @@ fn main() {
         }
     }
 
+    // ---- HTTP front door: end-to-end completion latency → BENCH_serving.json ----
+    // the same artifact served through `serve_http` + the model registry:
+    // whole-request wall time (connect → parse → registry lookup →
+    // scheduler → JSON/SSE framing) for the non-streamed and streamed
+    // paths, measured over a raw localhost socket like a real client.
+    {
+        use llvq::coordinator::ServeOptions;
+        use llvq::http::api::serve_http;
+        use llvq::model::registry::{parse_model_specs, ModelRegistry, RegistryConfig};
+        use std::io::{Read as _, Write as _};
+        use std::net::{TcpListener, TcpStream};
+
+        println!("\n== HTTP front door: end-to-end completion latency ==");
+        let specs = parse_model_specs(&format!("bench={}", path.display())).unwrap();
+        let reg = ModelRegistry::open(
+            specs,
+            RegistryConfig {
+                backend: BackendKind::Fused,
+                threads,
+                simd: Kernel::detect(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        {
+            let reg = Arc::clone(&reg);
+            std::thread::spawn(move || {
+                let _ = serve_http(reg, listener, ServeOptions { max_conns: 64 });
+            });
+        }
+        let gen_http = if smoke { 4 } else { 16 };
+        let request = |stream: bool| {
+            let body = format!(
+                r#"{{"model":"bench","prompt":[1,2,3,4,5,6,7,8],"max_tokens":{gen_http},"stream":{stream}}}"#
+            );
+            let mut s = TcpStream::connect(addr).unwrap();
+            let verb = "POST";
+            write!(
+                s,
+                "{verb} /v1/completions HTTP/1.1\r\nHost: bench\r\nConnection: close\r\n\
+                 Content-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .unwrap();
+            let mut out = String::new();
+            s.read_to_string(&mut out).unwrap();
+            assert!(out.starts_with("HTTP/1.1 200 "), "bench request failed: {out}");
+            out
+        };
+        request(false); // warm: first-request backend build stays untimed
+        for (name, stream) in [("completion_json", false), ("completion_sse", true)] {
+            let label = if stream { "SSE streamed" } else { "non-streamed" };
+            let r = bq.run(&format!("http: {label} completion ({gen_http} tok)"), || {
+                black_box(request(stream));
+            });
+            println!(
+                "http {label}: {:.1} ms/request ({:.1} tok/s)",
+                r.mean * 1e3,
+                gen_http as f64 / r.mean
+            );
+            rows.push(suite_row(
+                "http",
+                name,
+                &r,
+                vec![
+                    ("gen_tokens", Json::Int(gen_http as i64)),
+                    ("tok_per_s", Json::Num(gen_http as f64 / r.mean)),
+                ],
+            ));
+        }
+        reg.stop();
+    }
+
     // ---- dense engine + coordinator (the historical serving numbers) ----
     let engine = Arc::new(BackendEngine::dense(weights));
     println!("\n== engine forward (no coordinator) ==");

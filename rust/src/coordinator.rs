@@ -403,6 +403,11 @@ pub struct Metrics {
     /// KV page-arena counters, set once at startup for paged engines
     /// (absent on dense engines — STATS then reports zeros).
     pub kv: std::sync::OnceLock<Arc<KvPageCounters>>,
+    /// Registered-model gauge, set once by the HTTP front door's
+    /// [`crate::model::registry::ModelRegistry`] (one shared gauge
+    /// across every per-model Metrics). Absent — the single-model
+    /// `llvq serve` path — STATS reports `models=1`.
+    pub models: std::sync::OnceLock<Arc<AtomicU64>>,
 }
 
 impl Metrics {
@@ -477,6 +482,13 @@ impl Metrics {
                 ("kv_quantized", kv_quantized.to_string()),
                 ("kv_oom", kv_oom.to_string()),
                 ("kv_quant", engine.kv_quant_label()),
+                (
+                    "models",
+                    self.models
+                        .get()
+                        .map_or(1, |g| g.load(Ordering::Relaxed))
+                        .to_string(),
+                ),
                 ("threads", engine.threads().to_string()),
                 ("backend", engine.backend_name()),
                 ("simd", engine.simd_label()),
@@ -1389,6 +1401,11 @@ impl Default for ServeOptions {
 ///
 /// # Protocol reference
 ///
+/// This rustdoc is the summary; the canonical reference — full
+/// transcripts, the HTTP/SSE front door (`llvq serve-http`), JSON
+/// schemas, and the error-code table — is `docs/PROTOCOL.md` at the
+/// repo root.
+///
 /// One command per line; every reply line starts with `OK`, `ERR`,
 /// `QUEUED` (the FEED acknowledgement), or (during GEN streaming) `TOK`.
 ///
@@ -1397,7 +1414,7 @@ impl Default for ServeOptions {
 /// | command            | reply                                              |
 /// |--------------------|----------------------------------------------------|
 /// | `NEXT t1,t2,…`     | `OK next=<argmax> logit=<v>` — full-prefix forward |
-/// | `STATS`            | `OK requests=… mean_batch=… mean_latency_ms=… sessions=… gen_tokens=… mean_lanes=… prefill_jobs=… prefill_toks=… kv_pages=<allocated>/<budget> kv_quantized=… kv_oom=… kv_quant=… threads=… backend=… simd=… resident_bytes=…` |
+/// | `STATS`            | `OK requests=… mean_batch=… mean_latency_ms=… sessions=… gen_tokens=… mean_lanes=… prefill_jobs=… prefill_toks=… kv_pages=<allocated>/<budget> kv_quantized=… kv_oom=… kv_quant=… models=… threads=… backend=… simd=… resident_bytes=…` |
 /// | `QUIT`             | closes the connection                              |
 ///
 /// **v2 — generation sessions (one session per connection):**
@@ -1417,20 +1434,12 @@ impl Default for ServeOptions {
 /// freed and its session slot reclaimed.
 ///
 /// **Paged KV sessions** (`llvq serve --kv-pages N [--kv-page-size T]
-/// [--kv-quant none|e8|llvq]`): session caches draw fixed-size token pages
-/// from a shared arena of at most `N` pages instead of allocating a dense
-/// worst-case slab, so admission is against *actual* tokens — far more
-/// sessions fit the same memory budget. `FEED`/`GEN` against an exhausted
-/// arena answer a distinct `ERR kv-oom: page arena exhausted (…)` line;
-/// the session stays open and parked, so the client may retry after other
-/// sessions close, or `CLOSE` to release its own pages. With `--kv-quant
-/// e8|llvq`, pages entirely behind the hot window are re-encoded through
-/// the weight codecs (per-row RMS scale + unit-scale lattice codes) and
-/// decoded page-at-a-time on attention reads; `--kv-quant none` keeps
-/// every page f32 and is bit-identical to the dense cache. `STATS` reports
-/// occupancy as `kv_pages=<allocated>/<budget>`, `kv_quantized=` (cold
-/// pages currently resident as codes), `kv_oom=` (reservations refused),
-/// and `kv_quant=<none|e8|llvq>`; dense engines report `kv_pages=0/0`.
+/// [--kv-quant none|e8|llvq]`): session caches draw fixed-size token
+/// pages from a shared arena instead of dense worst-case slabs, and an
+/// exhausted arena answers a distinct `ERR kv-oom: page arena exhausted
+/// (…)` line with the session left open for retry. Full semantics
+/// (cold-page codecs, hot window, occupancy fields) are in
+/// `docs/PROTOCOL.md`; dense engines report `kv_pages=0/0`.
 ///
 /// Example transcript (`>` client, `<` server):
 ///
@@ -1445,7 +1454,7 @@ impl Default for ServeOptions {
 /// < TOK 44
 /// < OK generated=3 len=7
 /// > STATS
-/// < OK requests=0 mean_batch=0.00 mean_latency_ms=0.000 sessions=1 gen_tokens=3 mean_lanes=1.00 prefill_jobs=1 prefill_toks=4 kv_pages=0/0 kv_quantized=0 kv_oom=0 kv_quant=none threads=4 backend=fused simd=avx2 resident_bytes=48768
+/// < OK requests=0 mean_batch=0.00 mean_latency_ms=0.000 sessions=1 gen_tokens=3 mean_lanes=1.00 prefill_jobs=1 prefill_toks=4 kv_pages=0/0 kv_quantized=0 kv_oom=0 kv_quant=none models=1 threads=4 backend=fused simd=avx2 resident_bytes=48768
 /// > CLOSE
 /// < OK closed len=7
 /// > QUIT
@@ -1462,12 +1471,39 @@ pub fn serve_tcp_opts(
     listener: TcpListener,
     opts: ServeOptions,
 ) -> std::io::Result<()> {
+    let max = opts.max_conns;
+    accept_capped(
+        listener,
+        max,
+        move |stream| {
+            let _ = writeln!(stream, "ERR busy (max {max} connections)");
+        },
+        move |stream| {
+            let _ = handle_conn(coord.clone(), stream);
+        },
+    )
+}
+
+/// The connection-capped accept loop shared by the TCP line protocol
+/// and the HTTP front door ([`crate::http::api::serve_http`]): claim a
+/// slot under `max_conns` with a lock-free `fetch_update`, spawn one
+/// handler thread per claimed connection, and release the slot when the
+/// handler exits. Overflow connections get one `busy` reply (the
+/// front-end-specific format is the caller's) and are closed — the
+/// server never spawns unboundedly.
+pub(crate) fn accept_capped(
+    listener: TcpListener,
+    max_conns: usize,
+    busy: impl Fn(&mut TcpStream) + Send + Sync + 'static,
+    handler: impl Fn(TcpStream) + Send + Sync + 'static,
+) -> std::io::Result<()> {
     let live = Arc::new(AtomicUsize::new(0));
+    let handler = Arc::new(handler);
     for stream in listener.incoming() {
         let mut stream = stream?;
         let claimed = live
             .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
-                if n < opts.max_conns {
+                if n < max_conns {
                     Some(n + 1)
                 } else {
                     None
@@ -1475,13 +1511,13 @@ pub fn serve_tcp_opts(
             })
             .is_ok();
         if !claimed {
-            let _ = writeln!(stream, "ERR busy (max {} connections)", opts.max_conns);
+            busy(&mut stream);
             continue; // dropping the stream closes it
         }
-        let c = coord.clone();
+        let h = Arc::clone(&handler);
         let live2 = live.clone();
         std::thread::spawn(move || {
-            let _ = handle_conn(c, stream);
+            h(stream);
             live2.fetch_sub(1, Ordering::SeqCst);
         });
     }
@@ -1664,6 +1700,7 @@ mod tests {
                 "kv_quantized",
                 "kv_oom",
                 "kv_quant",
+                "models",
                 "threads",
                 "backend",
                 "simd",
@@ -1678,6 +1715,7 @@ mod tests {
         );
         assert_eq!(snap.get("backend"), Some("dense"));
         assert_eq!(snap.get("kv_pages"), Some("0/0"), "dense engine has no arena");
+        assert_eq!(snap.get("models"), Some("1"), "no registry gauge: single-model default");
         assert!(snap.get("nope").is_none());
     }
 

@@ -1,0 +1,521 @@
+//! The HTTP/SSE front door's routes: an OpenAI-style completions API
+//! over the [`ModelRegistry`], plus model listing and a metrics dump.
+//! Request/response schemas and the error-code table live in
+//! `docs/PROTOCOL.md`; this module is deliberately a thin adapter — all
+//! scheduling goes through the same [`Coordinator`] /
+//! [`crate::coordinator::SchedulerCore`] the TCP worker uses, so the
+//! sim-pinned scheduling semantics carry over unchanged.
+//!
+//! Routes:
+//! * `POST /v1/completions` — token-in/token-out completion against a
+//!   named model; `"stream": true` switches the response to SSE.
+//! * `GET /v1/models` — every registered model with residency state.
+//! * `GET /metrics` — text dump: one registry summary line plus one
+//!   [`crate::coordinator::Metrics::snapshot`] STATS line per resident
+//!   model.
+//!
+//! Every error body is `{"error": {"code": …, "message": …}}`; codes
+//! (`bad-request`, `unknown-model`, `session-limit`, `kv-oom`, `busy`,
+//! `internal`, …) are part of the wire contract and documented in
+//! `docs/PROTOCOL.md`.
+
+use std::io::{BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use crate::coordinator::{accept_capped, Coordinator, GenEvent, ServeOptions};
+use crate::http::wire::{
+    read_request, sse_event, start_sse, write_response, Request, WireError,
+};
+use crate::model::registry::ModelRegistry;
+use crate::model::sample::SampleParams;
+use crate::util::json::{self, Json};
+
+/// Serve the HTTP front door until the listener errors. Connection
+/// capping reuses the TCP worker's claim/decrement machinery
+/// ([`accept_capped`]); overflow connections get a one-shot `503 busy`
+/// JSON body instead of the line protocol's `ERR busy`.
+pub fn serve_http(
+    registry: Arc<ModelRegistry>,
+    listener: TcpListener,
+    opts: ServeOptions,
+) -> std::io::Result<()> {
+    let max = opts.max_conns;
+    accept_capped(
+        listener,
+        max,
+        move |stream| {
+            let _ = write_error(stream, 503, "busy", &format!("max {max} connections"), false);
+        },
+        move |stream| {
+            let _ = handle_http_conn(&registry, stream);
+        },
+    )
+}
+
+/// One connection: keep-alive loop reading requests until the peer
+/// closes, a handler asks for close (SSE), or a protocol error.
+fn handle_http_conn(reg: &Arc<ModelRegistry>, stream: TcpStream) -> std::io::Result<()> {
+    let peer = stream.try_clone()?;
+    let mut reader = BufReader::new(peer);
+    let mut out = stream;
+    loop {
+        match read_request(&mut reader) {
+            Ok(None) => return Ok(()),
+            Err(WireError { status, message }) => {
+                // answer the protocol violation, then drop the
+                // connection — framing is not recoverable
+                return write_error(&mut out, status, "bad-request", &message, false);
+            }
+            Ok(Some(req)) => {
+                let keep = route(reg, &req, &mut out)? && !req.wants_close();
+                if !keep {
+                    return Ok(());
+                }
+            }
+        }
+    }
+}
+
+/// Dispatch one request; returns whether the connection may be kept
+/// alive (SSE responses are delimited by close, so they return false).
+fn route(reg: &Arc<ModelRegistry>, req: &Request, out: &mut TcpStream) -> std::io::Result<bool> {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/completions") => completions(reg, req, out),
+        ("GET", "/v1/models") => {
+            let body = models_json(reg).to_string_compact();
+            write_response(out, 200, "application/json", body.as_bytes(), true)?;
+            Ok(true)
+        }
+        ("GET", "/metrics") => {
+            let body = metrics_text(reg);
+            write_response(out, 200, "text/plain; charset=utf-8", body.as_bytes(), true)?;
+            Ok(true)
+        }
+        (_, "/v1/completions") | (_, "/v1/models") | (_, "/metrics") => {
+            write_error(
+                out,
+                405,
+                "method-not-allowed",
+                &format!("{} not allowed on {}", req.method, req.path),
+                true,
+            )?;
+            Ok(true)
+        }
+        _ => {
+            write_error(
+                out,
+                404,
+                "not-found",
+                &format!("no route for {}", req.path),
+                true,
+            )?;
+            Ok(true)
+        }
+    }
+}
+
+/// `GET /v1/models` body.
+fn models_json(reg: &ModelRegistry) -> Json {
+    let data: Vec<Json> = reg
+        .models()
+        .into_iter()
+        .map(|m| {
+            Json::obj(vec![
+                ("id", Json::Str(m.name)),
+                ("object", Json::Str("model".into())),
+                ("config", Json::Str(m.config)),
+                ("vocab", Json::Int(m.vocab as i64)),
+                ("max_seq", Json::Int(m.max_seq as i64)),
+                ("params", Json::Int(m.params as i64)),
+                ("file_bytes", Json::Int(m.file_bytes as i64)),
+                ("resident", Json::Bool(m.resident)),
+                ("resident_bytes", Json::Int(m.resident_bytes as i64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("object", Json::Str("list".into())),
+        ("data", Json::Arr(data)),
+    ])
+}
+
+/// `GET /metrics` body: a registry summary line, then one canonical
+/// STATS snapshot line per resident model (cold models report only
+/// registration identity — nothing has run for them).
+fn metrics_text(reg: &ModelRegistry) -> String {
+    let mut s = String::new();
+    s.push_str("# llvq serve-http metrics — field glossary: docs/OPERATIONS.md\n");
+    s.push_str(&format!(
+        "registry models={} resident={} budget_bytes={} total_resident_bytes={}\n",
+        reg.len(),
+        reg.resident_count(),
+        reg.max_resident_bytes(),
+        reg.resident_bytes(),
+    ));
+    let snaps = reg.snapshots();
+    for (name, snap) in &snaps {
+        s.push_str(&format!("model name={name} {snap}\n"));
+    }
+    for m in reg.models() {
+        if !m.resident {
+            s.push_str(&format!(
+                "model name={} cold file_bytes={}\n",
+                m.name, m.file_bytes
+            ));
+        }
+    }
+    s
+}
+
+/// A parsed `POST /v1/completions` body.
+struct CompletionReq {
+    model: String,
+    prompt: Vec<u8>,
+    max_tokens: usize,
+    params: SampleParams,
+    stream: bool,
+}
+
+/// Parse and shape-validate the completions request body (token-level
+/// validation — vocab range, max_seq — happens against the model's
+/// engine after registry lookup).
+fn parse_completion(body: &[u8]) -> Result<CompletionReq, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    let doc = json::parse(text).map_err(|e| format!("bad JSON: {e}"))?;
+    let model = doc
+        .get("model")
+        .and_then(|v| v.as_str())
+        .ok_or("missing string field 'model'")?
+        .to_string();
+    let prompt_field = doc.get("prompt").ok_or("missing field 'prompt'")?;
+    let arr = prompt_field
+        .as_arr()
+        .ok_or("'prompt' must be an array of token ids")?;
+    if arr.is_empty() {
+        return Err("'prompt' must be non-empty".into());
+    }
+    let mut prompt = Vec::with_capacity(arr.len());
+    for v in arr {
+        let t = v
+            .as_i64()
+            .filter(|t| (0..=255).contains(t))
+            .ok_or("'prompt' tokens must be integers in 0..=255")?;
+        prompt.push(t as u8);
+    }
+    let max_tokens = match doc.get("max_tokens") {
+        None => 16,
+        Some(v) => v
+            .as_i64()
+            .filter(|n| *n >= 1)
+            .ok_or("'max_tokens' must be an integer >= 1")? as usize,
+    };
+    let temperature = match doc.get("temperature") {
+        None => 0.0,
+        Some(v) => v.as_f64().ok_or("'temperature' must be a number")? as f32,
+    };
+    let top_k = match doc.get("top_k") {
+        None => 0,
+        Some(v) => v
+            .as_i64()
+            .filter(|n| *n >= 0)
+            .ok_or("'top_k' must be an integer >= 0")? as usize,
+    };
+    let seed = match doc.get("seed") {
+        None => 0,
+        Some(v) => v
+            .as_i64()
+            .filter(|n| *n >= 0)
+            .ok_or("'seed' must be an integer >= 0")? as u64,
+    };
+    let stream = match doc.get("stream") {
+        None | Some(Json::Null) => false,
+        Some(Json::Bool(b)) => *b,
+        Some(_) => return Err("'stream' must be a boolean".into()),
+    };
+    Ok(CompletionReq {
+        model,
+        prompt,
+        max_tokens,
+        params: SampleParams {
+            temperature,
+            top_k,
+            seed,
+        },
+        stream,
+    })
+}
+
+/// Map a coordinator/scheduler error string to (status, wire code). The
+/// scheduler's error texts are part of the TCP wire contract, so keying
+/// on their stable prefixes is safe (pinned by `rust/tests/http.rs`).
+fn map_coord_error(e: &str) -> (u16, &'static str) {
+    if e.starts_with("kv-oom") {
+        (503, "kv-oom")
+    } else if e.starts_with("too many sessions") {
+        (429, "session-limit")
+    } else if e.starts_with("coordinator stopped") || e.starts_with("worker") {
+        (500, "internal")
+    } else {
+        // validation-shaped: bad tokens, bad lengths, unknown session
+        (400, "bad-request")
+    }
+}
+
+/// Closes the session on every exit path — including a client that
+/// disconnects mid-stream — unless the handler already closed it.
+struct SessionGuard<'a> {
+    coord: &'a Coordinator,
+    sid: u64,
+}
+
+impl Drop for SessionGuard<'_> {
+    fn drop(&mut self) {
+        let _ = self.coord.close_session(self.sid);
+    }
+}
+
+/// `POST /v1/completions`.
+fn completions(
+    reg: &Arc<ModelRegistry>,
+    req: &Request,
+    out: &mut TcpStream,
+) -> std::io::Result<bool> {
+    let c = match parse_completion(&req.body) {
+        Ok(c) => c,
+        Err(e) => {
+            write_error(out, 400, "bad-request", &e, true)?;
+            return Ok(true);
+        }
+    };
+    let coord = match reg.coordinator(&c.model) {
+        Ok(k) => k,
+        Err(e) => {
+            let (status, code) = if e.starts_with("unknown model") {
+                (404, "unknown-model")
+            } else {
+                (500, "internal")
+            };
+            write_error(out, status, code, &e, true)?;
+            return Ok(true);
+        }
+    };
+    let max_seq = coord.engine().max_seq();
+    if c.prompt.len() + c.max_tokens > max_seq {
+        write_error(
+            out,
+            400,
+            "bad-request",
+            &format!(
+                "prompt ({}) + max_tokens ({}) exceeds max_seq {max_seq}",
+                c.prompt.len(),
+                c.max_tokens
+            ),
+            true,
+        )?;
+        return Ok(true);
+    }
+    let sid = match coord.open_session() {
+        Ok(s) => s,
+        Err(e) => {
+            let (status, code) = map_coord_error(&e);
+            write_error(out, status, code, &e, true)?;
+            return Ok(true);
+        }
+    };
+    let guard = SessionGuard {
+        coord: &coord,
+        sid,
+    };
+    if let Err(e) = coord.feed(sid, c.prompt.clone()) {
+        let (status, code) = map_coord_error(&e);
+        write_error(out, status, code, &e, true)?;
+        return Ok(true);
+    }
+    let events = match coord.generate(sid, c.max_tokens, c.params) {
+        Ok(rx) => rx,
+        Err(e) => {
+            let (status, code) = map_coord_error(&e);
+            write_error(out, status, code, &e, true)?;
+            return Ok(true);
+        }
+    };
+    let id = format!("cmpl-{sid}");
+    if c.stream {
+        // peek the first event before committing to SSE: admission
+        // errors (kv-oom, bad session) still get a proper HTTP status
+        let first = events.recv();
+        let first_tok = match first {
+            Ok(Ok(GenEvent::Token(t))) => Some(t),
+            Ok(Ok(GenEvent::Done { .. })) => None,
+            Ok(Err(e)) => {
+                let (status, code) = map_coord_error(&e);
+                write_error(out, status, code, &e, true)?;
+                return Ok(true);
+            }
+            Err(_) => {
+                write_error(out, 500, "internal", "generation aborted", true)?;
+                return Ok(true);
+            }
+        };
+        start_sse(out)?;
+        if let Some(t) = first_tok {
+            sse_event(out, &chunk_json(&id, &c.model, t))?;
+            loop {
+                match events.recv() {
+                    Ok(Ok(GenEvent::Token(t))) => {
+                        sse_event(out, &chunk_json(&id, &c.model, t))?
+                    }
+                    Ok(Ok(GenEvent::Done { .. })) | Err(_) => break,
+                    Ok(Err(e)) => {
+                        // mid-stream failure: surface it as a final
+                        // error event — the HTTP status is already sent
+                        sse_event(out, &error_json("internal", &e).to_string_compact())?;
+                        break;
+                    }
+                }
+            }
+        }
+        sse_event(out, "[DONE]")?;
+        drop(guard); // close the session before the connection
+        Ok(false) // SSE is delimited by connection close
+    } else {
+        let mut tokens: Vec<u8> = Vec::with_capacity(c.max_tokens);
+        loop {
+            match events.recv() {
+                Ok(Ok(GenEvent::Token(t))) => tokens.push(t),
+                Ok(Ok(GenEvent::Done { .. })) => break,
+                Ok(Err(e)) => {
+                    let (status, code) = map_coord_error(&e);
+                    write_error(out, status, code, &e, true)?;
+                    return Ok(true);
+                }
+                Err(_) => {
+                    write_error(out, 500, "internal", "generation aborted", true)?;
+                    return Ok(true);
+                }
+            }
+        }
+        drop(guard);
+        let completion_tokens = tokens.len();
+        let body = Json::obj(vec![
+            ("id", Json::Str(id)),
+            ("object", Json::Str("text_completion".into())),
+            ("model", Json::Str(c.model.clone())),
+            (
+                "choices",
+                Json::Arr(vec![Json::obj(vec![
+                    ("index", Json::Int(0)),
+                    (
+                        "tokens",
+                        Json::Arr(tokens.iter().map(|&t| Json::Int(t as i64)).collect()),
+                    ),
+                    ("finish_reason", Json::Str("length".into())),
+                ])]),
+            ),
+            (
+                "usage",
+                Json::obj(vec![
+                    ("prompt_tokens", Json::Int(c.prompt.len() as i64)),
+                    ("completion_tokens", Json::Int(completion_tokens as i64)),
+                    (
+                        "total_tokens",
+                        Json::Int((c.prompt.len() + completion_tokens) as i64),
+                    ),
+                ]),
+            ),
+        ]);
+        write_response(
+            out,
+            200,
+            "application/json",
+            body.to_string_compact().as_bytes(),
+            true,
+        )?;
+        Ok(true)
+    }
+}
+
+/// One SSE completion chunk.
+fn chunk_json(id: &str, model: &str, token: u8) -> String {
+    Json::obj(vec![
+        ("id", Json::Str(id.into())),
+        ("object", Json::Str("text_completion.chunk".into())),
+        ("model", Json::Str(model.into())),
+        (
+            "choices",
+            Json::Arr(vec![Json::obj(vec![
+                ("index", Json::Int(0)),
+                ("token", Json::Int(token as i64)),
+            ])]),
+        ),
+    ])
+    .to_string_compact()
+}
+
+/// The canonical error body.
+fn error_json(code: &str, message: &str) -> Json {
+    Json::obj(vec![(
+        "error",
+        Json::obj(vec![
+            ("code", Json::Str(code.into())),
+            ("message", Json::Str(message.into())),
+        ]),
+    )])
+}
+
+/// Write one JSON error response.
+fn write_error<W: Write>(
+    w: &mut W,
+    status: u16,
+    code: &str,
+    message: &str,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let body = error_json(code, message).to_string_compact();
+    write_response(w, status, "application/json", body.as_bytes(), keep_alive)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn completion_body_parsing_defaults_and_errors() {
+        let c = parse_completion(br#"{"model":"a","prompt":[1,2,3]}"#).unwrap();
+        assert_eq!(c.model, "a");
+        assert_eq!(c.prompt, vec![1, 2, 3]);
+        assert_eq!(c.max_tokens, 16);
+        assert_eq!(c.params.temperature, 0.0);
+        assert!(!c.stream);
+        let c = parse_completion(
+            br#"{"model":"a","prompt":[0],"max_tokens":4,"temperature":0.5,"top_k":8,"seed":9,"stream":true}"#,
+        )
+        .unwrap();
+        assert_eq!(c.max_tokens, 4);
+        assert_eq!(c.params.top_k, 8);
+        assert_eq!(c.params.seed, 9);
+        assert!(c.stream);
+        let bads: [&[u8]; 8] = [
+            b"not json",
+            br#"{"prompt":[1]}"#,
+            br#"{"model":"a"}"#,
+            br#"{"model":"a","prompt":[]}"#,
+            br#"{"model":"a","prompt":["x"]}"#,
+            br#"{"model":"a","prompt":[300]}"#,
+            br#"{"model":"a","prompt":[1],"max_tokens":0}"#,
+            br#"{"model":"a","prompt":[1],"stream":"yes"}"#,
+        ];
+        for bad in bads {
+            assert!(parse_completion(bad).is_err(), "{:?}", String::from_utf8_lossy(bad));
+        }
+    }
+
+    #[test]
+    fn coord_errors_map_to_stable_codes() {
+        assert_eq!(map_coord_error("kv-oom: page arena exhausted (4 pages of 16 tokens)").1, "kv-oom");
+        assert_eq!(map_coord_error("too many sessions (max 64)"), (429, "session-limit"));
+        assert_eq!(map_coord_error("worker gone").0, 500);
+        assert_eq!(map_coord_error("token id 99 out of range (vocab 64)").0, 400);
+    }
+}

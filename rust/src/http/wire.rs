@@ -1,0 +1,285 @@
+//! Minimal HTTP/1.1 wire handling over `std::net` — request parsing,
+//! response writing, and SSE streaming. Dependency-free by design, like
+//! the rest of the crate: the front door needs exactly one verb pair
+//! (`GET`/`POST`), fixed-length bodies, and `text/event-stream` output,
+//! so a full HTTP stack would be dead weight. Protocol reference:
+//! `docs/PROTOCOL.md`.
+//!
+//! Bounds are explicit and conservative (one request line ≤ 8 KiB, ≤ 64
+//! header lines, body ≤ 1 MiB via `Content-Length`; chunked
+//! transfer-encoding is refused with `501`): a completions request is a
+//! few hundred bytes of JSON, so anything near the limits is abuse, not
+//! traffic.
+
+use std::io::{BufRead, Read, Write};
+
+/// Request-line + header-line length bound.
+const MAX_LINE: usize = 8 * 1024;
+/// Header count bound.
+const MAX_HEADERS: usize = 64;
+/// `Content-Length` bound.
+pub const MAX_BODY: usize = 1024 * 1024;
+
+/// One parsed request. Header names are lowercased; the target is split
+/// at `?` into `path` + `query`.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub query: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First value of a (lowercase) header name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// `Connection: close` requested (HTTP/1.1 defaults to keep-alive).
+    pub fn wants_close(&self) -> bool {
+        self.header("connection")
+            .is_some_and(|v| v.eq_ignore_ascii_case("close"))
+    }
+}
+
+/// A malformed request, mapped to an HTTP status before any route runs.
+#[derive(Debug)]
+pub struct WireError {
+    pub status: u16,
+    pub message: String,
+}
+
+impl WireError {
+    fn new(status: u16, message: impl Into<String>) -> Self {
+        Self {
+            status,
+            message: message.into(),
+        }
+    }
+}
+
+/// Read one request off `r`. `Ok(None)` means the peer closed (or died
+/// mid-request) — the caller just drops the connection. `Err` is a
+/// protocol violation worth answering with its status before closing.
+pub fn read_request<R: BufRead>(r: &mut R) -> Result<Option<Request>, WireError> {
+    // request line (tolerate blank lines between keep-alive requests)
+    let line = loop {
+        match read_line_bounded(r)? {
+            None => return Ok(None),
+            Some(l) if l.is_empty() => continue,
+            Some(l) => break l,
+        }
+    };
+    let mut parts = line.split(' ');
+    let method = parts.next().unwrap_or_default().to_string();
+    let target = parts.next().unwrap_or_default().to_string();
+    let version = parts.next().unwrap_or_default();
+    if method.is_empty() || target.is_empty() || !version.starts_with("HTTP/1.") {
+        return Err(WireError::new(400, format!("malformed request line '{line}'")));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target, String::new()),
+    };
+    // headers
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let l = match read_line_bounded(r)? {
+            None => return Ok(None),
+            Some(l) => l,
+        };
+        if l.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(WireError::new(431, "too many header lines"));
+        }
+        let Some((name, value)) = l.split_once(':') else {
+            return Err(WireError::new(400, format!("malformed header line '{l}'")));
+        };
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let req = Request {
+        method,
+        path,
+        query,
+        headers,
+        body: Vec::new(),
+    };
+    if req
+        .header("transfer-encoding")
+        .is_some_and(|v| !v.eq_ignore_ascii_case("identity"))
+    {
+        return Err(WireError::new(501, "chunked transfer encoding not supported"));
+    }
+    let len = match req.header("content-length") {
+        None => 0,
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| WireError::new(400, format!("bad content-length '{v}'")))?,
+    };
+    if len > MAX_BODY {
+        return Err(WireError::new(
+            413,
+            format!("body of {len} B exceeds the {MAX_BODY} B limit"),
+        ));
+    }
+    let mut req = req;
+    if len > 0 {
+        let mut body = vec![0u8; len];
+        if r.read_exact(&mut body).is_err() {
+            return Ok(None); // peer died mid-body
+        }
+        req.body = body;
+    }
+    Ok(Some(req))
+}
+
+/// One `\r\n`- (or `\n`-) terminated line, byte-bounded. `Ok(None)` on
+/// clean EOF or read error, `Err(431)` past [`MAX_LINE`].
+fn read_line_bounded<R: BufRead>(r: &mut R) -> Result<Option<String>, WireError> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let mut byte = [0u8; 1];
+        match r.read(&mut byte) {
+            Ok(0) | Err(_) => {
+                return if buf.is_empty() { Ok(None) } else { Ok(Some(trim_line(buf))) }
+            }
+            Ok(_) => {}
+        }
+        if byte[0] == b'\n' {
+            return Ok(Some(trim_line(buf)));
+        }
+        buf.push(byte[0]);
+        if buf.len() > MAX_LINE {
+            return Err(WireError::new(431, "request or header line too long"));
+        }
+    }
+}
+
+fn trim_line(mut buf: Vec<u8>) -> String {
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    String::from_utf8_lossy(&buf).into_owned()
+}
+
+/// Canonical reason phrase for the statuses this server emits.
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write one fixed-length response. `keep_alive: false` advertises
+/// `Connection: close`; the caller then drops the connection.
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let conn = if keep_alive { "keep-alive" } else { "close" };
+    write!(
+        w,
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {conn}\r\n\r\n",
+        status_reason(status),
+        body.len(),
+    )?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Start a `text/event-stream` response. SSE responses carry no
+/// `Content-Length`, so the stream is delimited by connection close —
+/// the caller must drop the connection after the final event.
+pub fn start_sse<W: Write>(w: &mut W) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n"
+    )?;
+    w.flush()
+}
+
+/// One SSE event (`data: <payload>\n\n`), flushed so the client sees it
+/// as soon as it is produced, not when the socket buffer fills.
+pub fn sse_event<W: Write>(w: &mut W, data: &str) -> std::io::Result<()> {
+    write!(w, "data: {data}\n\n")?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse(input: &str) -> Result<Option<Request>, WireError> {
+        read_request(&mut BufReader::new(input.as_bytes()))
+    }
+
+    #[test]
+    fn parses_request_line_headers_and_body() {
+        let req = parse(
+            "POST /v1/completions?x=1 HTTP/1.1\r\nHost: a\r\nContent-Length: 4\r\n\r\nbody",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/completions");
+        assert_eq!(req.query, "x=1");
+        assert_eq!(req.header("host"), Some("a"));
+        assert_eq!(req.body, b"body");
+        assert!(!req.wants_close());
+    }
+
+    #[test]
+    fn eof_and_malformed_inputs() {
+        assert!(parse("").unwrap().is_none(), "clean EOF");
+        assert_eq!(parse("garbage\r\n\r\n").err().map(|e| e.status), Some(400));
+        assert_eq!(
+            parse("GET / HTTP/1.1\r\nno-colon-here\r\n\r\n")
+                .err()
+                .map(|e| e.status),
+            Some(400)
+        );
+        let huge = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(MAX_LINE + 2));
+        assert_eq!(parse(&huge).err().map(|e| e.status), Some(431));
+        let chunked = "POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n";
+        assert_eq!(parse(chunked).err().map(|e| e.status), Some(501));
+        let big = "POST / HTTP/1.1\r\nContent-Length: 9999999\r\n\r\n";
+        assert_eq!(parse(big).err().map(|e| e.status), Some(413));
+    }
+
+    #[test]
+    fn response_and_sse_shapes() {
+        let mut out: Vec<u8> = Vec::new();
+        write_response(&mut out, 200, "application/json", b"{}", true).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Content-Length: 2\r\n"));
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        assert!(text.ends_with("\r\n\r\n{}"));
+        let mut sse: Vec<u8> = Vec::new();
+        start_sse(&mut sse).unwrap();
+        sse_event(&mut sse, "{\"x\":1}").unwrap();
+        let text = String::from_utf8(sse).unwrap();
+        assert!(text.contains("Content-Type: text/event-stream\r\n"));
+        assert!(text.ends_with("data: {\"x\":1}\n\n"));
+    }
+}

@@ -122,6 +122,23 @@
 //!                             the worker thread and the simulator both
 //!                             drive, and STATS formats through the shared
 //!                             Metrics::snapshot
+//! model::registry             multi-model serving registry behind the
+//!                             HTTP front door: named .llvqm artifacts
+//!                             registered header-only (load_meta), each
+//!                             built into a backend + Coordinator on
+//!                             first request, held as a byte-budgeted
+//!                             LRU hot set (--max-resident-bytes; models
+//!                             with open sessions are never evicted) with
+//!                             per-model Metrics sharing one models= gauge
+//! http                        dependency-free HTTP/1.1 + SSE front door
+//!                             (llvq serve-http) over std::net: wire
+//!                             parsing/limits (http::wire) and the
+//!                             OpenAI-style routes (http::api) — POST
+//!                             /v1/completions (SSE or fixed-length),
+//!                             GET /v1/models, GET /metrics — all driving
+//!                             the same SchedulerCore as the TCP worker
+//!                             through the registry's per-model
+//!                             Coordinators; see docs/PROTOCOL.md
 //! sim                         deterministic scheduler simulator: a
 //!                             virtual-clock driver of SchedulerCore — no
 //!                             threads, sockets, or wall time — with
@@ -162,6 +179,10 @@
 //! * [`coordinator`] — batched + sessioned inference service over any
 //!   backend (v1 `NEXT` and the streaming v2 `OPEN`/`FEED`/`GEN` wire
 //!   protocol).
+//! * [`model::registry`] / [`http`] — the multi-model HTTP/SSE front
+//!   door (`llvq serve-http`): lazy registration, LRU residency budget,
+//!   OpenAI-style completions. Canonical reference: `docs/PROTOCOL.md`,
+//!   `docs/ARCHITECTURE.md`, `docs/OPERATIONS.md`.
 //! * [`sim`] — the deterministic virtual-clock scheduler simulator:
 //!   scripted/replayable event traces, per-tick invariants, and the named
 //!   workload scenario corpus.
@@ -223,10 +244,19 @@ pub mod model {
     pub mod sample;
     pub mod eval;
     pub mod corpus;
+    pub mod registry;
 }
 
 pub mod runtime;
 pub mod coordinator;
+
+pub mod http {
+    //! Dependency-free HTTP/1.1 + SSE front door — see [`wire`] for
+    //! parsing/limits, [`api`] for the routes, and `docs/PROTOCOL.md`
+    //! for the canonical request/response reference.
+    pub mod wire;
+    pub mod api;
+}
 
 pub mod lint {
     //! Repo-native static analysis — see [`engine`] for the driver,

@@ -28,7 +28,23 @@ pub const LINT_DIRS: &[&str] = &["rust/src", "rust/tests", "rust/benches", "exam
 const SKIP_COMPONENTS: &[&str] = &["lint_fixtures", "target"];
 
 /// Lint a virtual tree of `(repo-relative path, source text)` pairs.
+/// The docs-sync rule does not run here — virtual trees (rule fixtures,
+/// unit tests) carry no docs; use [`lint_files_with_docs`] for that.
 pub fn lint_files(inputs: &[(String, String)]) -> Vec<Finding> {
+    lint_inputs(inputs, None)
+}
+
+/// [`lint_files`] plus the docs-sync rule: `docs` holds the
+/// `(repo-relative path, text)` pairs for the [`rules::DOC_FILES`] that
+/// exist — an expected doc absent from it is reported as a finding.
+pub fn lint_files_with_docs(
+    inputs: &[(String, String)],
+    docs: &[(String, String)],
+) -> Vec<Finding> {
+    lint_inputs(inputs, Some(docs))
+}
+
+fn lint_inputs(inputs: &[(String, String)], docs: Option<&[(String, String)]>) -> Vec<Finding> {
     let files: Vec<SourceFile> = inputs
         .iter()
         .map(|(p, t)| SourceFile::parse(p, t))
@@ -38,14 +54,18 @@ pub fn lint_files(inputs: &[(String, String)]) -> Vec<Finding> {
         rules::check_file(f, &mut out);
     }
     rules::check_repo(&files, &mut out);
+    if let Some(docs) = docs {
+        rules::check_docs(&files, docs, &mut out);
+    }
     out.sort();
     out.dedup();
     out
 }
 
-/// Walk `root` and lint every tracked `.rs` source. `rule` restricts the
-/// report to one rule by name (the full set still runs; filtering is on
-/// output so cross-rule state never diverges).
+/// Walk `root` and lint every tracked `.rs` source, plus the committed
+/// reference docs for the docs-sync rule. `rule` restricts the report to
+/// one rule by name (the full set still runs; filtering is on output so
+/// cross-rule state never diverges).
 pub fn run_lint(root: &Path, rule: Option<&str>) -> Result<Vec<Finding>, String> {
     if let Some(r) = rule {
         if !rules::known_rule(r) {
@@ -61,7 +81,13 @@ pub fn run_lint(root: &Path, rule: Option<&str>) -> Result<Vec<Finding>, String>
             LINT_DIRS.join(", ")
         ));
     }
-    let mut findings = lint_files(&inputs);
+    let mut docs: Vec<(String, String)> = Vec::new();
+    for name in rules::DOC_FILES {
+        if let Ok(text) = fs::read_to_string(root.join(name)) {
+            docs.push((name.to_string(), text));
+        }
+    }
+    let mut findings = lint_files_with_docs(&inputs, &docs);
     if let Some(r) = rule {
         findings.retain(|f| f.rule == r);
     }

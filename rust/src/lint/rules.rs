@@ -24,6 +24,7 @@ pub const NO_PANIC_SERVING: &str = "no-panic-serving";
 pub const LOCK_POISON: &str = "lock-poison";
 pub const TARGET_FEATURE_UNSAFE: &str = "target-feature-unsafe";
 pub const STATS_WIRE_ORDER: &str = "stats-wire-order";
+pub const DOCS_SYNC: &str = "docs-sync";
 pub const ALLOW_SYNTAX: &str = "allow-syntax";
 
 /// `(name, summary)` for `--rule` validation and the text report footer.
@@ -49,6 +50,11 @@ pub const RULES: &[(&str, &str)] = &[
         "STATS field order and wire-protocol verbs stay consistent everywhere",
     ),
     (
+        DOCS_SYNC,
+        "docs/PROTOCOL.md and docs/OPERATIONS.md cover every wire verb, HTTP \
+         route, and STATS field",
+    ),
+    (
         ALLOW_SYNTAX,
         "lint:allow directives name a real rule and carry a reason",
     ),
@@ -59,8 +65,11 @@ pub const RULES: &[(&str, &str)] = &[
 /// purpose — and stays out of scope; see LINTS.md.)
 pub const SERVING_MODULES: &[&str] = &[
     "rust/src/coordinator.rs",
+    "rust/src/http/api.rs",
+    "rust/src/http/wire.rs",
     "rust/src/model/backend.rs",
     "rust/src/model/kvpage.rs",
+    "rust/src/model/registry.rs",
     "rust/src/util/threadpool.rs",
 ];
 
@@ -75,6 +84,15 @@ pub const REQUEST_VERBS: &[&str] = &["OPEN", "FEED", "GEN", "CLOSE", "NEXT", "ST
 
 /// Lowercase event verbs the sim trace format commits to.
 pub const TRACE_VERBS: &[&str] = &["open", "feed", "gen", "close"];
+
+/// Documentation files the docs-sync rule keeps in lockstep with the
+/// wire surface: PROTOCOL.md documents verbs/routes/error codes,
+/// OPERATIONS.md glosses every STATS field.
+pub const DOC_FILES: &[&str] = &["docs/PROTOCOL.md", "docs/OPERATIONS.md"];
+
+/// Routes the HTTP front door serves. `docs/PROTOCOL.md` must document
+/// each, and `rust/src/http/api.rs` must keep each as a string literal.
+pub const HTTP_ROUTES: &[&str] = &["/v1/completions", "/v1/models", "/metrics"];
 
 pub fn known_rule(name: &str) -> bool {
     RULES.iter().any(|(n, _)| *n == name)
@@ -93,6 +111,16 @@ pub fn check_file(f: &SourceFile, out: &mut Vec<Finding>) {
 /// Run the repo-level consistency rule (STATS field order across files)
 /// over the whole file set.
 pub fn check_repo(files: &[SourceFile], out: &mut Vec<Finding>) {
+    // verb/route presence checks don't need the canonical field list —
+    // they must fire even when the coordinator isn't in the input set
+    for f in files {
+        if f.path.ends_with("sim/trace.rs") {
+            check_trace_verbs_present(f, out);
+        }
+        if f.path.ends_with("src/http/api.rs") {
+            check_http_routes_present(f, out);
+        }
+    }
     let coordinator = files
         .iter()
         .find(|f| f.path.ends_with("src/coordinator.rs"));
@@ -119,8 +147,119 @@ pub fn check_repo(files: &[SourceFile], out: &mut Vec<Finding>) {
     }
     for f in files {
         check_field_order_lines(f, &canon.fields, out);
-        if f.path.ends_with("sim/trace.rs") {
-            check_trace_verbs_present(f, out);
+    }
+}
+
+/// Run the docs consistency rule: the committed reference docs must
+/// cover every wire verb, HTTP route, and STATS snapshot field the
+/// sources actually speak. `docs` carries the doc texts that exist;
+/// a [`DOC_FILES`] entry absent from it is itself a finding.
+pub fn check_docs(files: &[SourceFile], docs: &[(String, String)], out: &mut Vec<Finding>) {
+    let doc = |name: &str| docs.iter().find(|(p, _)| p == name).map(|(_, t)| t.as_str());
+    for name in DOC_FILES {
+        if doc(name).is_none() {
+            out.push(Finding {
+                file: name.to_string(),
+                line: 1,
+                rule: DOCS_SYNC,
+                message: format!(
+                    "{name} is missing — it is the canonical wire/operations reference"
+                ),
+            });
+        }
+    }
+    if let Some(proto) = doc("docs/PROTOCOL.md") {
+        // WIRE_VERBS is a superset of REQUEST_VERBS, so one sweep covers
+        // both request and reply vocabularies
+        for verb in WIRE_VERBS {
+            if !contains_word(proto, verb) {
+                out.push(Finding {
+                    file: "docs/PROTOCOL.md".to_string(),
+                    line: 1,
+                    rule: DOCS_SYNC,
+                    message: format!("wire verb `{verb}` is undocumented in docs/PROTOCOL.md"),
+                });
+            }
+        }
+        for route in HTTP_ROUTES {
+            if !proto.contains(route) {
+                out.push(Finding {
+                    file: "docs/PROTOCOL.md".to_string(),
+                    line: 1,
+                    rule: DOCS_SYNC,
+                    message: format!("HTTP route `{route}` is undocumented in docs/PROTOCOL.md"),
+                });
+            }
+        }
+        if !proto.contains("kv-oom") {
+            out.push(Finding {
+                file: "docs/PROTOCOL.md".to_string(),
+                line: 1,
+                rule: DOCS_SYNC,
+                message: "the `kv-oom` error code is undocumented in docs/PROTOCOL.md"
+                    .to_string(),
+            });
+        }
+    }
+    if let Some(ops) = doc("docs/OPERATIONS.md") {
+        let canon = files
+            .iter()
+            .find(|f| f.path.ends_with("src/coordinator.rs"))
+            .and_then(extract_canonical_fields);
+        if let Some(canon) = canon {
+            for field in &canon.fields {
+                if !contains_word(ops, field) {
+                    out.push(Finding {
+                        file: "docs/OPERATIONS.md".to_string(),
+                        line: 1,
+                        rule: DOCS_SYNC,
+                        message: format!(
+                            "STATS field `{field}` has no glossary entry in docs/OPERATIONS.md"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// `word` occurs in `text` with non-identifier characters (or text
+/// boundaries) on both sides — `kv_quant` never matches inside
+/// `kv_quantized`, `GEN` never matches inside `REGEN`.
+fn contains_word(text: &str, word: &str) -> bool {
+    let bytes = text.as_bytes();
+    let is_word = |b: u8| b.is_ascii_alphanumeric() || b == b'_';
+    let mut from = 0usize;
+    while let Some(rel) = text[from..].find(word) {
+        let at = from + rel;
+        let end = at + word.len();
+        let prev_ok = at == 0 || !is_word(bytes[at - 1]);
+        let next_ok = end == text.len() || !is_word(bytes[end]);
+        if prev_ok && next_ok {
+            return true;
+        }
+        from = at + 1;
+    }
+    false
+}
+
+/// The HTTP front door must keep serving every documented route.
+fn check_http_routes_present(f: &SourceFile, out: &mut Vec<Finding>) {
+    for route in HTTP_ROUTES {
+        let present = f
+            .toks
+            .iter()
+            .any(|t| t.kind == TokKind::Str && t.text == *route);
+        if !present {
+            out.push(Finding {
+                file: f.path.clone(),
+                line: 1,
+                rule: DOCS_SYNC,
+                message: format!(
+                    "HTTP route `{route}` no longer appears as a string literal — the \
+                     front door must keep serving it"
+                ),
+            });
         }
     }
 }

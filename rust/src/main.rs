@@ -26,6 +26,12 @@
 //!   `--kv-hot` switch sessions from dense worst-case caches to paged KV
 //!   over a shared arena with optionally lattice-quantized cold pages
 //!   (admission answers `ERR kv-oom` when the arena is exhausted).
+//! * `serve-http` — the HTTP/SSE front door: `POST /v1/completions`
+//!   (SSE-streamed or fixed-length), `GET /v1/models`, `GET /metrics`
+//!   over a multi-model registry (`--model name=path[,name=path...]`,
+//!   header-only registration, backends built on first request, LRU
+//!   hot-set eviction under `--max-resident-bytes`). Flag glossary:
+//!   `docs/OPERATIONS.md`; wire reference: `docs/PROTOCOL.md`.
 //! * `sim` — deterministic scheduler simulator: replay a named workload
 //!   scenario (`--scenario burst --seed 7`) or a committed `.trace` file
 //!   (`--trace rust/tests/sim_traces/smoke.trace`) on a virtual clock —
@@ -78,6 +84,7 @@ fn main() {
         "stats" => cmd_stats(rest),
         "eval" => cmd_eval(rest),
         "serve" => cmd_serve(rest),
+        "serve-http" => cmd_serve_http(rest),
         "sim" => cmd_sim(rest),
         "lint" => cmd_lint(rest),
         "generate" => cmd_generate(rest),
@@ -85,7 +92,7 @@ fn main() {
         "info" => cmd_info(rest),
         _ => {
             eprintln!(
-                "usage: llvq <exp|tables|quantize|pack|unpack|stats|eval|serve|sim|lint|generate|gen-model|info> [flags]\n\
+                "usage: llvq <exp|tables|quantize|pack|unpack|stats|eval|serve|serve-http|sim|lint|generate|gen-model|info> [flags]\n\
                  try: llvq exp table1"
             );
             2
@@ -823,6 +830,142 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
     );
     if let Err(e) = llvq::coordinator::serve_tcp_opts(
         coord,
+        listener,
+        ServeOptions {
+            max_conns: a.get_usize("max-conns"),
+        },
+    ) {
+        eprintln!("server error: {e}");
+        return 1;
+    }
+    0
+}
+
+fn cmd_serve_http(rest: Vec<String>) -> i32 {
+    use llvq::http::api::serve_http;
+    use llvq::model::registry::{parse_model_specs, ModelRegistry, RegistryConfig};
+    let a = kv_flags(Args::new(
+        "llvq serve-http — HTTP/SSE front door over a multi-model registry",
+    ))
+    .flag(
+        "model",
+        "",
+        "registry spec: name=path.llvqm[,name=path...]; a bare path names \
+         itself after its file stem",
+    )
+    .flag(
+        "backend",
+        "fused",
+        "execution for every model: dense (unpack at load) | cached (lazy \
+         per-layer decode) | fused (matvec over bit-packed codes)",
+    )
+    .flag("addr", "127.0.0.1:7200", "listen address")
+    .flag("threads", "0", "kernel worker threads per model backend (0 = auto)")
+    .flag(
+        "simd",
+        "",
+        "fused SIMD kernel: off|scalar|avx2|neon|portable (default: \
+         $LLVQ_SIMD, then runtime detection)",
+    )
+    .flag("max-batch", "8", "dynamic batch limit / decode-slate width per model")
+    .flag("max-wait-ms", "2", "batch window")
+    .flag(
+        "prefill-chunk",
+        "64",
+        "prompt tokens a queued prefill job drains per scheduler tick",
+    )
+    .flag("max-sessions", "64", "concurrently open generation sessions per model")
+    .flag("max-conns", "64", "concurrent HTTP connections (503 busy beyond)")
+    .flag(
+        "max-resident-bytes",
+        "0",
+        "LRU hot-set budget over resident model backend bytes (0 = \
+         unlimited; models with open sessions are never evicted)",
+    )
+    .parse(rest.into_iter())
+    .unwrap();
+    let specs = match parse_model_specs(&a.get("model").unwrap()) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let backend = match BackendKind::parse(&a.get("backend").unwrap()) {
+        Some(k) => k,
+        None => {
+            eprintln!(
+                "unknown backend '{}' (dense|cached|fused)",
+                a.get("backend").unwrap()
+            );
+            return 2;
+        }
+    };
+    let simd = match simd_from(&a) {
+        Ok(k) => k,
+        Err(code) => return code,
+    };
+    let kv_quant = match KvQuantKind::parse(&a.get("kv-quant").unwrap()) {
+        Ok(q) => q,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let kv_pages = a.get_usize("kv-pages");
+    if kv_pages == 0 && kv_quant != KvQuantKind::None {
+        eprintln!("--kv-quant {} requires --kv-pages > 0", kv_quant.label());
+        return 2;
+    }
+    let cfg = RegistryConfig {
+        backend,
+        threads: threads_from(&a),
+        simd,
+        batcher: BatcherConfig {
+            max_batch: a.get_usize("max-batch"),
+            max_wait: std::time::Duration::from_millis(a.get_u64("max-wait-ms")),
+            max_sessions: a.get_usize("max-sessions"),
+            prefill_chunk: a.get_usize("prefill-chunk").max(1),
+        },
+        kv_pages,
+        kv_page_tokens: a.get_usize("kv-page-size").max(1),
+        kv_hot: a.get_usize("kv-hot"),
+        kv_quant,
+        max_resident_bytes: a.get_usize("max-resident-bytes"),
+    };
+    let registry = match ModelRegistry::open(specs, cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    for m in registry.models() {
+        println!(
+            "registered model {} ({}, {} params, {} B on disk)",
+            m.name, m.config, m.params, m.file_bytes
+        );
+    }
+    let addr = a.get("addr").unwrap();
+    let listener = match std::net::TcpListener::bind(&addr) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("bind {addr}: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "serving HTTP on {addr} (POST /v1/completions [SSE via \"stream\": true] \
+         | GET /v1/models | GET /metrics) — {} models registered, \
+         resident budget {}",
+        registry.len(),
+        match registry.max_resident_bytes() {
+            0 => "unlimited".to_string(),
+            b => format!("{b} B"),
+        }
+    );
+    if let Err(e) = serve_http(
+        registry,
         listener,
         ServeOptions {
             max_conns: a.get_usize("max-conns"),

@@ -1,0 +1,425 @@
+//! Multi-model registry behind the HTTP front door (`llvq serve-http`).
+//!
+//! One process, many named `.llvqm` artifacts. Registration is
+//! header-only ([`crate::model::packed::PackedModel::load_meta`]): the
+//! file is parse-validated and its config captured without touching the
+//! payload, so registering N models costs N header reads. The first
+//! request against a model builds its execution backend and starts a
+//! dedicated [`Coordinator`] (its own scheduler worker, its own
+//! [`crate::coordinator::Metrics`]); subsequent requests reuse it.
+//!
+//! Residency is a byte-budgeted LRU hot set: after every touch the
+//! registry sums `resident_weight_bytes()` across resident backends and,
+//! while the sum exceeds `max_resident_bytes`, stops and drops the
+//! least-recently-used resident model — but **never** one with open
+//! sessions (eviction must not kill in-flight generations), and never
+//! the model that was just requested. A budget small enough that nothing
+//! is evictable is therefore a soft limit: the process temporarily
+//! overshoots rather than aborting live work, and re-checks on the next
+//! touch. See `docs/OPERATIONS.md` for sizing guidance.
+//!
+//! Every per-model [`crate::coordinator::Metrics`] shares one
+//! registered-model gauge, surfaced as the `models=` STATS field (the
+//! single-model `llvq serve` path reports `models=1`).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::{BackendEngine, BatcherConfig, Coordinator};
+use crate::model::backend::{BackendKind, ExecutionBackend};
+use crate::model::kvpage::KvQuantKind;
+use crate::model::packed::{PackedFile, PackedMeta, PackedModel};
+use crate::quant::kernel::Kernel;
+
+/// One `name=path` registration unit.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub path: PathBuf,
+}
+
+/// Parse the `--model name=path[,name=path...]` CLI value. A bare path
+/// (no `=`) names itself after its file stem. Names must be non-empty,
+/// unique, and URL-safe (`[A-Za-z0-9._-]`) so they can appear verbatim
+/// in routes and JSON without escaping.
+pub fn parse_model_specs(arg: &str) -> Result<Vec<ModelSpec>, String> {
+    let mut specs: Vec<ModelSpec> = Vec::new();
+    for part in arg.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (name, path) = match part.split_once('=') {
+            Some((n, p)) => (n.trim().to_string(), PathBuf::from(p.trim())),
+            None => {
+                let path = PathBuf::from(part);
+                let stem = path
+                    .file_stem()
+                    .map(|s| s.to_string_lossy().to_string())
+                    .unwrap_or_default();
+                (stem, path)
+            }
+        };
+        if name.is_empty() {
+            return Err(format!("model spec '{part}' has an empty name"));
+        }
+        if !name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-'))
+        {
+            return Err(format!(
+                "model name '{name}' must match [A-Za-z0-9._-] (it appears in URLs and JSON)"
+            ));
+        }
+        if specs.iter().any(|s| s.name == name) {
+            return Err(format!("duplicate model name '{name}'"));
+        }
+        specs.push(ModelSpec { name, path });
+    }
+    if specs.is_empty() {
+        return Err("no model specs (expected name=path[,name=path...])".into());
+    }
+    Ok(specs)
+}
+
+/// How the registry builds backends and schedulers for its models: one
+/// shared policy, applied to every model on its first request.
+#[derive(Clone, Copy, Debug)]
+pub struct RegistryConfig {
+    /// Execution backend for every model (dense | cached | fused).
+    pub backend: BackendKind,
+    /// Kernel worker threads per backend.
+    pub threads: usize,
+    /// Fused-kernel SIMD selection.
+    pub simd: Kernel,
+    /// Scheduler configuration for every per-model [`Coordinator`].
+    pub batcher: BatcherConfig,
+    /// KV page-arena budget in pages (0 = dense worst-case caches).
+    pub kv_pages: usize,
+    /// Tokens per KV page.
+    pub kv_page_tokens: usize,
+    /// f32 hot window in tokens.
+    pub kv_hot: usize,
+    /// Cold-page codec.
+    pub kv_quant: KvQuantKind,
+    /// LRU hot-set budget over `resident_weight_bytes()` sums
+    /// (0 = unlimited).
+    pub max_resident_bytes: usize,
+}
+
+impl Default for RegistryConfig {
+    fn default() -> Self {
+        Self {
+            backend: BackendKind::Cached,
+            threads: 1,
+            simd: Kernel::Scalar,
+            batcher: BatcherConfig::default(),
+            kv_pages: 0,
+            kv_page_tokens: 16,
+            kv_hot: 32,
+            kv_quant: KvQuantKind::None,
+            max_resident_bytes: 0,
+        }
+    }
+}
+
+/// Registration-time identity of one model — everything `GET /v1/models`
+/// reports, readable without building a backend.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    /// Config name from the packed header (e.g. `qwen3-4b-tiny`).
+    pub config: String,
+    pub vocab: usize,
+    pub max_seq: usize,
+    /// Linear (quantized) parameter count.
+    pub params: usize,
+    /// On-disk artifact size.
+    pub file_bytes: usize,
+    /// Whether a backend + coordinator currently exist for this model.
+    pub resident: bool,
+    /// `resident_weight_bytes()` of the live backend (0 when cold).
+    pub resident_bytes: usize,
+}
+
+struct Entry {
+    spec: ModelSpec,
+    meta: PackedMeta,
+    coord: Option<Arc<Coordinator>>,
+    /// LRU clock value of the last touch (higher = more recent).
+    last_touch: u64,
+}
+
+struct Inner {
+    entries: Vec<Entry>,
+    clock: u64,
+}
+
+/// The registry: see the module docs for the residency model.
+pub struct ModelRegistry {
+    cfg: RegistryConfig,
+    inner: Mutex<Inner>,
+    /// Shared into every per-model `Metrics` as the `models=` gauge.
+    models_gauge: Arc<AtomicU64>,
+}
+
+impl ModelRegistry {
+    /// Register every spec (header-only — fails fast on a bad artifact,
+    /// duplicate names are rejected by [`parse_model_specs`]).
+    pub fn open(specs: Vec<ModelSpec>, cfg: RegistryConfig) -> Result<Arc<Self>, String> {
+        let mut entries = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let meta = PackedModel::load_meta(&spec.path)
+                .map_err(|e| format!("model '{}' ({}): {e}", spec.name, spec.path.display()))?;
+            entries.push(Entry {
+                spec,
+                meta,
+                coord: None,
+                last_touch: 0,
+            });
+        }
+        let gauge = Arc::new(AtomicU64::new(entries.len() as u64));
+        Ok(Arc::new(Self {
+            cfg,
+            inner: Mutex::new(Inner { entries, clock: 0 }),
+            models_gauge: gauge,
+        }))
+    }
+
+    /// Registered model count.
+    pub fn len(&self) -> usize {
+        self.lock().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The configured residency budget (0 = unlimited).
+    pub fn max_resident_bytes(&self) -> usize {
+        self.cfg.max_resident_bytes
+    }
+
+    /// Models currently holding a live backend.
+    pub fn resident_count(&self) -> usize {
+        self.lock().entries.iter().filter(|e| e.coord.is_some()).count()
+    }
+
+    /// Sum of `resident_weight_bytes()` over resident backends.
+    pub fn resident_bytes(&self) -> usize {
+        let inner = self.lock();
+        inner
+            .entries
+            .iter()
+            .filter_map(|e| e.coord.as_ref())
+            .map(|c| c.engine().resident_weight_bytes())
+            .sum()
+    }
+
+    /// Identity of every registered model, sorted by name.
+    pub fn models(&self) -> Vec<ModelInfo> {
+        let inner = self.lock();
+        let mut out: Vec<ModelInfo> = inner
+            .entries
+            .iter()
+            .map(|e| ModelInfo {
+                name: e.spec.name.clone(),
+                config: e.meta.cfg.name.clone(),
+                vocab: e.meta.cfg.vocab,
+                max_seq: e.meta.cfg.max_seq,
+                params: e.meta.linear_params(),
+                file_bytes: e.meta.file_len,
+                resident: e.coord.is_some(),
+                resident_bytes: e
+                    .coord
+                    .as_ref()
+                    .map_or(0, |c| c.engine().resident_weight_bytes()),
+            })
+            .collect();
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        out
+    }
+
+    /// The coordinator serving `name`, building backend + scheduler on
+    /// first touch, then enforcing the LRU byte budget (the just-touched
+    /// model is exempt; models with open sessions are never evicted).
+    ///
+    /// First-touch construction holds the registry lock — concurrent
+    /// requests to *other* models briefly serialize behind a load. That
+    /// is deliberate: it makes "construct, then evict under budget" one
+    /// atomic decision, and loads are bounded (cached/fused backends
+    /// only map the code streams; only `--backend dense` pays a full
+    /// unpack here).
+    pub fn coordinator(&self, name: &str) -> Result<Arc<Coordinator>, String> {
+        let mut inner = self.lock();
+        inner.clock += 1;
+        let clock = inner.clock;
+        let idx = inner
+            .entries
+            .iter()
+            .position(|e| e.spec.name == name)
+            .ok_or_else(|| format!("unknown model '{name}'"))?;
+        inner.entries[idx].last_touch = clock;
+        if inner.entries[idx].coord.is_none() {
+            let entry = &inner.entries[idx];
+            let backend = build_backend(&entry.spec.path, &self.cfg)?;
+            let engine = build_engine(backend, &self.cfg)?;
+            let coord = Coordinator::start(Arc::new(engine), self.cfg.batcher);
+            // every per-model STATS surface reports the shared
+            // registered-model gauge as `models=`
+            let _ = coord.metrics.models.set(self.models_gauge.clone());
+            inner.entries[idx].coord = Some(coord);
+        }
+        let coord = match inner.entries[idx].coord.as_ref() {
+            Some(c) => Arc::clone(c),
+            // unreachable: just constructed above — but a panic here
+            // would tear down a serving thread, so fail the request
+            None => return Err("model backend construction raced".into()),
+        };
+        self.enforce_budget(&mut inner, idx);
+        Ok(coord)
+    }
+
+    /// Evict LRU resident models while over budget. Skips `keep` (the
+    /// just-touched model) and any model with open sessions; if nothing
+    /// is evictable the overshoot stands until the next touch.
+    fn enforce_budget(&self, inner: &mut Inner, keep: usize) {
+        let budget = self.cfg.max_resident_bytes;
+        if budget == 0 {
+            return;
+        }
+        loop {
+            let total: usize = inner
+                .entries
+                .iter()
+                .filter_map(|e| e.coord.as_ref())
+                .map(|c| c.engine().resident_weight_bytes())
+                .sum();
+            if total <= budget {
+                return;
+            }
+            // oldest-touched resident entry that is idle and not `keep`
+            let victim = inner
+                .entries
+                .iter()
+                .enumerate()
+                .filter(|(i, e)| {
+                    *i != keep
+                        && e.coord.as_ref().is_some_and(|c| {
+                            c.metrics.open_sessions.load(Ordering::SeqCst) == 0
+                        })
+                })
+                .min_by_key(|(_, e)| e.last_touch)
+                .map(|(i, _)| i);
+            let Some(v) = victim else { return };
+            if let Some(coord) = inner.entries[v].coord.take() {
+                // stop() drains queued work and joins the worker; the
+                // victim has no open sessions, so this is bounded
+                coord.stop();
+            }
+        }
+    }
+
+    /// `(name, STATS snapshot)` for every *resident* model, sorted by
+    /// name — the `/metrics` endpoint's per-model rows. Cold models have
+    /// no metrics to report (registration alone runs nothing).
+    pub fn snapshots(&self) -> Vec<(String, crate::coordinator::StatsSnapshot)> {
+        let inner = self.lock();
+        let mut out: Vec<(String, crate::coordinator::StatsSnapshot)> = inner
+            .entries
+            .iter()
+            .filter_map(|e| {
+                e.coord.as_ref().map(|c| {
+                    (e.spec.name.clone(), c.metrics.snapshot(c.engine().as_ref()))
+                })
+            })
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// Stop every resident coordinator (drains queued work; see
+    /// [`Coordinator::stop`]).
+    pub fn stop(&self) {
+        // take the coordinators out under the lock, stop them outside it
+        // so a slow drain never blocks registry reads
+        let coords: Vec<Arc<Coordinator>> = {
+            let mut inner = self.lock();
+            inner.entries.iter_mut().filter_map(|e| e.coord.take()).collect()
+        };
+        for c in coords {
+            c.stop();
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        // entries/clock stay consistent across a client-thread panic —
+        // recover the guard instead of propagating poison into serving
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// Build one model's [`ExecutionBackend`] under the registry policy.
+fn build_backend(path: &Path, cfg: &RegistryConfig) -> Result<ExecutionBackend, String> {
+    match cfg.backend {
+        BackendKind::Dense => {
+            let packed = PackedModel::load(path)?;
+            let w = packed
+                .unpack(cfg.threads)
+                .map_err(|e| format!("unpack failed: {e}"))?;
+            Ok(ExecutionBackend::dense(w))
+        }
+        BackendKind::Cached => {
+            ExecutionBackend::packed_cached(PackedFile::open(path)?, cfg.threads)
+        }
+        BackendKind::Fused => {
+            ExecutionBackend::packed_fused_kernel(PackedFile::open(path)?, cfg.threads, cfg.simd)
+        }
+    }
+}
+
+/// Wrap a backend in the engine the registry policy asks for (paged KV
+/// or dense worst-case caches).
+fn build_engine(backend: ExecutionBackend, cfg: &RegistryConfig) -> Result<BackendEngine, String> {
+    if cfg.kv_pages == 0 {
+        if cfg.kv_quant != KvQuantKind::None {
+            return Err("kv_quant requires kv_pages > 0".into());
+        }
+        return Ok(BackendEngine::new(backend));
+    }
+    BackendEngine::paged(
+        backend,
+        cfg.kv_pages,
+        cfg.kv_page_tokens.max(1),
+        cfg.kv_hot,
+        cfg.kv_quant,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parsing_names_paths_and_rejects_junk() {
+        let specs = parse_model_specs("a=/tmp/a.llvqm, b=/tmp/b.llvqm").unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].name, "a");
+        assert_eq!(specs[1].path, PathBuf::from("/tmp/b.llvqm"));
+        // bare path names itself after the stem
+        let bare = parse_model_specs("/models/tiny.llvqm").unwrap();
+        assert_eq!(bare[0].name, "tiny");
+        assert!(parse_model_specs("").is_err());
+        assert!(parse_model_specs("a=/x,a=/y").is_err(), "duplicate name");
+        assert!(parse_model_specs("bad name=/x").is_err(), "space in name");
+        assert!(parse_model_specs("=/x").is_err(), "empty name");
+    }
+
+    #[test]
+    fn open_rejects_missing_artifacts() {
+        let specs = parse_model_specs("ghost=/nonexistent/ghost.llvqm").unwrap();
+        let err = ModelRegistry::open(specs, RegistryConfig::default()).err();
+        assert!(err.is_some_and(|e| e.contains("ghost")), "error names the model");
+    }
+}

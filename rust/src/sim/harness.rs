@@ -624,6 +624,24 @@ impl Simulator {
                 cfg.max_sessions
             ));
         }
+        // the STATS/metrics snapshot surface must agree with the
+        // scheduler's own occupancy — this is what /metrics and the
+        // registry's per-model rows report, so drift here is a lie to
+        // operators (the registry-aware `models=` gauge must also stay a
+        // sane count: >= 1 always, single-model default exactly 1)
+        let snap = m.snapshot(self.core.engine().as_ref());
+        match snap.get("sessions").and_then(|v| v.parse::<usize>().ok()) {
+            Some(s) if s == open => {}
+            other => self.violate(format!(
+                "snapshot sessions={other:?} disagrees with scheduler occupancy {open}"
+            )),
+        }
+        match snap.get("models").and_then(|v| v.parse::<u64>().ok()) {
+            Some(n) if n >= 1 => {}
+            other => self.violate(format!(
+                "snapshot models={other:?} is not a sane registry gauge (expected >= 1)"
+            )),
+        }
         let steps = m.decode_steps.load(Ordering::Relaxed);
         let lanes = m.decode_lanes.load(Ordering::Relaxed);
         let dsteps = steps.saturating_sub(self.book.steps);

@@ -1,0 +1,426 @@
+//! HTTP front door + model registry acceptance.
+//!
+//! Pins the PR 10 contract: `llvq serve-http` serves multiple named
+//! models from one process; greedy completions — streamed over SSE or
+//! not — are token-identical to the offline `prefill` + `argmax` +
+//! `forward_step` oracle (the same one `llvq generate` runs); malformed
+//! requests map to stable 4xx codes; a client disconnect mid-stream
+//! closes its session; and the registry's LRU residency budget evicts
+//! cold models without ever killing one that has open sessions.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use llvq::coordinator::{BatcherConfig, ServeOptions};
+use llvq::http::api::serve_http;
+use llvq::model::backend::{BackendKind, ExecutionBackend};
+use llvq::model::config::config_by_name;
+use llvq::model::packed::{PackedFile, PackedModel};
+use llvq::model::registry::{parse_model_specs, ModelRegistry, RegistryConfig};
+use llvq::model::sample::argmax;
+use llvq::model::transformer::{forward_step, prefill, KvCache, Weights};
+use llvq::pipeline::driver::{quantize_model_packed, PtqArtifacts, PtqOptions};
+use llvq::pipeline::rotation::RotationMode;
+use llvq::quant::kernel::Kernel;
+use llvq::quant::llvq::LlvqShapeGain;
+use llvq::leech::index::LeechIndexer;
+use llvq::util::json::{self, Json};
+use llvq::util::proptest::TempArtifact;
+
+fn pack_tiny(seed: u64) -> PtqArtifacts {
+    let cfg = config_by_name("qwen3-4b-tiny").unwrap();
+    let w = Weights::random(&cfg, seed);
+    let q = LlvqShapeGain::new(Arc::new(LeechIndexer::new(3)), 1);
+    let opts = PtqOptions {
+        calib_seqs: 2,
+        rotation: RotationMode::InputOutput,
+        ..Default::default()
+    };
+    quantize_model_packed(&w, &q, &opts)
+}
+
+fn save_temp(art: &PtqArtifacts, tag: &str) -> TempArtifact {
+    let tmp = TempArtifact::new(&format!("http-{tag}"), "llvqm");
+    art.packed.save(tmp.path()).unwrap();
+    tmp
+}
+
+/// Scheduler shape shared by every test: tiny ticks, a couple of
+/// session slots, scalar kernel so the oracle runs the same float ops.
+fn test_cfg(backend: BackendKind, max_resident_bytes: usize) -> RegistryConfig {
+    RegistryConfig {
+        backend,
+        threads: 1,
+        simd: Kernel::Scalar,
+        batcher: BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            max_sessions: 2,
+            prefill_chunk: 8,
+        },
+        kv_pages: 0,
+        kv_page_tokens: 16,
+        kv_hot: 32,
+        kv_quant: llvq::model::kvpage::KvQuantKind::None,
+        max_resident_bytes,
+    }
+}
+
+/// Spawn `serve_http` on an OS-assigned port; returns the address and a
+/// second registry handle for direct observation.
+fn spawn_server(reg: Arc<ModelRegistry>, max_conns: usize) -> (SocketAddr, Arc<ModelRegistry>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let observer = Arc::clone(&reg);
+    std::thread::spawn(move || {
+        let _ = serve_http(reg, listener, ServeOptions { max_conns });
+    });
+    (addr, observer)
+}
+
+/// One `Connection: close` request; returns (status, body) with the
+/// body read to EOF.
+fn http_request(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(
+        s,
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).unwrap();
+    split_response(&raw)
+}
+
+fn split_response(raw: &str) -> (u16, String) {
+    let status: u16 = raw
+        .split(' ')
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .unwrap_or_else(|| panic!("unparseable response: {raw:?}"));
+    let body = raw
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    (status, body)
+}
+
+/// Read one framed (Content-Length) response off a keep-alive stream.
+fn read_keepalive_response<R: BufRead>(r: &mut R) -> (u16, String) {
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    let status: u16 = line.split(' ').nth(1).unwrap().parse().unwrap();
+    let mut len = 0usize;
+    loop {
+        let mut h = String::new();
+        r.read_line(&mut h).unwrap();
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+            len = v.trim().parse().unwrap();
+        }
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).unwrap();
+    (status, String::from_utf8(body).unwrap())
+}
+
+/// The offline greedy oracle `llvq generate` runs: prefill, then argmax
+/// + one decode step per token.
+fn greedy_oracle(backend: &ExecutionBackend, prompt: &[u8], n: usize) -> Vec<u8> {
+    let mut cache = KvCache::new(backend.cfg());
+    let mut logits = prefill(backend, &mut cache, prompt);
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let t = argmax(&logits) as u8;
+        out.push(t);
+        if i + 1 < n {
+            logits = forward_step(backend, &mut cache, t);
+        }
+    }
+    out
+}
+
+fn completion_tokens(body: &str) -> Vec<u8> {
+    let doc = json::parse(body).unwrap();
+    let arr = doc
+        .path(&["choices"])
+        .and_then(|c| c.as_arr())
+        .and_then(|c| c.first())
+        .and_then(|c| c.get("tokens"))
+        .and_then(|t| t.as_arr())
+        .unwrap_or_else(|| panic!("no choices[0].tokens in {body}"));
+    arr.iter().map(|v| v.as_i64().unwrap() as u8).collect()
+}
+
+/// Poll until every model's snapshot reports zero open sessions.
+fn wait_sessions_drained(reg: &ModelRegistry) {
+    for _ in 0..500 {
+        let open: u64 = reg
+            .snapshots()
+            .iter()
+            .map(|(_, s)| s.get("sessions").unwrap().parse::<u64>().unwrap())
+            .sum();
+        if open == 0 {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("sessions never drained: {:?}", reg.snapshots());
+}
+
+#[test]
+fn serves_two_models_with_oracle_parity_streamed_and_not() {
+    let art = pack_tiny(11);
+    let tmp = save_temp(&art, "parity");
+    let path = tmp.path().to_string_lossy().to_string();
+    let specs = parse_model_specs(&format!("tiny-a={path},tiny-b={path}")).unwrap();
+    let reg = ModelRegistry::open(specs, test_cfg(BackendKind::Fused, 0)).unwrap();
+    let (addr, reg) = spawn_server(reg, 8);
+
+    // oracle on an identically-configured standalone backend
+    let oracle_backend =
+        ExecutionBackend::packed_fused_kernel(PackedFile::open(tmp.path()).unwrap(), 1, Kernel::Scalar)
+            .unwrap();
+    let prompt: Vec<u8> = vec![5, 6, 7, 8];
+    let want = greedy_oracle(&oracle_backend, &prompt, 6);
+
+    // GET /v1/models lists both names, cold before any completion
+    let (status, body) = http_request(addr, "GET", "/v1/models", "");
+    assert_eq!(status, 200);
+    let doc = json::parse(&body).unwrap();
+    let data = doc.get("data").and_then(|d| d.as_arr()).unwrap();
+    let ids: Vec<&str> = data.iter().filter_map(|m| m.get("id").and_then(|v| v.as_str())).collect();
+    assert_eq!(ids, vec!["tiny-a", "tiny-b"]);
+    for m in data {
+        assert_eq!(m.get("resident"), Some(&Json::Bool(false)), "cold at registration");
+    }
+
+    // non-streamed greedy completion on tiny-a
+    let req = r#"{"model":"tiny-a","prompt":[5,6,7,8],"max_tokens":6}"#;
+    let (status, body) = http_request(addr, "POST", "/v1/completions", req);
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(completion_tokens(&body), want, "non-streamed != oracle");
+    let doc = json::parse(&body).unwrap();
+    assert_eq!(doc.path(&["usage", "prompt_tokens"]).and_then(|v| v.as_i64()), Some(4));
+    assert_eq!(doc.path(&["usage", "completion_tokens"]).and_then(|v| v.as_i64()), Some(6));
+
+    // SSE-streamed greedy completion on tiny-b: same artifact, its own
+    // coordinator — and the same tokens
+    let req = r#"{"model":"tiny-b","prompt":[5,6,7,8],"max_tokens":6,"stream":true}"#;
+    let (status, raw) = http_request(addr, "POST", "/v1/completions", req);
+    assert_eq!(status, 200, "{raw}");
+    let events: Vec<&str> = raw
+        .lines()
+        .filter_map(|l| l.strip_prefix("data: "))
+        .collect();
+    assert_eq!(events.last(), Some(&"[DONE]"), "stream must end with [DONE]");
+    let got: Vec<u8> = events[..events.len() - 1]
+        .iter()
+        .map(|e| {
+            let chunk = json::parse(e).unwrap();
+            assert_eq!(
+                chunk.get("object").and_then(|v| v.as_str()),
+                Some("text_completion.chunk")
+            );
+            chunk
+                .path(&["choices"])
+                .and_then(|c| c.as_arr())
+                .and_then(|c| c.first())
+                .and_then(|c| c.get("token"))
+                .and_then(|t| t.as_i64())
+                .unwrap() as u8
+        })
+        .collect();
+    assert_eq!(got, want, "SSE stream != oracle");
+
+    // both models now resident; /metrics shows the registry summary and
+    // one canonical per-model line each
+    let (status, metrics) = http_request(addr, "GET", "/metrics", "");
+    assert_eq!(status, 200);
+    assert!(metrics.contains("registry models=2 resident=2"), "{metrics}");
+    assert!(metrics.contains("model name=tiny-a "), "{metrics}");
+    assert!(metrics.contains("model name=tiny-b "), "{metrics}");
+    for line in metrics.lines().filter(|l| l.starts_with("model name=")) {
+        assert!(line.contains("backend=fused"), "{line}");
+        assert!(line.contains("models=2"), "shared gauge: {line}");
+        let (_, tail) = line.rsplit_once("resident_bytes=").expect("resident_bytes last");
+        assert!(tail.parse::<u64>().is_ok(), "{line}");
+    }
+    wait_sessions_drained(&reg);
+}
+
+#[test]
+fn malformed_requests_map_to_stable_4xx_codes() {
+    let art = pack_tiny(12);
+    let tmp = save_temp(&art, "errors");
+    let path = tmp.path().to_string_lossy().to_string();
+    let specs = parse_model_specs(&format!("tiny={path}")).unwrap();
+    let reg = ModelRegistry::open(specs, test_cfg(BackendKind::Cached, 0)).unwrap();
+    let (addr, _reg) = spawn_server(reg, 8);
+
+    let code_of = |body: &str| {
+        json::parse(body)
+            .ok()
+            .and_then(|d| d.path(&["error", "code"]).and_then(|c| c.as_str().map(String::from)))
+            .unwrap_or_else(|| panic!("no error code in {body}"))
+    };
+
+    // bad JSON / bad shapes → 400 bad-request
+    for req in [
+        "not json",
+        r#"{"model":"tiny"}"#,
+        r#"{"model":"tiny","prompt":[]}"#,
+        r#"{"model":"tiny","prompt":"text"}"#,
+        r#"{"model":"tiny","prompt":[999]}"#,
+        // prompt + max_tokens over the tiny config's max_seq of 64
+        r#"{"model":"tiny","prompt":[1,2,3,4],"max_tokens":200}"#,
+    ] {
+        let (status, body) = http_request(addr, "POST", "/v1/completions", req);
+        assert_eq!(status, 400, "{req} -> {body}");
+        assert_eq!(code_of(&body), "bad-request", "{req}");
+    }
+
+    // unknown model → 404 unknown-model
+    let (status, body) =
+        http_request(addr, "POST", "/v1/completions", r#"{"model":"ghost","prompt":[1]}"#);
+    assert_eq!(status, 404, "{body}");
+    assert_eq!(code_of(&body), "unknown-model");
+
+    // unknown path → 404, known path + wrong method → 405
+    let (status, body) = http_request(addr, "GET", "/v2/nope", "");
+    assert_eq!(status, 404);
+    assert_eq!(code_of(&body), "not-found");
+    let (status, body) = http_request(addr, "DELETE", "/v1/models", "");
+    assert_eq!(status, 405);
+    assert_eq!(code_of(&body), "method-not-allowed");
+
+    // a framing violation answers 400 and the connection closes
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(b"garbage\r\n\r\n").unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).unwrap();
+    assert!(raw.starts_with("HTTP/1.1 400 "), "{raw}");
+
+    // fixed-length responses keep the connection alive: two requests on
+    // one socket
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    for _ in 0..2 {
+        s.write_all(b"GET /v1/models HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+        let (status, body) = read_keepalive_response(&mut r);
+        assert_eq!(status, 200);
+        assert!(body.contains("\"tiny\""), "{body}");
+    }
+}
+
+#[test]
+fn client_disconnect_mid_stream_closes_the_session() {
+    let art = pack_tiny(13);
+    let tmp = save_temp(&art, "disconnect");
+    let path = tmp.path().to_string_lossy().to_string();
+    let specs = parse_model_specs(&path).unwrap(); // bare path → stem name
+    let reg = ModelRegistry::open(specs, test_cfg(BackendKind::Fused, 0)).unwrap();
+    let (addr, reg) = spawn_server(reg, 8);
+
+    let mut s = TcpStream::connect(addr).unwrap();
+    let req = format!(
+        r#"{{"model":"{}","prompt":[1,2,3],"max_tokens":50,"stream":true}}"#,
+        reg.models()[0].name
+    );
+    let verb = "POST";
+    write!(
+        s,
+        "{verb} /v1/completions HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{req}",
+        req.len()
+    )
+    .unwrap();
+    // read just the first SSE event, then hang up mid-stream
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    let mut line = String::new();
+    loop {
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        if line.starts_with("data: ") {
+            break;
+        }
+        assert!(!line.is_empty(), "stream ended before the first token");
+    }
+    drop(r);
+    drop(s);
+    // the guard on the server closes the session once its next write
+    // fails; the registry's per-model snapshot must drain to zero
+    wait_sessions_drained(&reg);
+}
+
+#[test]
+fn lru_eviction_respects_budget_and_spares_open_sessions() {
+    let art = pack_tiny(14);
+    let tmp = save_temp(&art, "evict");
+    let path = tmp.path().to_string_lossy().to_string();
+
+    // dense backends have a fixed resident footprint (cached ones grow
+    // lazily) — measure one to size a one-model budget
+    let w = PackedModel::load(tmp.path()).unwrap().unpack(1).unwrap();
+    let one = ExecutionBackend::dense(w).resident_weight_bytes();
+    assert!(one > 0);
+
+    let specs = parse_model_specs(&format!("a={path},b={path}")).unwrap();
+    let reg = ModelRegistry::open(specs, test_cfg(BackendKind::Dense, one + one / 2)).unwrap();
+    assert_eq!(reg.len(), 2);
+    assert_eq!(reg.resident_count(), 0, "registration is header-only");
+
+    // first touches build lazily; the second build pushes over budget
+    // and evicts the LRU (a)
+    let _a = reg.coordinator("a").unwrap();
+    assert_eq!(reg.resident_count(), 1);
+    let _b = reg.coordinator("b").unwrap();
+    let resident: Vec<(String, bool)> =
+        reg.models().into_iter().map(|m| (m.name, m.resident)).collect();
+    assert_eq!(resident, vec![("a".into(), false), ("b".into(), true)]);
+    assert!(reg.resident_bytes() <= one + one / 2, "budget respected");
+
+    // touching a again rebuilds it and evicts b
+    let _a = reg.coordinator("a").unwrap();
+    let resident: Vec<(String, bool)> =
+        reg.models().into_iter().map(|m| (m.name, m.resident)).collect();
+    assert_eq!(resident, vec![("a".into(), true), ("b".into(), false)]);
+
+    assert!(reg.coordinator("ghost").is_err(), "unknown model stays an error");
+    reg.stop();
+}
+
+#[test]
+fn eviction_never_kills_a_model_with_open_sessions() {
+    let art = pack_tiny(15);
+    let tmp = save_temp(&art, "pinned");
+    let path = tmp.path().to_string_lossy().to_string();
+    let specs = parse_model_specs(&format!("a={path},b={path}")).unwrap();
+    // a 1-byte budget: everything is always over budget, so only the
+    // open-session and just-touched exemptions keep models alive
+    let reg = ModelRegistry::open(specs, test_cfg(BackendKind::Dense, 1)).unwrap();
+
+    let coord_a = reg.coordinator("a").unwrap();
+    let sid = coord_a.open_session().unwrap();
+    assert_eq!(coord_a.metrics.open_sessions.load(Ordering::SeqCst), 1);
+
+    // building b would normally evict LRU a — but a has an open session
+    let _b = reg.coordinator("b").unwrap();
+    assert_eq!(reg.resident_count(), 2, "pinned model survives the budget");
+    // the session is still fully usable on the surviving coordinator
+    assert_eq!(coord_a.feed(sid, vec![1, 2, 3]).unwrap(), 3);
+    coord_a.close_session(sid).unwrap();
+
+    // with the session closed, the next touch of b evicts idle a
+    let _b = reg.coordinator("b").unwrap();
+    let resident: Vec<(String, bool)> =
+        reg.models().into_iter().map(|m| (m.name, m.resident)).collect();
+    assert_eq!(resident, vec![("a".into(), false), ("b".into(), true)]);
+    reg.stop();
+}

@@ -8,10 +8,12 @@
 //! single snippet can be tested as a serving module, a test file, or the
 //! coordinator.
 
-use llvq::lint::engine::{collect_inputs, lint_files, render_json, render_text, run_lint};
+use llvq::lint::engine::{
+    collect_inputs, lint_files, lint_files_with_docs, render_json, render_text, run_lint,
+};
 use llvq::lint::rules::{
-    Finding, ALLOW_SYNTAX, LOCK_POISON, NO_PANIC_SERVING, SAFETY_COMMENT, STATS_WIRE_ORDER,
-    TARGET_FEATURE_UNSAFE,
+    Finding, ALLOW_SYNTAX, DOCS_SYNC, LOCK_POISON, NO_PANIC_SERVING, SAFETY_COMMENT,
+    STATS_WIRE_ORDER, TARGET_FEATURE_UNSAFE,
 };
 use std::path::Path;
 
@@ -27,6 +29,12 @@ const STATS_BAD: &str = include_str!("lint_fixtures/stats_bad.rs");
 const STATS_OK: &str = include_str!("lint_fixtures/stats_ok.rs");
 const STATS_LINE_BAD: &str = include_str!("lint_fixtures/stats_line_bad.rs");
 const ALLOW_BAD: &str = include_str!("lint_fixtures/allow_bad.rs");
+const DOCS_PROTOCOL_OK: &str = include_str!("lint_fixtures/docs_protocol_ok.md");
+const DOCS_PROTOCOL_BAD: &str = include_str!("lint_fixtures/docs_protocol_bad.md");
+const DOCS_OPERATIONS_OK: &str = include_str!("lint_fixtures/docs_operations_ok.md");
+const DOCS_OPERATIONS_BAD: &str = include_str!("lint_fixtures/docs_operations_bad.md");
+const DOCS_API_OK: &str = include_str!("lint_fixtures/docs_api_ok.rs");
+const DOCS_API_BAD: &str = include_str!("lint_fixtures/docs_api_bad.rs");
 
 fn lint_one(path: &str, text: &str) -> Vec<Finding> {
     lint_files(&[(path.to_string(), text.to_string())])
@@ -161,6 +169,72 @@ fn stats_rule_accepts_consistent_surface_and_flags_drifted_parser() {
     assert_eq!(pair.len(), 1, "{pair:?}");
     assert_eq!(pair[0].rule, STATS_WIRE_ORDER);
     assert_eq!((pair[0].file.as_str(), pair[0].line), ("rust/src/util/bench.rs", 5));
+}
+
+// ------------------------------------------------------------- rule 6
+
+#[test]
+fn docs_rule_flags_missing_doc_files_only_when_docs_are_in_scope() {
+    let src = [("rust/src/coordinator.rs".to_string(), STATS_OK.to_string())];
+    // the pure entry point never sees docs — fixture-driven rule tests
+    // stay byte-identical with or without a docs tree on disk
+    assert!(lint_files(&src).is_empty());
+
+    let f = lint_files_with_docs(&src, &[]);
+    let missing: Vec<&str> = f
+        .iter()
+        .filter(|x| x.rule == DOCS_SYNC)
+        .map(|x| x.file.as_str())
+        .collect();
+    assert_eq!(
+        missing,
+        vec!["docs/OPERATIONS.md", "docs/PROTOCOL.md"],
+        "both reference docs must be demanded: {f:?}"
+    );
+}
+
+#[test]
+fn docs_rule_accepts_complete_references() {
+    let src = [
+        ("rust/src/coordinator.rs".to_string(), STATS_OK.to_string()),
+        ("rust/src/http/api.rs".to_string(), DOCS_API_OK.to_string()),
+    ];
+    let docs = [
+        ("docs/PROTOCOL.md".to_string(), DOCS_PROTOCOL_OK.to_string()),
+        ("docs/OPERATIONS.md".to_string(), DOCS_OPERATIONS_OK.to_string()),
+    ];
+    let f = lint_files_with_docs(&src, &docs);
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn docs_rule_flags_verb_route_field_and_error_code_gaps() {
+    let src = [("rust/src/coordinator.rs".to_string(), STATS_OK.to_string())];
+    let docs = [
+        ("docs/PROTOCOL.md".to_string(), DOCS_PROTOCOL_BAD.to_string()),
+        ("docs/OPERATIONS.md".to_string(), DOCS_OPERATIONS_BAD.to_string()),
+    ];
+    let f = lint_files_with_docs(&src, &docs);
+    assert_eq!(f.len(), 4, "{f:?}");
+    assert!(f.iter().all(|x| x.rule == DOCS_SYNC));
+    // REQUEUED / kv_pages_total are superstrings — word-boundary
+    // matching must still demand the verb and the field themselves
+    for needle in ["`QUEUED`", "`/metrics`", "`kv-oom`", "`kv_pages`"] {
+        assert!(
+            f.iter().any(|x| x.message.contains(needle)),
+            "missing a finding about {needle}: {f:?}"
+        );
+    }
+}
+
+#[test]
+fn docs_rule_pins_route_literals_in_the_http_front_door() {
+    let clean = lint_one("rust/src/http/api.rs", DOCS_API_OK);
+    assert!(clean.is_empty(), "{clean:?}");
+
+    let f = lint_one("rust/src/http/api.rs", DOCS_API_BAD);
+    assert_eq!(lines_of(&f, DOCS_SYNC), vec![1], "{f:?}");
+    assert!(f[0].message.contains("`/metrics`"), "{f:?}");
 }
 
 // ----------------------------------------------------------- meta rule

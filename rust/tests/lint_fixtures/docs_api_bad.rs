@@ -1,0 +1,10 @@
+// Fixture: the metrics route literal has been dropped from the front
+// door — docs-sync must flag the missing "/metrics".
+
+pub fn route(path: &str) -> &'static str {
+    match path {
+        "/v1/completions" => "completions",
+        "/v1/models" => "models",
+        _ => "not-found",
+    }
+}

@@ -1,0 +1,12 @@
+// Fixture: an HTTP front door that keeps every documented route as a
+// string literal — docs-sync must pass (and the file is on the serving
+// path, so it is also panic-free).
+
+pub fn route(path: &str) -> &'static str {
+    match path {
+        "/v1/completions" => "completions",
+        "/v1/models" => "models",
+        "/metrics" => "metrics",
+        _ => "not-found",
+    }
+}

@@ -1,13 +1,16 @@
 #!/usr/bin/env bash
 # Repo verification gate: build, tests, a warnings-as-errors clippy
 # pass over EVERY target (lib, bins, examples, integration tests, and the
-# bench harnesses — which tier-1 `cargo test` never compiles), and the
-# repo-native lint engine (`llvq lint`, rules in LINTS.md) which exits
-# non-zero on any finding. CI and pre-merge checks run exactly this.
+# bench harnesses — which tier-1 `cargo test` never compiles), a
+# warnings-as-errors rustdoc build (broken intra-doc links are doc
+# drift), and the repo-native lint engine (`llvq lint`, rules in
+# LINTS.md — including docs-sync over docs/) which exits non-zero on
+# any finding. CI and pre-merge checks run exactly this.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 cargo build --release
 cargo test -q
 cargo clippy -q --all-targets -- -D warnings
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 cargo run --release --quiet -- lint
